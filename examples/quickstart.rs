@@ -1,0 +1,73 @@
+//! Quickstart: load the AOT artifacts, spin up a Hydra++ engine, and
+//! generate a completion with speculative tree decoding.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Flags: --size s|m|l  --variant ar|medusa|hydra|hydra_pp|eagle
+//!        --prompt "..."  --max-new 64
+
+use hydra_serve::draft;
+use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request};
+use hydra_serve::runtime::Runtime;
+use hydra_serve::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
+use hydra_serve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let size = args.str_or("size", "s");
+    let variant = args.str_or("variant", "hydra_pp");
+    let prompt = args.str_or("prompt", "tell me about alice.");
+    let max_new = args.usize_or("max-new", 64);
+
+    // 1. Open the artifacts (manifest + HLO programs + weights).
+    let rt = Runtime::new(hydra_serve::artifacts_dir())?;
+    let tok = Tokenizer::load(&rt.manifest.dir.join("tokenizer.json"))?;
+    println!(
+        "loaded artifacts: {} executables, base-{size} = {:.2}M params",
+        rt.manifest.executables.len(),
+        rt.manifest.dims(&size)?.params as f64 / 1e6
+    );
+
+    // 2. Build the engine with the tuned (or default) decoding tree.
+    let tree = draft::tuned_tree(&rt.manifest, &size, &variant, 1)?;
+    println!("decoding tree: {} nodes, depth {}", tree.len(), tree.max_depth());
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size,
+            variant: variant.clone(),
+            tree,
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            seed: 42,
+        },
+    )?;
+
+    // 3. Admit a request and decode.
+    engine.admit(vec![Request {
+        id: 0,
+        prompt_ids: tok.encode(&format_prompt(&prompt)),
+        max_new,
+        stop_ids: tok.encode(STOP_TEXT),
+    }])?;
+    let t0 = std::time::Instant::now();
+    engine.run_to_completion()?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let out = engine.take_outputs().pop().unwrap();
+    let mut text = tok.decode(&out.generated);
+    if let Some(p) = text.find(STOP_TEXT) {
+        text.truncate(p);
+    }
+    println!("\nprompt : {prompt}");
+    println!("output : {}", text.trim());
+    println!(
+        "\n{} tokens in {dt:.2}s = {:.1} tok/s | {} steps | mean acceptance {:.2} ({})",
+        out.generated.len(),
+        out.generated.len() as f64 / dt,
+        out.steps,
+        out.mean_accept_len,
+        draft::label(&variant),
+    );
+    Ok(())
+}

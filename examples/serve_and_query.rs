@@ -1,0 +1,51 @@
+//! Serving front-end demo: spawn the TCP JSON-lines server in-process,
+//! connect several clients concurrently, and print the exchanges — the
+//! request path is pure Rust + PJRT (Python was only used at build time).
+//!
+//!     cargo run --release --example serve_and_query
+
+use std::sync::atomic::Ordering;
+
+use hydra_serve::server::{spawn_local, Client};
+use hydra_serve::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let size = args.str_or("size", "s");
+    let variant = args.str_or("variant", "hydra_pp");
+    let batch = args.usize_or("batch", 4);
+
+    let (port, shutdown, handle) =
+        spawn_local(hydra_serve::artifacts_dir(), size, variant, batch)?;
+    println!("server starting on 127.0.0.1:{port} (compiling executables)…");
+
+    let prompts = [
+        "tell me about alice.",
+        "compute 17 + 25.",
+        "who is frank?",
+        "describe a day for judy in tokyo.",
+    ];
+    let addr = format!("127.0.0.1:{port}");
+
+    // Query concurrently from separate client threads; the server batches
+    // them into one engine (continuous batching).
+    let mut joins = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let addr = addr.clone();
+        let p = p.to_string();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<(usize, String)> {
+            let mut c = Client::connect(&addr)?;
+            let resp = c.generate(&p, 48)?;
+            Ok((i, resp.to_string()))
+        }));
+    }
+    for j in joins {
+        let (i, resp) = j.join().expect("client thread")?;
+        println!("\nclient {i} <- {resp}");
+    }
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = handle.join();
+    println!("\nserver stopped.");
+    Ok(())
+}

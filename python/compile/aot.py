@@ -1,0 +1,371 @@
+"""AOT pipeline: corpus → tokenizer → training → HLO-text artifacts.
+
+Runs ONCE via `make artifacts`; Python never touches the request path.
+Outputs in artifacts/:
+  tokenizer.json            BPE merge table (applied identically in Rust)
+  tokenizer_vectors.json    encode parity vectors for the Rust tokenizer test
+  prompts.json              held-out eval prompts (MT-Bench-sim / SpecBench-sim)
+  corpus_sample.json        tokenized corpus slices (Rust tree-search input)
+  weights_base_{z}.bin      base weights      (custom HTB1 tensor binary)
+  weights_heads_{z}_{v}.bin head weights per variant
+  train_logs.json           loss curves for every training run
+  *.hlo.txt                 one HLO-text program per (entry point, shape bucket)
+  manifest.json             executable/arg/weight-order index for the Rust side
+
+HLO TEXT is the interchange format — NOT serialized HloModuleProto: jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import (SIZES, ModelConfig, HeadConfig, head_variants_for_size,
+                     VOCAB_SIZE, SEQ_MAX, NUM_DRAFT_HEADS, ACCEPT_MAX,
+                     TREE_BUCKETS)
+from . import data, tokenizer as tok_mod, model as M, heads as H, train as T
+
+DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (see module docstring for why text)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# HTB1 tensor binary (parsed by rust/src/util/tensors.rs)
+# ---------------------------------------------------------------------------
+
+
+def write_tensors(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    entries, payload = [], b""
+    for name in sorted(tensors.keys()):
+        arr = np.ascontiguousarray(tensors[name])
+        assert arr.dtype in (np.float32, np.int32), arr.dtype
+        dtype = "f32" if arr.dtype == np.float32 else "i32"
+        entries.append({"name": name, "dtype": dtype, "shape": list(arr.shape),
+                        "offset": len(payload), "nbytes": arr.nbytes})
+        payload += arr.tobytes()
+    header = json.dumps({"tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(b"HTB1")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        f.write(payload)
+
+
+# ---------------------------------------------------------------------------
+# Executable builder
+# ---------------------------------------------------------------------------
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest_exes: Dict[str, dict] = {}
+
+    def emit(self, name: str, fn, dyn_specs: List[tuple], weight_args: List[tuple],
+             weight_arrays: List[jnp.ndarray]):
+        """Lower fn(*dyn, *weights) and record the arg contract.
+
+        dyn_specs:   [(arg_name, shape, dtype_str), ...]
+        weight_args: [(kind, tensor_name), ...] with kind in {base, head}
+        """
+        t0 = time.time()
+        dyn_structs = [jax.ShapeDtypeStruct(s, DT[d]) for (_, s, d) in dyn_specs]
+        w_structs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in weight_arrays]
+        lowered = jax.jit(fn).lower(*dyn_structs, *w_structs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *dyn_structs, *w_structs)
+        out_specs = [{"shape": list(o.shape),
+                      "dtype": "i32" if str(o.dtype).startswith("int") else "f32"}
+                     for o in jax.tree_util.tree_leaves(outs)]
+        self.manifest_exes[name] = {
+            "file": fname,
+            "args": ([{"kind": "dyn", "name": n, "shape": list(s), "dtype": d}
+                      for (n, s, d) in dyn_specs]
+                     + [{"kind": k, "name": n} for (k, n) in weight_args]),
+            "outputs": out_specs,
+        }
+        print(f"  lowered {name} ({len(text) // 1024} KiB, {time.time() - t0:.1f}s)", flush=True)
+
+
+def base_weight_args(cfg: ModelConfig, base_params):
+    names = sorted(base_params.keys())
+    return [("base", n) for n in names], [base_params[n] for n in names]
+
+
+def head_weight_args(head_params, subset=None):
+    names = sorted(head_params.keys())
+    if subset is not None:
+        names = [n for n in names if subset(n)]
+    return [("head", n) for n in names], [head_params[n] for n in names]
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny build for CI: size s only, few train steps")
+    args = ap.parse_args()
+    fast = args.fast or os.environ.get("HYDRA_FAST") == "1"
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+
+    sizes = ["s"] if fast else os.environ.get("HYDRA_SIZES", "s,m,l").split(",")
+    base_steps = int(os.environ.get("HYDRA_BASE_STEPS", "40" if fast else "360"))
+    head_steps = int(os.environ.get("HYDRA_HEAD_STEPS", "25" if fast else "220"))
+
+    # ---- corpus + tokenizer -------------------------------------------------
+    print("== corpus + tokenizer ==", flush=True)
+    corpus = data.gen_corpus(n_examples=1200 if fast else 9000)
+    merges = tok_mod.train_merges(corpus[:120_000], VOCAB_SIZE - tok_mod.N_BYTE_TOKENS)
+    tok = tok_mod.Tokenizer(merges)
+    tok.save(os.path.join(out_dir, "tokenizer.json"))
+    ids = tok.encode_corpus(corpus)
+    print(f"  corpus {len(corpus)} chars -> {len(ids)} tokens "
+          f"(vocab {tok.vocab_size})", flush=True)
+
+    vectors = []
+    probe_rng = np.random.default_rng(7)
+    for _ in range(60):
+        a = int(probe_rng.integers(0, max(1, len(corpus) - 80)))
+        text = corpus[a:a + int(probe_rng.integers(5, 80))]
+        vectors.append({"text": text, "ids": [int(x) for x in tok.encode(text)]})
+    with open(os.path.join(out_dir, "tokenizer_vectors.json"), "w") as f:
+        json.dump(vectors, f)
+
+    prompts = data.gen_eval_prompts(per_category=8 if fast else 24)
+    data.write_prompts(os.path.join(out_dir, "prompts.json"), prompts)
+
+    # Tokenized corpus slices for the Rust tree-search simulator (paper §4
+    # uses a 100-prompt Alpaca subset; we use held-out corpus windows).
+    search_rng = np.random.default_rng(21)
+    slices = []
+    for _ in range(100):
+        a = int(search_rng.integers(0, len(ids) - 257))
+        slices.append([int(x) for x in ids[a:a + 256]])
+    with open(os.path.join(out_dir, "corpus_sample.json"), "w") as f:
+        json.dump(slices, f)
+
+    # ---- training -----------------------------------------------------------
+    train_logs: Dict[str, list] = {}
+    base_params_by_size: Dict[str, dict] = {}
+    head_params_by: Dict[str, Dict[str, dict]] = {}
+    for z in sizes:
+        cfg = SIZES[z]
+        print(f"== train base-{z} ({cfg.param_count()/1e6:.2f}M params) ==", flush=True)
+        bp, log = T.train_base(cfg, ids, steps=base_steps, seed=42)
+        base_params_by_size[z] = bp
+        train_logs[f"base_{z}"] = log
+        write_tensors(os.path.join(out_dir, f"weights_base_{z}.bin"),
+                      {k: np.asarray(v) for k, v in bp.items()})
+        head_params_by[z] = {}
+        for hc in head_variants_for_size(z):
+            if fast and hc.name not in ("medusa", "hydra", "hydra_pp", "eagle"):
+                continue
+            print(f"== train heads {z}/{hc.name} ==", flush=True)
+            hp, hlog = T.train_heads(cfg, hc, bp, ids, steps=head_steps)
+            head_params_by[z][hc.name] = hp
+            train_logs[f"heads_{z}_{hc.name}"] = hlog
+            write_tensors(os.path.join(out_dir, f"weights_heads_{z}_{hc.name}.bin"),
+                          {k: np.asarray(v) for k, v in hp.items()})
+    with open(os.path.join(out_dir, "train_logs.json"), "w") as f:
+        json.dump(train_logs, f, indent=1)
+
+    # ---- AOT lowering -------------------------------------------------------
+    print("== AOT lowering ==", flush=True)
+    b = Builder(out_dir)
+    S, V, A, K = SEQ_MAX, VOCAB_SIZE, ACCEPT_MAX, NUM_DRAFT_HEADS
+    tree_buckets = [1, 8, 16] if fast else TREE_BUCKETS
+    batch_buckets = {z: ([1, 2, 4, 8] if (z == "s" and not fast) else [1])
+                     for z in sizes}
+    hydra_m_buckets = {z: ([16, 64, 128] if z == "s" and not fast else [16, 64])
+                       for z in sizes}
+    eagle_n_buckets = [16, 64]
+
+    for z in sizes:
+        cfg = SIZES[z]
+        bp = base_params_by_size[z]
+        bw_args, bw_arrays = base_weight_args(cfg, bp)
+        D, L, KVD = cfg.d_model, cfg.n_layers, cfg.kv_dim
+        names = sorted(bp.keys())
+
+        def with_base(fn):
+            def wrapped(*args):
+                dyn, w = args[:-len(names)], args[-len(names):]
+                return fn(M.params_from_list(names, w), *dyn)
+            return wrapped
+
+        for B in batch_buckets[z]:
+            b.emit(
+                f"prefill_{z}_b{B}",
+                with_base(lambda p, tokens, length:
+                          _prefill_full(cfg, p, tokens, length)),
+                [("tokens", (B, S), "i32"), ("length", (B,), "i32")],
+                bw_args, bw_arrays)
+            for TT in tree_buckets:
+                b.emit(
+                    f"verify_{z}_b{B}_t{TT}",
+                    with_base(lambda p, tokens, positions, cur_len, anc, kv:
+                              M.verify(cfg, p, tokens, positions, cur_len, anc, kv)),
+                    [("tokens", (B, TT), "i32"), ("positions", (B, TT), "i32"),
+                     ("cur_len", (B,), "i32"), ("anc_mask", (B, TT, TT), "i32"),
+                     ("kv", (B, L, 2, S, KVD), "f32")],
+                    bw_args, bw_arrays)
+                b.emit(
+                    f"commit_{z}_b{B}_t{TT}",
+                    M.commit_entry,
+                    [("kv", (B, L, 2, S, KVD), "f32"),
+                     ("tree_kv", (B, L, 2, TT, KVD), "f32"),
+                     ("hidden", (B, TT, D), "f32"),
+                     ("accept_idx", (B, A), "i32"),
+                     ("accept_len", (B,), "i32"), ("cur_len", (B,), "i32")],
+                    [], [])
+
+        # -- draft executables (head weights are runtime args, so one
+        #    executable serves every variant with the same architecture) --
+        trained = head_params_by[z]
+        archs = {}   # (kind, mlp_layers, prefix) -> example params
+        for hc in head_variants_for_size(z):
+            if hc.name in trained:
+                archs[(hc.kind, hc.mlp_layers, hc.prefix_attn)] = (hc, trained[hc.name])
+
+        for (kind, ml, pref), (hc, hp) in archs.items():
+            if kind == "medusa":
+                hw_args, hw_arrays = head_weight_args(hp)
+                b.emit(f"medusa_draft_{z}",
+                       lambda h, *w, hc=hc: H.medusa_draft(
+                           dict(zip([n for _, n in hw_args], w)), hc, h),
+                       [("h", (8, D), "f32")], hw_args, hw_arrays)
+            elif kind == "hydra":
+                for i in range(1, K + 1):
+                    subset = (lambda n, i=i: n.startswith(f"head{i}."))
+                    hw_args, hw_arrays = head_weight_args(hp, subset)
+                    arg_names = [n for _, n in hw_args]
+                    for MM in hydra_m_buckets[z]:
+                        b.emit(
+                            f"hydra_draft_{z}_L{ml}_d{i}_m{MM}",
+                            lambda h, path, emb, *w, hc=hc, i=i, an=tuple(arg_names):
+                                H.hydra_draft(dict(zip(an, w)), hc, i, emb, h, path),
+                            [("h", (MM, D), "f32"), ("path", (MM, i), "i32")],
+                            [("base", "tok_emb")] + hw_args,
+                            [bp["tok_emb"]] + hw_arrays)
+                if pref:
+                    subset = (lambda n: n.startswith("prefix."))
+                    hw_args, hw_arrays = head_weight_args(hp, subset)
+                    an = [n for _, n in hw_args]
+                    for B in batch_buckets[z]:
+                        b.emit(f"prefix_prefill_{z}_b{B}_L{ml}",
+                               lambda hseq, length, *w, an=tuple(an):
+                                   H.prefix_prefill(cfg, dict(zip(an, w)), hseq, length),
+                               [("hidden_seq", (B, S, D), "f32"), ("length", (B,), "i32")],
+                               hw_args, hw_arrays)
+                        b.emit(f"prefix_step_{z}_b{B}_L{ml}",
+                               lambda nh, count, cur_len, pkv, *w, an=tuple(an):
+                                   H.prefix_step(cfg, dict(zip(an, w)), nh, count, cur_len, pkv),
+                               [("new_hidden", (B, A, D), "f32"), ("count", (B,), "i32"),
+                                ("cur_len", (B,), "i32"), ("pkv", (B, 2, S, KVD), "f32")],
+                               hw_args, hw_arrays)
+            elif kind == "eagle":
+                hw_args, hw_arrays = head_weight_args(hp)
+                an = [n for _, n in hw_args]
+                B = 1
+                b.emit(f"eagle_prefill_{z}_b{B}",
+                       lambda tokens, hseq, length, emb, *w, an=tuple(an):
+                           H.eagle_prefill(cfg, dict(zip(an, w)), emb, tokens, hseq, length),
+                       [("tokens", (B, S), "i32"), ("hidden_seq", (B, S, D), "f32"),
+                        ("length", (B,), "i32")],
+                       [("base", "tok_emb")] + hw_args, [bp["tok_emb"]] + hw_arrays)
+                for N in eagle_n_buckets:
+                    b.emit(f"eagle_step_{z}_b{B}_n{N}",
+                           lambda tokens, hpar, pos, cur_len, ekv, emb, fn_, lm, *w, an=tuple(an):
+                               H.eagle_step(cfg, dict(zip(an, w)), emb, lm, fn_,
+                                            tokens, hpar, pos, cur_len, ekv),
+                           [("tokens", (B, N), "i32"), ("h_parent", (B, N, D), "f32"),
+                            ("pos", (B, N), "i32"), ("cur_len", (B,), "i32"),
+                            ("ekv", (B, 2, S, KVD), "f32")],
+                           [("base", "tok_emb"), ("base", "final_norm"), ("base", "lm_head")] + hw_args,
+                           [bp["tok_emb"], bp["final_norm"], bp["lm_head"]] + hw_arrays)
+                b.emit(f"eagle_extend_{z}_b{B}",
+                       lambda tokens, hpar, count, cur_len, ekv, emb, *w, an=tuple(an):
+                           H.eagle_extend(cfg, dict(zip(an, w)), emb, tokens, hpar,
+                                          count, cur_len, ekv),
+                       [("tokens", (B, A), "i32"), ("h_parent", (B, A, D), "f32"),
+                        ("count", (B,), "i32"), ("cur_len", (B,), "i32"),
+                        ("ekv", (B, 2, S, KVD), "f32")],
+                       [("base", "tok_emb")] + hw_args, [bp["tok_emb"]] + hw_arrays)
+
+    # ---- manifest -----------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "vocab": V, "seq_max": S, "accept_max": A, "num_heads": K,
+        "tree_buckets": tree_buckets,
+        "batch_buckets": batch_buckets,
+        "hydra_m_buckets": hydra_m_buckets,
+        "eagle_n_buckets": eagle_n_buckets,
+        "sizes": {z: {"d_model": SIZES[z].d_model, "n_layers": SIZES[z].n_layers,
+                      "n_heads": SIZES[z].n_heads, "n_kv_heads": SIZES[z].n_kv_heads,
+                      "d_ffn": SIZES[z].d_ffn, "kv_dim": SIZES[z].kv_dim,
+                      "params": SIZES[z].param_count()}
+                  for z in sizes},
+        "head_variants": {z: [{"name": hc.name, "kind": hc.kind,
+                               "mlp_layers": hc.mlp_layers,
+                               "prefix_attn": hc.prefix_attn,
+                               "objective": hc.objective}
+                              for hc in head_variants_for_size(z)
+                              if hc.name in head_params_by[z]]
+                          for z in sizes},
+        "weight_files": {
+            **{f"base_{z}": f"weights_base_{z}.bin" for z in sizes},
+            **{f"heads_{z}_{v}": f"weights_heads_{z}_{v}.bin"
+               for z in sizes for v in head_params_by[z]},
+        },
+        "executables": b.manifest_exes,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"== done: {len(b.manifest_exes)} executables, "
+          f"{time.time() - t_start:.0f}s total ==", flush=True)
+
+
+def _prefill_full(cfg, p, tokens, length):
+    """prefill that also returns the full hidden sequence (input for the
+    prefix-attention and EAGLE prefills)."""
+    b_, s = tokens.shape
+    # Reuse train_forward internals via prefill (which computes kv) plus the
+    # hidden sequence from train_forward would double compute; instead extend
+    # prefill to emit hidden_seq directly.
+    return M.prefill_with_hidden(cfg, p, tokens, length)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Emit ADDITIONAL AOT executables against an existing artifacts directory,
+merging new entries into manifest.json. Lowering needs only shapes (weights
+are runtime inputs), so this runs in seconds — no retraining.
+
+Currently emits the §Perf fused entry point:
+
+  verify_commit_{z}_b{B}_t{T}
+    1. scatter the PREVIOUS step's accepted tree KVs into the cache
+       (no-op rows when accept_len == 0, e.g. the first step);
+    2. verify the NEW candidate tree against the updated cache.
+
+One PJRT call and one KV host round-trip per decode step instead of two —
+the per-call dispatch + transfer overhead is the dominant cost at this
+model scale (EXPERIMENTS.md §Perf)."""
+
+import argparse
+import json
+import os
+
+import jax
+
+from .config import SIZES, SEQ_MAX, VOCAB_SIZE, ACCEPT_MAX
+from . import model as M
+from .aot import Builder, DT
+
+
+def fused_verify_commit(cfg):
+    def fn(params, tokens, positions, cur_len, anc_mask, kv,
+           prev_tree_kv, prev_hidden, accept_idx, accept_len, commit_base):
+        # `gathered` must stay an output: dropping it would leave
+        # `prev_hidden` unused and the lowering prunes unused parameters,
+        # breaking the manifest arg contract.
+        kv2, gathered = M.commit(kv, prev_tree_kv, prev_hidden, accept_idx,
+                                 accept_len, commit_base)
+        logits, hidden, tree_kv = M.verify(cfg, params, tokens, positions,
+                                           cur_len, anc_mask, kv2)
+        return logits, hidden, tree_kv, kv2, gathered
+
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = json.load(open(manifest_path))
+
+    b = Builder(out_dir)
+    S, A = manifest["seq_max"], manifest["accept_max"]
+    tree_buckets = manifest["tree_buckets"]
+    for z, dims in manifest["sizes"].items():
+        cfg = SIZES[z]
+        D, L, KVD = dims["d_model"], dims["n_layers"], dims["kv_dim"]
+        # Weight arg order mirrors aot.py (sorted names).
+        names = sorted(M.init_params(cfg, jax.random.PRNGKey(0)).keys())
+        shapes = {k: v.shape for k, v in M.init_params(cfg, jax.random.PRNGKey(0)).items()}
+        w_args = [("base", n) for n in names]
+        w_structs = [jax.ShapeDtypeStruct(shapes[n], DT["f32"]) for n in names]
+
+        fn = fused_verify_commit(cfg)
+        for B in manifest["batch_buckets"][z]:
+            for T in tree_buckets:
+                def wrapped(tokens, positions, cur_len, anc, kv, ptkv, phid,
+                            aidx, alen, cbase, *w):
+                    return fn(dict(zip(names, w)), tokens, positions, cur_len,
+                              anc, kv, ptkv, phid, aidx, alen, cbase)
+
+                b.emit(
+                    f"verify_commit_{z}_b{B}_t{T}",
+                    wrapped,
+                    [("tokens", (B, T), "i32"), ("positions", (B, T), "i32"),
+                     ("cur_len", (B,), "i32"), ("anc_mask", (B, T, T), "i32"),
+                     ("kv", (B, L, 2, S, KVD), "f32"),
+                     ("prev_tree_kv", (B, L, 2, T, KVD), "f32"),
+                     ("prev_hidden", (B, T, D), "f32"),
+                     ("accept_idx", (B, A), "i32"),
+                     ("accept_len", (B,), "i32"), ("commit_base", (B,), "i32")],
+                    w_args,
+                    w_structs)
+
+    manifest["executables"].update(b.manifest_exes)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"merged {len(b.manifest_exes)} executables into manifest")
+
+
+if __name__ == "__main__":
+    main()

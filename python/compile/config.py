@@ -1,0 +1,126 @@
+"""Shared model / serving configuration for the Hydra reproduction.
+
+The three base-model sizes stand in for Vicuna 7B / 13B / 33B (see
+DESIGN.md §2 — the paper's dynamics depend on the *relative* accuracy of
+draft heads against a fixed base model, not on absolute scale). All shapes
+here are baked into the AOT artifacts and mirrored by the Rust side via
+artifacts/manifest.json.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+# ---------------------------------------------------------------------------
+# Global serving shape constants (mirrored in rust/src/model/config.rs)
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 512          # 256 byte tokens + 256 BPE merges
+SEQ_MAX = 384             # KV-cache slot length
+NUM_DRAFT_HEADS = 4       # K in the paper; tree depth = K + 1 (root from base)
+ACCEPT_MAX = NUM_DRAFT_HEADS + 1  # max committed tokens per decode step
+BATCH_BUCKETS = [1, 2, 4, 8]
+TREE_BUCKETS = [1, 4, 8, 16, 32, 64]   # packed tree-token buckets (T); 1 == AR decode
+NODE_BUCKETS = [8, 16, 48]             # per-depth node buckets for seq.-dep. drafts
+ROPE_THETA = 10000.0
+
+
+@dataclass
+class ModelConfig:
+    """Base-transformer hyper-parameters (LLaMA-style)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ffn: int
+    vocab: int = VOCAB_SIZE
+    seq_max: int = SEQ_MAX
+    rope_theta: float = ROPE_THETA
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ffn, self.vocab
+        per_layer = (
+            d * d                              # wq
+            + 2 * d * self.kv_dim              # wk, wv
+            + d * d                            # wo
+            + 3 * d * f                        # w1, w2, w3 (SwiGLU)
+            + 2 * d                            # rmsnorm x2
+        )
+        return v * d + self.n_layers * per_layer + d + d * v  # emb + layers + final norm + lm head
+
+
+# Paper-size mapping: 7B -> base-s, 13B -> base-m, 33B -> base-l.
+SIZES: Dict[str, ModelConfig] = {
+    "s": ModelConfig("s", d_model=96, n_layers=2, n_heads=4, n_kv_heads=2, d_ffn=256),
+    "m": ModelConfig("m", d_model=128, n_layers=3, n_heads=4, n_kv_heads=2, d_ffn=352),
+    "l": ModelConfig("l", d_model=192, n_layers=4, n_heads=6, n_kv_heads=2, d_ffn=512),
+}
+
+
+@dataclass
+class HeadConfig:
+    """Draft-model (head) configuration.
+
+    kind:
+      medusa   — sequentially-independent residual MLP (Cai et al. 2024)
+      hydra    — sequentially-dependent MLP over [h ; E(path tokens)] (§3)
+      eagle    — decoder-layer draft with hidden-state recurrence (App. C)
+    mlp_layers — hidden-layer count of each head MLP (Hydra++ uses 4, §3.1)
+    prefix_attn — extra decoder layer producing the draft input state (§3.1 / A.2)
+    objective  — "ntp" (next-token) or "teacher" (self-distillation, §3.1 / A.1)
+    noise_alpha — NEFT-style hidden-state noise strength (App. A.1); 0 = off
+    """
+
+    name: str
+    kind: str = "hydra"
+    mlp_layers: int = 1
+    prefix_attn: bool = False
+    objective: str = "ntp"
+    noise_alpha: float = 0.0
+    epochs_scale: float = 1.0   # Hydra++ trains 10x (paper §5)
+
+
+# Every head variant trained by `make artifacts`.
+# Core variants exist for all sizes; ablation variants only for base-s
+# (the paper runs ablations on the 7B base).
+CORE_HEAD_VARIANTS: List[HeadConfig] = [
+    HeadConfig("medusa", kind="medusa", mlp_layers=1, objective="ntp"),
+    HeadConfig("hydra", kind="hydra", mlp_layers=1, objective="ntp"),
+    HeadConfig(
+        "hydra_pp",
+        kind="hydra",
+        mlp_layers=4,
+        prefix_attn=True,
+        objective="teacher",
+        epochs_scale=3.0,
+    ),
+]
+
+ABLATION_HEAD_VARIANTS: List[HeadConfig] = [
+    # Fig. 5: training-objective ablation on basic Hydra heads.
+    HeadConfig("hydra_ntp_noise", kind="hydra", objective="ntp", noise_alpha=75.0),
+    HeadConfig("hydra_teacher", kind="hydra", objective="teacher"),
+    HeadConfig("hydra_teacher_noise", kind="hydra", objective="teacher", noise_alpha=75.0),
+    # Fig. 6: architecture ablation — PrefixMLP vs plain MLP (teacher loss held fixed).
+    HeadConfig("hydra_prefixmlp", kind="hydra", prefix_attn=True, objective="teacher"),
+    # Fig. 10: EAGLE-style decoder-layer draft head.
+    HeadConfig("eagle", kind="eagle", objective="teacher", epochs_scale=3.0),
+]
+
+ABLATION_SIZE = "s"
+
+
+def head_variants_for_size(size: str) -> List[HeadConfig]:
+    variants = list(CORE_HEAD_VARIANTS)
+    if size == ABLATION_SIZE:
+        variants += ABLATION_HEAD_VARIANTS
+    return variants

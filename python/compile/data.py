@@ -1,0 +1,199 @@
+"""Deterministic synthetic corpus generator.
+
+Stands in for ShareGPT (training) / MT-Bench (eval) / SpecBench (Table 2) —
+see DESIGN.md §2. The corpus is drawn from a probabilistic grammar with
+strong local statistics so that (a) a tiny base LM learns a sharp next-token
+distribution, and (b) draft heads face the paper's actual learning problem:
+predicting the *base model* several tokens ahead. Six task categories mirror
+SpecBench's split: chat, translation, summary, qa, math, rag.
+
+Everything is seeded; `make artifacts` is reproducible byte-for-byte.
+"""
+
+import json
+import random
+from typing import Dict, List, Tuple
+
+CATEGORIES = ["chat", "translation", "summary", "qa", "math", "rag"]
+
+NAMES = [
+    "alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi",
+    "ivan", "judy", "karl", "lena", "mike", "nina", "oscar", "peggy",
+]
+CITIES = [
+    "paris", "london", "tokyo", "cairo", "lima", "oslo", "delhi", "rome",
+    "kyiv", "quito", "hanoi", "accra", "sofia", "dakar", "perth", "bern",
+]
+ANIMALS = [
+    "otter", "heron", "lynx", "ibis", "tapir", "gecko", "bison", "stork",
+    "viper", "moth", "crane", "skink", "finch", "koala", "dingo", "squid",
+]
+COLORS = ["red", "blue", "green", "amber", "violet", "teal", "coral", "gray"]
+FOODS = ["rice", "soup", "bread", "mango", "pasta", "beans", "salad", "dates"]
+VERBS = ["likes", "keeps", "feeds", "draws", "finds", "meets", "sees", "helps"]
+
+# Deterministic word-level "cipher language" for the translation category:
+# every source word maps to a fixed pseudo-word, so translation is a pure
+# memorization task a small model can master — like the paper's translation
+# split, it is the *most* predictable category.
+_CIPHER_SYLLABLES = ["za", "mo", "ki", "tu", "re", "pa", "vo", "ne", "lu", "si"]
+
+
+def _cipher_word(word: str) -> str:
+    h = 0
+    for ch in word:
+        h = (h * 31 + ord(ch)) % (10**6)
+    out = []
+    for _ in range(max(2, min(3, len(word) // 2))):
+        out.append(_CIPHER_SYLLABLES[h % 10])
+        h //= 10
+    return "".join(out)
+
+
+def _sentence(rng: random.Random) -> str:
+    n, v = rng.choice(NAMES), rng.choice(VERBS)
+    obj = rng.choice([rng.choice(ANIMALS), rng.choice(FOODS)])
+    if rng.random() < 0.5:
+        return f"{n} {v} the {rng.choice(COLORS)} {obj}"
+    return f"{n} {v} {obj} in {rng.choice(CITIES)}"
+
+
+def _gen_chat(rng: random.Random) -> Tuple[str, str]:
+    name = rng.choice(NAMES)
+    city = rng.choice(CITIES)
+    animal = rng.choice(ANIMALS)
+    color = rng.choice(COLORS)
+    templates = [
+        (
+            f"tell me about {name}.",
+            f"{name} lives in {city} and {rng.choice(VERBS)} the {color} {animal}. "
+            f"every day {name} walks in {city} and feeds the {animal}.",
+        ),
+        (
+            f"describe a day for {name} in {city}.",
+            f"in the morning {name} eats {rng.choice(FOODS)}. then {name} "
+            f"{rng.choice(VERBS)} the {animal}. at night {name} rests in {city}.",
+        ),
+        (
+            f"who is {name}?",
+            f"{name} is from {city}. {name} {rng.choice(VERBS)} the {color} "
+            f"{animal} and eats {rng.choice(FOODS)}.",
+        ),
+    ]
+    return rng.choice(templates)
+
+
+def _gen_translation(rng: random.Random) -> Tuple[str, str]:
+    src = _sentence(rng)
+    tgt = " ".join(_cipher_word(w) for w in src.split())
+    return (f"translate to zamo: {src}", tgt)
+
+
+def _gen_summary(rng: random.Random) -> Tuple[str, str]:
+    sents = [_sentence(rng) for _ in range(rng.randint(3, 5))]
+    passage = ". ".join(sents) + "."
+    # Extractive summary: first and last sentence — a copy task, like the
+    # paper's summarization split (low speedup: long low-entropy spans are
+    # rare relative to chat).
+    summary = sents[0] + ". " + sents[-1] + "."
+    return (f"summarize: {passage}", summary)
+
+
+def _gen_qa(rng: random.Random) -> Tuple[str, str]:
+    name = rng.choice(NAMES)
+    city = rng.choice(CITIES)
+    animal = rng.choice(ANIMALS)
+    kind = rng.randrange(3)
+    if kind == 0:
+        return (f"where does {name} live? {name} lives in {city}.", f"{name} lives in {city}.")
+    if kind == 1:
+        return (
+            f"fact: {name} keeps the {animal}. what does {name} keep?",
+            f"{name} keeps the {animal}.",
+        )
+    return (
+        f"fact: the {animal} is in {city}. where is the {animal}?",
+        f"the {animal} is in {city}.",
+    )
+
+
+def _gen_math(rng: random.Random) -> Tuple[str, str]:
+    kind = rng.randrange(3)
+    if kind == 0:
+        a, b = rng.randint(0, 99), rng.randint(0, 99)
+        return (f"compute {a} + {b}.", f"{a} + {b} = {a + b}.")
+    if kind == 1:
+        a, b = rng.randint(0, 20), rng.randint(0, 20)
+        return (f"compute {a} * {b}.", f"{a} * {b} = {a * b}.")
+    a = rng.randint(2, 30)
+    seq = " ".join(str(a + i) for i in range(5))
+    return (f"count from {a}: ", f"{seq} {a + 5} {a + 6}.")
+
+
+def _gen_rag(rng: random.Random) -> Tuple[str, str]:
+    docs = [_sentence(rng) for _ in range(3)]
+    i = rng.randrange(3)
+    subj = docs[i].split()[0]
+    ctx = " | ".join(docs)
+    return (
+        f"context: {ctx}. question: what about {subj}?",
+        f"{docs[i]}.",
+    )
+
+
+_GENERATORS = {
+    "chat": _gen_chat,
+    "translation": _gen_translation,
+    "summary": _gen_summary,
+    "qa": _gen_qa,
+    "math": _gen_math,
+    "rag": _gen_rag,
+}
+
+# Training mix: chat-heavy like ShareGPT, with every category represented.
+_TRAIN_MIX = {
+    "chat": 0.40, "translation": 0.12, "summary": 0.12,
+    "qa": 0.14, "math": 0.12, "rag": 0.10,
+}
+
+
+def gen_example(rng: random.Random, category: str) -> Dict[str, str]:
+    prompt, answer = _GENERATORS[category](rng)
+    return {"category": category, "prompt": prompt, "answer": answer}
+
+
+def format_turn(prompt: str, answer: str) -> str:
+    """Single chat turn in the serving wire format (mirrored in Rust)."""
+    return f"<user> {prompt} <bot> {answer} <end> "
+
+
+def gen_corpus(seed: int = 1234, n_examples: int = 9000) -> str:
+    """Training text: a stream of (possibly multi-turn) conversations."""
+    rng = random.Random(seed)
+    cats, weights = zip(*_TRAIN_MIX.items())
+    parts: List[str] = []
+    for _ in range(n_examples):
+        category = rng.choices(cats, weights)[0]
+        turns = rng.randint(1, 2) if category == "chat" else 1
+        for _ in range(turns):
+            ex = gen_example(rng, category)
+            parts.append(format_turn(ex["prompt"], ex["answer"]))
+    return "".join(parts)
+
+
+def gen_eval_prompts(seed: int = 9876, per_category: int = 24) -> List[Dict[str, str]]:
+    """Held-out prompts. `chat` doubles as MT-Bench-sim; the category-tagged
+    full set is SpecBench-sim (Table 2). Disjoint seed from training."""
+    rng = random.Random(seed)
+    out: List[Dict[str, str]] = []
+    for category in CATEGORIES:
+        for i in range(per_category):
+            ex = gen_example(rng, category)
+            ex["id"] = f"{category}-{i}"
+            out.append(ex)
+    return out
+
+
+def write_prompts(path: str, prompts: List[Dict[str, str]]) -> None:
+    with open(path, "w") as f:
+        json.dump(prompts, f, indent=1)

@@ -1,0 +1,291 @@
+"""Draft-model architectures (L2).
+
+  medusa   — K sequentially-INDEPENDENT residual-MLP heads (Cai et al. 2024):
+             head i sees only h_t and predicts the token i+1 steps ahead.
+  hydra    — K sequentially-DEPENDENT MLP heads (paper §3): head i sees
+             [h_t ; E(x̂_{t+1}) ; … ; E(x̂_{t+i})] (feature-dim concat).
+  hydra++  — hydra with 4-layer head MLPs, teacher (self-distillation)
+             objective and a prefix-attention decoder layer whose output
+             replaces h_t as the draft input state (paper §3.1, App. A).
+  eagle    — single decoder-layer draft with hidden-state recurrence
+             (App. C / Li et al. 2024): node input = fuse(E(token), ĥ_parent),
+             logits via the frozen base LM head. Simplified to prefix+self
+             attention (no intra-tree ancestor attention) — see DESIGN.md §2.
+
+Tree-node conventions (mirrored in rust/src/tree/):
+  depth 1 = the "root" candidates sampled from the base model's own logits
+  depth 1+i = candidates proposed by draft head i (i = 1..K)
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, HeadConfig, NUM_DRAFT_HEADS
+from .kernels.ref import swiglu_ref, NEG_INF
+from .model import rmsnorm, rope
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _decoder_layer_params(cfg: ModelConfig, key, prefix: str) -> Dict[str, jnp.ndarray]:
+    ks = jax.random.split(key, 7)
+    return {
+        prefix + "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        prefix + "wq": _dense(ks[0], (cfg.d_model, cfg.n_heads * cfg.head_dim)),
+        prefix + "wk": _dense(ks[1], (cfg.d_model, cfg.kv_dim)),
+        prefix + "wv": _dense(ks[2], (cfg.d_model, cfg.kv_dim)),
+        prefix + "wo": _dense(ks[3], (cfg.n_heads * cfg.head_dim, cfg.d_model)),
+        prefix + "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        prefix + "w1": _dense(ks[4], (cfg.d_model, cfg.d_ffn)),
+        prefix + "w2": _dense(ks[5], (cfg.d_ffn, cfg.d_model)),
+        prefix + "w3": _dense(ks[6], (cfg.d_model, cfg.d_ffn)),
+    }
+
+
+def init_head_params(cfg: ModelConfig, hc: HeadConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Flat name->array dict; sorted-name order is the AOT arg order."""
+    params: Dict[str, jnp.ndarray] = {}
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+    d, v = cfg.d_model, cfg.vocab
+
+    if hc.kind == "eagle":
+        params["eg.fuse"] = _dense(next(ki), (2 * d, d))
+        params.update(_decoder_layer_params(cfg, next(ki), "eg."))
+        return params
+
+    for i in range(1, NUM_DRAFT_HEADS + 1):
+        pre = f"head{i}."
+        d_in = d if hc.kind == "medusa" else d * (1 + i)
+        params[pre + "win"] = _dense(next(ki), (d_in, d))
+        for j in range(hc.mlp_layers - 1):
+            params[pre + f"res{j}.w"] = _dense(next(ki), (d, d), scale=0.0)  # zero-init residual
+        params[pre + "wout"] = _dense(next(ki), (d, v), 0.02)
+    if hc.prefix_attn:
+        params.update(_decoder_layer_params(cfg, next(ki), "prefix."))
+    return params
+
+
+def head_param_names(cfg: ModelConfig, hc: HeadConfig) -> List[str]:
+    return sorted(init_head_params(cfg, hc, jax.random.PRNGKey(0)).keys())
+
+
+# ---------------------------------------------------------------------------
+# MLP head forward
+# ---------------------------------------------------------------------------
+
+
+def mlp_head_forward(hp: Dict[str, jnp.ndarray], hc: HeadConfig, i: int,
+                     x_in: jnp.ndarray) -> jnp.ndarray:
+    """Head i over pre-concatenated input x_in [..., d_in] -> logits [..., V]."""
+    pre = f"head{i}."
+    h = jax.nn.silu(x_in @ hp[pre + "win"])
+    for j in range(hc.mlp_layers - 1):
+        h = h + jax.nn.silu(h @ hp[pre + f"res{j}.w"])
+    return h @ hp[pre + "wout"]
+
+
+def medusa_draft(hp: Dict[str, jnp.ndarray], hc: HeadConfig, h: jnp.ndarray) -> jnp.ndarray:
+    """h: [M, D] -> logits [M, K, V]. One call proposes for all K heads —
+    sequential independence means no tree context is needed (the paper's
+    Fig. 1 left)."""
+    outs = [mlp_head_forward(hp, hc, i, h) for i in range(1, NUM_DRAFT_HEADS + 1)]
+    return jnp.stack(outs, axis=1)
+
+
+def hydra_draft(hp: Dict[str, jnp.ndarray], hc: HeadConfig, i: int,
+                tok_emb: jnp.ndarray, h: jnp.ndarray, path_tokens: jnp.ndarray) -> jnp.ndarray:
+    """Head i: h [M, D], path_tokens [M, i] (tree path from root, depths
+    1..i) -> logits [M, V]. The embedding concat is the paper's Eq. (3)."""
+    m = h.shape[0]
+    embs = tok_emb[path_tokens].reshape(m, -1)   # [M, i*D]
+    return mlp_head_forward(hp, hc, i, jnp.concatenate([h, embs], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Incremental decoder layer (shared by prefix-attention and EAGLE)
+# ---------------------------------------------------------------------------
+
+
+def _layer_qkv(cfg: ModelConfig, lp, prefix, x):
+    xn = rmsnorm(x, lp[prefix + "attn_norm"])
+    return xn @ lp[prefix + "wq"], xn @ lp[prefix + "wk"], xn @ lp[prefix + "wv"]
+
+
+def _layer_ffn(cfg: ModelConfig, lp, prefix, x):
+    xn = rmsnorm(x, lp[prefix + "ffn_norm"])
+    return swiglu_ref(xn, lp[prefix + "w1"], lp[prefix + "w2"], lp[prefix + "w3"])
+
+
+def decoder_layer_full(cfg: ModelConfig, lp: Dict[str, jnp.ndarray], prefix: str,
+                       x: jnp.ndarray, length: jnp.ndarray):
+    """Causal decoder layer over a full sequence. x: [B, S, D], length: [B].
+    Returns (out [B, S, D], lkv [B, 2, S, KVD]). Build-time training and
+    the prefill entry both use this."""
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _layer_qkv(cfg, lp, prefix, x)
+    q = rope(q.reshape(b, s, cfg.n_heads, cfg.head_dim), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim), positions, cfg.rope_theta)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    lkv = jnp.stack([k.reshape(b, s, -1), v.reshape(b, s, -1)], axis=1)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(k, groups, axis=2)
+    vv = jnp.repeat(v, groups, axis=2)
+    valid = positions < length[:, None]
+    causal = jnp.tril(jnp.ones((s, s), bool))[None] & valid[:, None, :]
+    logits = jnp.einsum("bthd,bshd->bhts", q, kk) / (cfg.head_dim ** 0.5)
+    logits = jnp.where(causal[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    attn = jnp.einsum("bhts,bshd->bthd", probs, vv).reshape(b, s, -1)
+    out = x + attn @ lp[prefix + "wo"]
+    out = out + _layer_ffn(cfg, lp, prefix, out)
+    return out, lkv
+
+
+def decoder_layer_step(cfg: ModelConfig, lp: Dict[str, jnp.ndarray], prefix: str,
+                       x_new: jnp.ndarray, count: jnp.ndarray, cur_len: jnp.ndarray,
+                       lkv: jnp.ndarray):
+    """Append A new positions to a decoder layer's own KV cache and run them.
+
+    x_new: [B, A, D] (rows >= count are padding); count/cur_len: [B];
+    lkv: [B, 2, S, KVD]. New row j lands at absolute position cur_len + j.
+    Returns (out [B, A, D], lkv', last [B, D] = out at row count-1).
+    """
+    b, a, d = x_new.shape
+    s = lkv.shape[2]
+    positions = cur_len[:, None] + jnp.arange(a)[None, :]            # [B, A]
+    q, k, v = _layer_qkv(cfg, lp, prefix, x_new)
+    q = rope(q.reshape(b, a, cfg.n_heads, cfg.head_dim), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, a, cfg.n_kv_heads, cfg.head_dim), positions, cfg.rope_theta)
+    v = v.reshape(b, a, cfg.n_kv_heads, cfg.head_dim)
+
+    # Scatter the new K/V rows at cur_len + j (j < count).
+    new_rows = jnp.stack([k.reshape(b, a, -1), v.reshape(b, a, -1)], axis=1)  # [B,2,A,KVD]
+    pos_grid = jnp.arange(s, dtype=jnp.int32)
+    for j in range(a):
+        dest = cur_len + j
+        write = j < count
+        sel = ((pos_grid[None] == dest[:, None]) & write[:, None])[:, None, :, None]
+        lkv = jnp.where(sel, new_rows[:, :, j:j + 1], lkv)
+
+    # Attend over the updated cache: query row j may see absolute pos <= cur_len+j.
+    kk = lkv[:, 0].reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    vv = lkv[:, 1].reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(kk, groups, axis=2)
+    vv = jnp.repeat(vv, groups, axis=2)
+    logits = jnp.einsum("bahd,bshd->bhas", q, kk) / (cfg.head_dim ** 0.5)
+    allow = pos_grid[None, None] <= positions[:, :, None]            # [B, A, S]
+    logits = jnp.where(allow[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    attn = jnp.einsum("bhas,bshd->bahd", probs, vv).reshape(b, a, -1)
+    out = x_new + attn @ lp[prefix + "wo"]
+    out = out + _layer_ffn(cfg, lp, prefix, out)
+    idx = jnp.clip(count - 1, 0, a - 1)
+    last = jnp.take_along_axis(out, idx[:, None, None], axis=1)[:, 0]
+    return out, lkv, last
+
+
+# ---------------------------------------------------------------------------
+# Prefix-attention entry points (Hydra++)
+# ---------------------------------------------------------------------------
+
+
+def prefix_prefill(cfg: ModelConfig, hp, hidden_seq, length):
+    """hidden_seq: [B, S, D] (base last-layer hiddens). Returns
+    (enriched-last [B, D], lkv [B, 2, S, KVD])."""
+    out, lkv = decoder_layer_full(cfg, hp, "prefix.", hidden_seq, length)
+    b, s, d = hidden_seq.shape
+    idx = jnp.clip(length - 1, 0, s - 1)
+    last = jnp.take_along_axis(out, idx[:, None, None], axis=1)[:, 0]
+    return last, lkv
+
+
+def prefix_step(cfg: ModelConfig, hp, new_hidden, count, cur_len, lkv):
+    """One serving step: feed the base hiddens of the newly committed tokens
+    (queried ONCE per decoding step — paper §3.1(3)). Returns (enriched
+    [B, D], lkv')."""
+    _, lkv, last = decoder_layer_step(cfg, hp, "prefix.", new_hidden, count, cur_len, lkv)
+    return last, lkv
+
+
+# ---------------------------------------------------------------------------
+# EAGLE entry points
+# ---------------------------------------------------------------------------
+
+
+def eagle_fuse(hp, tok_emb, tokens, hidden):
+    """fuse(E(x_j), h_{j-1}): tokens [.., N], hidden [.., N, D] -> [.., N, D]."""
+    e = tok_emb[tokens]
+    return jnp.concatenate([e, hidden], axis=-1) @ hp["eg.fuse"]
+
+
+def eagle_prefill(cfg: ModelConfig, hp, tok_emb, tokens, hidden_seq, length):
+    """Build the draft layer's cache over the prompt. tokens: [B, S];
+    hidden_seq: [B, S, D] base hiddens. Input at pos j fuses E(x_j) with
+    h_{j-1} (h_{-1} = 0). Returns (f̂-last [B, D], ekv [B, 2, S, KVD])."""
+    b, s, d = hidden_seq.shape
+    h_prev = jnp.concatenate([jnp.zeros((b, 1, d), hidden_seq.dtype), hidden_seq[:, :-1]], axis=1)
+    fused = eagle_fuse(hp, tok_emb, tokens, h_prev)
+    out, ekv = decoder_layer_full(cfg, hp, "eg.", fused, length)
+    idx = jnp.clip(length - 1, 0, s - 1)
+    last = jnp.take_along_axis(out, idx[:, None, None], axis=1)[:, 0]
+    return last, ekv
+
+
+def eagle_step(cfg: ModelConfig, hp, tok_emb, lm_head, final_norm,
+               tokens, h_parent, pos, cur_len, ekv):
+    """Score N tree nodes at one depth. tokens: [B, N] (node tokens);
+    h_parent: [B, N, D] (parent's estimated hidden); pos: [B, N] absolute
+    positions; ekv: the committed draft cache. Nodes attend to the committed
+    prefix and themselves (DESIGN.md §2 simplification). Returns
+    (logits [B, N, V] for the node's child, ĥ_node [B, N, D])."""
+    b, n = tokens.shape
+    s = ekv.shape[2]
+    fused = eagle_fuse(hp, tok_emb, tokens, h_parent)                 # [B, N, D]
+    q, k, v = _layer_qkv(cfg, hp, "eg.", fused)
+    q = rope(q.reshape(b, n, cfg.n_heads, cfg.head_dim), pos, cfg.rope_theta)
+    k_self = rope(k.reshape(b, n, cfg.n_kv_heads, cfg.head_dim), pos, cfg.rope_theta)
+    v_self = v.reshape(b, n, cfg.n_kv_heads, cfg.head_dim)
+
+    kk = ekv[:, 0].reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    vv = ekv[:, 1].reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(kk, groups, axis=2)
+    vv = jnp.repeat(vv, groups, axis=2)
+    k_self_g = jnp.repeat(k_self, groups, axis=2)
+    v_self_g = jnp.repeat(v_self, groups, axis=2)
+
+    logits = jnp.einsum("bnhd,bshd->bhns", q, kk) / (cfg.head_dim ** 0.5)
+    prefix_ok = jnp.arange(s)[None, None] < cur_len[:, None, None]    # [B, 1, S]
+    logits = jnp.where(prefix_ok[:, None], logits, NEG_INF)
+    self_logit = jnp.einsum("bnhd,bnhd->bhn", q, k_self_g)[..., None] / (cfg.head_dim ** 0.5)
+    all_logits = jnp.concatenate([logits, self_logit], axis=-1)       # [B, H, N, S+1]
+    probs = jax.nn.softmax(all_logits, axis=-1)
+    attn = jnp.einsum("bhns,bshd->bnhd", probs[..., :s], vv)
+    attn = attn + probs[..., s:].transpose(0, 2, 1, 3) * v_self_g
+    attn = attn.reshape(b, n, -1)
+    out = fused + attn @ hp["eg.wo"]
+    out = out + _layer_ffn(cfg, hp, "eg.", out)
+    head_logits = rmsnorm(out, final_norm) @ lm_head
+    return head_logits, out
+
+
+def eagle_extend(cfg: ModelConfig, hp, tok_emb, tokens, h_parent, count, cur_len, ekv):
+    """Commit accepted tokens into the draft layer's cache (one cheap call
+    per decoding step). tokens: [B, A]; h_parent: [B, A, D] = base hiddens
+    of each token's predecessor. Returns (f̂-last [B, D], ekv')."""
+    fused = eagle_fuse(hp, tok_emb, tokens, h_parent)
+    _, ekv, last = decoder_layer_step(cfg, hp, "eg.", fused, count, cur_len, ekv)
+    return last, ekv

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: python/tests/test_kernels.py sweeps
+shapes/dtypes with hypothesis and asserts the Pallas implementations match
+these to tight tolerances. They are also the implementation used by the
+(cold) prefill path, where kernel-level tiling does not matter.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[S, KVH, hd] -> [S, KVH*groups, hd] (GQA key/value head broadcast)."""
+    return jnp.repeat(x, groups, axis=1)
+
+
+def tree_attention_ref(
+    q: jnp.ndarray,        # [T, H, hd]   (RoPE already applied)
+    cache_k: jnp.ndarray,  # [S, KVH, hd]
+    cache_v: jnp.ndarray,  # [S, KVH, hd]
+    tree_k: jnp.ndarray,   # [T, KVH, hd]
+    tree_v: jnp.ndarray,   # [T, KVH, hd]
+    cur_len: jnp.ndarray,  # scalar i32 — valid prefix length in the cache
+    anc_mask: jnp.ndarray, # [T, T] bool/0-1 — anc_mask[i, j] = node j is an
+                           #   ancestor-or-self of node i in the candidate tree
+) -> jnp.ndarray:          # [T, H, hd]
+    """Attention of packed candidate-tree queries over committed-prefix KV
+    plus in-tree ancestor KV. This is the verification hot-spot (§2 "Tree
+    decoding" of the paper): one base-model forward scores the whole tree.
+    """
+    t, h, hd = q.shape
+    s = cache_k.shape[0]
+    kvh = cache_k.shape[1]
+    groups = h // kvh
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, dtype=q.dtype))
+
+    k = jnp.concatenate([repeat_kv(cache_k, groups), repeat_kv(tree_k, groups)], axis=0)
+    v = jnp.concatenate([repeat_kv(cache_v, groups), repeat_kv(tree_v, groups)], axis=0)
+
+    # [T, H, S+T]
+    logits = jnp.einsum("thd,shd->ths", q, k) * scale
+    prefix_ok = jnp.arange(s)[None, :] < cur_len              # [1, S]
+    prefix_ok = jnp.broadcast_to(prefix_ok, (t, s))
+    tree_ok = anc_mask.astype(bool)                           # [T, T]
+    mask = jnp.concatenate([prefix_ok, tree_ok], axis=1)      # [T, S+T]
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("ths,shd->thd", probs, v)
+
+
+def swiglu_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray) -> jnp.ndarray:
+    """LLaMA SwiGLU MLP: w2( silu(x@w1) * (x@w3) ).  x: [N, D]."""
+    a = x @ w1
+    g = a * jnp.reciprocal(1.0 + jnp.exp(-a))  # silu
+    return (g * (x @ w3)) @ w2

@@ -1,0 +1,120 @@
+"""Pallas tree-attention kernel — the verification hot-spot (L1).
+
+Speculative tree verification packs all candidate-tree tokens into one
+forward pass; each tree token attends to (a) the committed KV-cache prefix
+and (b) its ancestors inside the tree (paper §2, "Tree decoding"). This
+kernel fuses both mask terms into a flash-style online-softmax accumulator
+so the [T, S+T] mask never materializes in HBM.
+
+Hardware adaptation (DESIGN.md §7): the paper's GPU framing (threadblock
+per query tile, shared-memory KV staging) maps on TPU to a grid over
+(batch, head, query-tile) with the committed cache streamed HBM→VMEM in
+`blk_s` chunks inside a fori_loop — the double-buffered analogue of the
+shared-memory pipeline — and the MXU doing the [blk_t, hd] x [hd, blk_s]
+products. `interpret=True` executes the same schedule on the CPU PJRT
+plugin (real-TPU lowering would emit a Mosaic custom-call the CPU cannot
+run).
+
+Layouts are head-major to give the kernel contiguous [len, hd] panels:
+  q:       [B, H,   T, hd]   (RoPE already applied)
+  cache_k: [B, KVH, S, hd]   committed prefix keys (only [:cur_len] valid)
+  tree_k:  [B, KVH, T, hd]   keys of the packed tree tokens
+  anc_mask:[B, T, T]         anc_mask[i, j] = j is ancestor-or-self of i
+  cur_len: [B, 1] i32
+  out:     [B, H, T, hd]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _tree_attn_kernel(q_ref, ck_ref, cv_ref, tk_ref, tv_ref, len_ref, mask_ref,
+                      o_ref, *, blk_s: int, scale: float):
+    blk_t, hd = q_ref.shape[2], q_ref.shape[3]
+    s_total = ck_ref.shape[2]
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [blk_t, hd]
+    cur_len = len_ref[0, 0]
+
+    m0 = jnp.full((blk_t, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_t, 1), jnp.float32)
+    a0 = jnp.zeros((blk_t, hd), jnp.float32)
+
+    def prefix_block(i, carry):
+        m, l, acc = carry
+        k = ck_ref[0, 0, pl.ds(i * blk_s, blk_s), :].astype(jnp.float32)
+        v = cv_ref[0, 0, pl.ds(i * blk_s, blk_s), :].astype(jnp.float32)
+        pos = i * blk_s + jax.lax.broadcasted_iota(jnp.int32, (1, blk_s), 1)
+        logits = q @ k.T                                  # [blk_t, blk_s] (MXU)
+        logits = jnp.where(pos < cur_len, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        return (m_new, l * alpha + p.sum(-1, keepdims=True), acc * alpha + p @ v)
+
+    m, l, acc = jax.lax.fori_loop(0, s_total // blk_s, prefix_block, (m0, l0, a0))
+
+    # Final block: the tree tokens themselves, masked by ancestry. Every node
+    # is its own ancestor, so each row has >= 1 valid key and l > 0.
+    k = tk_ref[0, 0].astype(jnp.float32)                  # [T, hd]
+    v = tv_ref[0, 0].astype(jnp.float32)
+    logits = q @ k.T                                      # [blk_t, T]
+    logits = jnp.where(mask_ref[0] != 0, logits, NEG_INF)
+    m_new = jnp.maximum(m, logits.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(logits - m_new)
+    l = l * alpha + p.sum(-1, keepdims=True)
+    acc = acc * alpha + p @ v
+
+    o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def tree_attention(q, cache_k, cache_v, tree_k, tree_v, cur_len, anc_mask,
+                   *, blk_s: int = 128, interpret: bool = True):
+    """See module docstring for layouts. Returns [B, H, T, hd]."""
+    b, h, t, hd = q.shape
+    kvh, s_total = cache_k.shape[1], cache_k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    groups = h // kvh
+    assert s_total % blk_s == 0, (s_total, blk_s)
+    blk_t = t if t <= 16 else 16
+    assert t % blk_t == 0, (t, blk_t)
+    scale = 1.0 / (hd ** 0.5)
+    mask_i32 = anc_mask.astype(jnp.int32)
+
+    grid = (b, h, t // blk_t)
+    kernel = functools.partial(_tree_attn_kernel, blk_s=blk_s, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_t, hd), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, s_total, hd), lambda bi, hi, ti, g=groups: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, s_total, hd), lambda bi, hi, ti, g=groups: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda bi, hi, ti, g=groups: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda bi, hi, ti, g=groups: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, ti: (bi, 0)),
+            pl.BlockSpec((1, blk_t, t), lambda bi, hi, ti: (bi, ti, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_t, hd), lambda bi, hi, ti: (bi, hi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, hd), q.dtype),
+        interpret=interpret,
+    )(q, cache_k, cache_v, tree_k, tree_v, cur_len, mask_i32)
+
+
+def tree_attention_batched_ref_layout(q_thd, cache_k, cache_v, tree_k, tree_v,
+                                      cur_len, anc_mask, **kw):
+    """Convenience wrapper taking the oracle's [T, H, hd] single-sequence
+    layout (used by the hypothesis tests for direct comparison)."""
+    q = q_thd.transpose(1, 0, 2)[None]                   # [1, H, T, hd]
+    ck = cache_k.transpose(1, 0, 2)[None]
+    cv = cache_v.transpose(1, 0, 2)[None]
+    tk = tree_k.transpose(1, 0, 2)[None]
+    tv = tree_v.transpose(1, 0, 2)[None]
+    ln = jnp.reshape(cur_len.astype(jnp.int32), (1, 1))
+    out = tree_attention(q, ck, cv, tk, tv, ln, anc_mask[None], **kw)
+    return out[0].transpose(1, 0, 2)                     # [T, H, hd]

@@ -1,0 +1,281 @@
+"""L2 — base transformer (LLaMA-style) and its AOT entry points.
+
+Entry points lowered to HLO artifacts (see aot.py):
+  prefill        — process a padded prompt, build the KV cache
+  verify         — score a packed candidate tree (T=1 doubles as AR decode);
+                   the attention uses the Pallas tree-attention kernel (L1)
+  commit         — scatter accepted tree KVs into the cache (device-side)
+  train_forward  — full causal LM forward (build-time training only)
+
+Weights are runtime inputs (never baked as HLO constants): every entry point
+takes `params` as a flat, name-ordered list — the order is recorded in
+artifacts/manifest.json and mirrored by rust/src/runtime/weights.rs.
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ACCEPT_MAX
+from .kernels.ref import tree_attention_ref, swiglu_ref, NEG_INF
+from .kernels.tree_attention import tree_attention
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Flat dict of name -> array. Names are sorted for the AOT arg order."""
+    params: Dict[str, jnp.ndarray] = {}
+    k_iter = iter(jax.random.split(key, 4 + 16 * cfg.n_layers))
+
+    def dense(shape, scale=None):
+        fan_in = shape[0]
+        scale = scale if scale is not None else fan_in ** -0.5
+        return jax.random.normal(next(k_iter), shape, jnp.float32) * scale
+
+    params["tok_emb"] = dense((cfg.vocab, cfg.d_model), 0.02)
+    for i in range(cfg.n_layers):
+        p = f"layer{i:02d}."
+        params[p + "attn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[p + "wq"] = dense((cfg.d_model, cfg.n_heads * cfg.head_dim))
+        params[p + "wk"] = dense((cfg.d_model, cfg.kv_dim))
+        params[p + "wv"] = dense((cfg.d_model, cfg.kv_dim))
+        params[p + "wo"] = dense((cfg.n_heads * cfg.head_dim, cfg.d_model))
+        params[p + "ffn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[p + "w1"] = dense((cfg.d_model, cfg.d_ffn))
+        params[p + "w2"] = dense((cfg.d_ffn, cfg.d_model))
+        params[p + "w3"] = dense((cfg.d_model, cfg.d_ffn))
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    params["lm_head"] = dense((cfg.d_model, cfg.vocab), 0.02)
+    return params
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return sorted(init_params(cfg, jax.random.PRNGKey(0)).keys())
+
+
+def params_to_list(params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[k] for k in sorted(params.keys())]
+
+
+def params_from_list(names: List[str], arrays) -> Dict[str, jnp.ndarray]:
+    return dict(zip(sorted(names), arrays))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., T, H, hd]; positions: [..., T] (broadcast over heads)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions [..., T] -> angles [..., T, 1, half] (broadcast over heads)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(cfg: ModelConfig, p: Dict[str, jnp.ndarray], i: int, x: jnp.ndarray):
+    pre = f"layer{i:02d}."
+    xn = rmsnorm(x, p[pre + "attn_norm"])
+    q = xn @ p[pre + "wq"]
+    k = xn @ p[pre + "wk"]
+    v = xn @ p[pre + "wv"]
+    return xn, q, k, v
+
+
+def _ffn(cfg: ModelConfig, p: Dict[str, jnp.ndarray], i: int, x: jnp.ndarray):
+    pre = f"layer{i:02d}."
+    xn = rmsnorm(x, p[pre + "ffn_norm"])
+    return swiglu_ref(xn, p[pre + "w1"], p[pre + "w2"], p[pre + "w3"])
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill forward (plain jnp — cold path)
+# ---------------------------------------------------------------------------
+
+
+def train_forward(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+                  return_hidden: bool = False):
+    """Full causal forward. tokens: [B, S] -> logits [B, S, V]."""
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(cfg.n_layers):
+        _, q, k, v = _qkv(cfg, p, i, x)
+        q = rope(q.reshape(b, s, cfg.n_heads, cfg.head_dim), positions, cfg.rope_theta)
+        k = rope(k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim), positions, cfg.rope_theta)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        groups = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(k, groups, axis=2)
+        vv = jnp.repeat(v, groups, axis=2)
+        logits = jnp.einsum("bthd,bshd->bhts", q, kk) / (cfg.head_dim ** 0.5)
+        logits = jnp.where(causal[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", probs, vv).reshape(b, s, -1)
+        x = x + attn @ p[f"layer{i:02d}.wo"]
+        x = x + _ffn(cfg, p, i, x)
+    h = rmsnorm(x, p["final_norm"])
+    logits = h @ p["lm_head"]
+    if return_hidden:
+        return logits, x  # pre-final-norm hidden (what draft heads consume)
+    return logits
+
+
+def prefill(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+            length: jnp.ndarray):
+    """tokens: [B, Smax] (padded), length: [B] i32.
+
+    Returns (last_hidden [B, D], last_logits [B, V], kv [B, L, 2, Smax, KVD]).
+    last_* are taken at index length-1. kv rows at padded positions are
+    whatever the forward computed there — they are never attended to because
+    verify masks keys by cur_len.
+    """
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    valid = positions < length[:, None]
+    causal = jnp.tril(jnp.ones((s, s), bool))[None] & valid[:, None, :]
+    kv_all = []
+    for i in range(cfg.n_layers):
+        _, q, k, v = _qkv(cfg, p, i, x)
+        q = rope(q.reshape(b, s, cfg.n_heads, cfg.head_dim), positions, cfg.rope_theta)
+        k = rope(k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim), positions, cfg.rope_theta)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        kv_all.append(jnp.stack([k.reshape(b, s, -1), v.reshape(b, s, -1)], axis=1))
+        groups = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(k, groups, axis=2)
+        vv = jnp.repeat(v, groups, axis=2)
+        logits = jnp.einsum("bthd,bshd->bhts", q, kk) / (cfg.head_dim ** 0.5)
+        logits = jnp.where(causal[:, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", probs, vv).reshape(b, s, -1)
+        x = x + attn @ p[f"layer{i:02d}.wo"]
+        x = x + _ffn(cfg, p, i, x)
+    kv = jnp.stack(kv_all, axis=1)  # [B, L, 2, S, KVD]
+    idx = jnp.clip(length - 1, 0, s - 1)
+    last_x = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]  # [B, D]
+    last_logits = rmsnorm(last_x, p["final_norm"]) @ p["lm_head"]
+    return last_x, last_logits, kv, x
+
+
+def prefill_with_hidden(cfg: ModelConfig, p: Dict[str, jnp.ndarray],
+                        tokens: jnp.ndarray, length: jnp.ndarray):
+    """AOT prefill entry: (last_hidden [B,D], last_logits [B,V],
+    kv [B,L,2,S,KVD], hidden_seq [B,S,D]). hidden_seq feeds the
+    prefix-attention / EAGLE prefills (device-side chain, no host copy)."""
+    return prefill(cfg, p, tokens, length)
+
+
+# ---------------------------------------------------------------------------
+# Verify (hot path — Pallas tree-attention)
+# ---------------------------------------------------------------------------
+
+
+def verify(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+           positions: jnp.ndarray, cur_len: jnp.ndarray, anc_mask: jnp.ndarray,
+           kv: jnp.ndarray, use_pallas: bool = True):
+    """Score a packed candidate tree in one forward pass.
+
+    tokens/positions: [B, T]; cur_len: [B]; anc_mask: [B, T, T] (i32 0/1,
+    ancestor-or-self); kv: [B, L, 2, Smax, KVD].
+    Returns (logits [B, T, V], hidden [B, T, D], tree_kv [B, L, 2, T, KVD]).
+    """
+    b, t = tokens.shape
+    s = kv.shape[3]
+    x = p["tok_emb"][tokens]
+    tree_kv_all = []
+    cur_len_b1 = cur_len.reshape(b, 1).astype(jnp.int32)
+    for i in range(cfg.n_layers):
+        _, q, k, v = _qkv(cfg, p, i, x)
+        q = rope(q.reshape(b, t, cfg.n_heads, cfg.head_dim), positions, cfg.rope_theta)
+        k = rope(k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim), positions, cfg.rope_theta)
+        v = v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        tree_kv_all.append(jnp.stack([k.reshape(b, t, -1), v.reshape(b, t, -1)], axis=1))
+        cache_k = kv[:, i, 0].reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        cache_v = kv[:, i, 1].reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        if use_pallas:
+            attn = tree_attention(
+                q.transpose(0, 2, 1, 3),            # [B, H, T, hd]
+                cache_k.transpose(0, 2, 1, 3),      # [B, KVH, S, hd]
+                cache_v.transpose(0, 2, 1, 3),
+                k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3),
+                cur_len_b1,
+                anc_mask,
+            ).transpose(0, 2, 1, 3)                 # [B, T, H, hd]
+        else:
+            attn = jax.vmap(tree_attention_ref)(
+                q, cache_k, cache_v, k, v, cur_len.astype(jnp.int32), anc_mask
+            )
+        attn = attn.reshape(b, t, -1)
+        x = x + attn @ p[f"layer{i:02d}.wo"]
+        x = x + _ffn(cfg, p, i, x)
+    tree_kv = jnp.stack(tree_kv_all, axis=1)  # [B, L, 2, T, KVD]
+    logits = rmsnorm(x, p["final_norm"]) @ p["lm_head"]
+    return logits, x, tree_kv
+
+
+# ---------------------------------------------------------------------------
+# Commit (device-side cache scatter)
+# ---------------------------------------------------------------------------
+
+
+def commit(kv: jnp.ndarray, tree_kv: jnp.ndarray, hidden: jnp.ndarray,
+           accept_idx: jnp.ndarray, accept_len: jnp.ndarray, cur_len: jnp.ndarray):
+    """Write accepted tree-node KVs into the cache; gather their hiddens.
+
+    kv: [B, L, 2, S, KVD]; tree_kv: [B, L, 2, T, KVD]; hidden: [B, T, D];
+    accept_idx: [B, A] (tree-node indices, root-first path, padded with 0);
+    accept_len: [B] (1..A); cur_len: [B].
+    Returns (kv', gathered hidden [B, A, D]). Row j of the accepted path
+    lands at cache position cur_len + j for j < accept_len.
+    """
+    b, l, _, s, kvd = kv.shape
+    a = accept_idx.shape[1]
+    pos_grid = jnp.arange(s, dtype=jnp.int32)                       # [S]
+    for j in range(a):
+        rows = jnp.take_along_axis(
+            tree_kv, accept_idx[:, j][:, None, None, None, None], axis=3
+        )                                                           # [B, L, 2, 1, KVD]
+        dest = cur_len + j                                          # [B]
+        write = (j < accept_len)                                    # [B]
+        sel = (pos_grid[None] == dest[:, None]) & write[:, None]    # [B, S]
+        sel = sel[:, None, None, :, None]
+        kv = jnp.where(sel, rows, kv)
+    gathered = jnp.take_along_axis(hidden, accept_idx[..., None], axis=1)  # [B, A, D]
+    return kv, gathered
+
+
+def commit_entry(kv, tree_kv, hidden, accept_idx, accept_len, cur_len):
+    return commit(kv, tree_kv, hidden, accept_idx, accept_len, cur_len)
+
+
+# ---------------------------------------------------------------------------
+# Losses (build-time training)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+            mask: jnp.ndarray) -> jnp.ndarray:
+    """Next-token CE; mask: [B, S] 1 where the *target* position counts."""
+    logits = train_forward(cfg, p, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)

@@ -1,0 +1,80 @@
+"""Retrain draft heads against existing base weights, rewriting only the
+weights_heads_*.bin artifacts (HLO programs take weights as runtime inputs,
+so no re-lowering is needed — manifest stays valid).
+
+Usage:  cd python && python -m compile.retrain_heads --steps 500 \
+            [--sizes s,m,l] [--variants medusa,hydra,hydra_pp] [--out ../artifacts]
+
+Used to push head training closer to saturation than the initial
+`make artifacts` pass (the paper trains to saturation; §5).
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import SIZES, head_variants_for_size
+from . import data, tokenizer as tok_mod, train as T
+from .aot import write_tensors
+
+
+def read_tensors(path):
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"HTB1"
+    hlen = struct.unpack("<I", raw[4:8])[0]
+    header = json.loads(raw[8:8 + hlen])
+    payload = raw[8 + hlen:]
+    out = {}
+    for e in header["tensors"]:
+        dt = np.float32 if e["dtype"] == "f32" else np.int32
+        out[e["name"]] = jnp.asarray(
+            np.frombuffer(payload[e["offset"]:e["offset"] + e["nbytes"]], dt)
+            .reshape(e["shape"]))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--sizes", default="s,m,l")
+    ap.add_argument("--variants", default="")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+
+    tok = tok_mod.Tokenizer.load(os.path.join(out_dir, "tokenizer.json"))
+    corpus = data.gen_corpus(n_examples=9000)
+    ids = np.asarray(tok.encode_corpus(corpus))
+    only = [v for v in args.variants.split(",") if v]
+
+    logs_path = os.path.join(out_dir, "train_logs.json")
+    logs = json.load(open(logs_path)) if os.path.exists(logs_path) else {}
+
+    for z in args.sizes.split(","):
+        base_file = os.path.join(out_dir, f"weights_base_{z}.bin")
+        if not os.path.exists(base_file):
+            print(f"skip size {z}: no base weights")
+            continue
+        bp = read_tensors(base_file)
+        cfg = SIZES[z]
+        for hc in head_variants_for_size(z):
+            if only and hc.name not in only:
+                continue
+            f = os.path.join(out_dir, f"weights_heads_{z}_{hc.name}.bin")
+            if not os.path.exists(f):
+                continue  # not part of the original build
+            print(f"== retrain {z}/{hc.name} ({args.steps} x{hc.epochs_scale}) ==", flush=True)
+            hp, log = T.train_heads(cfg, hc, bp, ids, steps=args.steps, log_every=100)
+            write_tensors(f, {k: np.asarray(v) for k, v in hp.items()})
+            logs[f"heads_{z}_{hc.name}"] = log
+    with open(logs_path, "w") as fh:
+        json.dump(logs, fh, indent=1)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

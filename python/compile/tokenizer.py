@@ -1,0 +1,122 @@
+"""BPE-lite tokenizer: 256 byte tokens + greedily learned pair merges.
+
+Trained once over the synthetic corpus during `make artifacts`; the merge
+table is exported to artifacts/tokenizer.json and re-applied by the Rust
+tokenizer (rust/src/tokenizer/) with identical semantics — encode parity is
+asserted by an integration test over shared vectors
+(artifacts/tokenizer_vectors.json).
+"""
+
+import json
+from collections import Counter
+from typing import Dict, List, Tuple
+
+N_BYTE_TOKENS = 256
+
+
+def train_merges(text: str, n_merges: int) -> List[Tuple[int, int]]:
+    """Greedy BPE on byte ids. Merge rank == creation order (like GPT-2)."""
+    ids = list(text.encode("utf-8"))
+    merges: List[Tuple[int, int]] = []
+    for step in range(n_merges):
+        counts = Counter(zip(ids, ids[1:]))
+        if not counts:
+            break
+        pair, freq = counts.most_common(1)[0]
+        if freq < 2:
+            break
+        new_id = N_BYTE_TOKENS + step
+        merges.append(pair)
+        ids = _apply_merge(ids, pair, new_id)
+    return merges
+
+
+def _apply_merge(ids: List[int], pair: Tuple[int, int], new_id: int) -> List[int]:
+    out: List[int] = []
+    i, n = 0, len(ids)
+    while i < n:
+        if i + 1 < n and ids[i] == pair[0] and ids[i + 1] == pair[1]:
+            out.append(new_id)
+            i += 2
+        else:
+            out.append(ids[i])
+            i += 1
+    return out
+
+
+class Tokenizer:
+    def __init__(self, merges: List[Tuple[int, int]]):
+        self.merges = [tuple(m) for m in merges]
+        self.ranks: Dict[Tuple[int, int], int] = {
+            tuple(p): i for i, p in enumerate(self.merges)
+        }
+        self.vocab_size = N_BYTE_TOKENS + len(self.merges)
+
+    def encode(self, text: str) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        # Repeatedly apply the lowest-rank (earliest-learned) applicable
+        # merge — standard BPE inference, mirrored exactly in Rust.
+        while len(ids) >= 2:
+            best_rank, best_pos = None, -1
+            for i in range(len(ids) - 1):
+                r = self.ranks.get((ids[i], ids[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank, best_pos = r, i
+            if best_rank is None:
+                break
+            new_id = N_BYTE_TOKENS + best_rank
+            pair = self.merges[best_rank]
+            ids = _apply_merge(ids, pair, new_id)
+        return ids
+
+    def decode(self, ids: List[int]) -> str:
+        data = bytearray()
+        for tid in ids:
+            data.extend(self._expand(tid))
+        return data.decode("utf-8", errors="replace")
+
+    def _expand(self, tid: int) -> bytes:
+        if tid < N_BYTE_TOKENS:
+            return bytes([tid])
+        a, b = self.merges[tid - N_BYTE_TOKENS]
+        return self._expand(a) + self._expand(b)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(
+                {"n_byte_tokens": N_BYTE_TOKENS, "merges": [list(m) for m in self.merges]},
+                f,
+            )
+
+    @classmethod
+    def load(cls, path: str) -> "Tokenizer":
+        with open(path) as f:
+            obj = json.load(f)
+        return cls([tuple(m) for m in obj["merges"]])
+
+    def encode_corpus(self, text: str):
+        """Fast numpy bulk encoder for the training corpus.
+
+        Applies each merge exhaustively in rank order — equivalent to the
+        lowest-rank-first inference in `encode` (both always prefer the
+        lowest-rank applicable merge, greedy left-to-right), but O(n) per
+        merge in C instead of a Python scan per step.
+        """
+        import numpy as np
+
+        ids = np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+        for rank, (a, b) in enumerate(self.merges):
+            new_id = N_BYTE_TOKENS + rank
+            match = (ids[:-1] == a) & (ids[1:] == b)
+            idx = np.flatnonzero(match)
+            if idx.size == 0:
+                continue
+            # Drop overlapping consecutive matches (greedy left-to-right).
+            keep = [int(idx[0])]
+            for t in idx[1:]:
+                if t != keep[-1] + 1:
+                    keep.append(int(t))
+            keep_arr = np.array(keep)
+            ids[keep_arr] = new_id
+            ids = np.delete(ids, keep_arr + 1)
+        return ids

@@ -1,0 +1,203 @@
+"""Build-time training: base LM + draft heads (all variants).
+
+Runs once inside `make artifacts`, on CPU, single-core. The optimizer is a
+hand-rolled AdamW with cosine LR + warmup (no optax in this environment),
+matching the paper's recipe (§5: AdamW β1=0.9 β2=0.999, peak LR 1e-3,
+cosine schedule; base model FROZEN during head training; Hydra++ trained
+for ~10x longer — scaled here via HeadConfig.epochs_scale).
+"""
+
+import functools
+import math
+import time
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, HeadConfig, NUM_DRAFT_HEADS
+from . import model as M
+from . import heads as H
+
+# ---------------------------------------------------------------------------
+# AdamW + cosine schedule (hand-rolled)
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": zeros, "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** tf
+    bc2 = 1.0 - b2 ** tf
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + wd * p),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total_steps, peak=1e-3, warmup_frac=0.05, floor=1e-5):
+    warmup = max(1, int(total_steps * warmup_frac))
+    warm = peak * jnp.minimum(step / warmup, 1.0)
+    prog = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# Data batching
+# ---------------------------------------------------------------------------
+
+
+def batch_iter(ids: np.ndarray, batch: int, seq: int, seed: int) -> Iterator[np.ndarray]:
+    """Random contiguous windows over the encoded corpus, forever."""
+    rng = np.random.default_rng(seed)
+    n = len(ids) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([ids[s:s + seq] for s in starts]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Base LM training
+# ---------------------------------------------------------------------------
+
+
+def train_base(cfg: ModelConfig, ids: np.ndarray, steps: int, batch: int = 8,
+               seq: int = 96, seed: int = 0, log_every: int = 25):
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr):
+        def loss_fn(p):
+            return M.lm_loss(cfg, p, tokens, jnp.ones_like(tokens, jnp.float32))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    it = batch_iter(ids, batch, seq, seed)
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        lr = cosine_lr(jnp.asarray(s, jnp.float32), steps)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(next(it)), lr)
+        if s % log_every == 0 or s == steps - 1:
+            loss_v = float(loss)
+            log.append({"step": s, "loss": round(loss_v, 4),
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"  [base-{cfg.name}] step {s:4d} loss {loss_v:.4f}", flush=True)
+    return params, log
+
+
+# ---------------------------------------------------------------------------
+# Draft-head training (frozen base)
+# ---------------------------------------------------------------------------
+
+
+def head_loss(cfg: ModelConfig, hc: HeadConfig, base_params, head_params,
+              tokens, noise_key):
+    """Teacher-forced loss over every position of a batch (paper App. A.1).
+
+    For position p, head i predicts token x_{p+1+i}:
+      - 'ntp' objective: cross-entropy against the corpus token;
+      - 'teacher': cross-entropy against the base model's distribution at
+        position p+i (self-distillation, Zhou et al. 2024).
+    Hydra heads are teacher-forced on the TRUE tokens x_{p+1..p+i}.
+    """
+    b, s = tokens.shape
+    base_logits, hidden = M.train_forward(cfg, base_params, tokens, return_hidden=True)
+    base_logits = jax.lax.stop_gradient(base_logits)
+    hidden = jax.lax.stop_gradient(hidden)
+
+    if hc.noise_alpha > 0.0:
+        # NEFT-style noise on the base hidden states (App. A.1; Jain et al.).
+        noise = jax.random.uniform(noise_key, hidden.shape, hidden.dtype, -1.0, 1.0)
+        hidden = hidden + noise * (hc.noise_alpha / math.sqrt(s * cfg.d_model))
+
+    tok_emb = jax.lax.stop_gradient(base_params["tok_emb"])
+
+    if hc.kind == "eagle":
+        h_prev = jnp.concatenate(
+            [jnp.zeros((b, 1, cfg.d_model), hidden.dtype), hidden[:, :-1]], axis=1)
+        fused = H.eagle_fuse(head_params, tok_emb, tokens, h_prev)
+        out, _ = H.decoder_layer_full(cfg, head_params, "eg.", fused,
+                                      jnp.full((b,), s, jnp.int32))
+        # Token loss: predict x_{p+1} via the frozen base LM head...
+        pred_logits = M.rmsnorm(out, jax.lax.stop_gradient(base_params["final_norm"])) \
+            @ jax.lax.stop_gradient(base_params["lm_head"])
+        logp = jax.nn.log_softmax(pred_logits[:, :-1], axis=-1)
+        if hc.objective == "teacher":
+            tgt_p = jax.nn.softmax(base_logits[:, :-1], axis=-1)
+            ce = -(tgt_p * logp).sum(-1).mean()
+        else:
+            ce = -jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1).mean()
+        # ...plus hidden-state regression f̂_p ≈ h_p (Li et al. 2024).
+        reg = jnp.abs(out - hidden).mean()
+        return ce + 0.5 * reg
+
+    h_star = hidden
+    if hc.prefix_attn:
+        h_star, _ = H.decoder_layer_full(cfg, head_params, "prefix.", hidden,
+                                         jnp.full((b,), s, jnp.int32))
+
+    emb_all = tok_emb[tokens]                      # [B, S, D]
+    total, denom = 0.0, 0
+    for i in range(1, NUM_DRAFT_HEADS + 1):
+        valid = s - 1 - i                          # positions p = 0..valid-1
+        h_in = h_star[:, :valid]
+        if hc.kind == "medusa":
+            x_in = h_in
+        else:
+            path = [emb_all[:, j:j + valid] for j in range(1, i + 1)]
+            x_in = jnp.concatenate([h_in] + path, axis=-1)
+        logits = H.mlp_head_forward(head_params, hc, i, x_in)   # [B, valid, V]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        if hc.objective == "teacher":
+            tgt_p = jax.nn.softmax(base_logits[:, i:i + valid], axis=-1)
+            ce = -(tgt_p * logp).sum(-1).mean()
+        else:
+            tgt = tokens[:, i + 1:i + 1 + valid]
+            ce = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).mean()
+        total = total + ce
+        denom += 1
+    return total / denom
+
+
+def train_heads(cfg: ModelConfig, hc: HeadConfig, base_params, ids: np.ndarray,
+                steps: int, batch: int = 8, seq: int = 96, seed: int = 1,
+                log_every: int = 25):
+    steps = max(10, int(steps * hc.epochs_scale))
+    head_params = H.init_head_params(cfg, hc, jax.random.PRNGKey(seed + hash(hc.name) % 1000))
+    opt = adamw_init(head_params)
+
+    @jax.jit
+    def step_fn(head_params, opt, tokens, lr, key):
+        def loss_fn(hp):
+            return head_loss(cfg, hc, base_params, hp, tokens, key)
+        loss, grads = jax.value_and_grad(loss_fn)(head_params)
+        head_params, opt = adamw_update(head_params, grads, opt, lr)
+        return head_params, opt, loss
+
+    it = batch_iter(ids, batch, seq, seed + 77)
+    key = jax.random.PRNGKey(seed + 13)
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        key, sub = jax.random.split(key)
+        lr = cosine_lr(jnp.asarray(s, jnp.float32), steps)
+        head_params, opt, loss = step_fn(head_params, opt, jnp.asarray(next(it)), lr, sub)
+        if s % log_every == 0 or s == steps - 1:
+            loss_v = float(loss)
+            log.append({"step": s, "loss": round(loss_v, 4),
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"  [{cfg.name}/{hc.name}] step {s:4d} loss {loss_v:.4f}", flush=True)
+    return head_params, log

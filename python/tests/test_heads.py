@@ -1,0 +1,148 @@
+"""Draft-head architecture invariants — most importantly the paper's core
+distinction: Medusa heads are sequentially INDEPENDENT (changing candidate
+path tokens cannot change their output) while Hydra heads are sequentially
+DEPENDENT (it must)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig, HeadConfig, NUM_DRAFT_HEADS
+from compile import heads as H
+from compile import model as M
+
+CFG = ModelConfig("t", d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                  d_ffn=64, seq_max=64)
+
+
+@pytest.fixture(scope="module")
+def base():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_medusa_head_shapes(base):
+    hc = HeadConfig("medusa", kind="medusa")
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(1))
+    h = jnp.ones((8, CFG.d_model))
+    out = H.medusa_draft(hp, hc, h)
+    assert out.shape == (8, NUM_DRAFT_HEADS, CFG.vocab)
+
+
+def test_hydra_head_is_sequentially_dependent(base):
+    hc = HeadConfig("hydra", kind="hydra")
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.standard_normal((4, CFG.d_model)), jnp.float32)
+    path1 = jnp.asarray([[3, 7], [1, 2], [9, 9], [0, 5]], jnp.int32)
+    path2 = path1.at[:, 1].set(jnp.asarray([8, 3, 1, 6]))
+    l1 = H.hydra_draft(hp, hc, 2, base["tok_emb"], h, path1)
+    l2 = H.hydra_draft(hp, hc, 2, base["tok_emb"], h, path2)
+    assert l1.shape == (4, CFG.vocab)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4, \
+        "hydra head must depend on the candidate path"
+
+
+def test_hydra_head_input_width_grows():
+    hc = HeadConfig("hydra", kind="hydra")
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(3))
+    for i in range(1, NUM_DRAFT_HEADS + 1):
+        assert hp[f"head{i}.win"].shape == (CFG.d_model * (1 + i), CFG.d_model)
+
+
+def test_mlp_layers_add_residual_blocks():
+    hc = HeadConfig("hydra_pp", kind="hydra", mlp_layers=4)
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(4))
+    for i in range(1, NUM_DRAFT_HEADS + 1):
+        for j in range(3):
+            assert f"head{i}.res{j}.w" in hp
+    # Zero-init residuals: 4-layer head == 1-layer head at init.
+    hc1 = HeadConfig("hydra", kind="hydra", mlp_layers=1)
+    x = jnp.ones((2, CFG.d_model * 2))
+    out4 = H.mlp_head_forward(hp, hc, 1, x)
+    hp1 = {k: v for k, v in hp.items() if "res" not in k}
+    out1 = H.mlp_head_forward(hp1, hc1, 1, x)
+    np.testing.assert_allclose(np.asarray(out4), np.asarray(out1), atol=1e-6)
+
+
+def test_prefix_step_matches_full(base):
+    """Incremental prefix-attention (serving path) must equal the full
+    causal layer (training path) on the same inputs."""
+    hc = HeadConfig("hydra_pp", kind="hydra", mlp_layers=1, prefix_attn=True)
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(5))
+    rng = np.random.default_rng(1)
+    b, s, d = 2, CFG.seq_max, CFG.d_model
+    n0, n_new = 10, 3
+    hseq = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+
+    # Full pass over n0 + n_new positions.
+    full_out, _ = H.decoder_layer_full(
+        CFG, hp, "prefix.", hseq, jnp.asarray([n0 + n_new] * b, jnp.int32))
+
+    # Incremental: prefill n0, then step the next n_new.
+    _, lkv = H.prefix_prefill(CFG, hp, hseq, jnp.asarray([n0] * b, jnp.int32))
+    new_h = hseq[:, n0:n0 + 5, :]  # A = 5 rows, only first n_new valid
+    last, _ = H.prefix_step(CFG, hp, new_h, jnp.asarray([n_new] * b, jnp.int32),
+                            jnp.asarray([n0] * b, jnp.int32), lkv)
+    want = full_out[:, n0 + n_new - 1]
+    np.testing.assert_allclose(np.asarray(last), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_eagle_prefill_and_extend_consistent(base):
+    """EAGLE's incremental cache extension must reproduce the prefill path:
+    prefill(n0+k tokens) == prefill(n0) + extend(k tokens)."""
+    hc = HeadConfig("eagle", kind="eagle")
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(6))
+    rng = np.random.default_rng(2)
+    b, s, d = 1, CFG.seq_max, CFG.d_model
+    n0, k = 12, 3
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, (b, s)), jnp.int32)
+    hseq = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+
+    last_full, _ = H.eagle_prefill(CFG, hp, base["tok_emb"], tokens, hseq,
+                                   jnp.asarray([n0 + k], jnp.int32))
+
+    _, ekv = H.eagle_prefill(CFG, hp, base["tok_emb"], tokens, hseq,
+                             jnp.asarray([n0], jnp.int32))
+    # extend with tokens n0..n0+k-1; parent hidden = hseq[n0-1 .. n0+k-2]
+    etoks = tokens[:, n0:n0 + 5]
+    hpar = hseq[:, n0 - 1:n0 + 4, :]
+    last_inc, _ = H.eagle_extend(CFG, hp, base["tok_emb"], etoks, hpar,
+                                 jnp.asarray([k], jnp.int32),
+                                 jnp.asarray([n0], jnp.int32), ekv)
+    np.testing.assert_allclose(np.asarray(last_inc), np.asarray(last_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_eagle_step_shapes(base):
+    hc = HeadConfig("eagle", kind="eagle")
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(3)
+    n = 8
+    ekv = jnp.zeros((1, 2, CFG.seq_max, CFG.kv_dim))
+    logits, h_out = H.eagle_step(
+        CFG, hp, base["tok_emb"], base["lm_head"], base["final_norm"],
+        jnp.asarray(rng.integers(0, CFG.vocab, (1, n)), jnp.int32),
+        jnp.asarray(rng.standard_normal((1, n, CFG.d_model)), jnp.float32),
+        jnp.asarray([[5] * n], jnp.int32),
+        jnp.asarray([5], jnp.int32), ekv)
+    assert logits.shape == (1, n, CFG.vocab)
+    assert h_out.shape == (1, n, CFG.d_model)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_decoder_layer_step_writes_cache(base):
+    hc = HeadConfig("hydra_pp", kind="hydra", prefix_attn=True)
+    hp = H.init_head_params(CFG, hc, jax.random.PRNGKey(8))
+    b, s = 1, CFG.seq_max
+    lkv = jnp.zeros((b, 2, s, CFG.kv_dim))
+    x = jnp.ones((b, 5, CFG.d_model))
+    _, lkv2, _ = H.decoder_layer_step(
+        CFG, hp, "prefix.", x, jnp.asarray([2], jnp.int32),
+        jnp.asarray([7], jnp.int32), lkv)
+    lkv2 = np.asarray(lkv2)
+    # Rows 7, 8 written; row 9 (beyond count) untouched (zero).
+    assert np.abs(lkv2[0, :, 7]).max() > 0
+    assert np.abs(lkv2[0, :, 8]).max() > 0
+    assert np.abs(lkv2[0, :, 9]).max() == 0
+    assert np.abs(lkv2[0, :, 6]).max() == 0

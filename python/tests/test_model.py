@@ -1,0 +1,186 @@
+"""L2 base-model invariants: decode parity, tree verification correctness,
+prefill masking, commit semantics. These pin the exact contracts the Rust
+engine relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import SIZES, ModelConfig, ACCEPT_MAX
+from compile import model as M
+
+CFG = ModelConfig("t", d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                  d_ffn=64, seq_max=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(11))
+
+
+def _prefill(params, toks, lens):
+    return M.prefill(CFG, params, jnp.asarray(toks), jnp.asarray(lens, jnp.int32))
+
+
+def test_param_shapes(params):
+    assert params["tok_emb"].shape == (CFG.vocab, 32)
+    assert params["layer00.wk"].shape == (32, CFG.kv_dim)
+    assert CFG.kv_dim == 16
+
+
+def test_prefill_padding_invariance(params):
+    """Tokens beyond `length` must not affect outputs."""
+    rng = np.random.default_rng(0)
+    toks = np.zeros((1, CFG.seq_max), np.int32)
+    toks[0, :20] = rng.integers(0, CFG.vocab, 20)
+    h1, l1, kv1, hs1 = _prefill(params, toks, [20])
+    toks2 = toks.copy()
+    toks2[0, 20:] = rng.integers(0, CFG.vocab, CFG.seq_max - 20)
+    h2, l2, kv2, hs2 = _prefill(params, toks2, [20])
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kv1)[:, :, :, :20], np.asarray(kv2)[:, :, :, :20], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hs1)[:, :20], np.asarray(hs2)[:, :20], atol=1e-5)
+
+
+def test_prefill_matches_train_forward(params):
+    rng = np.random.default_rng(1)
+    n = 25
+    toks = np.zeros((1, CFG.seq_max), np.int32)
+    toks[0, :n] = rng.integers(0, CFG.vocab, n)
+    _, last_logits, _, _ = _prefill(params, toks, [n])
+    full = M.train_forward(CFG, params, jnp.asarray(toks[:, :n]))
+    np.testing.assert_allclose(np.asarray(last_logits)[0], np.asarray(full)[0, -1],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ar_decode_parity(params):
+    """prefill + verify(T=1) + commit == argmax decode with full forward."""
+    rng = np.random.default_rng(2)
+    lens = [10, 17]
+    B = 2
+    toks = np.zeros((B, CFG.seq_max), np.int32)
+    for b, L in enumerate(lens):
+        toks[b, :L] = rng.integers(0, CFG.vocab, L)
+    _, last_logits, kv, _ = _prefill(params, toks, lens)
+    cur = np.array(lens, np.int32)
+    seqs = [list(toks[b, :lens[b]]) for b in range(B)]
+    root = np.argmax(np.asarray(last_logits), -1)
+    for _ in range(6):
+        logits, hidden, tree_kv = M.verify(
+            CFG, params, jnp.asarray(root.reshape(B, 1).astype(np.int32)),
+            jnp.asarray(cur.reshape(B, 1).astype(np.int32)),
+            jnp.asarray(cur), jnp.ones((B, 1, 1), jnp.int32), kv)
+        kv, _ = M.commit(kv, tree_kv, hidden,
+                         jnp.zeros((B, ACCEPT_MAX), jnp.int32),
+                         jnp.ones((B,), jnp.int32), jnp.asarray(cur))
+        for b in range(B):
+            seqs[b].append(int(root[b]))
+        cur = cur + 1
+        root = np.argmax(np.asarray(logits)[:, 0], -1)
+    for b in range(B):
+        ref = list(toks[b, :lens[b]])
+        for _ in range(6):
+            lg = M.train_forward(CFG, params, jnp.asarray([ref], jnp.int32))
+            ref.append(int(np.argmax(np.asarray(lg)[0, -1])))
+        assert ref == seqs[b]
+
+
+def test_verify_tree_equals_sequential(params):
+    """Every root-to-node path in a verified tree must produce the same
+    logits as running that path sequentially — the correctness property
+    that makes tree speculation sound (paper §2)."""
+    rng = np.random.default_rng(3)
+    n = 12
+    toks = np.zeros((1, CFG.seq_max), np.int32)
+    toks[0, :n] = rng.integers(0, CFG.vocab, n)
+    _, _, kv, _ = _prefill(params, toks, [n])
+
+    parent = [-1, 0, 0, 1, 1, 2, 3]
+    tree_tok = np.array([[3, 7, 11, 2, 9, 4, 6]], np.int32)
+    t = len(parent)
+    anc = np.zeros((1, t, t), np.int32)
+    depth = np.zeros(t, np.int32)
+    for i in range(t):
+        j = i
+        while j != -1:
+            anc[0, i, j] = 1
+            j = parent[j]
+        depth[i] = anc[0, i].sum() - 1
+    pos = (n + depth)[None].astype(np.int32)
+    logits, _, _ = M.verify(CFG, params, jnp.asarray(tree_tok), jnp.asarray(pos),
+                            jnp.asarray([n], jnp.int32), jnp.asarray(anc), kv)
+    logits = np.asarray(logits)[0]
+    for node in range(t):
+        path, j = [], node
+        while j != -1:
+            path.append(j)
+            j = parent[j]
+        path.reverse()
+        seq = list(toks[0, :n]) + [int(tree_tok[0, k]) for k in path]
+        full = M.train_forward(CFG, params, jnp.asarray([seq], jnp.int32))
+        np.testing.assert_allclose(logits[node], np.asarray(full)[0, -1],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_commit_scatter_semantics(params):
+    """commit writes accepted rows at cur_len+j and leaves the rest alone."""
+    B, L2, S, KVD, T, D = 2, CFG.n_layers, CFG.seq_max, CFG.kv_dim, 8, CFG.d_model
+    rng = np.random.default_rng(4)
+    kv = rng.standard_normal((B, L2, 2, S, KVD)).astype(np.float32)
+    tree_kv = rng.standard_normal((B, L2, 2, T, KVD)).astype(np.float32)
+    hidden = rng.standard_normal((B, T, D)).astype(np.float32)
+    accept_idx = np.array([[0, 3, 5, 0, 0], [2, 0, 0, 0, 0]], np.int32)
+    accept_len = np.array([3, 1], np.int32)
+    cur_len = np.array([10, 40], np.int32)
+    kv2, gath = M.commit(jnp.asarray(kv), jnp.asarray(tree_kv), jnp.asarray(hidden),
+                         jnp.asarray(accept_idx), jnp.asarray(accept_len),
+                         jnp.asarray(cur_len))
+    kv2 = np.asarray(kv2)
+    for b in range(B):
+        for j in range(5):
+            if j < accept_len[b]:
+                np.testing.assert_allclose(
+                    kv2[b, :, :, cur_len[b] + j], tree_kv[b, :, :, accept_idx[b, j]])
+            else:
+                np.testing.assert_allclose(
+                    kv2[b, :, :, cur_len[b] + j], kv[b, :, :, cur_len[b] + j])
+        np.testing.assert_allclose(kv2[b, :, :, :cur_len[b]], kv[b, :, :, :cur_len[b]])
+    gath = np.asarray(gath)
+    np.testing.assert_allclose(gath[0, 1], hidden[0, 3])
+    np.testing.assert_allclose(gath[1, 0], hidden[1, 2])
+
+
+def test_verify_batch_independence(params):
+    """Each batch row's verify output depends only on that row."""
+    rng = np.random.default_rng(5)
+    lens = [8, 30]
+    toks = np.zeros((2, CFG.seq_max), np.int32)
+    for b, L in enumerate(lens):
+        toks[b, :L] = rng.integers(0, CFG.vocab, L)
+    _, _, kv, _ = _prefill(params, toks, lens)
+    T = 4
+    tree_tok = rng.integers(0, CFG.vocab, (2, T)).astype(np.int32)
+    anc = np.tril(np.ones((T, T), np.int32))[None].repeat(2, 0)
+    pos = np.stack([lens[0] + np.arange(T), lens[1] + np.arange(T)]).astype(np.int32)
+    lg2, _, _ = M.verify(CFG, params, jnp.asarray(tree_tok), jnp.asarray(pos),
+                         jnp.asarray(lens, jnp.int32), jnp.asarray(anc), kv)
+    # single-row run of row 0
+    _, _, kv0, _ = _prefill(params, toks[:1], lens[:1])
+    lg1, _, _ = M.verify(CFG, params, jnp.asarray(tree_tok[:1]), jnp.asarray(pos[:1]),
+                         jnp.asarray(lens[:1], jnp.int32), jnp.asarray(anc[:1]), kv0)
+    np.testing.assert_allclose(np.asarray(lg2)[0], np.asarray(lg1)[0], rtol=1e-4, atol=1e-4)
+
+
+def test_rope_position_shift():
+    """RoPE is relative: equal queries/keys at shifted positions give the
+    same attention pattern (sanity for tree position handling)."""
+    x = jnp.ones((1, 4, 2, 16))
+    p1 = jnp.array([[0, 1, 2, 3]])
+    p2 = jnp.array([[10, 11, 12, 13]])
+    r1 = M.rope(x, p1, 10000.0)
+    r2 = M.rope(x, p2, 10000.0)
+    dots1 = np.einsum("bthd,bshd->bts", np.asarray(r1), np.asarray(r1))
+    dots2 = np.einsum("bthd,bshd->bts", np.asarray(r2), np.asarray(r2))
+    np.testing.assert_allclose(dots1, dots2, rtol=1e-4, atol=1e-4)

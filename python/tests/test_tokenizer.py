@@ -1,0 +1,77 @@
+"""Tokenizer: BPE-lite training, inference/bulk-encode equivalence, roundtrip."""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+from compile.tokenizer import Tokenizer, train_merges, N_BYTE_TOKENS
+
+
+@pytest.fixture(scope="module")
+def tok():
+    corpus = data.gen_corpus(n_examples=150)
+    return Tokenizer(train_merges(corpus[:20000], 64)), corpus
+
+
+def test_train_learns_merges(tok):
+    t, _ = tok
+    assert len(t.merges) == 64
+    assert t.vocab_size == N_BYTE_TOKENS + 64
+
+
+def test_roundtrip(tok):
+    t, corpus = tok
+    for a in range(0, 5000, 517):
+        s = corpus[a:a + 73]
+        assert t.decode(t.encode(s)) == s
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126), max_size=60))
+def test_roundtrip_arbitrary_ascii(s):
+    corpus = data.gen_corpus(n_examples=50)
+    t = Tokenizer(train_merges(corpus[:5000], 32))
+    assert t.decode(t.encode(s)) == s
+
+
+def test_encode_corpus_matches_encode(tok):
+    """Bulk (rank-order) encoding must equal inference (lowest-rank-first)."""
+    t, corpus = tok
+    for a in range(0, 3000, 301):
+        s = corpus[a:a + 120]
+        assert list(t.encode_corpus(s)) == t.encode(s), s
+
+
+def test_encode_ids_in_range(tok):
+    t, corpus = tok
+    ids = t.encode(corpus[:500])
+    assert all(0 <= i < t.vocab_size for i in ids)
+    assert len(ids) < 500  # merges must compress
+
+
+def test_save_load_roundtrip(tok, tmp_path):
+    t, corpus = tok
+    p = tmp_path / "tok.json"
+    t.save(str(p))
+    t2 = Tokenizer.load(str(p))
+    s = corpus[100:220]
+    assert t.encode(s) == t2.encode(s)
+
+
+def test_determinism():
+    c1 = data.gen_corpus(seed=5, n_examples=40)
+    c2 = data.gen_corpus(seed=5, n_examples=40)
+    assert c1 == c2
+    assert train_merges(c1[:4000], 16) == train_merges(c2[:4000], 16)
+
+
+def test_overlapping_pair_greedy_left():
+    """'aaaa' with merge (a,a) -> two merged tokens, greedy left-to-right."""
+    t = Tokenizer([(97, 97)])
+    assert t.encode("aaaa") == [256, 256]
+    assert t.encode("aaa") == [256, 97]
+    assert list(t.encode_corpus("aaaa")) == [256, 256]
+    assert list(t.encode_corpus("aaa")) == [256, 97]

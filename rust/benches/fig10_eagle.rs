@@ -1,0 +1,55 @@
+//! Figure 10 (App. C) — Hydra++ vs EAGLE at batch size 1 on MT-Bench-sim.
+//! Paper shape: EAGLE reaches a HIGHER average acceptance length but
+//! comparable end-to-end throughput — its decoder-layer draft is queried
+//! per candidate position, whereas Hydra++'s extra attention layer runs
+//! once per decoding step and the rest of its draft is shallow MLPs.
+
+use hydra_serve::bench::{fmt1, fmt2, run_decode_bench, save_result, BenchCtx, DecodeBenchCfg, Table};
+use hydra_serve::engine::AcceptMode;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let prompts = workload::mt_bench(&ctx.prompts);
+    let n_prompts = ctx.scale(10);
+    let gen_tokens = ctx.scale(80);
+
+    let mut table = Table::new(
+        "Fig. 10 — Hydra++ vs EAGLE (size s, bs=1, greedy)",
+        &["strategy", "tok/s", "accept len", "draft ms/step", "verify ms/step"],
+    );
+    let mut results = Vec::new();
+    for variant in ["hydra_pp", "eagle"] {
+        if !ctx.has_variant(&size, variant) {
+            eprintln!("skipping {variant}: not in artifacts");
+            continue;
+        }
+        let cfg = DecodeBenchCfg {
+            size: size.clone(),
+            variant: variant.to_string(),
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            tree: None,
+            gen_tokens,
+            n_prompts,
+        };
+        let m = run_decode_bench(&ctx, &cfg, &prompts)?;
+        table.row(vec![
+            hydra_serve::draft::label(variant).to_string(),
+            fmt1(m.throughput()),
+            fmt2(m.mean_accept_len()),
+            "-".into(),
+            "-".into(),
+        ]);
+        results.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("throughput", Json::num(m.throughput())),
+            ("accept_len", Json::num(m.mean_accept_len())),
+        ]));
+    }
+    table.print();
+    save_result("fig10_eagle", Json::Arr(results))?;
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Figure 2 — batch-size-1 decoding throughput + average acceptance length
+//! on MT-Bench-sim for {AR baseline, Medusa, Hydra, Hydra++} across all
+//! built base-model sizes (s/m/l stand in for Vicuna 7B/13B/33B).
+//!
+//! Paper shape to reproduce: acceptance AR(1.0) < Medusa < Hydra < Hydra++;
+//! throughput AR < Medusa < Hydra < Hydra++ (Hydra ~1.1x Medusa, Hydra++
+//! ~1.2-1.3x Medusa, ~2-2.7x AR on the authors' hardware).
+
+use hydra_serve::bench::{fmt1, fmt2, run_decode_bench, save_result, BenchCtx, DecodeBenchCfg, Table};
+use hydra_serve::engine::AcceptMode;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let prompts = workload::mt_bench(&ctx.prompts);
+    let n_prompts = ctx.scale(12);
+    let gen_tokens = ctx.scale(96);
+
+    let mut table = Table::new(
+        "Fig. 2 — MT-Bench-sim, batch size 1, greedy acceptance",
+        &["size", "strategy", "tok/s", "speedup vs AR", "vs Medusa", "accept len"],
+    );
+    let mut results = Vec::new();
+    for size in ctx.sizes() {
+        let mut ar_thr = None;
+        let mut medusa_thr = None;
+        for variant in ["ar", "medusa", "hydra", "hydra_pp"] {
+            if variant != "ar" && !ctx.has_variant(&size, variant) {
+                continue;
+            }
+            let cfg = DecodeBenchCfg {
+                size: size.clone(),
+                variant: variant.to_string(),
+                batch: 1,
+                mode: AcceptMode::Greedy,
+                tree: None,
+                gen_tokens,
+                n_prompts,
+            };
+            let m = run_decode_bench(&ctx, &cfg, &prompts)?;
+            let thr = m.throughput();
+            if variant == "ar" {
+                ar_thr = Some(thr);
+            }
+            if variant == "medusa" {
+                medusa_thr = Some(thr);
+            }
+            let vs_ar = ar_thr.map(|a| thr / a).unwrap_or(1.0);
+            let vs_md = medusa_thr.map(|a| thr / a).unwrap_or(f64::NAN);
+            table.row(vec![
+                size.clone(),
+                hydra_serve::draft::label(variant).to_string(),
+                fmt1(thr),
+                format!("{:.2}x", vs_ar),
+                if variant == "ar" { "-".into() } else { format!("{vs_md:.2}x") },
+                fmt2(m.mean_accept_len()),
+            ]);
+            results.push(Json::obj(vec![
+                ("size", Json::str(size.clone())),
+                ("variant", Json::str(variant)),
+                ("throughput", Json::num(thr)),
+                ("speedup_vs_ar", Json::num(vs_ar)),
+                ("accept_len", Json::num(m.mean_accept_len())),
+                ("step_ms_p50", Json::num(m.step_latency().p50)),
+            ]));
+        }
+    }
+    table.print();
+    save_result("fig2_throughput", Json::Arr(results))?;
+    Ok(())
+}

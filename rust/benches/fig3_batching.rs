@@ -1,0 +1,71 @@
+//! Figure 3 — effect of batch size on throughput and per-step latency for
+//! {AR, Medusa, Hydra, Hydra++} at batch sizes {1, 2, 4, 8} (size-s base,
+//! standing in for the paper's 7B).
+//!
+//! Paper shape: all speculative methods beat AR at every batch size, but
+//! the relative gain shrinks as the batch grows (verification becomes
+//! compute-bound). Per-batch-size trees come from the §4 search when
+//! available (`hydra-serve treesearch --batches 1,2,4,8`); otherwise
+//! batch-scaled defaults are used.
+
+use hydra_serve::bench::{fmt1, fmt2, run_decode_bench, save_result, BenchCtx, DecodeBenchCfg, Table};
+use hydra_serve::engine::AcceptMode;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let prompts = workload::mt_bench(&ctx.prompts);
+    let gen_tokens = ctx.scale(64);
+
+    let batches: Vec<usize> = ctx.rt.manifest.batch_buckets[&size].clone();
+    let mut table = Table::new(
+        "Fig. 3 — batched inference (size s), greedy acceptance",
+        &["batch", "strategy", "tok/s", "vs AR", "step ms p50", "accept len"],
+    );
+    let mut results = Vec::new();
+    for &b in &batches {
+        let n_prompts = (b * 3).min(prompts.len());
+        let mut ar_thr = None;
+        for variant in ["ar", "medusa", "hydra", "hydra_pp"] {
+            if variant != "ar" && !ctx.has_variant(&size, variant) {
+                continue;
+            }
+            let cfg = DecodeBenchCfg {
+                size: size.clone(),
+                variant: variant.to_string(),
+                batch: b,
+                mode: AcceptMode::Greedy,
+                tree: None,
+                gen_tokens,
+                n_prompts,
+            };
+            let m = run_decode_bench(&ctx, &cfg, &prompts)?;
+            let thr = m.throughput();
+            if variant == "ar" {
+                ar_thr = Some(thr);
+            }
+            let vs_ar = ar_thr.map(|a| thr / a).unwrap_or(1.0);
+            table.row(vec![
+                b.to_string(),
+                hydra_serve::draft::label(variant).to_string(),
+                fmt1(thr),
+                format!("{vs_ar:.2}x"),
+                fmt2(m.step_latency().p50),
+                fmt2(m.mean_accept_len()),
+            ]);
+            results.push(Json::obj(vec![
+                ("batch", Json::num(b as f64)),
+                ("variant", Json::str(variant)),
+                ("throughput", Json::num(thr)),
+                ("speedup_vs_ar", Json::num(vs_ar)),
+                ("step_ms_p50", Json::num(m.step_latency().p50)),
+                ("accept_len", Json::num(m.mean_accept_len())),
+            ]));
+        }
+    }
+    table.print();
+    save_result("fig3_batching", Json::Arr(results))?;
+    Ok(())
+}

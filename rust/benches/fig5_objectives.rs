@@ -1,0 +1,53 @@
+//! Figure 5 (App. A.1) — Hydra head training-objective ablation on the
+//! size-s base: {NTP, NTP+noise, teacher, teacher+noise}. Paper shape:
+//! teacher (self-distillation) loss wins; adding hidden-state noise hurts.
+
+use hydra_serve::bench::{fmt1, fmt2, run_decode_bench, save_result, BenchCtx, DecodeBenchCfg, Table};
+use hydra_serve::engine::AcceptMode;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let prompts = workload::mt_bench(&ctx.prompts);
+    let n_prompts = ctx.scale(10);
+    let gen_tokens = ctx.scale(80);
+
+    let variants = [
+        ("hydra", "Hydra (NTP)"),
+        ("hydra_ntp_noise", "Hydra (NTP + noise)"),
+        ("hydra_teacher", "Hydra (teacher)"),
+        ("hydra_teacher_noise", "Hydra (teacher + noise)"),
+    ];
+    let mut table = Table::new(
+        "Fig. 5 — Hydra head training objectives (size s, bs=1, greedy)",
+        &["objective", "tok/s", "accept len"],
+    );
+    let mut results = Vec::new();
+    for (variant, label) in variants {
+        if !ctx.has_variant(&size, variant) {
+            eprintln!("skipping {variant}: not in artifacts (run full `make artifacts`)");
+            continue;
+        }
+        let cfg = DecodeBenchCfg {
+            size: size.clone(),
+            variant: variant.to_string(),
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            tree: None,
+            gen_tokens,
+            n_prompts,
+        };
+        let m = run_decode_bench(&ctx, &cfg, &prompts)?;
+        table.row(vec![label.to_string(), fmt1(m.throughput()), fmt2(m.mean_accept_len())]);
+        results.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("throughput", Json::num(m.throughput())),
+            ("accept_len", Json::num(m.mean_accept_len())),
+        ]));
+    }
+    table.print();
+    save_result("fig5_objectives", Json::Arr(results))?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Figure 6 (App. A.2) — Hydra head architecture ablation: plain MLP vs
+//! PrefixMLP (extra decoder layer feeding the heads), teacher loss held
+//! fixed. Paper shape: PrefixMLP improves acceptance (~1.12x) and
+//! throughput (~1.08x).
+
+use hydra_serve::bench::{fmt1, fmt2, run_decode_bench, save_result, BenchCtx, DecodeBenchCfg, Table};
+use hydra_serve::engine::AcceptMode;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let prompts = workload::mt_bench(&ctx.prompts);
+    let n_prompts = ctx.scale(10);
+    let gen_tokens = ctx.scale(80);
+
+    let variants = [
+        ("hydra_teacher", "MLP only (teacher)"),
+        ("hydra_prefixmlp", "PrefixMLP (teacher)"),
+    ];
+    let mut table = Table::new(
+        "Fig. 6 — MLP vs PrefixMLP Hydra heads (size s, bs=1, greedy)",
+        &["architecture", "tok/s", "accept len"],
+    );
+    let mut results = Vec::new();
+    let mut base_accept = None;
+    for (variant, label) in variants {
+        if !ctx.has_variant(&size, variant) {
+            eprintln!("skipping {variant}: not in artifacts (run full `make artifacts`)");
+            continue;
+        }
+        let cfg = DecodeBenchCfg {
+            size: size.clone(),
+            variant: variant.to_string(),
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            tree: None,
+            gen_tokens,
+            n_prompts,
+        };
+        let m = run_decode_bench(&ctx, &cfg, &prompts)?;
+        if base_accept.is_none() {
+            base_accept = Some(m.mean_accept_len());
+        }
+        table.row(vec![label.to_string(), fmt1(m.throughput()), fmt2(m.mean_accept_len())]);
+        results.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("throughput", Json::num(m.throughput())),
+            ("accept_len", Json::num(m.mean_accept_len())),
+            (
+                "accept_ratio_vs_mlp",
+                Json::num(m.mean_accept_len() / base_accept.unwrap()),
+            ),
+        ]));
+    }
+    table.print();
+    save_result("fig6_prefix", Json::Arr(results))?;
+    Ok(())
+}

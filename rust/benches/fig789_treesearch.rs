@@ -1,0 +1,94 @@
+//! Figures 7/8/9 (§4 + App. B) — decoding-tree search curves: for each of
+//! {Medusa, Hydra, Hydra++} and each batch size, the throughput achieved
+//! by the best tree of every size, with a star on the argmax. Paper shape:
+//! throughput rises then falls with tree size, and the optimal size
+//! SHRINKS as batch grows (compute saturation, §6.2).
+//!
+//! This bench also persists the winning trees to artifacts/trees/ so every
+//! other bench picks them up (the §4 "choose the tree that maximizes
+//! throughput" selection step).
+
+use hydra_serve::bench::{save_result, BenchCtx, Table};
+use hydra_serve::treesearch::{search, save_tree, SearchParams};
+use hydra_serve::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let quick = ctx.quick;
+    let params = SearchParams {
+        max_nodes: if quick { 16 } else { 40 },
+        contexts: if quick { 3 } else { 5 },
+        steps_per_context: if quick { 8 } else { 14 },
+        seed: 7,
+    };
+    let probe_sizes: Vec<usize> = [1usize, 2, 4, 6, 8, 12, 16, 24, 32, 40]
+        .into_iter()
+        .filter(|&n| n <= params.max_nodes)
+        .collect();
+    let mut batches: Vec<usize> = ctx.rt.manifest.batch_buckets[&size].clone();
+    if quick {
+        batches.retain(|&b| b == 1 || b == 4);
+    }
+    let gen_tokens = if quick { 24 } else { 48 };
+
+    let mut results = Vec::new();
+    for (fig, variant) in [("Fig7", "medusa"), ("Fig8", "hydra"), ("Fig9", "hydra_pp")] {
+        if !ctx.has_variant(&size, variant) {
+            continue;
+        }
+        let mut table = Table::new(
+            &format!("{fig} — tree search curve for {} (throughput tok/s by tree size)",
+                     hydra_serve::draft::label(variant)),
+            &["batch", "series (nodes: tok/s)", "best"],
+        );
+        for &b in &batches {
+            let outcome = search(&ctx.rt, &size, variant, b, &ctx.windows, &params,
+                                 &probe_sizes, gen_tokens)?;
+            let series = outcome
+                .sizes
+                .iter()
+                .zip(&outcome.throughput)
+                .map(|(n, t)| format!("{n}:{t:.0}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            table.row(vec![
+                b.to_string(),
+                series,
+                format!("{} nodes ★", outcome.best_size),
+            ]);
+            // Persist tuned trees only from a full-fidelity search — the
+            // quick-mode simulation is too noisy to bind other benches to.
+            if !quick {
+                save_tree(&ctx.rt.manifest.dir, &size, variant, b, &outcome)?;
+            }
+            results.push(Json::obj(vec![
+                ("figure", Json::str(fig)),
+                ("variant", Json::str(variant)),
+                ("batch", Json::num(b as f64)),
+                ("best_size", Json::num(outcome.best_size as f64)),
+                (
+                    "curve",
+                    Json::Arr(
+                        outcome
+                            .sizes
+                            .iter()
+                            .zip(&outcome.throughput)
+                            .zip(&outcome.sim_accept)
+                            .map(|((&n, &t), &a)| {
+                                Json::obj(vec![
+                                    ("nodes", Json::num(n as f64)),
+                                    ("throughput", Json::num(t)),
+                                    ("sim_accept", Json::num(a)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        table.print();
+    }
+    save_result("fig789_treesearch", Json::Arr(results))?;
+    Ok(())
+}

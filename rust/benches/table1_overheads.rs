@@ -1,0 +1,77 @@
+//! Table 1 (App. D) — per-phase overhead breakdown in milliseconds:
+//! prefix-attention time and per-head draft time for Medusa vs Hydra++,
+//! plus the base-model verify step for context. Paper shape: Hydra++
+//! incurs more draft overhead than Medusa (wider head inputs + the extra
+//! decoder layer) but wins end-to-end on acceptance length.
+
+use hydra_serve::bench::{fmt2, save_result, BenchCtx, Table};
+use hydra_serve::engine::{AcceptMode, Engine, EngineConfig};
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let prompts = workload::mt_bench(&ctx.prompts);
+    let gen_tokens = ctx.scale(96);
+
+    let mut table = Table::new(
+        "Table 1 — speculative decoding overhead breakdown (size s, bs=1, ms/step)",
+        &["strategy", "prefix attn", "head 1", "head 2", "head 3", "head 4",
+          "verify", "accept", "commit"],
+    );
+    let mut results = Vec::new();
+    for variant in ["medusa", "hydra", "hydra_pp", "eagle"] {
+        if !ctx.has_variant(&size, variant) {
+            continue;
+        }
+        let tree = hydra_serve::draft::tuned_tree(&ctx.rt.manifest, &size, variant, 1)?;
+        let mut engine = Engine::new(
+            &ctx.rt,
+            EngineConfig {
+                size: size.clone(),
+                variant: variant.to_string(),
+                tree,
+                batch: 1,
+                mode: AcceptMode::Greedy,
+                seed: 5,
+            },
+        )?;
+        // Warmup (compile), then measure.
+        let reqs = workload::to_requests(&prompts[..1], &ctx.tok, 8, 0);
+        engine.admit(reqs)?;
+        engine.run_to_completion()?;
+        engine.phase = Default::default();
+        let reqs = workload::to_requests(&prompts[1..4], &ctx.tok, gen_tokens, 10);
+        for r in reqs {
+            engine.admit(vec![r])?;
+            engine.run_to_completion()?;
+        }
+        let p = engine.phase.clone();
+        let per_step = |d: std::time::Duration| d.as_secs_f64() * 1e3 / p.steps.max(1) as f64;
+        let heads: Vec<f64> = (1..=4).map(|i| per_step(p.draft_per_head[i])).collect();
+        table.row(vec![
+            hydra_serve::draft::label(variant).to_string(),
+            fmt2(per_step(p.prefix_attn)),
+            fmt2(heads[0]),
+            fmt2(heads[1]),
+            fmt2(heads[2]),
+            fmt2(heads[3]),
+            fmt2(per_step(p.verify)),
+            fmt2(per_step(p.accept)),
+            fmt2(per_step(p.commit)),
+        ]);
+        results.push(Json::obj(vec![
+            ("variant", Json::str(variant)),
+            ("prefix_attn_ms", Json::num(per_step(p.prefix_attn))),
+            ("head_ms", Json::Arr(heads.iter().map(|&h| Json::num(h)).collect())),
+            ("verify_ms", Json::num(per_step(p.verify))),
+            ("accept_ms", Json::num(per_step(p.accept))),
+            ("commit_ms", Json::num(per_step(p.commit))),
+            ("steps", Json::num(p.steps as f64)),
+        ]));
+    }
+    table.print();
+    save_result("table1_overheads", Json::Arr(results))?;
+    Ok(())
+}

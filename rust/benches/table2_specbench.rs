@@ -1,0 +1,76 @@
+//! Table 2 (App. E) — SpecBench-sim: per-task-category speedup over
+//! autoregressive decoding for Medusa vs Hydra++ (chat, translation,
+//! summary, qa, math, rag). Paper shape: Hydra++ > Medusa in every
+//! category; translation/math (high predictability) show the largest
+//! speedups, summary/RAG the smallest.
+
+use hydra_serve::bench::{run_decode_bench, save_result, BenchCtx, DecodeBenchCfg, Table};
+use hydra_serve::engine::AcceptMode;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let n_prompts = ctx.scale(8);
+    let gen_tokens = ctx.scale(72);
+
+    let mut table = Table::new(
+        "Table 2 — SpecBench-sim speedup vs autoregressive (size s, bs=1, greedy)",
+        &["strategy", "chat", "translation", "summary", "qa", "math", "rag", "avg"],
+    );
+    let mut rows = Vec::new();
+    let mut ar_per_cat: Vec<f64> = Vec::new();
+
+    for variant in ["ar", "medusa", "hydra_pp"] {
+        if variant != "ar" && !ctx.has_variant(&size, variant) {
+            continue;
+        }
+        let mut cells = vec![hydra_serve::draft::label(variant).to_string()];
+        let mut speedups = Vec::new();
+        let mut result_cats = Vec::new();
+        for (ci, cat) in workload::CATEGORIES.iter().enumerate() {
+            let prompts = workload::by_category(&ctx.prompts, cat);
+            let cfg = DecodeBenchCfg {
+                size: size.clone(),
+                variant: variant.to_string(),
+                batch: 1,
+                mode: AcceptMode::Greedy,
+                tree: None,
+                gen_tokens,
+                n_prompts,
+            };
+            let m = run_decode_bench(&ctx, &cfg, &prompts)?;
+            let thr = m.throughput();
+            if variant == "ar" {
+                ar_per_cat.push(thr);
+                cells.push(format!("{thr:.1} t/s"));
+            } else {
+                let sp = thr / ar_per_cat[ci];
+                speedups.push(sp);
+                cells.push(format!("{sp:.2}x"));
+                result_cats.push(Json::obj(vec![
+                    ("category", Json::str(*cat)),
+                    ("speedup", Json::num(sp)),
+                    ("throughput", Json::num(thr)),
+                    ("accept_len", Json::num(m.mean_accept_len())),
+                ]));
+            }
+        }
+        if variant == "ar" {
+            cells.push("-".into());
+        } else {
+            let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+            cells.push(format!("{avg:.2}x"));
+            rows.push(Json::obj(vec![
+                ("variant", Json::str(variant)),
+                ("avg_speedup", Json::num(avg)),
+                ("categories", Json::Arr(result_cats)),
+            ]));
+        }
+        table.row(cells);
+    }
+    table.print();
+    save_result("table2_specbench", Json::Arr(rows))?;
+    Ok(())
+}

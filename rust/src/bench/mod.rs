@@ -1,0 +1,231 @@
+//! Shared bench harness (criterion is not available offline; the
+//! `rust/benches/*.rs` binaries use `harness = false` and this module).
+//!
+//! Every paper figure/table has a bench binary that prints the same
+//! rows/series the paper reports and appends machine-readable results to
+//! bench_results/<bench>.json for EXPERIMENTS.md.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{AcceptMode, Engine, EngineConfig};
+use crate::metrics::RunMetrics;
+use crate::runtime::Runtime;
+use crate::scheduler::Scheduler;
+use crate::tokenizer::Tokenizer;
+use crate::tree::TreeTopology;
+use crate::util::json::Json;
+use crate::workload::{self, EvalPrompt};
+
+pub struct BenchCtx {
+    pub rt: Runtime,
+    pub tok: Tokenizer,
+    pub prompts: Vec<EvalPrompt>,
+    pub windows: Vec<Vec<u32>>,
+    pub quick: bool,
+}
+
+impl BenchCtx {
+    /// HYDRA_BENCH_QUICK=1 shrinks workloads ~4x (CI-friendly).
+    pub fn open() -> Result<BenchCtx> {
+        let dir = crate::artifacts_dir();
+        let rt = Runtime::new(dir.clone())?;
+        let tok = Tokenizer::load(&dir.join("tokenizer.json"))?;
+        let prompts = workload::load_prompts(&dir)?;
+        let windows = workload::load_corpus_windows(&dir)?;
+        let quick = std::env::var("HYDRA_BENCH_QUICK").as_deref() == Ok("1");
+        Ok(BenchCtx { rt, tok, prompts, windows, quick })
+    }
+
+    pub fn scale(&self, n: usize) -> usize {
+        if self.quick {
+            (n / 4).max(2)
+        } else {
+            n
+        }
+    }
+
+    pub fn sizes(&self) -> Vec<String> {
+        self.rt.manifest.sizes.keys().cloned().collect()
+    }
+
+    pub fn has_variant(&self, size: &str, variant: &str) -> bool {
+        crate::draft::available(&self.rt.manifest, size, variant)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeBenchCfg {
+    pub size: String,
+    pub variant: String,
+    pub batch: usize,
+    pub mode: AcceptMode,
+    pub tree: Option<TreeTopology>,
+    pub gen_tokens: usize,
+    pub n_prompts: usize,
+}
+
+/// Run one decoding benchmark: admit `n_prompts` prompts through the
+/// continuous-batching scheduler at the given batch size, decode
+/// `gen_tokens` per prompt, and aggregate throughput / latency /
+/// acceptance-length metrics (decode wall time excludes engine + PJRT
+/// warmup via a discarded warmup run).
+pub fn run_decode_bench(
+    ctx: &BenchCtx,
+    cfg: &DecodeBenchCfg,
+    prompts: &[&EvalPrompt],
+) -> Result<RunMetrics> {
+    run_decode_bench_full(ctx, cfg, prompts).map(|(m, _)| m)
+}
+
+/// As `run_decode_bench`, also returning the raw per-sequence outputs.
+pub fn run_decode_bench_full(
+    ctx: &BenchCtx,
+    cfg: &DecodeBenchCfg,
+    prompts: &[&EvalPrompt],
+) -> Result<(RunMetrics, Vec<crate::engine::SeqOutput>)> {
+    let tree = match &cfg.tree {
+        Some(t) => t.clone(),
+        None => crate::draft::tuned_tree(&ctx.rt.manifest, &cfg.size, &cfg.variant, cfg.batch)?,
+    };
+    let mk_engine = |seed: u64| {
+        Engine::new(
+            &ctx.rt,
+            EngineConfig {
+                size: cfg.size.clone(),
+                variant: cfg.variant.clone(),
+                tree: tree.clone(),
+                batch: cfg.batch,
+                mode: cfg.mode,
+                seed,
+            },
+        )
+    };
+
+    // Warmup: compiles all lazy executables for this config.
+    {
+        let mut eng = mk_engine(1)?;
+        let reqs = workload::to_requests(&prompts[..1.min(prompts.len())], &ctx.tok, 8, 0);
+        eng.admit(reqs)?;
+        eng.run_to_completion()?;
+    }
+
+    let mut engine = mk_engine(1234)?;
+    let mut sched = Scheduler::new();
+    let reqs = workload::to_requests(
+        &prompts[..cfg.n_prompts.min(prompts.len())],
+        &ctx.tok,
+        cfg.gen_tokens,
+        0,
+    );
+    let total_reqs = reqs.len();
+    sched.submit_all(reqs);
+
+    let mut m = RunMetrics::new(format!(
+        "{}-{}-b{}",
+        cfg.size, cfg.variant, cfg.batch
+    ));
+    let wall0 = Instant::now();
+    let mut outputs = Vec::new();
+    while sched.has_work(&engine) {
+        let t0 = Instant::now();
+        if let Some(stats) = sched.tick(&mut engine)? {
+            m.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            m.tokens_generated += stats.tokens_committed;
+            m.steps += 1;
+        }
+        outputs.extend(engine.take_outputs());
+    }
+    m.wall = wall0.elapsed();
+    m.decode_wall = m.wall; // prefills are part of serving; warmup excluded
+    assert_eq!(outputs.len(), total_reqs, "all requests must complete");
+    let mut lp = 0.0;
+    for o in &outputs {
+        for &a in &o.accept_hist {
+            m.accept.record(a);
+        }
+        m.seq_latency_ms.extend(o.total_ms);
+        lp += o.mean_logprob;
+    }
+    m.mean_logprob = lp / outputs.len().max(1) as f64;
+    Ok((m, outputs))
+}
+
+// ---------------------------------------------------------------------------
+// Output helpers
+// ---------------------------------------------------------------------------
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths.get(i).copied().unwrap_or(4)));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+/// Append a result object to bench_results/<bench>.json (array file).
+pub fn save_result(bench: &str, result: Json) -> Result<()> {
+    let dir = PathBuf::from("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{bench}.json"));
+    let mut arr = if path.exists() {
+        match Json::parse_file(&path) {
+            Ok(Json::Arr(a)) => a,
+            _ => Vec::new(),
+        }
+    } else {
+        Vec::new()
+    };
+    arr.push(result);
+    std::fs::write(&path, Json::Arr(arr).to_string())?;
+    Ok(())
+}
+
+pub fn fmt2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fmt1(x: f64) -> String {
+    format!("{x:.1}")
+}

@@ -1,0 +1,196 @@
+//! KV-cache slot manager.
+//!
+//! The AOT artifacts operate on a batched cache tensor [B, L, 2, S, KVD];
+//! a "slot" is one batch row. This module tracks slot occupancy and
+//! lengths for the scheduler, and enforces the invariants the engine
+//! relies on (a slot's rows beyond `len` are never attended to — verified
+//! at the kernel level by test_tree_attention_ignores_stale_cache_rows).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    Occupied { len: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct SlotPool {
+    slots: Vec<SlotState>,
+    pub seq_max: usize,
+    /// High-water marks for observability.
+    pub peak_occupancy: usize,
+    pub total_allocs: u64,
+}
+
+impl SlotPool {
+    pub fn new(n: usize, seq_max: usize) -> SlotPool {
+        SlotPool {
+            slots: vec![SlotState::Free; n],
+            seq_max,
+            peak_occupancy: 0,
+            total_allocs: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| !matches!(s, SlotState::Free)).count()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.len() - self.occupancy()
+    }
+
+    /// Allocate a slot for a sequence of `initial_len` committed tokens.
+    pub fn alloc(&mut self, initial_len: usize) -> Result<usize> {
+        if initial_len >= self.seq_max {
+            bail!("prompt ({initial_len}) does not fit a slot (S={})", self.seq_max);
+        }
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if matches!(s, SlotState::Free) {
+                *s = SlotState::Occupied { len: initial_len };
+                self.total_allocs += 1;
+                let occ = self.occupancy();
+                self.peak_occupancy = self.peak_occupancy.max(occ);
+                return Ok(i);
+            }
+        }
+        bail!("no free slots")
+    }
+
+    pub fn free(&mut self, slot: usize) -> Result<()> {
+        match self.slots.get(slot) {
+            Some(SlotState::Occupied { .. }) => {
+                self.slots[slot] = SlotState::Free;
+                Ok(())
+            }
+            Some(SlotState::Free) => bail!("double free of slot {slot}"),
+            None => bail!("slot {slot} out of range"),
+        }
+    }
+
+    /// Record `n` newly committed tokens; errors if the slot would overflow.
+    pub fn extend(&mut self, slot: usize, n: usize) -> Result<usize> {
+        match self.slots.get_mut(slot) {
+            Some(SlotState::Occupied { len }) => {
+                if *len + n > self.seq_max {
+                    bail!("slot {slot} overflow: {} + {n} > {}", *len, self.seq_max);
+                }
+                *len += n;
+                Ok(*len)
+            }
+            _ => bail!("extend on non-occupied slot {slot}"),
+        }
+    }
+
+    pub fn slot_len(&self, slot: usize) -> Option<usize> {
+        match self.slots.get(slot) {
+            Some(SlotState::Occupied { len }) => Some(*len),
+            _ => None,
+        }
+    }
+
+    /// Remaining room in a slot (how many more tokens can be committed).
+    pub fn headroom(&self, slot: usize) -> Option<usize> {
+        self.slot_len(slot).map(|l| self.seq_max - l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut p = SlotPool::new(2, 100);
+        let a = p.alloc(10).unwrap();
+        let b = p.alloc(20).unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc(5).is_err());
+        p.free(a).unwrap();
+        let c = p.alloc(1).unwrap();
+        assert_eq!(c, a);
+        assert_eq!(p.occupancy(), 2);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut p = SlotPool::new(1, 10);
+        let a = p.alloc(1).unwrap();
+        p.free(a).unwrap();
+        assert!(p.free(a).is_err());
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut p = SlotPool::new(1, 10);
+        let a = p.alloc(8).unwrap();
+        assert!(p.extend(a, 1).is_ok());
+        assert!(p.extend(a, 1).is_ok());
+        assert!(p.extend(a, 1).is_err()); // 10 + 1 > 10
+    }
+
+    #[test]
+    fn prop_pool_invariants() {
+        prop::check("slot-pool", 200, |rng| {
+            let n = rng.range(1, 9);
+            let smax = rng.range(16, 64);
+            let mut pool = SlotPool::new(n, smax);
+            let mut live: Vec<(usize, usize)> = Vec::new(); // (slot, len)
+            for _ in 0..rng.range(1, 60) {
+                match rng.below(3) {
+                    0 => {
+                        let len = rng.range(1, smax);
+                        match pool.alloc(len) {
+                            Ok(s) => {
+                                prop_assert!(
+                                    !live.iter().any(|&(l, _)| l == s),
+                                    "slot {s} double-allocated"
+                                );
+                                live.push((s, len));
+                            }
+                            Err(_) => {
+                                prop_assert_eq!(live.len(), n); // only fails when full
+                            }
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let (s, _) = live.swap_remove(i);
+                            pool.free(s).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let (s, len) = live[i];
+                            let add = rng.range(0, 6);
+                            if len + add <= smax {
+                                pool.extend(s, add).map_err(|e| e.to_string())?;
+                                live[i].1 += add;
+                            } else {
+                                prop_assert!(pool.extend(s, add).is_err(), "overflow allowed");
+                            }
+                        }
+                    }
+                }
+                prop_assert_eq!(pool.occupancy(), live.len());
+                for &(s, len) in &live {
+                    prop_assert_eq!(pool.slot_len(s), Some(len));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Draft-model registry: the decoding strategies the serving system can
+//! run, mapping CLI/bench names onto engine configurations. The actual
+//! per-architecture expansion logic lives in `engine` (it is entangled
+//! with the step loop); this module is the catalog + default tuning.
+
+use anyhow::Result;
+
+use crate::model::Manifest;
+use crate::tree::TreeTopology;
+
+/// Decoding strategies of the paper's evaluation.
+pub const STRATEGIES: &[&str] = &["ar", "medusa", "hydra", "hydra_pp", "eagle"];
+
+/// Human-readable labels used in bench output (paper figure legends).
+pub fn label(variant: &str) -> &'static str {
+    match variant {
+        "ar" => "Baseline (autoregressive)",
+        "medusa" => "Medusa",
+        "hydra" => "Hydra",
+        "hydra_pp" => "Hydra++",
+        "eagle" => "EAGLE",
+        "hydra_ntp_noise" => "Hydra (NTP + noise)",
+        "hydra_teacher" => "Hydra (teacher)",
+        "hydra_teacher_noise" => "Hydra (teacher + noise)",
+        "hydra_prefixmlp" => "Hydra (PrefixMLP)",
+        _ => "unknown",
+    }
+}
+
+/// Is the variant available for this size in the built artifacts?
+pub fn available(m: &Manifest, size: &str, variant: &str) -> bool {
+    variant == "ar"
+        || m.head_variants
+            .get(size)
+            .map(|vs| vs.iter().any(|v| v.name == variant))
+            .unwrap_or(false)
+}
+
+/// Default decoding tree for a variant (before a §4 search has produced a
+/// tuned one): AR uses the 1-node tree; draft-head strategies use the
+/// default sparse tree sized by batch (larger batches get smaller trees —
+/// the §6.2 compute-saturation effect).
+pub fn default_tree(variant: &str, batch: usize) -> TreeTopology {
+    if variant == "ar" {
+        return TreeTopology::ar();
+    }
+    let budget = match batch {
+        1 => 32,
+        2 => 24,
+        4 => 16,
+        _ => 10,
+    };
+    TreeTopology::default_tree(budget)
+}
+
+/// Load a searched tree from artifacts/trees/{size}_{variant}_b{batch}.json
+/// if the tree search has produced one, else fall back to the default.
+pub fn tuned_tree(m: &Manifest, size: &str, variant: &str, batch: usize) -> Result<TreeTopology> {
+    let path = m
+        .dir
+        .join("trees")
+        .join(format!("{size}_{variant}_b{batch}.json"));
+    if path.exists() {
+        let v = crate::util::json::Json::parse_file(&path)?;
+        return TreeTopology::from_json(v.req("tree"));
+    }
+    Ok(default_tree(variant, batch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_trees_shrink_with_batch() {
+        let sizes: Vec<usize> =
+            [1, 2, 4, 8].iter().map(|&b| default_tree("hydra", b).len()).collect();
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]), "{sizes:?}");
+        assert_eq!(default_tree("ar", 1).len(), 1);
+    }
+
+    #[test]
+    fn labels_cover_strategies() {
+        for s in STRATEGIES {
+            assert_ne!(label(s), "unknown");
+        }
+    }
+}

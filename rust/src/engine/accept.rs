@@ -1,0 +1,280 @@
+//! Verification criteria (paper §2, §6.3).
+//!
+//! Given the base model's logits at every node of the verified candidate
+//! tree, decide which root path to accept and pick the next step's root
+//! token. The root (node 0) was sampled from the base model's own logits
+//! at the previous step, so it is always accepted — autoregressive decoding
+//! falls out as the 1-node tree with acceptance length 1.
+
+use crate::tree::TreeTopology;
+use crate::util::rng::Pcg32;
+use crate::util::stats::{argmax, entropy, log_softmax_at, softmax};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AcceptMode {
+    /// Accept a child iff its token is the base model's greedy prediction
+    /// at its parent (Stern et al. 2018). Deterministic; output identical
+    /// to greedy decoding of the base model.
+    Greedy,
+    /// Typical acceptance (Cai et al. 2024): accept candidate x̂ iff
+    /// p_base(x̂ | parent; τ) > min(ε, α·exp(-H(p_base(·|parent; τ)))).
+    Typical { eps: f32, alpha: f32, temp: f32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct StepDecision {
+    /// Accepted nodes, root-first (always starts with node 0).
+    pub accepted: Vec<usize>,
+    /// Next step's root token, drawn from the logits at the deepest
+    /// accepted node (greedy argmax / temperature sample).
+    pub next_root: u32,
+    /// log p_base of each accepted token plus the next root — used by the
+    /// Fig. 4 generation-quality metric.
+    pub logprobs: Vec<f32>,
+}
+
+/// `node_tokens[i]` — candidate token at tree node i;
+/// `logits` — row-major [T >= tree.len(), V] base logits per node;
+/// `root_logits` — base logits the root was sampled from (previous step).
+pub fn decide(
+    tree: &TreeTopology,
+    node_tokens: &[u32],
+    logits: &[f32],
+    vocab: usize,
+    root_logits: &[f32],
+    mode: AcceptMode,
+    rng: &mut Pcg32,
+) -> StepDecision {
+    debug_assert!(node_tokens.len() >= tree.len());
+    let row = |n: usize| &logits[n * vocab..(n + 1) * vocab];
+
+    let mut accepted = vec![0usize];
+    let mut logprobs = vec![log_prob_of(root_logits, node_tokens[0] as usize, mode)];
+    loop {
+        let cur = *accepted.last().unwrap();
+        let cur_logits = row(cur);
+        let next = match mode {
+            AcceptMode::Greedy => {
+                let want = argmax(cur_logits) as u32;
+                tree.children[cur]
+                    .iter()
+                    .copied()
+                    .find(|&c| node_tokens[c] == want)
+            }
+            AcceptMode::Typical { eps, alpha, temp } => {
+                let probs = softmax(cur_logits, temp);
+                let h = entropy(&probs);
+                let threshold = eps.min(alpha * (-h).exp());
+                tree.children[cur]
+                    .iter()
+                    .copied()
+                    .filter(|&c| probs[node_tokens[c] as usize] > threshold)
+                    .max_by(|&a, &b| {
+                        probs[node_tokens[a] as usize]
+                            .partial_cmp(&probs[node_tokens[b] as usize])
+                            .unwrap()
+                    })
+            }
+        };
+        match next {
+            Some(c) => {
+                logprobs.push(log_prob_of(cur_logits, node_tokens[c] as usize, mode));
+                accepted.push(c);
+            }
+            None => break,
+        }
+    }
+
+    let last = *accepted.last().unwrap();
+    let next_root = sample_next(row(last), mode, rng);
+    StepDecision { accepted, next_root, logprobs }
+}
+
+fn log_prob_of(logits: &[f32], idx: usize, mode: AcceptMode) -> f32 {
+    match mode {
+        AcceptMode::Greedy => log_softmax_at(logits, idx),
+        AcceptMode::Typical { temp, .. } => {
+            let scaled: Vec<f32> = logits.iter().map(|&l| l / temp.max(1e-6)).collect();
+            log_softmax_at(&scaled, idx)
+        }
+    }
+}
+
+/// Sample the next root from the base logits at the deepest accepted node.
+/// Greedy mode: argmax (keeps output == base greedy decoding). Typical
+/// mode: temperature sample truncated to tokens passing the criterion —
+/// the same "typicality" filter applied to speculated tokens, so the
+/// sampled stream has the same acceptability properties.
+pub fn sample_next(logits: &[f32], mode: AcceptMode, rng: &mut Pcg32) -> u32 {
+    match mode {
+        AcceptMode::Greedy => argmax(logits) as u32,
+        AcceptMode::Typical { eps, alpha, temp } => {
+            let probs = softmax(logits, temp);
+            let h = entropy(&probs);
+            let threshold = eps.min(alpha * (-h).exp());
+            let total: f32 = probs.iter().filter(|&&p| p > threshold).sum();
+            if total <= 0.0 {
+                return argmax(logits) as u32;
+            }
+            let mut x = rng.f32() * total;
+            for (i, &p) in probs.iter().enumerate() {
+                if p > threshold {
+                    x -= p;
+                    if x <= 0.0 {
+                        return i as u32;
+                    }
+                }
+            }
+            argmax(logits) as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn tree2() -> TreeTopology {
+        // root + children [0],[1] + grandchild [0,0]
+        TreeTopology::from_paths(vec![vec![0], vec![1], vec![0, 0]]).unwrap()
+    }
+
+    fn uniform_logits(t: usize, v: usize) -> Vec<f32> {
+        vec![0.0; t * v]
+    }
+
+    fn set_peak(logits: &mut [f32], v: usize, node: usize, tok: usize, val: f32) {
+        logits[node * v + tok] = val;
+    }
+
+    #[test]
+    fn greedy_accepts_matching_chain() {
+        let tree = tree2();
+        let v = 16;
+        let mut logits = uniform_logits(4, v);
+        // node0 predicts 3 -> child [0] has token 3; node1 predicts 7 ->
+        // grandchild has token 7; node3 predicts 9.
+        set_peak(&mut logits, v, 0, 3, 5.0);
+        set_peak(&mut logits, v, 1, 7, 5.0);
+        set_peak(&mut logits, v, 3, 9, 5.0);
+        let tokens = vec![2u32, 3, 4, 7];
+        let mut rng = Pcg32::new(0);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], AcceptMode::Greedy, &mut rng);
+        assert_eq!(d.accepted, vec![0, 1, 3]);
+        assert_eq!(d.next_root, 9);
+        assert_eq!(d.logprobs.len(), 3);
+    }
+
+    #[test]
+    fn greedy_rejects_mismatch() {
+        let tree = tree2();
+        let v = 16;
+        let mut logits = uniform_logits(4, v);
+        set_peak(&mut logits, v, 0, 5, 4.0); // wants 5, children have 3 and 4
+        let tokens = vec![2u32, 3, 4, 7];
+        let mut rng = Pcg32::new(0);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], AcceptMode::Greedy, &mut rng);
+        assert_eq!(d.accepted, vec![0]);
+        assert_eq!(d.next_root, 5);
+    }
+
+    #[test]
+    fn ar_tree_always_length_one() {
+        let tree = TreeTopology::ar();
+        let v = 8;
+        let mut logits = uniform_logits(1, v);
+        set_peak(&mut logits, v, 0, 2, 3.0);
+        let mut rng = Pcg32::new(1);
+        let d = decide(&tree, &[6], &logits, v, &vec![0.0; v], AcceptMode::Greedy, &mut rng);
+        assert_eq!(d.accepted, vec![0]);
+        assert_eq!(d.next_root, 2);
+    }
+
+    #[test]
+    fn typical_accepts_high_prob_child() {
+        let tree = tree2();
+        let v = 16;
+        let mut logits = uniform_logits(4, v);
+        set_peak(&mut logits, v, 0, 3, 8.0); // sharp: p(3) ~ 1
+        let tokens = vec![2u32, 3, 4, 7];
+        let mode = AcceptMode::Typical { eps: 0.2, alpha: 0.447, temp: 0.7 };
+        let mut rng = Pcg32::new(2);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], mode, &mut rng);
+        assert!(d.accepted.contains(&1));
+    }
+
+    #[test]
+    fn typical_rejects_flat_distribution_children() {
+        // Perfectly flat p = 1/16 = 0.0625; threshold = min(eps, α·e^{-H}) =
+        // min(0.2, 0.447 * 1/16) = 0.028 < 0.0625 — flat still passes ε·e^-H.
+        // Use a peaked-away distribution instead: children's tokens have
+        // tiny probability.
+        let tree = tree2();
+        let v = 16;
+        let mut logits = uniform_logits(4, v);
+        set_peak(&mut logits, v, 0, 9, 10.0); // all mass on 9; children are 3, 4
+        let tokens = vec![2u32, 3, 4, 7];
+        let mode = AcceptMode::Typical { eps: 0.1, alpha: 0.316, temp: 0.7 };
+        let mut rng = Pcg32::new(3);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], mode, &mut rng);
+        assert_eq!(d.accepted, vec![0]);
+        assert_eq!(d.next_root, 9); // only 9 passes the filter
+    }
+
+    #[test]
+    fn prop_acceptance_is_valid_root_path() {
+        prop::check("acceptance-path", 300, |rng| {
+            // Random tree + random logits; both modes must return a valid
+            // root-first path with logprobs of matching length.
+            let mut paths: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..rng.range(0, 12) {
+                let base: Vec<usize> = if paths.is_empty() || rng.f64() < 0.4 {
+                    vec![]
+                } else {
+                    paths[rng.below(paths.len())].clone()
+                };
+                if base.len() >= 4 {
+                    continue;
+                }
+                let rank = paths
+                    .iter()
+                    .filter(|p: &&Vec<usize>| {
+                        p.len() == base.len() + 1 && p[..base.len()] == base[..]
+                    })
+                    .count();
+                let mut p = base;
+                p.push(rank);
+                paths.push(p);
+            }
+            let tree = TreeTopology::from_paths(paths).unwrap();
+            let v = 32;
+            let t = tree.len();
+            let logits: Vec<f32> = (0..t * v).map(|_| (rng.f32() - 0.5) * 6.0).collect();
+            let tokens: Vec<u32> = (0..t).map(|_| rng.below(v) as u32).collect();
+            let root_logits: Vec<f32> = (0..v).map(|_| rng.f32()).collect();
+            for mode in [
+                AcceptMode::Greedy,
+                AcceptMode::Typical { eps: 0.15, alpha: 0.387, temp: 0.7 },
+            ] {
+                let d = decide(&tree, &tokens, &logits, v, &root_logits, mode, rng);
+                prop_assert_eq!(d.accepted[0], 0);
+                for w in d.accepted.windows(2) {
+                    prop_assert_eq!(tree.parent[w[1]], w[0]);
+                }
+                prop_assert_eq!(d.logprobs.len(), d.accepted.len());
+                prop_assert!((d.next_root as usize) < v, "root out of vocab");
+                prop_assert!(d.accepted.len() <= tree.max_depth(), "too long");
+                // Greedy: every accepted child must be the argmax of parent.
+                if mode == AcceptMode::Greedy {
+                    for w in d.accepted.windows(2) {
+                        let want = crate::util::stats::argmax(&logits[w[0] * v..(w[0] + 1) * v]);
+                        prop_assert_eq!(tokens[w[1]] as usize, want);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,937 @@
+//! The speculative decoding engine — the paper's serving loop.
+//!
+//! One `step()` performs (paper §2/§3):
+//!   1. **draft** — expand the static candidate tree from the draft model
+//!      (Medusa: one independent call; Hydra/Hydra++/EAGLE: one call per
+//!      tree depth, conditioned on the tokens along each root path);
+//!   2. **verify** — score every tree node in a single base-model forward
+//!      (`verify_*` artifact; Pallas tree-attention inside);
+//!   3. **accept** — walk the tree with the greedy / typical criterion;
+//!   4. **commit** — scatter accepted KVs into the cache (`commit_*`),
+//!      gather the accepted base hiddens;
+//!   5. **draft-state update** — prefix-attention step (Hydra++) or draft
+//!      cache extension (EAGLE).
+//!
+//! The engine runs a fixed batch of B slots (B = an AOT batch bucket);
+//! the scheduler refills vacant slots between steps (continuous batching).
+
+pub mod accept;
+pub mod seq;
+
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+pub use accept::{AcceptMode, StepDecision};
+pub use seq::{FinishReason, Request, SeqOutput, Slot};
+
+use crate::model::{Manifest, ModelDims};
+use crate::runtime::{HostTensor, Runtime, WeightSet};
+use crate::tree::TreeTopology;
+use crate::util::rng::Pcg32;
+use crate::util::stats::top_k_indices;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub size: String,
+    /// "ar" for the autoregressive baseline, otherwise a head-variant name
+    /// from the manifest ("medusa", "hydra", "hydra_pp", "eagle", ...).
+    pub variant: String,
+    pub tree: TreeTopology,
+    pub batch: usize,
+    pub mode: AcceptMode,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum DraftArch {
+    Ar,
+    Medusa,
+    Hydra { ml: usize, prefix: bool },
+    Eagle,
+}
+
+/// Per-phase wall-clock accumulators (Table 1 + §Perf profiling).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    pub draft: Duration,
+    /// Draft time split per head index (1-based; [0] unused).
+    pub draft_per_head: [Duration; 8],
+    pub prefix_attn: Duration,
+    pub verify: Duration,
+    pub accept: Duration,
+    pub commit: Duration,
+    pub steps: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub tokens_committed: usize,
+    pub active_slots: usize,
+    pub wall: Duration,
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: EngineConfig,
+    arch: DraftArch,
+    dims: ModelDims,
+    base_w: Rc<WeightSet>,
+    head_w: Option<Rc<WeightSet>>,
+    pub slots: Vec<Slot>,
+    kv: HostTensor,
+    /// Prefix-attention layer cache (Hydra++) [B, 2, S, KVD].
+    pkv: Option<HostTensor>,
+    /// EAGLE draft-layer cache [B, 2, S, KVD].
+    ekv: Option<HostTensor>,
+    rng: Pcg32,
+    pub phase: PhaseTimes,
+    // Precomputed per-tree constants.
+    t_bucket: usize,
+    anc_mask: Vec<i32>,
+    pub outputs: Vec<SeqOutput>,
+    /// §Perf fused path: when the artifacts provide `verify_commit_*`
+    /// executables, the previous step's KV commit is folded into the next
+    /// verify call (one PJRT call + one KV round-trip per step instead of
+    /// two). `pending` holds the not-yet-committed acceptance.
+    use_fused: bool,
+    pending: Option<PendingCommit>,
+    /// Tree-search probe (§4): when enabled, the engine records, for every
+    /// decode step, which node the acceptance walk stopped at and whether
+    /// the *next* addable child of that node would have matched the base
+    /// model's greedy token — the marginal-gain statistic the greedy
+    /// tree-growing algorithm maximizes.
+    pub probe: Option<ProbeState>,
+}
+
+/// Uncommitted acceptance from the previous fused step.
+struct PendingCommit {
+    tree_kv: HostTensor,
+    hidden: HostTensor,
+    accept_idx: HostTensor,
+    accept_len: HostTensor,
+    commit_base: HostTensor,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ProbeState {
+    /// Draft head logits per (slot, node): the distribution the head would
+    /// use to propose children of that node. Filled during expansion.
+    head_logits: Vec<Vec<Option<Vec<f32>>>>,
+    /// gains[node]: # steps where adding child (node, next_rank) would have
+    /// extended the accepted path by one.
+    pub gains: Vec<u64>,
+    /// stops[node]: # steps where the acceptance walk ended at this node.
+    pub stops: Vec<u64>,
+    pub steps: u64,
+}
+
+impl ProbeState {
+    pub fn new(batch: usize, tree_len: usize) -> ProbeState {
+        ProbeState {
+            head_logits: vec![vec![None; tree_len]; batch],
+            gains: vec![0; tree_len],
+            stops: vec![0; tree_len],
+            steps: 0,
+        }
+    }
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Engine<'rt>> {
+        let m = &rt.manifest;
+        let dims = m.dims(&cfg.size)?.clone();
+        let buckets = m
+            .batch_buckets
+            .get(&cfg.size)
+            .with_context(|| format!("no batch buckets for size {}", cfg.size))?;
+        if !buckets.contains(&cfg.batch) {
+            bail!("batch {} is not an AOT bucket {buckets:?} for size {}", cfg.batch, cfg.size);
+        }
+        let (arch, head_w) = if cfg.variant == "ar" {
+            (DraftArch::Ar, None)
+        } else {
+            let v = m.variant(&cfg.size, &cfg.variant)?;
+            let arch = match v.kind.as_str() {
+                "medusa" => DraftArch::Medusa,
+                "hydra" => DraftArch::Hydra { ml: v.mlp_layers, prefix: v.prefix_attn },
+                "eagle" => DraftArch::Eagle,
+                other => bail!("unknown head kind {other}"),
+            };
+            let ws = rt.weight_set(&format!("heads_{}_{}", cfg.size, cfg.variant))?;
+            (arch, Some(ws))
+        };
+        if arch == DraftArch::Eagle && cfg.batch != 1 {
+            bail!("eagle draft artifacts are compiled for batch 1 only");
+        }
+        if arch == DraftArch::Ar && cfg.tree.len() != 1 {
+            bail!("ar baseline requires the 1-node tree");
+        }
+        if cfg.tree.max_depth() > m.num_heads + 1 {
+            bail!("tree depth {} exceeds K+1={}", cfg.tree.max_depth(), m.num_heads + 1);
+        }
+        let base_w = rt.weight_set(&format!("base_{}", cfg.size))?;
+
+        let b = cfg.batch;
+        let (s, kvd, l) = (m.seq_max, dims.kv_dim, dims.n_layers);
+        let kv = HostTensor::zeros_f32(&[b, l, 2, s, kvd]);
+        let pkv = matches!(arch, DraftArch::Hydra { prefix: true, .. })
+            .then(|| HostTensor::zeros_f32(&[b, 2, s, kvd]));
+        let ekv = (arch == DraftArch::Eagle).then(|| HostTensor::zeros_f32(&[b, 2, s, kvd]));
+
+        let t_bucket = m.tree_bucket(cfg.tree.len())?;
+        let anc_mask = padded_anc_mask(&cfg.tree, t_bucket);
+        let use_fused = m.has_exe(&format!("verify_commit_{}_b{}_t{}", cfg.size, b, t_bucket))
+            && std::env::var("HYDRA_NO_FUSE").as_deref() != Ok("1");
+        Ok(Engine {
+            rt,
+            arch,
+            dims,
+            base_w,
+            head_w,
+            slots: (0..b).map(|_| Slot::vacant()).collect(),
+            kv,
+            pkv,
+            ekv,
+            rng: Pcg32::new(cfg.seed),
+            phase: PhaseTimes::default(),
+            t_bucket,
+            anc_mask,
+            outputs: Vec::new(),
+            probe: None,
+            use_fused,
+            pending: None,
+            cfg,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    /// Enable §4 tree-search probing (see `ProbeState`).
+    pub fn enable_probe(&mut self) {
+        self.probe = Some(ProbeState::new(self.cfg.batch, self.cfg.tree.len()));
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+
+    pub fn has_vacancy(&self) -> bool {
+        self.slots.iter().any(|s| !s.active)
+    }
+
+    pub fn vacancy_count(&self) -> usize {
+        self.slots.iter().filter(|s| !s.active).count()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.active && !s.done).count()
+    }
+
+    // ---------------------------------------------------------------------
+    // Prefill — admit new requests into vacant slots.
+    // ---------------------------------------------------------------------
+
+    pub fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        let b = self.cfg.batch;
+        let s = self.rt.manifest.seq_max;
+        let d = self.dims.d_model;
+        let vacant: Vec<usize> =
+            (0..b).filter(|&i| !self.slots[i].active).take(reqs.len()).collect();
+        if vacant.len() < reqs.len() {
+            bail!("admit: {} requests but only {} vacant slots", reqs.len(), vacant.len());
+        }
+
+        // Full-batch prefill: new rows carry real prompts; occupied rows get
+        // a dummy length-1 prompt whose outputs are discarded (their kv rows
+        // are not copied back).
+        let mut tokens = HostTensor::zeros_i32(&[b, s]);
+        let mut lens = HostTensor::zeros_i32(&[b]);
+        for (&slot_i, req) in vacant.iter().zip(&reqs) {
+            if req.prompt_ids.is_empty() || req.prompt_ids.len() > s / 2 {
+                bail!("prompt length {} out of range (max {})", req.prompt_ids.len(), s / 2);
+            }
+            for (j, &tok) in req.prompt_ids.iter().enumerate() {
+                tokens.i32s_mut()[slot_i * s + j] = tok as i32;
+            }
+            lens.i32s_mut()[slot_i] = req.prompt_ids.len() as i32;
+        }
+        for i in 0..b {
+            if self.slots[i].active {
+                lens.i32s_mut()[i] = 1;
+            }
+        }
+
+        let name = format!("prefill_{}_b{}", self.cfg.size, b);
+        let out = self.rt.call(&name, &[&tokens, &lens], &[&self.base_w])?;
+        let (last_h, last_logits, kv_new, hidden_seq) = (&out[0], &out[1], &out[2], &out[3]);
+
+        let row = self.kv.stride(0);
+        for &i in &vacant {
+            let src = &kv_new.f32s()[i * row..(i + 1) * row];
+            self.kv.f32s_mut()[i * row..(i + 1) * row].copy_from_slice(src);
+            // A recycled slot must not have the old occupant's pending
+            // acceptance scattered over its fresh cache rows (fused path).
+            if let Some(p) = &mut self.pending {
+                p.accept_len.i32s_mut()[i] = 0;
+            }
+        }
+
+        let v = self.rt.manifest.vocab;
+        for (&i, req) in vacant.iter().zip(&reqs) {
+            let logits = &last_logits.f32s()[i * v..(i + 1) * v];
+            let h = last_h.f32s()[i * d..(i + 1) * d].to_vec();
+            let slot = &mut self.slots[i];
+            *slot = Slot::vacant();
+            slot.active = true;
+            slot.done = false;
+            slot.req_id = req.id;
+            slot.tokens = req.prompt_ids.clone();
+            slot.prompt_len = req.prompt_ids.len();
+            slot.cur_len = req.prompt_ids.len();
+            slot.max_new = req.max_new.max(1);
+            slot.stop_ids = req.stop_ids.clone();
+            slot.root_logits = logits.to_vec();
+            slot.root_token = accept::sample_next(logits, self.cfg.mode, &mut self.rng);
+            slot.h_last = h.clone();
+            slot.h_star = h;
+            slot.enqueue_at = Some(Instant::now());
+        }
+
+        match self.arch.clone() {
+            DraftArch::Hydra { ml, prefix: true } => {
+                let name = format!("prefix_prefill_{}_b{}_L{}", self.cfg.size, b, ml);
+                let hw = self.head_w.clone().unwrap();
+                let out = self.rt.call(&name, &[hidden_seq, &lens], &[&hw])?;
+                let (enriched, pkv_new) = (&out[0], &out[1]);
+                let pkv = self.pkv.as_mut().unwrap();
+                let prow = pkv.stride(0);
+                for &i in &vacant {
+                    pkv.f32s_mut()[i * prow..(i + 1) * prow]
+                        .copy_from_slice(&pkv_new.f32s()[i * prow..(i + 1) * prow]);
+                    self.slots[i].h_star = enriched.f32s()[i * d..(i + 1) * d].to_vec();
+                }
+            }
+            DraftArch::Eagle => {
+                let name = format!("eagle_prefill_{}_b{}", self.cfg.size, b);
+                let hw = self.head_w.clone().unwrap();
+                let out =
+                    self.rt.call(&name, &[&tokens, hidden_seq, &lens], &[&self.base_w, &hw])?;
+                let (f_last, ekv_new) = (&out[0], &out[1]);
+                let ekv = self.ekv.as_mut().unwrap();
+                let erow = ekv.stride(0);
+                for &i in &vacant {
+                    ekv.f32s_mut()[i * erow..(i + 1) * erow]
+                        .copy_from_slice(&ekv_new.f32s()[i * erow..(i + 1) * erow]);
+                    self.slots[i].h_star = f_last.f32s()[i * d..(i + 1) * d].to_vec();
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------------
+    // One speculative decoding step over all active slots.
+    // ---------------------------------------------------------------------
+
+    pub fn step(&mut self) -> Result<StepStats> {
+        let wall0 = Instant::now();
+        let b = self.cfg.batch;
+        let t = self.cfg.tree.len();
+        let tb = self.t_bucket;
+        let s = self.rt.manifest.seq_max;
+        let v = self.rt.manifest.vocab;
+        let d = self.dims.d_model;
+        let a = self.rt.manifest.accept_max;
+
+        if self.active_count() == 0 {
+            bail!("step() with no active slots");
+        }
+
+        // -- 1. draft -------------------------------------------------------
+        let t0 = Instant::now();
+        let node_tokens = self.expand_tree()?;
+        self.phase.draft += t0.elapsed();
+
+        // -- 2. verify ------------------------------------------------------
+        let mut tokens = HostTensor::zeros_i32(&[b, tb]);
+        let mut positions = HostTensor::zeros_i32(&[b, tb]);
+        let mut cur_len = HostTensor::zeros_i32(&[b]);
+        let anc = HostTensor::from_i32(&[b, tb, tb], tile(&self.anc_mask, b));
+        for i in 0..b {
+            let slot = &self.slots[i];
+            if !slot.active || slot.done {
+                continue;
+            }
+            cur_len.i32s_mut()[i] = slot.cur_len as i32;
+            for n in 0..t {
+                tokens.i32s_mut()[i * tb + n] = node_tokens[i][n] as i32;
+                positions.i32s_mut()[i * tb + n] =
+                    (slot.cur_len + self.cfg.tree.depth[n] - 1) as i32;
+            }
+        }
+        let t0 = Instant::now();
+        let out = if self.use_fused {
+            // Fused path: commit the PREVIOUS step's acceptance and verify
+            // the new tree in one PJRT call (§Perf).
+            let name = format!("verify_commit_{}_b{}_t{}", self.cfg.size, b, tb);
+            let zeros = || PendingCommit {
+                tree_kv: HostTensor::zeros_f32(&[b, self.dims.n_layers, 2, tb, self.dims.kv_dim]),
+                hidden: HostTensor::zeros_f32(&[b, tb, d]),
+                accept_idx: HostTensor::zeros_i32(&[b, a]),
+                accept_len: HostTensor::zeros_i32(&[b]),
+                commit_base: HostTensor::zeros_i32(&[b]),
+            };
+            let pend = self.pending.take().unwrap_or_else(zeros);
+            let mut out = self.rt.call(
+                &name,
+                &[&tokens, &positions, &cur_len, &anc, &self.kv, &pend.tree_kv,
+                  &pend.hidden, &pend.accept_idx, &pend.accept_len, &pend.commit_base],
+                &[&self.base_w],
+            )?;
+            let _gathered_prev = out.pop().context("fused outputs")?; // device gather (unused)
+            self.kv = out.pop().context("fused outputs")?; // kv'
+            out
+        } else {
+            let name = format!("verify_{}_b{}_t{}", self.cfg.size, b, tb);
+            self.rt
+                .call(&name, &[&tokens, &positions, &cur_len, &anc, &self.kv], &[&self.base_w])?
+        };
+        self.phase.verify += t0.elapsed();
+        let (logits, hidden, tree_kv) = (&out[0], &out[1], &out[2]);
+
+        // -- 3. accept ------------------------------------------------------
+        let t0 = Instant::now();
+        let mut accept_idx = HostTensor::zeros_i32(&[b, a]);
+        let mut accept_len = HostTensor::zeros_i32(&[b]);
+        let mut decisions: Vec<Option<StepDecision>> = vec![None; b];
+        let mut committed = 0usize;
+        for i in 0..b {
+            let slot = &mut self.slots[i];
+            if !slot.active || slot.done {
+                continue;
+            }
+            let slot_logits = &logits.f32s()[i * tb * v..(i * tb + t) * v];
+            let mut dec = accept::decide(
+                &self.cfg.tree,
+                &node_tokens[i],
+                slot_logits,
+                v,
+                &slot.root_logits,
+                self.cfg.mode,
+                &mut self.rng,
+            );
+            // Truncate to the generation budget and the cache capacity.
+            let budget =
+                (slot.max_new - slot.generated).min(s.saturating_sub(slot.cur_len + 1)).max(1);
+            if dec.accepted.len() > budget {
+                dec.accepted.truncate(budget);
+                dec.logprobs.truncate(dec.accepted.len());
+                let last = *dec.accepted.last().unwrap();
+                dec.next_root = accept::sample_next(
+                    &slot_logits[last * v..(last + 1) * v],
+                    self.cfg.mode,
+                    &mut self.rng,
+                );
+            }
+            accept_len.i32s_mut()[i] = dec.accepted.len() as i32;
+            for (j, &n) in dec.accepted.iter().enumerate() {
+                accept_idx.i32s_mut()[i * a + j] = n as i32;
+            }
+            committed += dec.accepted.len();
+            // Tree-search probe bookkeeping (§4): would the next addable
+            // child of the stopping node have matched the greedy token?
+            if let Some(probe) = &mut self.probe {
+                let n_stop = *dec.accepted.last().unwrap();
+                probe.stops[n_stop] += 1;
+                probe.steps += 1;
+                if let Some(hl) = &probe.head_logits[i][n_stop] {
+                    let g = crate::util::stats::argmax(
+                        &slot_logits[n_stop * v..(n_stop + 1) * v],
+                    );
+                    let rank = hl.iter().filter(|&&x| x > hl[g]).count();
+                    if rank == self.cfg.tree.children[n_stop].len() {
+                        probe.gains[n_stop] += 1;
+                    }
+                }
+            }
+            decisions[i] = Some(dec);
+        }
+        self.phase.accept += t0.elapsed();
+
+        // -- 4. commit ------------------------------------------------------
+        let t0 = Instant::now();
+        let gathered = if self.use_fused {
+            // Defer the device-side KV commit to the next fused call; gather
+            // the accepted hiddens host-side for the draft-state update.
+            let mut g = HostTensor::zeros_f32(&[b, a, d]);
+            for i in 0..b {
+                if let Some(dec) = &decisions[i] {
+                    for (j, &n) in dec.accepted.iter().enumerate() {
+                        g.f32s_mut()[(i * a + j) * d..(i * a + j + 1) * d].copy_from_slice(
+                            &hidden.f32s()[(i * tb + n) * d..(i * tb + n + 1) * d],
+                        );
+                    }
+                }
+            }
+            self.pending = Some(PendingCommit {
+                tree_kv: tree_kv.clone(),
+                hidden: hidden.clone(),
+                accept_idx: accept_idx.clone(),
+                accept_len: accept_len.clone(),
+                commit_base: cur_len.clone(),
+            });
+            g
+        } else {
+            let name = format!("commit_{}_b{}_t{}", self.cfg.size, b, tb);
+            let mut out = self.rt.call(
+                &name,
+                &[&self.kv, tree_kv, hidden, &accept_idx, &accept_len, &cur_len],
+                &[],
+            )?;
+            let gathered = out.pop().context("commit outputs")?; // [B, A, D]
+            self.kv = out.pop().context("commit outputs")?; // kv'
+            gathered
+        };
+        self.phase.commit += t0.elapsed();
+
+        // -- 5. slot + draft-state update ------------------------------------
+        // Keep the pre-step base hiddens around for EAGLE's extend inputs.
+        let h_last_prev: Vec<Vec<f32>> = self.slots.iter().map(|s| s.h_last.clone()).collect();
+
+        for i in 0..b {
+            let Some(dec) = &decisions[i] else { continue };
+            let slot = &mut self.slots[i];
+            let n_acc = dec.accepted.len();
+            for (j, &n) in dec.accepted.iter().enumerate() {
+                slot.tokens.push(node_tokens[i][n]);
+                slot.sum_logprob += dec.logprobs[j] as f64;
+            }
+            slot.cur_len += n_acc;
+            slot.generated += n_acc;
+            slot.accept_hist.push(n_acc);
+            if slot.first_token_at.is_none() {
+                slot.first_token_at = Some(Instant::now());
+            }
+            // Base hidden / logits at the deepest accepted node become the
+            // next step's draft inputs and root distribution.
+            let last_node = *dec.accepted.last().unwrap();
+            slot.h_last =
+                hidden.f32s()[(i * tb + last_node) * d..(i * tb + last_node + 1) * d].to_vec();
+            slot.root_logits =
+                logits.f32s()[(i * tb + last_node) * v..(i * tb + last_node + 1) * v].to_vec();
+            slot.root_token = dec.next_root;
+            if !matches!(self.arch, DraftArch::Hydra { prefix: true, .. })
+                && self.arch != DraftArch::Eagle
+            {
+                slot.h_star = slot.h_last.clone();
+            }
+            // Termination checks.
+            if slot.generated >= slot.max_new {
+                slot.done = true;
+                slot.finish = FinishReason::MaxTokens;
+            } else if slot.hit_stop() {
+                slot.done = true;
+                slot.finish = FinishReason::Stop;
+            } else if slot.cur_len + a + 1 >= s {
+                slot.done = true;
+                slot.finish = FinishReason::CacheFull;
+            }
+        }
+
+        // Hydra++ prefix-attention step / EAGLE draft-cache extension run
+        // once per decoding step (paper §3.1(3), App. C-D).
+        match self.arch.clone() {
+            DraftArch::Hydra { ml, prefix: true } => {
+                let t0 = Instant::now();
+                let name = format!("prefix_step_{}_b{}_L{}", self.cfg.size, b, ml);
+                let hw = self.head_w.clone().unwrap();
+                let out = self
+                    .rt
+                    .call(&name, &[&gathered, &accept_len, &cur_len, self.pkv.as_ref().unwrap()],
+                          &[&hw])?;
+                let (enriched, pkv_new) = (&out[0], &out[1]);
+                self.pkv = Some(pkv_new.clone());
+                for i in 0..b {
+                    if decisions[i].is_some() {
+                        self.slots[i].h_star = enriched.f32s()[i * d..(i + 1) * d].to_vec();
+                    }
+                }
+                self.phase.prefix_attn += t0.elapsed();
+            }
+            DraftArch::Eagle => {
+                let t0 = Instant::now();
+                let name = format!("eagle_extend_{}_b{}", self.cfg.size, b);
+                let hw = self.head_w.clone().unwrap();
+                // tokens of the accepted path; parent hidden of accepted
+                // token j is the base hidden of the token before it.
+                let mut etoks = HostTensor::zeros_i32(&[b, a]);
+                let mut hpar = HostTensor::zeros_f32(&[b, a, d]);
+                for i in 0..b {
+                    let Some(dec) = &decisions[i] else { continue };
+                    for (j, &n) in dec.accepted.iter().enumerate() {
+                        etoks.i32s_mut()[i * a + j] = node_tokens[i][n] as i32;
+                        let src: &[f32] = if j == 0 {
+                            &h_last_prev[i]
+                        } else {
+                            &gathered.f32s()[(i * a + j - 1) * d..(i * a + j) * d]
+                        };
+                        hpar.f32s_mut()[(i * a + j) * d..(i * a + j + 1) * d]
+                            .copy_from_slice(src);
+                    }
+                }
+                let out = self.rt.call(
+                    &name,
+                    &[&etoks, &hpar, &accept_len, &cur_len, self.ekv.as_ref().unwrap()],
+                    &[&self.base_w, &hw],
+                )?;
+                let (f_last, ekv_new) = (&out[0], &out[1]);
+                self.ekv = Some(ekv_new.clone());
+                for i in 0..b {
+                    if decisions[i].is_some() {
+                        self.slots[i].h_star = f_last.f32s()[i * d..(i + 1) * d].to_vec();
+                    }
+                }
+                self.phase.prefix_attn += t0.elapsed();
+            }
+            _ => {}
+        }
+
+        // Retire finished slots into outputs.
+        for i in 0..b {
+            if self.slots[i].active && self.slots[i].done {
+                let slot = &mut self.slots[i];
+                let now = Instant::now();
+                self.outputs.push(SeqOutput {
+                    req_id: slot.req_id,
+                    generated: slot.generated_ids().to_vec(),
+                    finish: slot.finish,
+                    steps: slot.accept_hist.len(),
+                    mean_accept_len: slot.mean_accept_len(),
+                    accept_hist: slot.accept_hist.clone(),
+                    mean_logprob: if slot.generated > 0 {
+                        slot.sum_logprob / slot.generated as f64
+                    } else {
+                        0.0
+                    },
+                    ttft_ms: slot
+                        .enqueue_at
+                        .zip(slot.first_token_at)
+                        .map(|(e, f)| f.duration_since(e).as_secs_f64() * 1e3),
+                    total_ms: slot.enqueue_at.map(|e| now.duration_since(e).as_secs_f64() * 1e3),
+                });
+                slot.active = false;
+            }
+        }
+
+        self.phase.steps += 1;
+        Ok(StepStats {
+            tokens_committed: committed,
+            active_slots: decisions.iter().filter(|d| d.is_some()).count(),
+            wall: wall0.elapsed(),
+        })
+    }
+
+    /// Run until every admitted sequence finishes; returns committed tokens.
+    pub fn run_to_completion(&mut self) -> Result<usize> {
+        let mut total = 0;
+        while self.active_count() > 0 {
+            total += self.step()?.tokens_committed;
+        }
+        Ok(total)
+    }
+
+    pub fn take_outputs(&mut self) -> Vec<SeqOutput> {
+        std::mem::take(&mut self.outputs)
+    }
+
+    // ---------------------------------------------------------------------
+    // Draft expansion.
+    // ---------------------------------------------------------------------
+
+    /// Returns node_tokens[slot][node] for every tree node. Node 0 is the
+    /// slot's current root token; deeper nodes are proposed by the draft
+    /// heads depth by depth.
+    fn expand_tree(&mut self) -> Result<Vec<Vec<u32>>> {
+        let b = self.cfg.batch;
+        let t = self.cfg.tree.len();
+        let mut node_tokens = vec![vec![0u32; t]; b];
+        for i in 0..b {
+            if self.slots[i].active && !self.slots[i].done {
+                node_tokens[i][0] = self.slots[i].root_token;
+            }
+        }
+        if t == 1 {
+            return Ok(node_tokens);
+        }
+        match self.arch.clone() {
+            DraftArch::Ar => {}
+            DraftArch::Medusa => self.expand_medusa(&mut node_tokens)?,
+            DraftArch::Hydra { ml, .. } => self.expand_hydra(ml, &mut node_tokens)?,
+            DraftArch::Eagle => self.expand_eagle(&mut node_tokens)?,
+        }
+        Ok(node_tokens)
+    }
+
+    /// Medusa (sequentially independent): ONE draft call produces all K
+    /// head distributions from h_t alone; every depth-(d) node's token is
+    /// the rank-r entry of head (d-1)'s top-k — identical for all parents
+    /// (the paper's Fig. 1 left).
+    fn expand_medusa(&mut self, node_tokens: &mut [Vec<u32>]) -> Result<()> {
+        let b = self.cfg.batch;
+        let d = self.dims.d_model;
+        let v = self.rt.manifest.vocab;
+        let k = self.rt.manifest.num_heads;
+        let mut h = HostTensor::zeros_f32(&[8, d]);
+        for i in 0..b {
+            if self.slots[i].active && !self.slots[i].done {
+                h.f32s_mut()[i * d..(i + 1) * d].copy_from_slice(&self.slots[i].h_star);
+            }
+        }
+        let t0 = Instant::now();
+        let name = format!("medusa_draft_{}", self.cfg.size);
+        let out = self.rt.call(&name, &[&h], &[self.head_w.as_deref().unwrap()])?;
+        let logits = &out[0]; // [8, K, V]
+        for head in 1..=k {
+            self.phase.draft_per_head[head] += t0.elapsed() / k as u32;
+        }
+        let tree = self.cfg.tree.clone();
+        for i in 0..b {
+            if !self.slots[i].active || self.slots[i].done {
+                continue;
+            }
+            for depth in 2..=tree.max_depth() {
+                let head = depth - 2; // head index 0-based into [K]
+                let row = &logits.f32s()
+                    [(i * k + head) * v..(i * k + head + 1) * v];
+                let width = tree.by_depth[depth - 1]
+                    .iter()
+                    .map(|&n| tree.rank[n] + 1)
+                    .max()
+                    .unwrap_or(0);
+                let top = top_k_indices(row, width);
+                for &n in &tree.by_depth[depth - 1] {
+                    node_tokens[i][n] = top[tree.rank[n]] as u32;
+                }
+            }
+            // Probe: children of a depth-d node come from head d (same
+            // distribution for every node at that depth — sequential
+            // independence).
+            if self.probe.is_some() {
+                let rows: Vec<(usize, Vec<f32>)> = (0..tree.len())
+                    .filter(|&n| tree.depth[n] <= k)
+                    .map(|n| {
+                        let head = tree.depth[n] - 1;
+                        (n, logits.f32s()[(i * k + head) * v..(i * k + head + 1) * v].to_vec())
+                    })
+                    .collect();
+                let probe = self.probe.as_mut().unwrap();
+                for (n, row) in rows {
+                    probe.head_logits[i][n] = Some(row);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Hydra (sequentially dependent): for each depth, head (depth-1) is
+    /// evaluated once per *parent node*, conditioned on the token path to
+    /// that parent (paper §3, Eq. 3). Rows across (slot, parent) pairs are
+    /// flattened into one bucketed call per depth.
+    fn expand_hydra(&mut self, ml: usize, node_tokens: &mut [Vec<u32>]) -> Result<()> {
+        let b = self.cfg.batch;
+        let d = self.dims.d_model;
+        let v = self.rt.manifest.vocab;
+        let tree = self.cfg.tree.clone();
+        let m_buckets = self.rt.manifest.hydra_m_buckets[&self.cfg.size].clone();
+        let k = self.rt.manifest.num_heads;
+
+        // With probing we also evaluate childless nodes (and one depth past
+        // the current tree) to estimate the gain of *candidate* children.
+        let max_parent_depth = if self.probe.is_some() {
+            tree.max_depth().min(k)
+        } else {
+            tree.max_depth() - 1
+        };
+        for depth in 2..=(max_parent_depth + 1) {
+            let head = depth - 1; // 1-based head index
+            let parents: Vec<usize> = tree.by_depth[depth - 2]
+                .iter()
+                .copied()
+                .filter(|&n| self.probe.is_some() || !tree.children[n].is_empty())
+                .collect();
+            if parents.is_empty() {
+                continue;
+            }
+            let active: Vec<usize> = (0..b)
+                .filter(|&i| self.slots[i].active && !self.slots[i].done)
+                .collect();
+            let rows = active.len() * parents.len();
+            let mb = Manifest::bucket(&m_buckets, rows)?;
+            let mut h = HostTensor::zeros_f32(&[mb, d]);
+            let mut path = HostTensor::zeros_i32(&[mb, head]);
+            let mut row_of: Vec<(usize, usize)> = Vec::with_capacity(rows);
+            for &i in &active {
+                for &p in &parents {
+                    let r = row_of.len();
+                    h.f32s_mut()[r * d..(r + 1) * d].copy_from_slice(&self.slots[i].h_star);
+                    for (j, &anc) in tree.path_to(p).iter().enumerate() {
+                        path.i32s_mut()[r * head + j] = node_tokens[i][anc] as i32;
+                    }
+                    row_of.push((i, p));
+                }
+            }
+            let t0 = Instant::now();
+            let name =
+                format!("hydra_draft_{}_L{}_d{}_m{}", self.cfg.size, ml, head, mb);
+            let out = self.rt.call(
+                &name,
+                &[&h, &path],
+                &[&self.base_w, self.head_w.as_deref().unwrap()],
+            )?;
+            self.phase.draft_per_head[head] += t0.elapsed();
+            let logits = &out[0]; // [Mb, V]
+            for (r, &(i, p)) in row_of.iter().enumerate() {
+                let row = &logits.f32s()[r * v..(r + 1) * v];
+                if !tree.children[p].is_empty() {
+                    let top = top_k_indices(row, tree.children[p].len());
+                    for (rank, &c) in tree.children[p].iter().enumerate() {
+                        node_tokens[i][c] = top[rank] as u32;
+                    }
+                }
+                if let Some(probe) = &mut self.probe {
+                    probe.head_logits[i][p] = Some(row.to_vec());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// EAGLE: one decoder-layer draft evaluated per depth; each node's call
+    /// consumes (its token embedding, its parent's estimated hidden) and
+    /// yields both child logits and the node's own estimated hidden
+    /// (App. C). Batch 1 only (bench configuration, as in the paper's
+    /// Fig. 10).
+    fn expand_eagle(&mut self, node_tokens: &mut [Vec<u32>]) -> Result<()> {
+        let d = self.dims.d_model;
+        let v = self.rt.manifest.vocab;
+        let tree = self.cfg.tree.clone();
+        let slot = 0usize;
+        if !self.slots[slot].active || self.slots[slot].done {
+            return Ok(());
+        }
+        let n_buckets = self.rt.manifest.eagle_n_buckets.clone();
+        let k = self.rt.manifest.num_heads;
+        // Estimated hidden per node (filled depth by depth).
+        let mut node_h: Vec<Vec<f32>> = vec![Vec::new(); tree.len()];
+        let cur_len = self.slots[slot].cur_len;
+
+        let max_eval_depth = if self.probe.is_some() {
+            tree.max_depth().min(k)
+        } else {
+            tree.max_depth() - 1
+        };
+        for depth in 1..=max_eval_depth {
+            // Evaluate depth-d nodes that have children (all of them when
+            // probing — candidate-child gains need leaf distributions too).
+            let nodes: Vec<usize> = tree.by_depth[depth - 1]
+                .iter()
+                .copied()
+                .filter(|&n| self.probe.is_some() || !tree.children[n].is_empty())
+                .collect();
+            if nodes.is_empty() {
+                continue;
+            }
+            let nb = Manifest::bucket(&n_buckets, nodes.len())?;
+            let mut toks = HostTensor::zeros_i32(&[1, nb]);
+            let mut hpar = HostTensor::zeros_f32(&[1, nb, d]);
+            let mut pos = HostTensor::zeros_i32(&[1, nb]);
+            for (r, &n) in nodes.iter().enumerate() {
+                toks.i32s_mut()[r] = node_tokens[slot][n] as i32;
+                let parent_h: &[f32] = if n == 0 {
+                    // Root's predecessor is the last committed token, whose
+                    // draft input uses the TRUE base hidden.
+                    &self.slots[slot].h_last
+                } else {
+                    &node_h[tree.parent[n]]
+                };
+                hpar.f32s_mut()[r * d..(r + 1) * d].copy_from_slice(parent_h);
+                pos.i32s_mut()[r] = (cur_len + depth - 1) as i32;
+            }
+            let cl = HostTensor::from_i32(&[1], vec![cur_len as i32]);
+            let t0 = Instant::now();
+            let name = format!("eagle_step_{}_b1_n{}", self.cfg.size, nb);
+            let out = self.rt.call(
+                &name,
+                &[&toks, &hpar, &pos, &cl, self.ekv.as_ref().unwrap()],
+                &[&self.base_w, self.head_w.as_deref().unwrap()],
+            )?;
+            self.phase.draft_per_head[depth] += t0.elapsed();
+            let (logits, h_out) = (&out[0], &out[1]); // [1,Nb,V], [1,Nb,D]
+            for (r, &n) in nodes.iter().enumerate() {
+                node_h[n] = h_out.f32s()[r * d..(r + 1) * d].to_vec();
+                let row = &logits.f32s()[r * v..(r + 1) * v];
+                if !tree.children[n].is_empty() {
+                    let top = top_k_indices(row, tree.children[n].len());
+                    for (rank, &c) in tree.children[n].iter().enumerate() {
+                        node_tokens[slot][c] = top[rank] as u32;
+                    }
+                }
+                if let Some(probe) = &mut self.probe {
+                    probe.head_logits[slot][n] = Some(row.to_vec());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn padded_anc_mask(tree: &TreeTopology, tb: usize) -> Vec<i32> {
+    let t = tree.len();
+    let src = tree.anc_mask();
+    let mut m = vec![0i32; tb * tb];
+    for i in 0..t {
+        m[i * tb..i * tb + t].copy_from_slice(&src[i * t..(i + 1) * t]);
+    }
+    for i in t..tb {
+        m[i * tb + i] = 1; // self-only padding rows (no NaN in softmax)
+    }
+    m
+}
+
+fn tile(mask: &[i32], b: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(mask.len() * b);
+    for _ in 0..b {
+        out.extend_from_slice(mask);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_mask_has_self_rows() {
+        let tree = TreeTopology::from_paths(vec![vec![0]]).unwrap();
+        let m = padded_anc_mask(&tree, 4);
+        assert_eq!(m[0], 1); // root self
+        assert_eq!(m[1 * 4 + 0], 1); // child sees root
+        assert_eq!(m[1 * 4 + 1], 1); // child self
+        assert_eq!(m[2 * 4 + 2], 1); // padding self
+        assert_eq!(m[3 * 4 + 3], 1);
+        assert_eq!(m[2 * 4 + 0], 0); // padding attends nothing else
+    }
+
+    #[test]
+    fn tile_repeats() {
+        assert_eq!(tile(&[1, 2], 3), vec![1, 2, 1, 2, 1, 2]);
+    }
+}

@@ -1,0 +1,132 @@
+//! Per-sequence serving state (one slot of the batched engine).
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_ids: Vec<u32>,
+    pub max_new: usize,
+    /// Optional stop marker (token-id subsequence, e.g. encode("<end>")).
+    pub stop_ids: Vec<u32>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Stop,
+    CacheFull,
+    Running,
+}
+
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub active: bool,
+    pub req_id: u64,
+    /// Committed tokens (prompt + generated) — mirrors the KV cache rows.
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub cur_len: usize,
+    /// Next root candidate (sampled from base logits at the last step).
+    pub root_token: u32,
+    /// Base logits the root was drawn from (quality metric bookkeeping).
+    pub root_logits: Vec<f32>,
+    /// Base hidden state of the last committed token [D].
+    pub h_last: Vec<f32>,
+    /// Draft-model input state [D]: == h_last for Medusa/Hydra, the
+    /// prefix-attention output for Hydra++, f̂ for EAGLE.
+    pub h_star: Vec<f32>,
+    pub max_new: usize,
+    pub stop_ids: Vec<u32>,
+    pub generated: usize,
+    pub done: bool,
+    pub finish: FinishReason,
+    /// Acceptance length of every decode step (incl. the root token).
+    pub accept_hist: Vec<usize>,
+    /// Σ log p_base of generated tokens (Fig. 4 quality metric).
+    pub sum_logprob: f64,
+    /// Wall-clock bookkeeping for latency metrics (set by the scheduler).
+    pub enqueue_at: Option<std::time::Instant>,
+    pub first_token_at: Option<std::time::Instant>,
+}
+
+impl Slot {
+    pub fn vacant() -> Slot {
+        Slot {
+            active: false,
+            req_id: 0,
+            tokens: Vec::new(),
+            prompt_len: 0,
+            cur_len: 0,
+            root_token: 0,
+            root_logits: Vec::new(),
+            h_last: Vec::new(),
+            h_star: Vec::new(),
+            max_new: 0,
+            stop_ids: Vec::new(),
+            generated: 0,
+            done: true,
+            finish: FinishReason::Running,
+            accept_hist: Vec::new(),
+            sum_logprob: 0.0,
+            enqueue_at: None,
+            first_token_at: None,
+        }
+    }
+
+    pub fn generated_ids(&self) -> &[u32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Check whether the generated suffix ends with the stop marker.
+    pub fn hit_stop(&self) -> bool {
+        let g = self.generated_ids();
+        !self.stop_ids.is_empty()
+            && g.len() >= self.stop_ids.len()
+            && g[g.len() - self.stop_ids.len()..] == self.stop_ids[..]
+    }
+
+    pub fn mean_accept_len(&self) -> f64 {
+        if self.accept_hist.is_empty() {
+            return 0.0;
+        }
+        self.accept_hist.iter().sum::<usize>() as f64 / self.accept_hist.len() as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SeqOutput {
+    pub req_id: u64,
+    pub generated: Vec<u32>,
+    pub finish: FinishReason,
+    pub steps: usize,
+    pub mean_accept_len: f64,
+    /// Acceptance length of every decode step (root token included).
+    pub accept_hist: Vec<usize>,
+    pub mean_logprob: f64,
+    pub ttft_ms: Option<f64>,
+    pub total_ms: Option<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_detection() {
+        let mut s = Slot::vacant();
+        s.prompt_len = 2;
+        s.tokens = vec![1, 2, 9, 8, 7];
+        s.stop_ids = vec![8, 7];
+        assert!(s.hit_stop());
+        s.stop_ids = vec![9, 9];
+        assert!(!s.hit_stop());
+        s.stop_ids = vec![];
+        assert!(!s.hit_stop());
+    }
+
+    #[test]
+    fn mean_accept() {
+        let mut s = Slot::vacant();
+        s.accept_hist = vec![1, 2, 3];
+        assert!((s.mean_accept_len() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,50 @@
+//! # hydra-serve
+//!
+//! A serving-system reproduction of **"Hydra: Sequentially-Dependent Draft
+//! Heads for Medusa Decoding"** (Ankner et al., 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request router,
+//!   continuous batcher, KV-cache manager, speculative decoding engine
+//!   (tree draft → packed verification → acceptance → commit), the paper's
+//!   §4 decoding-tree search, workload generators and the bench harness.
+//! * **Layer 2 (python/compile)** — the base transformer + draft heads in
+//!   JAX, AOT-lowered to HLO text once at build time (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels)** — the Pallas tree-attention
+//!   kernel inside every verify artifact.
+//!
+//! Python never runs on the request path: this crate loads the HLO-text
+//! artifacts through the PJRT C API (`xla` crate) and serves from them.
+
+pub mod util;
+pub mod tokenizer;
+pub mod model;
+pub mod runtime;
+pub mod tree;
+pub mod cache;
+pub mod draft;
+pub mod engine;
+pub mod scheduler;
+pub mod server;
+pub mod metrics;
+pub mod treesearch;
+pub mod workload;
+pub mod bench;
+
+/// Locate the artifacts directory: $HYDRA_ARTIFACTS or ./artifacts
+/// relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HYDRA_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

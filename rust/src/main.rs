@@ -1,0 +1,226 @@
+//! hydra-serve — leader entrypoint.
+//!
+//! Subcommands:
+//!   info                               inspect the built artifacts
+//!   generate  --prompt "..."           one-shot local generation
+//!   serve     --addr 127.0.0.1:7070    TCP JSON-lines serving front-end
+//!   treesearch                         §4 decoding-tree search
+//!
+//! Common flags: --size {s,m,l} --variant {ar,medusa,hydra,hydra_pp,eagle}
+//!               --batch N --mode {greedy,typical} --eps 0.15 --temp 0.7
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request};
+use hydra_serve::runtime::Runtime;
+use hydra_serve::server::{serve, ServerConfig};
+use hydra_serve::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
+use hydra_serve::treesearch::{save_tree, search, SearchParams};
+use hydra_serve::util::cli::Args;
+use hydra_serve::{artifacts_dir, draft, workload};
+
+fn main() {
+    init_logging();
+    let args = Args::from_env(&["help", "quick"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "treesearch" => cmd_treesearch(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn init_logging() {
+    struct StderrLog;
+    impl log::Log for StderrLog {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: StderrLog = StderrLog;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(match std::env::var("HYDRA_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("warn") => log::LevelFilter::Warn,
+        _ => log::LevelFilter::Info,
+    });
+}
+
+fn print_help() {
+    println!(
+        "hydra-serve — Hydra speculative-decoding serving system\n\
+         \n\
+         USAGE: hydra-serve <info|generate|serve|treesearch> [flags]\n\
+         \n\
+         generate  --prompt \"...\" [--size s] [--variant hydra_pp] [--max-new 64]\n\
+                   [--mode greedy|typical --eps 0.15 --temp 0.7]\n\
+         serve     [--addr 127.0.0.1:7070] [--size s] [--variant hydra_pp] [--batch 4]\n\
+         treesearch [--size s] [--variants medusa,hydra,hydra_pp] [--batches 1]\n\
+                   [--max-nodes 48]\n"
+    );
+}
+
+fn parse_mode(args: &Args) -> AcceptMode {
+    match args.str_or("mode", "greedy").as_str() {
+        "typical" => {
+            let eps = args.f64_or("eps", 0.15) as f32;
+            AcceptMode::Typical {
+                eps,
+                alpha: eps.sqrt(),
+                temp: args.f64_or("temp", 0.7) as f32,
+            }
+        }
+        _ => AcceptMode::Greedy,
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::new(artifacts_dir())?;
+    let m = &rt.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!("vocab={} seq_max={} K={} accept_max={}", m.vocab, m.seq_max, m.num_heads, m.accept_max);
+    for (z, d) in &m.sizes {
+        println!(
+            "size {z}: d={} L={} H={}/{} ffn={} params={:.2}M  batches={:?}",
+            d.d_model, d.n_layers, d.n_heads, d.n_kv_heads, d.d_ffn,
+            d.params as f64 / 1e6, m.batch_buckets[z]
+        );
+        for v in &m.head_variants[z] {
+            println!(
+                "  variant {:<22} kind={:<7} mlp={} prefix={} obj={}",
+                v.name, v.kind, v.mlp_layers, v.prefix_attn, v.objective
+            );
+        }
+    }
+    println!("{} executables", m.executables.len());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let size = args.str_or("size", "s");
+    let variant = args.str_or("variant", "hydra_pp");
+    let prompt = args
+        .get("prompt")
+        .map(str::to_string)
+        .unwrap_or_else(|| "tell me about alice.".to_string());
+    let max_new = args.usize_or("max-new", 64);
+    let mode = parse_mode(args);
+
+    let rt = Runtime::new(artifacts_dir())?;
+    if !draft::available(&rt.manifest, &size, &variant) {
+        bail!("variant `{variant}` not built for size `{size}` (see `hydra-serve info`)");
+    }
+    let tok = Tokenizer::load(&rt.manifest.dir.join("tokenizer.json"))?;
+    let tree = draft::tuned_tree(&rt.manifest, &size, &variant, 1)?;
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig { size, variant, tree, batch: 1, mode, seed: 42 },
+    )?;
+    engine.admit(vec![Request {
+        id: 0,
+        prompt_ids: tok.encode(&format_prompt(&prompt)),
+        max_new,
+        stop_ids: tok.encode(STOP_TEXT),
+    }])?;
+    let t0 = std::time::Instant::now();
+    engine.run_to_completion()?;
+    let dt = t0.elapsed();
+    let out = engine.take_outputs().pop().unwrap();
+    let mut text = tok.decode(&out.generated);
+    if let Some(pos) = text.find(STOP_TEXT) {
+        text.truncate(pos);
+    }
+    println!("{}", text.trim());
+    eprintln!(
+        "\n[{} tokens in {:.2}s = {:.1} tok/s; {} steps; mean acceptance {:.2}]",
+        out.generated.len(),
+        dt.as_secs_f64(),
+        out.generated.len() as f64 / dt.as_secs_f64(),
+        out.steps,
+        out.mean_accept_len
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir())?;
+    let size = args.str_or("size", "s");
+    let variant = args.str_or("variant", "hydra_pp");
+    let batch = args.usize_or("batch", 4);
+    if !draft::available(&rt.manifest, &size, &variant) {
+        bail!("variant `{variant}` not built for size `{size}`");
+    }
+    let cfg = ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7070"),
+        size,
+        variant,
+        batch,
+        mode: parse_mode(args),
+        conn_threads: args.usize_or("conn-threads", 8),
+    };
+    serve(&rt, cfg, Arc::new(AtomicBool::new(false)))
+}
+
+fn cmd_treesearch(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir())?;
+    let size = args.str_or("size", "s");
+    let variants = args.list_or("variants", &["medusa", "hydra", "hydra_pp"]);
+    let batches: Vec<usize> = args
+        .list_or("batches", &["1"])
+        .iter()
+        .map(|b| b.parse().expect("batch"))
+        .collect();
+    let windows = workload::load_corpus_windows(&rt.manifest.dir)?;
+    let quick = args.flag("quick");
+    let params = SearchParams {
+        max_nodes: args.usize_or("max-nodes", if quick { 16 } else { 48 }),
+        contexts: args.usize_or("contexts", if quick { 3 } else { 6 }),
+        steps_per_context: args.usize_or("steps", if quick { 8 } else { 16 }),
+        seed: 7,
+    };
+    let probe_sizes: Vec<usize> = [1usize, 2, 4, 6, 8, 12, 16, 24, 32, 40, 48]
+        .into_iter()
+        .filter(|&n| n <= params.max_nodes)
+        .collect();
+    for variant in &variants {
+        if !draft::available(&rt.manifest, &size, variant) {
+            eprintln!("skipping {variant} (not built for size {size})");
+            continue;
+        }
+        for &b in &batches {
+            if !rt.manifest.batch_buckets[&size].contains(&b) {
+                eprintln!("skipping batch {b} (no AOT bucket)");
+                continue;
+            }
+            println!("== tree search {size}/{variant} batch={b} ==");
+            let outcome = search(&rt, &size, variant, b, &windows, &params,
+                                 &probe_sizes, if quick { 24 } else { 48 })?;
+            println!(
+                "  best tree: {} nodes, throughput {:.1} tok/s",
+                outcome.best_size,
+                outcome.throughput[outcome.sizes.iter().position(|&n| n == outcome.best_size).unwrap()]
+            );
+            save_tree(&rt.manifest.dir, &size, variant, b, &outcome)?;
+        }
+    }
+    Ok(())
+}

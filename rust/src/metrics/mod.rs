@@ -1,0 +1,114 @@
+//! Serving metrics: throughput, latency, acceptance-length histograms.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{summarize, Summary};
+
+/// Histogram over acceptance lengths (1..=K+1).
+#[derive(Debug, Clone, Default)]
+pub struct AcceptHist {
+    pub counts: Vec<u64>,
+}
+
+impl AcceptHist {
+    pub fn record(&mut self, len: usize) {
+        if self.counts.len() <= len {
+            self.counts.resize(len + 1, 0);
+        }
+        self.counts[len] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let weighted: u64 =
+            self.counts.iter().enumerate().map(|(i, &c)| i as u64 * c).sum();
+        weighted as f64 / total as f64
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// One benchmark run's aggregate numbers.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub label: String,
+    pub wall: Duration,
+    pub decode_wall: Duration,
+    pub tokens_generated: usize,
+    pub steps: usize,
+    pub accept: AcceptHist,
+    pub step_ms: Vec<f64>,
+    pub seq_latency_ms: Vec<f64>,
+    pub mean_logprob: f64,
+}
+
+impl RunMetrics {
+    pub fn new(label: impl Into<String>) -> RunMetrics {
+        RunMetrics {
+            label: label.into(),
+            wall: Duration::ZERO,
+            decode_wall: Duration::ZERO,
+            tokens_generated: 0,
+            steps: 0,
+            accept: AcceptHist::default(),
+            step_ms: Vec::new(),
+            seq_latency_ms: Vec::new(),
+            mean_logprob: 0.0,
+        }
+    }
+
+    /// Decode throughput in tokens / second (the paper's headline metric).
+    pub fn throughput(&self) -> f64 {
+        if self.decode_wall.is_zero() {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.decode_wall.as_secs_f64()
+    }
+
+    /// Mean per-step decode latency in ms (Fig. 3's second panel).
+    pub fn step_latency(&self) -> Summary {
+        summarize(&self.step_ms)
+    }
+
+    pub fn mean_accept_len(&self) -> f64 {
+        self.accept.mean()
+    }
+}
+
+/// Wall-clock stopwatch helper.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+    pub fn lap(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_hist_mean() {
+        let mut h = AcceptHist::default();
+        h.record(1);
+        h.record(3);
+        h.record(3);
+        assert!((h.mean() - 7.0 / 3.0).abs() < 1e-9);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn throughput_zero_safe() {
+        let m = RunMetrics::new("x");
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

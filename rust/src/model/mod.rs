@@ -1,0 +1,230 @@
+//! Model metadata: the Rust mirror of python/compile/config.py plus the
+//! artifacts/manifest.json loader. Everything the engine needs to know
+//! about shapes, buckets and arg contracts comes from here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ffn: usize,
+    pub kv_dim: usize,
+    pub params: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadVariant {
+    pub name: String,
+    /// "medusa" | "hydra" | "eagle"
+    pub kind: String,
+    pub mlp_layers: usize,
+    pub prefix_attn: bool,
+    pub objective: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    /// "dyn" | "base" | "head"
+    pub kind: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub seq_max: usize,
+    pub accept_max: usize,
+    pub num_heads: usize,
+    pub tree_buckets: Vec<usize>,
+    pub batch_buckets: BTreeMap<String, Vec<usize>>,
+    pub hydra_m_buckets: BTreeMap<String, Vec<usize>>,
+    pub eagle_n_buckets: Vec<usize>,
+    pub sizes: BTreeMap<String, ModelDims>,
+    pub head_variants: BTreeMap<String, Vec<HeadVariant>>,
+    pub weight_files: BTreeMap<String, String>,
+    pub executables: BTreeMap<String, ExeSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = Json::parse_file(&dir.join("manifest.json"))?;
+        let sizes = v
+            .req("sizes")
+            .as_obj()
+            .context("sizes")?
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    ModelDims {
+                        d_model: s.req("d_model").as_usize().unwrap(),
+                        n_layers: s.req("n_layers").as_usize().unwrap(),
+                        n_heads: s.req("n_heads").as_usize().unwrap(),
+                        n_kv_heads: s.req("n_kv_heads").as_usize().unwrap(),
+                        d_ffn: s.req("d_ffn").as_usize().unwrap(),
+                        kv_dim: s.req("kv_dim").as_usize().unwrap(),
+                        params: s.req("params").as_usize().unwrap(),
+                    },
+                )
+            })
+            .collect();
+        let head_variants = v
+            .req("head_variants")
+            .as_obj()
+            .context("head_variants")?
+            .iter()
+            .map(|(k, arr)| {
+                let vs = arr
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|h| HeadVariant {
+                        name: h.req("name").as_str().unwrap().to_string(),
+                        kind: h.req("kind").as_str().unwrap().to_string(),
+                        mlp_layers: h.req("mlp_layers").as_usize().unwrap(),
+                        prefix_attn: h.req("prefix_attn").as_bool().unwrap(),
+                        objective: h.req("objective").as_str().unwrap().to_string(),
+                    })
+                    .collect();
+                (k.clone(), vs)
+            })
+            .collect();
+        let executables = v
+            .req("executables")
+            .as_obj()
+            .context("executables")?
+            .iter()
+            .map(|(k, e)| {
+                let args = e
+                    .req("args")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|a| ArgSpec {
+                        kind: a.req("kind").as_str().unwrap().to_string(),
+                        name: a.req("name").as_str().unwrap().to_string(),
+                        shape: a.get("shape").map(|s| s.usize_arr()).unwrap_or_default(),
+                        dtype: a
+                            .get("dtype")
+                            .and_then(|d| d.as_str())
+                            .unwrap_or("f32")
+                            .to_string(),
+                    })
+                    .collect();
+                let outputs = e
+                    .req("outputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|o| {
+                        (o.req("shape").usize_arr(),
+                         o.req("dtype").as_str().unwrap().to_string())
+                    })
+                    .collect();
+                (
+                    k.clone(),
+                    ExeSpec { file: e.req("file").as_str().unwrap().to_string(), args, outputs },
+                )
+            })
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: v.req("vocab").as_usize().context("vocab")?,
+            seq_max: v.req("seq_max").as_usize().context("seq_max")?,
+            accept_max: v.req("accept_max").as_usize().context("accept_max")?,
+            num_heads: v.req("num_heads").as_usize().context("num_heads")?,
+            tree_buckets: v.req("tree_buckets").usize_arr(),
+            batch_buckets: v
+                .req("batch_buckets")
+                .as_obj()
+                .context("batch_buckets")?
+                .iter()
+                .map(|(k, a)| (k.clone(), a.usize_arr()))
+                .collect(),
+            hydra_m_buckets: v
+                .req("hydra_m_buckets")
+                .as_obj()
+                .context("hydra_m_buckets")?
+                .iter()
+                .map(|(k, a)| (k.clone(), a.usize_arr()))
+                .collect(),
+            eagle_n_buckets: v.req("eagle_n_buckets").usize_arr(),
+            sizes,
+            head_variants,
+            weight_files: v
+                .req("weight_files")
+                .as_obj()
+                .context("weight_files")?
+                .iter()
+                .map(|(k, f)| (k.clone(), f.as_str().unwrap().to_string()))
+                .collect(),
+            executables,
+        })
+    }
+
+    pub fn dims(&self, size: &str) -> Result<&ModelDims> {
+        self.sizes.get(size).with_context(|| format!("unknown size `{size}`"))
+    }
+
+    pub fn variant(&self, size: &str, name: &str) -> Result<&HeadVariant> {
+        self.head_variants
+            .get(size)
+            .and_then(|vs| vs.iter().find(|v| v.name == name))
+            .with_context(|| format!("no head variant `{name}` for size `{size}`"))
+    }
+
+    /// Smallest bucket >= n, or an error if none fits.
+    pub fn bucket(buckets: &[usize], n: usize) -> Result<usize> {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .with_context(|| format!("no bucket >= {n} in {buckets:?}"))
+    }
+
+    pub fn tree_bucket(&self, n: usize) -> Result<usize> {
+        Self::bucket(&self.tree_buckets, n)
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables.get(name).with_context(|| format!("no executable `{name}`"))
+    }
+
+    pub fn has_exe(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = vec![1, 4, 8, 16, 32, 64];
+        assert_eq!(Manifest::bucket(&buckets, 1).unwrap(), 1);
+        assert_eq!(Manifest::bucket(&buckets, 2).unwrap(), 4);
+        assert_eq!(Manifest::bucket(&buckets, 16).unwrap(), 16);
+        assert_eq!(Manifest::bucket(&buckets, 33).unwrap(), 64);
+        assert!(Manifest::bucket(&buckets, 65).is_err());
+    }
+}

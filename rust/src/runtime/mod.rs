@@ -1,0 +1,236 @@
+//! L3↔L2 bridge: loads AOT HLO-text artifacts and executes them on the
+//! PJRT CPU client (`xla` crate). One compiled executable per (entry
+//! point, shape bucket), compiled lazily and cached for the process
+//! lifetime; weight tensors are uploaded to device once per weight set.
+//!
+//! Interchange is HLO TEXT (never serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::Manifest;
+use crate::util::tensors::read_tensors;
+pub use tensor::{Data, HostTensor};
+
+/// A set of device-resident weight buffers, keyed by tensor name.
+pub struct WeightSet {
+    pub name: String,
+    buffers: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl WeightSet {
+    pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
+        self.buffers.get(name)
+    }
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.buffers.keys()
+    }
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weights: RefCell<HashMap<String, Rc<WeightSet>>>,
+    /// Cumulative time spent inside PJRT execute (profiling hook).
+    pub exec_time: RefCell<std::time::Duration>,
+    pub exec_calls: RefCell<u64>,
+    pub upload_time: RefCell<std::time::Duration>,
+    pub download_time: RefCell<std::time::Duration>,
+}
+
+impl Runtime {
+    pub fn new(dir: PathBuf) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            dir,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            exec_time: RefCell::new(Default::default()),
+            exec_calls: RefCell::new(0),
+            upload_time: RefCell::new(Default::default()),
+            download_time: RefCell::new(Default::default()),
+        })
+    }
+
+    pub fn open_default() -> Result<Runtime> {
+        Runtime::new(crate::artifacts_dir())
+    }
+
+    /// Lazily compile an executable from its HLO-text artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self.manifest.exe(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        log::info!("compiled {name} in {:.2?}", t0.elapsed());
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Load (or fetch cached) a weight set, uploading every tensor once.
+    pub fn weight_set(&self, set: &str) -> Result<Rc<WeightSet>> {
+        if let Some(w) = self.weights.borrow().get(set) {
+            return Ok(Rc::clone(w));
+        }
+        let file = self
+            .manifest
+            .weight_files
+            .get(set)
+            .with_context(|| format!("unknown weight set `{set}`"))?;
+        let tensors = read_tensors(&self.dir.join(file))?;
+        let mut buffers = HashMap::new();
+        for (name, t) in &tensors {
+            let buf = match t.dtype {
+                crate::util::tensors::DType::F32 => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(&t.as_f32(), &t.shape, None),
+                crate::util::tensors::DType::I32 => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(&t.as_i32(), &t.shape, None),
+            }
+            .map_err(|e| anyhow::anyhow!("uploading {set}/{name}: {e}"))?;
+            buffers.insert(name.clone(), buf);
+        }
+        let ws = Rc::new(WeightSet { name: set.to_string(), buffers });
+        self.weights.borrow_mut().insert(set.to_string(), Rc::clone(&ws));
+        Ok(ws)
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let r = match &t.data {
+            Data::F32(v) => self.client.buffer_from_host_buffer::<f32>(v, &t.shape, None),
+            Data::I32(v) => self.client.buffer_from_host_buffer::<i32>(v, &t.shape, None),
+        }
+        .map_err(|e| anyhow::anyhow!("upload: {e}"));
+        *self.upload_time.borrow_mut() += t0.elapsed();
+        r
+    }
+
+    /// Execute a manifest executable. `dyn_args` fill the "dyn" arg slots
+    /// in order; weight slots are resolved by name from `weight_sets`
+    /// (searched in order — base set first, then head set).
+    pub fn call(
+        &self,
+        name: &str,
+        dyn_args: &[&HostTensor],
+        weight_sets: &[&WeightSet],
+    ) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.exe(name)?.clone();
+        let exe = self.executable(name)?;
+
+        let n_dyn = spec.args.iter().filter(|a| a.kind == "dyn").count();
+        if n_dyn != dyn_args.len() {
+            bail!("{name}: expected {n_dyn} dyn args, got {}", dyn_args.len());
+        }
+
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut di = 0;
+        // Collect argument buffers in manifest order. We stash uploads in a
+        // side vec and record weight-set pointers; then build the final ref
+        // list (two passes keep borrowck happy).
+        enum Slot<'a> {
+            Uploaded(usize),
+            Weight(&'a xla::PjRtBuffer),
+        }
+        let mut slots: Vec<Slot> = Vec::with_capacity(spec.args.len());
+        for a in &spec.args {
+            if a.kind == "dyn" {
+                let t = dyn_args[di];
+                di += 1;
+                if t.shape != a.shape {
+                    bail!("{name}: arg `{}` shape {:?} != expected {:?}", a.name, t.shape, a.shape);
+                }
+                let want_f32 = a.dtype == "f32";
+                let is_f32 = matches!(t.data, Data::F32(_));
+                if want_f32 != is_f32 {
+                    bail!("{name}: arg `{}` dtype mismatch", a.name);
+                }
+                uploaded.push(self.upload(t)?);
+                slots.push(Slot::Uploaded(uploaded.len() - 1));
+            } else {
+                let buf = weight_sets
+                    .iter()
+                    .find_map(|ws| ws.get(&a.name))
+                    .with_context(|| {
+                        format!("{name}: weight `{}` not found in provided sets", a.name)
+                    })?;
+                slots.push(Slot::Weight(buf));
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = slots
+            .iter()
+            .map(|s| match s {
+                Slot::Uploaded(i) => &uploaded[*i],
+                Slot::Weight(b) => *b,
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let mut out = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        *self.exec_time.borrow_mut() += t0.elapsed();
+        *self.exec_calls.borrow_mut() += 1;
+
+        let t1 = Instant::now();
+        // Single replica; output is one tuple buffer (PJRT does not untuple
+        // through this crate — see DESIGN.md §8).
+        let replica = out.pop().context("no replica output")?;
+        let tuple_buf = replica.into_iter().next().context("no output buffer")?;
+        let lit = tuple_buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download {name}: {e}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let (shape, want_dtype) = spec
+                .outputs
+                .get(i)
+                .cloned()
+                .unwrap_or_else(|| (vec![p.element_count()], "f32".into()));
+            let data = if want_dtype == "i32" {
+                Data::I32(p.to_vec::<i32>().map_err(|e| anyhow::anyhow!("out {i}: {e}"))?)
+            } else {
+                Data::F32(p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("out {i}: {e}"))?)
+            };
+            tensors.push(HostTensor { shape, data });
+        }
+        *self.download_time.borrow_mut() += t1.elapsed();
+        Ok(tensors)
+    }
+
+    pub fn reset_counters(&self) {
+        *self.exec_time.borrow_mut() = Default::default();
+        *self.upload_time.borrow_mut() = Default::default();
+        *self.download_time.borrow_mut() = Default::default();
+        *self.exec_calls.borrow_mut() = 0;
+    }
+}

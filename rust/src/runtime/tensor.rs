@@ -1,0 +1,127 @@
+//! Host-side tensors: the engine's working representation of model state
+//! (KV caches, logits, masks). Row-major, f32 or i32.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; n]) }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: Data::I32(vec![0; n]) }
+    }
+
+    pub fn from_f32(shape: &[usize], v: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        HostTensor { shape: shape.to_vec(), data: Data::F32(v) }
+    }
+
+    pub fn from_i32(shape: &[usize], v: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        HostTensor { shape: shape.to_vec(), data: Data::I32(v) }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn i32s_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            Data::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Stride (in elements) of axis `ax`.
+    pub fn stride(&self, ax: usize) -> usize {
+        self.shape[ax + 1..].iter().product()
+    }
+
+    /// Row `i` of the leading axis, as an f32 slice.
+    pub fn row_f32(&self, i: usize) -> &[f32] {
+        let row = self.len() / self.shape[0];
+        &self.f32s()[i * row..(i + 1) * row]
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> HostTensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_len() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.f32s().len(), 24);
+    }
+
+    #[test]
+    fn strides() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.stride(0), 12);
+        assert_eq!(t.stride(1), 4);
+        assert_eq!(t.stride(2), 1);
+    }
+
+    #[test]
+    fn rows() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row_f32(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dtype_mismatch_panics() {
+        let t = HostTensor::zeros_i32(&[2]);
+        t.f32s();
+    }
+}

@@ -1,0 +1,146 @@
+//! Continuous-batching scheduler: a FIFO admission queue feeding the
+//! engine's B slots. Between decode steps, vacant slots are refilled from
+//! the queue (prefill joins the running batch — Orca-style iteration-level
+//! scheduling), so throughput does not stall on stragglers.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, Request, SeqOutput, StepStats};
+
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerStats {
+    pub admitted: usize,
+    pub completed: usize,
+    pub steps: usize,
+    pub tokens: usize,
+    pub max_queue_depth: usize,
+}
+
+pub struct Scheduler {
+    queue: VecDeque<Request>,
+    pub stats: SchedulerStats,
+    /// Admit at most this many new sequences per engine step (prefill cost
+    /// control / head-of-line fairness knob).
+    pub max_admit_per_step: usize,
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler {
+            queue: VecDeque::new(),
+            stats: SchedulerStats::default(),
+            max_admit_per_step: usize::MAX,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
+    }
+
+    pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
+        for r in reqs {
+            self.submit(r);
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn has_work(&self, engine: &Engine) -> bool {
+        !self.queue.is_empty() || engine.active_count() > 0
+    }
+
+    /// Refill vacant slots from the queue (up to the per-step admit cap).
+    pub fn refill(&mut self, engine: &mut Engine) -> Result<usize> {
+        let n = engine
+            .vacancy_count()
+            .min(self.queue.len())
+            .min(self.max_admit_per_step);
+        if n == 0 {
+            return Ok(0);
+        }
+        let batch: Vec<Request> = self.queue.drain(..n).collect();
+        self.stats.admitted += batch.len();
+        engine.admit(batch)?;
+        Ok(n)
+    }
+
+    /// One scheduling iteration: refill, then step the engine if anything
+    /// is active. Returns step stats if a step ran.
+    pub fn tick(&mut self, engine: &mut Engine) -> Result<Option<StepStats>> {
+        self.refill(engine)?;
+        if engine.active_count() == 0 {
+            return Ok(None);
+        }
+        let stats = engine.step()?;
+        self.stats.steps += 1;
+        self.stats.tokens += stats.tokens_committed;
+        Ok(Some(stats))
+    }
+
+    /// Drive everything in the queue to completion (bench entry point).
+    pub fn run_all(&mut self, engine: &mut Engine) -> Result<Vec<SeqOutput>> {
+        let mut outputs = Vec::new();
+        while self.has_work(engine) {
+            self.tick(engine)?;
+            outputs.extend(engine.take_outputs());
+        }
+        self.stats.completed += outputs.len();
+        Ok(outputs)
+    }
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn queue_fifo() {
+        let mut s = Scheduler::new();
+        for i in 0..5 {
+            s.submit(Request { id: i, prompt_ids: vec![1], max_new: 1, stop_ids: vec![] });
+        }
+        assert_eq!(s.queue_depth(), 5);
+        assert_eq!(s.stats.max_queue_depth, 5);
+        let drained: Vec<u64> = s.queue.drain(..).map(|r| r.id).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn prop_queue_depth_tracks_submissions() {
+        prop::check("scheduler-queue", 100, |rng| {
+            let mut s = Scheduler::new();
+            let mut expect = 0usize;
+            for i in 0..rng.range(1, 40) {
+                if rng.f64() < 0.7 {
+                    s.submit(Request {
+                        id: i as u64,
+                        prompt_ids: vec![1],
+                        max_new: 4,
+                        stop_ids: vec![],
+                    });
+                    expect += 1;
+                } else if expect > 0 {
+                    let take = rng.range(1, expect + 1);
+                    s.queue.drain(..take);
+                    expect -= take;
+                }
+                prop_assert_eq!(s.queue_depth(), expect);
+                prop_assert!(s.stats.max_queue_depth >= expect, "high-water mark");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! TCP serving front-end (JSON-lines protocol).
+//!
+//! Request:  {"id": 1, "prompt": "tell me about alice.", "max_new": 64,
+//!            "mode": "greedy" | "typical", "eps": 0.15}\n
+//! Response: {"id": 1, "text": "...", "tokens": 42, "steps": 17,
+//!            "accept_len": 2.5, "ttft_ms": ..., "total_ms": ...}\n
+//!
+//! Connection handlers run on a thread pool and forward requests over an
+//! mpsc channel to the single engine thread (the engine and PJRT client
+//! are deliberately single-threaded — one CPU core, DESIGN.md §8). The
+//! engine thread runs the continuous-batching scheduler loop and routes
+//! completions back to per-connection channels.
+
+pub mod proto;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{AcceptMode, Engine, EngineConfig, SeqOutput};
+use crate::engine::Request;
+use crate::runtime::Runtime;
+use crate::scheduler::Scheduler;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workload;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub size: String,
+    pub variant: String,
+    pub batch: usize,
+    pub mode: AcceptMode,
+    pub conn_threads: usize,
+}
+
+struct Submission {
+    req: Request,
+    reply: Sender<SeqOutput>,
+}
+
+/// Run the server until `shutdown` flips. Returns when the listener closes.
+pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Result<()> {
+    let tok = Arc::new(Tokenizer::load(&rt.manifest.dir.join("tokenizer.json"))?);
+    let tree = crate::draft::tuned_tree(&rt.manifest, &cfg.size, &cfg.variant, cfg.batch)?;
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            size: cfg.size.clone(),
+            variant: cfg.variant.clone(),
+            tree,
+            batch: cfg.batch,
+            mode: cfg.mode,
+            seed: 42,
+        },
+    )?;
+    let mut sched = Scheduler::new();
+
+    let listener = TcpListener::bind(&cfg.addr).context("bind")?;
+    listener.set_nonblocking(true)?;
+    log::info!(
+        "serving {}/{} b{} on {}",
+        cfg.size, cfg.variant, cfg.batch, listener.local_addr()?
+    );
+
+    let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
+    let pool = ThreadPool::new(cfg.conn_threads);
+    let next_id = Arc::new(AtomicU64::new(1));
+
+    let mut pending_replies: HashMap<u64, Sender<SeqOutput>> = HashMap::new();
+
+    // Engine loop with inline (non-blocking) accept.
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        // Accept new connections without blocking the decode loop.
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                let tok = Arc::clone(&tok);
+                let ids = Arc::clone(&next_id);
+                let sd = Arc::clone(&shutdown);
+                pool.execute(move || {
+                    if let Err(e) = handle_conn(stream, tx, tok, ids, sd) {
+                        log::warn!("connection error: {e}");
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) => return Err(e.into()),
+        }
+        // Drain submissions into the scheduler.
+        while let Ok(sub) = rx.try_recv() {
+            pending_replies.insert(sub.req.id, sub.reply);
+            sched.submit(sub.req);
+        }
+        // One scheduling tick (refill + step) if there is work.
+        if sched.has_work(&engine) {
+            sched.tick(&mut engine)?;
+            for out in engine.take_outputs() {
+                if let Some(reply) = pending_replies.remove(&out.req_id) {
+                    let _ = reply.send(out);
+                }
+            }
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Submission>,
+    tok: Arc<Tokenizer>,
+    ids: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    // Periodic read timeout so idle connections don't pin a pool worker
+    // past server shutdown (ThreadPool joins its workers on drop).
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let line = line.trim().to_string();
+        let resp = match proto::parse_request(&line, &tok) {
+            Ok((mut req, client_id)) => {
+                req.id = ids.fetch_add(1, Ordering::Relaxed);
+                let (rtx, rrx) = channel();
+                tx.send(Submission { req, reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("engine gone"))?;
+                match rrx.recv() {
+                    Ok(out) => proto::render_response(&out, client_id, &tok),
+                    Err(_) => proto::render_error(client_id, "engine shut down"),
+                }
+            }
+            Err(e) => proto::render_error(0, &format!("bad request: {e}")),
+        };
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    log::debug!("connection {peer} closed");
+    Ok(())
+}
+
+/// Spawn a server on an OS-assigned port; returns (port, shutdown handle,
+/// join handle). Used by tests and examples.
+pub fn spawn_local(
+    artifacts: std::path::PathBuf,
+    size: String,
+    variant: String,
+    batch: usize,
+) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+    // Bind first so the port is known before the engine warms up.
+    let probe = TcpListener::bind("127.0.0.1:0")?;
+    let port = probe.local_addr()?.port();
+    drop(probe);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = Arc::clone(&shutdown);
+    let addr = format!("127.0.0.1:{port}");
+    let handle = std::thread::spawn(move || {
+        let rt = Runtime::new(artifacts).expect("runtime");
+        let cfg = ServerConfig {
+            addr,
+            size,
+            variant,
+            batch,
+            mode: AcceptMode::Greedy,
+            conn_threads: 4,
+        };
+        if let Err(e) = serve(&rt, cfg, sd) {
+            eprintln!("server error: {e}");
+        }
+    });
+    Ok((port, shutdown, handle))
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        // Retry while the server thread warms up (compiles executables).
+        let mut last = None;
+        for _ in 0..600 {
+            match TcpStream::connect(addr) {
+                Ok(s) => return Ok(Client { stream: s }),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+            }
+        }
+        Err(anyhow::anyhow!("connect {addr}: {last:?}"))
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+        ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    /// Ask the generator for a typical-acceptance sample.
+    pub fn generate_typical(&mut self, prompt: &str, max_new: usize, eps: f64) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+            ("mode", Json::str("typical")),
+            ("eps", Json::num(eps)),
+        ]);
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+// Re-export for examples.
+pub use workload::ArrivalProcess;

@@ -1,0 +1,109 @@
+//! Wire protocol: JSON-lines request/response rendering.
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Request, SeqOutput};
+use crate::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
+use crate::util::json::Json;
+
+/// Parse a request line. Returns (engine request, client-chosen id echoed
+/// back in the response). Note: the engine's acceptance mode is a server
+/// startup setting; a per-request "mode" field is accepted but ignored
+/// (documented limitation — one verification criterion per batch).
+pub fn parse_request(line: &str, tok: &Tokenizer) -> Result<(Request, u64)> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let prompt = v
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .context("prompt must be a string")?;
+    if prompt.is_empty() {
+        anyhow::bail!("empty prompt");
+    }
+    let client_id = v.get("id").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
+    let max_new = v.get("max_new").and_then(|x| x.as_usize()).unwrap_or(64).clamp(1, 256);
+    let req = Request {
+        id: 0, // assigned by the server
+        prompt_ids: tok.encode(&format_prompt(prompt)),
+        max_new,
+        stop_ids: tok.encode(STOP_TEXT),
+    };
+    Ok((req, client_id))
+}
+
+pub fn render_response(out: &SeqOutput, client_id: u64, tok: &Tokenizer) -> Json {
+    let mut text = tok.decode(&out.generated);
+    if let Some(pos) = text.find(STOP_TEXT) {
+        text.truncate(pos);
+    }
+    Json::obj(vec![
+        ("id", Json::num(client_id as f64)),
+        ("text", Json::str(text.trim())),
+        ("tokens", Json::num(out.generated.len() as f64)),
+        ("steps", Json::num(out.steps as f64)),
+        ("accept_len", Json::num(out.mean_accept_len)),
+        ("finish", Json::str(format!("{:?}", out.finish))),
+        ("ttft_ms", out.ttft_ms.map(Json::num).unwrap_or(Json::Null)),
+        ("total_ms", out.total_ms.map(Json::num).unwrap_or(Json::Null)),
+    ])
+}
+
+pub fn render_error(client_id: u64, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(client_id as f64)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(vec![])
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let t = tok();
+        let (req, cid) =
+            parse_request(r#"{"id": 9, "prompt": "hi there", "max_new": 32}"#, &t).unwrap();
+        assert_eq!(cid, 9);
+        assert_eq!(req.max_new, 32);
+        assert!(!req.prompt_ids.is_empty());
+        assert_eq!(t.decode(&req.prompt_ids), format_prompt("hi there"));
+    }
+
+    #[test]
+    fn rejects_missing_prompt() {
+        assert!(parse_request(r#"{"id": 1}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt": ""}"#, &tok()).is_err());
+        assert!(parse_request("not json", &tok()).is_err());
+    }
+
+    #[test]
+    fn max_new_clamped() {
+        let (req, _) =
+            parse_request(r#"{"prompt": "x", "max_new": 100000}"#, &tok()).unwrap();
+        assert_eq!(req.max_new, 256);
+    }
+
+    #[test]
+    fn response_strips_stop_marker() {
+        let t = tok();
+        let gen = t.encode("hello world <end> junk");
+        let out = SeqOutput {
+            req_id: 1,
+            generated: gen,
+            finish: crate::engine::FinishReason::Stop,
+            steps: 3,
+            mean_accept_len: 2.0,
+            accept_hist: vec![2, 2, 2],
+            mean_logprob: -1.0,
+            ttft_ms: Some(5.0),
+            total_ms: Some(11.0),
+        };
+        let r = render_response(&out, 4, &t);
+        assert_eq!(r.req("text").as_str(), Some("hello world"));
+        assert_eq!(r.req("id").as_usize(), Some(4));
+    }
+}

@@ -1,0 +1,158 @@
+//! BPE-lite tokenizer — the Rust applicator of the merge table trained by
+//! python/compile/tokenizer.py. Encode semantics are identical to the
+//! Python `Tokenizer.encode` (lowest-rank applicable merge, leftmost first,
+//! one merge per iteration); parity is asserted against
+//! artifacts/tokenizer_vectors.json by the integration test.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub const N_BYTE_TOKENS: u32 = 256;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    merges: Vec<(u32, u32)>,
+    ranks: HashMap<(u32, u32), u32>,
+    /// Expansion of each token id to raw bytes (precomputed for O(1) decode).
+    expansions: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    pub fn new(merges: Vec<(u32, u32)>) -> Tokenizer {
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        let mut expansions: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        for &(a, b) in &merges {
+            let mut e = expansions[a as usize].clone();
+            e.extend_from_slice(&expansions[b as usize]);
+            expansions.push(e);
+        }
+        Tokenizer { merges, ranks, expansions }
+    }
+
+    pub fn load(path: &Path) -> Result<Tokenizer> {
+        let v = Json::parse_file(path)?;
+        let merges = v
+            .req("merges")
+            .as_arr()
+            .context("merges")?
+            .iter()
+            .map(|m| {
+                let a = m.as_arr().context("merge pair")?;
+                Ok((a[0].as_usize().unwrap() as u32, a[1].as_usize().unwrap() as u32))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Tokenizer::new(merges))
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        while ids.len() >= 2 {
+            // Find the lowest-rank applicable merge, leftmost occurrence.
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..ids.len() - 1 {
+                if let Some(&r) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let (a, b) = self.merges[rank as usize];
+            let new_id = N_BYTE_TOKENS + rank;
+            // Apply this merge at every (non-overlapping, leftmost-greedy)
+            // occurrence — equivalent to repeated single applications of the
+            // same rank, but one pass.
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && ids[i] == a && ids[i + 1] == b {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(e) = self.expansions.get(id as usize) {
+                bytes.extend_from_slice(e);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn decode_one(&self, id: u32) -> String {
+        self.decode(&[id])
+    }
+}
+
+/// The serving wire format for a chat turn (mirrors python/compile/data.py
+/// `format_turn`): prompts are wrapped before encoding, and generation stops
+/// at the `<end>` marker.
+pub fn format_prompt(prompt: &str) -> String {
+    format!("<user> {prompt} <bot>")
+}
+
+pub const STOP_TEXT: &str = "<end>";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_fallback_roundtrip() {
+        let t = Tokenizer::new(vec![]);
+        let s = "hello, wörld!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn merge_applied_lowest_rank_first() {
+        // merges: rank0 = (h,e), rank1 = (l,l)
+        let t = Tokenizer::new(vec![(104, 101), (108, 108)]);
+        let ids = t.encode("hello");
+        // "hello" -> [he] l l o -> [he] [ll] o
+        assert_eq!(ids, vec![256, 257, 111]);
+        assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn recursive_merge_expansion() {
+        // rank0 = (a,b) -> 256 ; rank1 = (256, c) -> 257
+        let t = Tokenizer::new(vec![(97, 98), (256, 99)]);
+        assert_eq!(t.encode("abc"), vec![257]);
+        assert_eq!(t.decode(&[257]), "abc");
+    }
+
+    #[test]
+    fn overlap_greedy_left() {
+        let t = Tokenizer::new(vec![(97, 97)]);
+        assert_eq!(t.encode("aaaa"), vec![256, 256]);
+        assert_eq!(t.encode("aaa"), vec![256, 97]);
+    }
+
+    #[test]
+    fn decode_ignores_out_of_range() {
+        let t = Tokenizer::new(vec![]);
+        assert_eq!(t.decode(&[104, 105, 9999]), "hi");
+    }
+}

@@ -1,0 +1,329 @@
+//! Candidate-tree machinery for tree-based speculative decoding (paper §2
+//! "Tree decoding" + §4).
+//!
+//! Conventions (shared with python/compile/heads.py):
+//! * node 0 is the **root**: the candidate for sequence position `cur_len`,
+//!   sampled from the *base model's own logits* at the previous step —
+//!   under greedy acceptance it is always correct, so acceptance length
+//!   >= 1 (autoregressive decoding is the 1-node tree).
+//! * a node at depth `d` (root = depth 1) holds a candidate for position
+//!   `cur_len + d - 1`; its token is proposed by draft head `d - 1`
+//!   conditioned (for sequentially-dependent heads) on the tokens along
+//!   its root path.
+//! * topology is **static** (chosen offline, §4) and stored as Medusa-style
+//!   "choice paths": each non-root node is a list of child ranks
+//!   `[r1, ..., rk]` meaning: the r1-th most likely child of the root,
+//!   then the r2-th most likely child of that node, ...
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+pub const NO_PARENT: usize = usize::MAX;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeTopology {
+    /// Canonically ordered choice paths (parents before children).
+    pub paths: Vec<Vec<usize>>,
+    /// parent[i] — index into the node list; node 0 is root.
+    pub parent: Vec<usize>,
+    /// depth[i] — root = 1.
+    pub depth: Vec<usize>,
+    /// rank[i] — which top-k slot of the parent's head distribution.
+    pub rank: Vec<usize>,
+    /// children[i] — node indices, sorted by rank.
+    pub children: Vec<Vec<usize>>,
+    /// node indices grouped by depth (by_depth[0] = [root]).
+    pub by_depth: Vec<Vec<usize>>,
+}
+
+impl TreeTopology {
+    /// The 1-node tree == plain autoregressive decoding.
+    pub fn ar() -> TreeTopology {
+        TreeTopology::from_paths(vec![]).unwrap()
+    }
+
+    /// Build from choice paths. Paths are canonicalized (sorted by depth,
+    /// then lexicographically) and validated: every prefix must itself be
+    /// a path, and sibling ranks must be contiguous from 0.
+    pub fn from_paths(mut paths: Vec<Vec<usize>>) -> Result<TreeTopology> {
+        paths.sort_by(|a, b| a.len().cmp(&b.len()).then(a.cmp(b)));
+        paths.dedup();
+        let n = paths.len() + 1;
+        let mut parent = vec![NO_PARENT; n];
+        let mut depth = vec![1usize; n];
+        let mut rank = vec![0usize; n];
+        let find = |paths: &[Vec<usize>], p: &[usize]| -> Option<usize> {
+            if p.is_empty() {
+                return Some(0);
+            }
+            paths.iter().position(|x| x == p).map(|i| i + 1)
+        };
+        for (idx, path) in paths.iter().enumerate() {
+            let i = idx + 1;
+            let pp = &path[..path.len() - 1];
+            let Some(par) = find(&paths, pp) else {
+                bail!("path {path:?} has no parent {pp:?} in tree");
+            };
+            parent[i] = par;
+            depth[i] = path.len() + 1;
+            rank[i] = *path.last().unwrap();
+        }
+        let mut children = vec![Vec::new(); n];
+        for i in 1..n {
+            children[parent[i]].push(i);
+        }
+        for (i, ch) in children.iter_mut().enumerate() {
+            ch.sort_by_key(|&c| rank[c]);
+            for (want, &c) in ch.iter().enumerate() {
+                if rank[c] != want {
+                    bail!("node {i}: child ranks not contiguous (found {:?})",
+                          ch.iter().map(|&c| rank[c]).collect::<Vec<_>>());
+                }
+            }
+        }
+        let max_depth = depth.iter().copied().max().unwrap_or(1);
+        let mut by_depth = vec![Vec::new(); max_depth];
+        for i in 0..n {
+            by_depth[depth[i] - 1].push(i);
+        }
+        Ok(TreeTopology { paths, parent, depth, rank, children, by_depth })
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // always has the root
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.by_depth.len()
+    }
+
+    /// Widest per-depth group (bounds the draft-executable node bucket).
+    pub fn max_nodes_per_depth(&self) -> usize {
+        self.by_depth.iter().map(|v| v.len()).max().unwrap_or(1)
+    }
+
+    /// Ancestor-or-self mask, row-major [T, T] (i32 0/1) — the verify
+    /// executable's `anc_mask` argument.
+    pub fn anc_mask(&self) -> Vec<i32> {
+        let t = self.len();
+        let mut m = vec![0i32; t * t];
+        for i in 0..t {
+            let mut j = i;
+            loop {
+                m[i * t + j] = 1;
+                if j == 0 {
+                    break;
+                }
+                j = self.parent[j];
+            }
+        }
+        m
+    }
+
+    /// Root path of `node` (inclusive), root-first.
+    pub fn path_to(&self, node: usize) -> Vec<usize> {
+        let mut p = vec![node];
+        let mut j = node;
+        while j != 0 {
+            j = self.parent[j];
+            p.push(j);
+        }
+        p.reverse();
+        p
+    }
+
+    /// How many children each depth-d node requests (max rank + 1), i.e.
+    /// the top-k each head must produce per parent.
+    pub fn max_child_rank(&self, node: usize) -> usize {
+        self.children[node].len()
+    }
+
+    // ---- (de)serialization -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.paths
+                .iter()
+                .map(|p| Json::Arr(p.iter().map(|&r| Json::num(r as f64)).collect()))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<TreeTopology> {
+        let paths = v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tree json must be an array"))?
+            .iter()
+            .map(|p| p.usize_arr())
+            .collect();
+        TreeTopology::from_paths(paths)
+    }
+
+    /// A reasonable default K=4 static tree of ~`budget` nodes, shaped like
+    /// Medusa's published sparse trees: wide at shallow depths, narrowing
+    /// with depth. Used before a §4 tree search has produced a tuned tree.
+    pub fn default_tree(budget: usize) -> TreeTopology {
+        // Width schedule per depth (children of root, then per-node widths).
+        let widths = [6usize, 4, 3, 2];
+        let mut paths = Vec::new();
+        // Depth-2 nodes (children of root).
+        for w0 in 0..widths[0] {
+            if paths.len() + 1 >= budget {
+                return TreeTopology::from_paths(paths).unwrap();
+            }
+            paths.push(vec![w0]);
+        }
+        // Deeper: expand the lowest-rank parents first.
+        for d in 1..4 {
+            let parents: Vec<Vec<usize>> =
+                paths.iter().filter(|p| p.len() == d).cloned().collect();
+            for par in parents {
+                // Narrower fan-out for higher-rank parents.
+                let fan = if par.iter().sum::<usize>() == 0 {
+                    widths[d]
+                } else if par.iter().sum::<usize>() <= 1 {
+                    (widths[d] + 1) / 2
+                } else {
+                    1
+                };
+                for r in 0..fan {
+                    if paths.len() + 1 >= budget {
+                        return TreeTopology::from_paths(paths).unwrap();
+                    }
+                    let mut p = par.clone();
+                    p.push(r);
+                    paths.push(p);
+                }
+            }
+        }
+        TreeTopology::from_paths(paths).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn ar_tree_is_one_node() {
+        let t = TreeTopology::ar();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.max_depth(), 1);
+        assert_eq!(t.anc_mask(), vec![1]);
+    }
+
+    #[test]
+    fn small_tree_structure() {
+        // root + [0], [1], [0,0], [0,1], [1,0]
+        let t = TreeTopology::from_paths(vec![
+            vec![0], vec![1], vec![0, 0], vec![0, 1], vec![1, 0],
+        ])
+        .unwrap();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.children[0], vec![1, 2]); // [0] and [1]
+        assert_eq!(t.depth, vec![1, 2, 2, 3, 3, 3]);
+        assert_eq!(t.parent[3], 1);
+        assert_eq!(t.parent[5], 2);
+        assert_eq!(t.path_to(4), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn rejects_orphan_path() {
+        assert!(TreeTopology::from_paths(vec![vec![0, 0]]).is_err());
+    }
+
+    #[test]
+    fn rejects_rank_gap() {
+        assert!(TreeTopology::from_paths(vec![vec![1]]).is_err());
+    }
+
+    #[test]
+    fn anc_mask_is_reflexive_and_respects_parents() {
+        let t = TreeTopology::from_paths(vec![vec![0], vec![0, 0], vec![1]]).unwrap();
+        let n = t.len();
+        let m = t.anc_mask();
+        for i in 0..n {
+            assert_eq!(m[i * n + i], 1);
+            if i > 0 {
+                assert_eq!(m[i * n + t.parent[i]], 1);
+            }
+        }
+        // [0,0] (node 2) is not an ancestor of [1] (node 3) and vice versa.
+        assert_eq!(m[2 * n + 3], 0);
+        assert_eq!(m[3 * n + 2], 0);
+    }
+
+    #[test]
+    fn default_tree_budgets() {
+        for budget in [1, 2, 8, 16, 32, 64] {
+            let t = TreeTopology::default_tree(budget);
+            assert!(t.len() <= budget.max(1), "budget {budget} -> {}", t.len());
+            assert!(t.max_depth() <= 5);
+        }
+    }
+
+    fn random_tree(rng: &mut Pcg32, max_nodes: usize) -> TreeTopology {
+        let mut paths: Vec<Vec<usize>> = Vec::new();
+        let n = rng.range(0, max_nodes);
+        for _ in 0..n {
+            // Extend a random existing node (or root) with its next rank.
+            let base = if paths.is_empty() || rng.f64() < 0.3 {
+                vec![]
+            } else {
+                paths[rng.below(paths.len())].clone()
+            };
+            if base.len() >= 4 {
+                continue;
+            }
+            let next_rank = paths
+                .iter()
+                .filter(|p| p.len() == base.len() + 1 && p[..base.len()] == base[..])
+                .count();
+            let mut p = base;
+            p.push(next_rank);
+            paths.push(p);
+        }
+        TreeTopology::from_paths(paths).unwrap()
+    }
+
+    #[test]
+    fn prop_random_trees_are_consistent() {
+        prop::check("tree-consistency", 200, |rng| {
+            let t = random_tree(rng, 40);
+            let n = t.len();
+            // Parents precede children in packed order.
+            for i in 1..n {
+                prop_assert!(t.parent[i] < i, "parent after child at {i}");
+                prop_assert_eq!(t.depth[i], t.depth[t.parent[i]] + 1);
+            }
+            // by_depth partitions the nodes.
+            let total: usize = t.by_depth.iter().map(|v| v.len()).sum();
+            prop_assert_eq!(total, n);
+            // anc_mask row i has exactly depth[i] ones.
+            let m = t.anc_mask();
+            for i in 0..n {
+                let ones: i32 = m[i * n..(i + 1) * n].iter().sum();
+                prop_assert_eq!(ones as usize, t.depth[i]);
+            }
+            // path_to is consistent with depth and ends at the node.
+            for i in 0..n {
+                let p = t.path_to(i);
+                prop_assert_eq!(p.len(), t.depth[i]);
+                prop_assert_eq!(p[0], 0);
+                prop_assert_eq!(*p.last().unwrap(), i);
+            }
+            // JSON roundtrip.
+            let t2 = TreeTopology::from_json(&t.to_json()).unwrap();
+            prop_assert_eq!(t.paths.clone(), t2.paths);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,261 @@
+//! §4 — Discovering performant decoding trees.
+//!
+//! Two-stage, exactly as in the paper:
+//!   1. `grow_proposals` — greedy construction of proposal trees
+//!      T_1 ⊂ T_2 ⊂ … ⊂ T_N: starting from the 1-node tree, repeatedly run
+//!      a decoding simulation over held-out corpus windows with the
+//!      engine's probe enabled, and add the candidate child with the
+//!      highest marginal acceptance gain.
+//!   2. `select_tree` — measure end-to-end throughput of each proposal in
+//!      the target serving configuration (batch size, strategy) and keep
+//!      the argmax.
+//!
+//! Results are persisted to artifacts/trees/{size}_{variant}_b{B}.json and
+//! picked up by `draft::tuned_tree`.
+
+use anyhow::{Context, Result};
+
+use crate::engine::{AcceptMode, Engine, EngineConfig, Request};
+use crate::runtime::Runtime;
+use crate::tree::TreeTopology;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SearchParams {
+    pub max_nodes: usize,
+    /// Corpus windows used as simulation prompts per growth iteration.
+    pub contexts: usize,
+    /// Decode steps simulated per context.
+    pub steps_per_context: usize,
+    pub seed: u64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams { max_nodes: 48, contexts: 6, steps_per_context: 16, seed: 7 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Proposal {
+    pub tree: TreeTopology,
+    /// Mean acceptance length measured during the growth simulation.
+    pub sim_accept_len: f64,
+}
+
+/// Stage 1: greedy proposal-tree growth. Returns proposals of sizes
+/// 1..=max_nodes (index i-1 = tree of i nodes).
+pub fn grow_proposals(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    windows: &[Vec<u32>],
+    params: &SearchParams,
+) -> Result<Vec<Proposal>> {
+    let mut tree = TreeTopology::ar();
+    let mut proposals = Vec::with_capacity(params.max_nodes);
+    let max_depth = rt.manifest.num_heads + 1;
+
+    for step in 0..params.max_nodes {
+        let (gains, accept_len) =
+            simulate_gains(rt, size, variant, &tree, windows, params)?;
+        proposals.push(Proposal { tree: tree.clone(), sim_accept_len: accept_len });
+        if step + 1 == params.max_nodes {
+            break;
+        }
+        // Best candidate child = (node with max gain, its next rank).
+        let best = gains
+            .iter()
+            .enumerate()
+            .filter(|(n, _)| tree.depth[*n] < max_depth)
+            .max_by_key(|(_, &g)| g)
+            .map(|(n, _)| n)
+            .context("no candidate to add")?;
+        let mut path = tree.path_to(best)[1..]
+            .iter()
+            .map(|&n| tree.rank[n])
+            .collect::<Vec<_>>();
+        path.push(tree.children[best].len());
+        let mut paths = tree.paths.clone();
+        paths.push(path);
+        tree = TreeTopology::from_paths(paths)?;
+    }
+    Ok(proposals)
+}
+
+/// Run the probe simulation for one tree; returns (per-node gains, mean
+/// acceptance length).
+fn simulate_gains(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    tree: &TreeTopology,
+    windows: &[Vec<u32>],
+    params: &SearchParams,
+) -> Result<(Vec<u64>, f64)> {
+    let mut gains = vec![0u64; tree.len()];
+    let mut accept_total = 0usize;
+    let mut steps_total = 0usize;
+    for (ci, w) in windows.iter().take(params.contexts).enumerate() {
+        let mut engine = Engine::new(
+            rt,
+            EngineConfig {
+                size: size.to_string(),
+                variant: variant.to_string(),
+                tree: tree.clone(),
+                batch: 1,
+                mode: AcceptMode::Greedy,
+                seed: params.seed + ci as u64,
+            },
+        )?;
+        engine.enable_probe();
+        let prompt: Vec<u32> = w.iter().take(96).copied().collect();
+        engine.admit(vec![Request {
+            id: ci as u64,
+            prompt_ids: prompt,
+            max_new: params.steps_per_context * (rt.manifest.accept_max + 1),
+            stop_ids: vec![],
+        }])?;
+        for _ in 0..params.steps_per_context {
+            if engine.active_count() == 0 {
+                break;
+            }
+            let s = engine.step()?;
+            accept_total += s.tokens_committed;
+            steps_total += 1;
+        }
+        let probe = engine.probe.take().unwrap();
+        for (n, g) in probe.gains.iter().enumerate() {
+            gains[n] += g;
+        }
+    }
+    let mean = if steps_total > 0 { accept_total as f64 / steps_total as f64 } else { 0.0 };
+    Ok((gains, mean))
+}
+
+/// Stage 2: measure throughput (tok/s) of a tree in the target config.
+pub fn measure_throughput(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    tree: &TreeTopology,
+    batch: usize,
+    windows: &[Vec<u32>],
+    gen_tokens: usize,
+) -> Result<f64> {
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            size: size.to_string(),
+            variant: variant.to_string(),
+            tree: tree.clone(),
+            batch,
+            mode: AcceptMode::Greedy,
+            seed: 11,
+        },
+    )?;
+    let reqs: Vec<Request> = (0..batch)
+        .map(|i| Request {
+            id: i as u64,
+            prompt_ids: windows[i % windows.len()].iter().take(64).copied().collect(),
+            max_new: gen_tokens,
+            stop_ids: vec![],
+        })
+        .collect();
+    engine.admit(reqs)?;
+    // One warmup step triggers lazy executable compilation.
+    engine.step()?;
+    let t0 = std::time::Instant::now();
+    let mut tokens = 0usize;
+    while engine.active_count() > 0 {
+        tokens += engine.step()?.tokens_committed;
+    }
+    Ok(tokens as f64 / t0.elapsed().as_secs_f64())
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub sizes: Vec<usize>,
+    pub sim_accept: Vec<f64>,
+    pub throughput: Vec<f64>,
+    pub best_tree: TreeTopology,
+    pub best_size: usize,
+}
+
+/// Full §4 pipeline for one (size, variant, batch) configuration.
+pub fn search(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    batch: usize,
+    windows: &[Vec<u32>],
+    params: &SearchParams,
+    probe_sizes: &[usize],
+    gen_tokens: usize,
+) -> Result<SearchOutcome> {
+    let proposals = grow_proposals(rt, size, variant, windows, params)?;
+    let mut sizes = Vec::new();
+    let mut sim_accept = Vec::new();
+    let mut throughput = Vec::new();
+    for &n in probe_sizes {
+        let Some(p) = proposals.get(n - 1) else { continue };
+        let thr = measure_throughput(rt, size, variant, &p.tree, batch, windows, gen_tokens)?;
+        sizes.push(n);
+        sim_accept.push(p.sim_accept_len);
+        throughput.push(thr);
+        log::info!("[treesearch {size}/{variant}/b{batch}] n={n} accept={:.2} thr={thr:.1}",
+                   p.sim_accept_len);
+    }
+    let best_i = throughput
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .context("empty search")?;
+    Ok(SearchOutcome {
+        best_tree: proposals[sizes[best_i] - 1].tree.clone(),
+        best_size: sizes[best_i],
+        sizes,
+        sim_accept,
+        throughput,
+    })
+}
+
+/// Persist a searched tree where `draft::tuned_tree` will find it.
+pub fn save_tree(
+    artifacts: &std::path::Path,
+    size: &str,
+    variant: &str,
+    batch: usize,
+    outcome: &SearchOutcome,
+) -> Result<()> {
+    let dir = artifacts.join("trees");
+    std::fs::create_dir_all(&dir)?;
+    let obj = Json::obj(vec![
+        ("size", Json::str(size)),
+        ("variant", Json::str(variant)),
+        ("batch", Json::num(batch as f64)),
+        ("best_size", Json::num(outcome.best_size as f64)),
+        ("tree", outcome.best_tree.to_json()),
+        (
+            "curve",
+            Json::Arr(
+                outcome
+                    .sizes
+                    .iter()
+                    .zip(&outcome.throughput)
+                    .zip(&outcome.sim_accept)
+                    .map(|((&n, &t), &a)| {
+                        Json::obj(vec![
+                            ("nodes", Json::num(n as f64)),
+                            ("throughput", Json::num(t)),
+                            ("sim_accept", Json::num(a)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(dir.join(format!("{size}_{variant}_b{batch}.json")), obj.to_string())?;
+    Ok(())
+}

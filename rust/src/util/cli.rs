@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positionals. Unknown flags are an error so typos don't silently pass.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// `known_flags` are boolean switches; everything else starting with
+    /// `--` consumes the next token as its value.
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    out.opts.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match Args::parse(&argv, known_flags) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("argument error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().expect("float flag")).unwrap_or(default)
+    }
+
+    /// Comma-separated list with default.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&s(&["serve", "--size", "m", "--quiet", "--n=3"]), &["quiet"]).unwrap();
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("size"), Some("m"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&s(&["--size"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&s(&[]), &[]).unwrap();
+        assert_eq!(a.usize_or("x", 7), 7);
+        assert_eq!(a.f64_or("y", 0.5), 0.5);
+        assert_eq!(a.list_or("zs", &["a", "b"]), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-house (the offline vendor set has no
+//! serde/clap/rand/criterion — see DESIGN.md §2).
+
+pub mod json;
+pub mod rng;
+pub mod cli;
+pub mod tensors;
+pub mod prop;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,72 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set — DESIGN.md §2). Deterministic seeded case generation with failing-
+//! seed reporting; used for the coordinator invariants (tree packing,
+//! acceptance, cache slots, scheduler).
+
+use super::rng::Pcg32;
+
+/// Run `cases` generated checks. On failure, panics with the case seed so
+/// the exact case can be replayed (`PROP_SEED=<seed> cargo test ...`).
+pub fn check<F: Fn(&mut Pcg32) -> Result<(), String>>(name: &str, cases: usize, f: F) {
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be u64");
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed on replayed seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(name.len() as u64);
+        let mut rng = Pcg32::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {
+        {
+            let (a, b) = (&$a, &$b);
+            if a != b {
+                return Err(format!("{:?} != {:?}", a, b));
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        check("tautology", 50, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn reports_failures() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,148 @@
+//! Small statistics helpers for the bench harness and metrics.
+
+/// Online percentile via full sort (datasets here are small).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn summarize(values: &[f64]) -> Summary {
+    if values.is_empty() {
+        return Summary::default();
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        p50: percentile(&v, 50.0),
+        p90: percentile(&v, 90.0),
+        p99: percentile(&v, 99.0),
+        max: v[n - 1],
+    }
+}
+
+/// Softmax over a logits slice (numerically stable), in place into a Vec.
+pub fn softmax(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let inv_t = 1.0 / temperature.max(1e-6);
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - max) * inv_t).exp()).collect();
+    let sum: f32 = out.iter().sum();
+    for x in &mut out {
+        *x /= sum;
+    }
+    out
+}
+
+/// log-softmax value at one index.
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&l| (l - max).exp()).sum::<f32>().ln() + max;
+    logits[idx] - lse
+}
+
+/// Shannon entropy of a probability vector (nats).
+pub fn entropy(probs: &[f32]) -> f32 {
+    probs.iter().filter(|&&p| p > 0.0).map(|&p| -p * p.ln()).sum()
+}
+
+/// Indices of the top-k values, descending.
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    let k = k.min(values.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        values[b].partial_cmp(&values[a]).unwrap()
+    });
+    let mut top: Vec<usize> = idx[..k].to_vec();
+    top.sort_by(|&a, &b| values[b].partial_cmp(&values[a]).unwrap());
+    top
+}
+
+pub fn argmax(values: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in values.iter().enumerate() {
+        if v > values[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let cold = softmax(&[1.0, 2.0], 0.25);
+        let warm = softmax(&[1.0, 2.0], 2.0);
+        assert!(cold[1] > warm[1]);
+    }
+
+    #[test]
+    fn topk_ordering() {
+        let v = [0.1, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(top_k_indices(&v, 3), vec![1, 3, 2]);
+        assert_eq!(argmax(&v), 1);
+    }
+
+    #[test]
+    fn entropy_uniform_max() {
+        let u = entropy(&[0.25; 4]);
+        let s = entropy(&[0.97, 0.01, 0.01, 0.01]);
+        assert!(u > s);
+        assert!((u - (4.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let l = [0.5f32, 1.5, -0.3];
+        let p = softmax(&l, 1.0);
+        for i in 0..3 {
+            assert!((log_softmax_at(&l, i).exp() - p[i]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! HTB1 tensor binary reader — the weight interchange format written by
+//! python/compile/aot.py::write_tensors (magic "HTB1", u32-LE header
+//! length, JSON header, raw little-endian payload).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw little-endian payload (4 bytes per element for both dtypes).
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32, "{}", self.name);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32, "{}", self.name);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+pub fn read_tensors(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < 8 || &bytes[..4] != b"HTB1" {
+        bail!("{}: not an HTB1 file", path.display());
+    }
+    let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    if bytes.len() < 8 + hlen {
+        bail!("{}: truncated header", path.display());
+    }
+    let header = std::str::from_utf8(&bytes[8..8 + hlen]).context("header utf-8")?;
+    let header = Json::parse(header).map_err(|e| anyhow::anyhow!("header json: {e}"))?;
+    let payload = &bytes[8 + hlen..];
+
+    let mut out = BTreeMap::new();
+    for entry in header.req("tensors").as_arr().context("tensors array")? {
+        let name = entry.req("name").as_str().context("name")?.to_string();
+        let dtype = DType::parse(entry.req("dtype").as_str().context("dtype")?)?;
+        let shape = entry.req("shape").usize_arr();
+        let offset = entry.req("offset").as_usize().context("offset")?;
+        let nbytes = entry.req("nbytes").as_usize().context("nbytes")?;
+        if offset + nbytes > payload.len() {
+            bail!("{}: tensor {name} out of bounds", path.display());
+        }
+        let expected: usize = shape.iter().product::<usize>() * 4;
+        if expected != nbytes {
+            bail!("{name}: shape {shape:?} disagrees with nbytes {nbytes}");
+        }
+        out.insert(
+            name.clone(),
+            Tensor { name, dtype, shape, data: payload[offset..offset + nbytes].to_vec() },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path) -> std::path::PathBuf {
+        // Mirror python write_tensors: one f32 [2,3] and one i32 [4].
+        let f: Vec<f32> = vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0];
+        let i: Vec<i32> = vec![7, -8, 9, 10];
+        let mut payload = Vec::new();
+        for v in &f {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let f_off = 0;
+        let i_off = payload.len();
+        for v in &i {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let header = format!(
+            r#"{{"tensors":[{{"name":"a","dtype":"f32","shape":[2,3],"offset":{f_off},"nbytes":24}},{{"name":"b","dtype":"i32","shape":[4],"offset":{i_off},"nbytes":16}}]}}"#
+        );
+        let path = dir.join("t.bin");
+        let mut fh = std::fs::File::create(&path).unwrap();
+        fh.write_all(b"HTB1").unwrap();
+        fh.write_all(&(header.len() as u32).to_le_bytes()).unwrap();
+        fh.write_all(header.as_bytes()).unwrap();
+        fh.write_all(&payload).unwrap();
+        path
+    }
+
+    #[test]
+    fn read_fixture() {
+        let dir = std::env::temp_dir().join(format!("htb1_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_fixture(&dir);
+        let t = read_tensors(&path).unwrap();
+        assert_eq!(t["a"].shape, vec![2, 3]);
+        assert_eq!(t["a"].as_f32(), vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]);
+        assert_eq!(t["b"].as_i32(), vec![7, -8, 9, 10]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("htb1_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_tensors(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,122 @@
+//! Workload generators: MT-Bench-sim (chat prompts) and SpecBench-sim
+//! (category-tagged prompts) loaded from artifacts/prompts.json, which is
+//! generated from the same grammar as the training corpus but with a
+//! disjoint seed (python/compile/data.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::engine::Request;
+use crate::tokenizer::{format_prompt, Tokenizer};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+pub const CATEGORIES: &[&str] = &["chat", "translation", "summary", "qa", "math", "rag"];
+
+#[derive(Debug, Clone)]
+pub struct EvalPrompt {
+    pub id: String,
+    pub category: String,
+    pub prompt: String,
+    pub answer: String,
+}
+
+pub fn load_prompts(artifacts: &Path) -> Result<Vec<EvalPrompt>> {
+    let v = Json::parse_file(&artifacts.join("prompts.json"))?;
+    v.as_arr()
+        .context("prompts.json must be an array")?
+        .iter()
+        .map(|p| {
+            Ok(EvalPrompt {
+                id: p.req("id").as_str().context("id")?.to_string(),
+                category: p.req("category").as_str().context("category")?.to_string(),
+                prompt: p.req("prompt").as_str().context("prompt")?.to_string(),
+                answer: p.req("answer").as_str().context("answer")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+/// MT-Bench-sim: the conversational subset (the paper's main benchmark is
+/// multi-turn chat).
+pub fn mt_bench(prompts: &[EvalPrompt]) -> Vec<&EvalPrompt> {
+    prompts.iter().filter(|p| p.category == "chat").collect()
+}
+
+/// The "Writing/Roleplay-like" subset used by the Fig. 4 typical-acceptance
+/// experiment: open-ended generation (chat + summary).
+pub fn open_ended(prompts: &[EvalPrompt]) -> Vec<&EvalPrompt> {
+    prompts.iter().filter(|p| p.category == "chat" || p.category == "summary").collect()
+}
+
+pub fn by_category<'a>(prompts: &'a [EvalPrompt], cat: &str) -> Vec<&'a EvalPrompt> {
+    prompts.iter().filter(|p| p.category == cat).collect()
+}
+
+/// Turn eval prompts into engine requests (wire-format wrap + encode).
+pub fn to_requests(
+    prompts: &[&EvalPrompt],
+    tok: &Tokenizer,
+    max_new: usize,
+    id_base: u64,
+) -> Vec<Request> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request {
+            id: id_base + i as u64,
+            prompt_ids: tok.encode(&format_prompt(&p.prompt)),
+            max_new,
+            stop_ids: tok.encode(crate::tokenizer::STOP_TEXT),
+        })
+        .collect()
+}
+
+/// Tokenized held-out corpus windows for the §4 tree-search simulation
+/// (the paper uses a 100-prompt Alpaca subset).
+pub fn load_corpus_windows(artifacts: &Path) -> Result<Vec<Vec<u32>>> {
+    let v = Json::parse_file(&artifacts.join("corpus_sample.json"))?;
+    Ok(v.as_arr()
+        .context("corpus_sample.json")?
+        .iter()
+        .map(|w| w.usize_arr().into_iter().map(|x| x as u32).collect())
+        .collect())
+}
+
+/// Poisson arrival process for server load tests.
+pub struct ArrivalProcess {
+    rng: Pcg32,
+    pub rate_per_s: f64,
+    t_next: f64,
+}
+
+impl ArrivalProcess {
+    pub fn new(rate_per_s: f64, seed: u64) -> ArrivalProcess {
+        ArrivalProcess { rng: Pcg32::new(seed), rate_per_s, t_next: 0.0 }
+    }
+
+    /// Next arrival time (seconds since start).
+    pub fn next_arrival(&mut self) -> f64 {
+        self.t_next += self.rng.exp(self.rate_per_s);
+        self.t_next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone() {
+        let mut ap = ArrivalProcess::new(10.0, 3);
+        let mut last = 0.0;
+        for _ in 0..50 {
+            let t = ap.next_arrival();
+            assert!(t > last);
+            last = t;
+        }
+        // mean gap should be ~0.1s
+        assert!((last / 50.0 - 0.1).abs() < 0.05, "{last}");
+    }
+}

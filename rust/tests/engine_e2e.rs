@@ -1,0 +1,294 @@
+//! Engine-level end-to-end tests: the correctness properties of
+//! speculative decoding itself.
+//!
+//! The crown jewel is `speculative_greedy_matches_ar_greedy`: under greedy
+//! acceptance, EVERY draft architecture must produce exactly the token
+//! stream of plain autoregressive greedy decoding — speculation may only
+//! change speed, never output (paper §2, "greedy acceptance").
+
+use hydra_serve::draft;
+use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, FinishReason, Request};
+use hydra_serve::runtime::Runtime;
+use hydra_serve::scheduler::Scheduler;
+use hydra_serve::tokenizer::{format_prompt, Tokenizer};
+use hydra_serve::tree::TreeTopology;
+
+fn runtime() -> Runtime {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    Runtime::new(dir).unwrap()
+}
+
+fn tok(rt: &Runtime) -> Tokenizer {
+    Tokenizer::load(&rt.manifest.dir.join("tokenizer.json")).unwrap()
+}
+
+fn decode_with(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    tree: TreeTopology,
+    prompt_ids: Vec<u32>,
+    max_new: usize,
+    mode: AcceptMode,
+) -> (Vec<u32>, f64, usize) {
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            size: size.into(),
+            variant: variant.into(),
+            tree,
+            batch: 1,
+            mode,
+            seed: 77,
+        },
+    )
+    .unwrap();
+    engine
+        .admit(vec![Request { id: 0, prompt_ids, max_new, stop_ids: vec![] }])
+        .unwrap();
+    engine.run_to_completion().unwrap();
+    let out = engine.take_outputs().pop().unwrap();
+    (out.generated, out.mean_accept_len, out.steps)
+}
+
+#[test]
+fn speculative_greedy_matches_ar_greedy() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let prompt = t.encode(&format_prompt("tell me about alice."));
+    let max_new = 48;
+
+    let (ar, ar_accept, ar_steps) = decode_with(
+        &rt, &size, "ar", TreeTopology::ar(), prompt.clone(), max_new, AcceptMode::Greedy);
+    assert_eq!(ar.len(), max_new);
+    assert!((ar_accept - 1.0).abs() < 1e-9, "AR acceptance must be exactly 1");
+    assert_eq!(ar_steps, max_new);
+
+    for variant in ["medusa", "hydra", "hydra_pp", "eagle"] {
+        if !draft::available(&rt.manifest, &size, variant) {
+            continue;
+        }
+        let tree = draft::default_tree(variant, 1);
+        let (spec, accept, steps) = decode_with(
+            &rt, &size, variant, tree, prompt.clone(), max_new, AcceptMode::Greedy);
+        assert_eq!(
+            spec, ar,
+            "{variant}: speculative greedy output differs from AR greedy"
+        );
+        assert!(accept >= 1.0, "{variant}: acceptance below 1");
+        assert!(steps <= ar_steps, "{variant}: more steps than AR?");
+        println!("{variant}: accept={accept:.2} steps={steps} (ar={ar_steps})");
+    }
+}
+
+#[test]
+fn sequential_dependence_improves_acceptance() {
+    // The paper's end-to-end claim: the sequentially-dependent recipe
+    // (Hydra++ — seq.-dep. heads + teacher objective + prefix attention)
+    // beats sequentially-independent Medusa on acceptance length. Plain
+    // NTP-trained Hydra is additionally required to stay within noise of
+    // Medusa (at this substrate scale the template corpus is predictable
+    // enough from h alone that base Hydra ≈ Medusa; see EXPERIMENTS.md
+    // Fig. 2 notes — the paper's gap re-emerges through the Hydra++
+    // recipe, matching its Fig. 5 conclusion that the teacher objective
+    // is what aligns heads with verification).
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    for v in ["hydra", "medusa", "hydra_pp"] {
+        if !draft::available(&rt.manifest, &size, v) {
+            return;
+        }
+    }
+    let tree = draft::default_tree("hydra", 1);
+    let prompts = [
+        "tell me about bob.", "describe a day for carol in lima.",
+        "who is dave?", "count from 5: ", "tell me about grace.",
+        "where does ivan live? ivan lives in oslo.", "compute 41 + 7.",
+        "describe a day for peggy in hanoi.",
+    ];
+    let (mut medusa_total, mut hydra_total, mut pp_total) = (0.0, 0.0, 0.0);
+    for p in prompts {
+        let ids = t.encode(&format_prompt(p));
+        let (_, m_acc, _) = decode_with(
+            &rt, &size, "medusa", tree.clone(), ids.clone(), 48, AcceptMode::Greedy);
+        let (_, h_acc, _) = decode_with(
+            &rt, &size, "hydra", tree.clone(), ids.clone(), 48, AcceptMode::Greedy);
+        let (_, p_acc, _) =
+            decode_with(&rt, &size, "hydra_pp", tree.clone(), ids, 48, AcceptMode::Greedy);
+        medusa_total += m_acc;
+        hydra_total += h_acc;
+        pp_total += p_acc;
+    }
+    println!(
+        "mean accept: medusa {:.2} hydra {:.2} hydra++ {:.2}",
+        medusa_total / 8.0, hydra_total / 8.0, pp_total / 8.0
+    );
+    assert!(
+        pp_total > medusa_total,
+        "Hydra++ must beat Medusa on acceptance: {pp_total:.2} <= {medusa_total:.2}"
+    );
+    assert!(
+        hydra_total > medusa_total * 0.85,
+        "NTP-Hydra collapsed below Medusa noise band: {hydra_total:.2} vs {medusa_total:.2}"
+    );
+}
+
+#[test]
+fn typical_acceptance_runs_and_respects_limits() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let variant = if draft::available(&rt.manifest, &size, "hydra_pp") {
+        "hydra_pp"
+    } else {
+        "ar"
+    };
+    let tree = draft::default_tree(variant, 1);
+    let prompt = t.encode(&format_prompt("describe a day for erin in paris."));
+    let mode = AcceptMode::Typical { eps: 0.15, alpha: 0.387, temp: 0.7 };
+    let (gen, accept, _) = decode_with(&rt, &size, variant, tree, prompt, 32, mode);
+    assert_eq!(gen.len(), 32);
+    assert!(accept >= 1.0);
+    assert!(gen.iter().all(|&x| (x as usize) < rt.manifest.vocab));
+}
+
+#[test]
+fn continuous_batching_completes_all_and_matches_bs1() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let buckets = rt.manifest.batch_buckets[&size].clone();
+    let b = buckets.iter().copied().max().unwrap();
+    if b == 1 {
+        return; // fast artifacts: no batched buckets
+    }
+    let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
+    let tree = draft::default_tree(variant, b);
+
+    let prompts: Vec<Vec<u32>> = [
+        "tell me about alice.", "who is bob?", "compute 3 + 4.",
+        "describe a day for mike in rome.", "who is nina?", "count from 9: ",
+    ]
+    .iter()
+    .map(|p| t.encode(&format_prompt(p)))
+    .collect();
+
+    // Batched run through the scheduler (more requests than slots).
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: variant.into(),
+            tree: tree.clone(),
+            batch: b,
+            mode: AcceptMode::Greedy,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    let mut sched = Scheduler::new();
+    for (i, ids) in prompts.iter().enumerate() {
+        sched.submit(Request {
+            id: i as u64,
+            prompt_ids: ids.clone(),
+            max_new: 24,
+            stop_ids: vec![],
+        });
+    }
+    let outputs = sched.run_all(&mut engine).unwrap();
+    assert_eq!(outputs.len(), prompts.len(), "all requests must finish");
+    for o in &outputs {
+        assert_eq!(o.finish, FinishReason::MaxTokens);
+        assert_eq!(o.generated.len(), 24);
+    }
+
+    // Greedy batched output must equal greedy bs=1 output per request.
+    for (i, ids) in prompts.iter().enumerate() {
+        let (solo, _, _) = decode_with(
+            &rt, &size, variant, tree.clone(), ids.clone(), 24, AcceptMode::Greedy);
+        let batched = &outputs.iter().find(|o| o.req_id == i as u64).unwrap().generated;
+        assert_eq!(&solo, batched, "request {i}: batched != bs1 output");
+    }
+}
+
+#[test]
+fn stop_sequence_terminates_generation() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let prompt = t.encode(&format_prompt("tell me about alice."));
+    let stop = t.encode("<end>");
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: "ar".into(),
+            tree: TreeTopology::ar(),
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            seed: 1,
+        },
+    )
+    .unwrap();
+    engine
+        .admit(vec![Request { id: 0, prompt_ids: prompt, max_new: 200, stop_ids: stop.clone() }])
+        .unwrap();
+    engine.run_to_completion().unwrap();
+    let out = engine.take_outputs().pop().unwrap();
+    if out.finish == FinishReason::Stop {
+        let tail = &out.generated[out.generated.len() - stop.len()..];
+        assert_eq!(tail, &stop[..], "stop marker must terminate the stream");
+    } else {
+        // Model may not emit the marker within 200 tokens — acceptable, but
+        // the finish reason must then be MaxTokens.
+        assert_eq!(out.finish, FinishReason::MaxTokens);
+    }
+}
+
+#[test]
+fn engine_rejects_invalid_configs() {
+    let rt = runtime();
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    // Non-bucket batch size.
+    assert!(Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: "ar".into(),
+            tree: TreeTopology::ar(),
+            batch: 3,
+            mode: AcceptMode::Greedy,
+            seed: 0,
+        }
+    )
+    .is_err());
+    // AR with a multi-node tree.
+    assert!(Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: "ar".into(),
+            tree: draft::default_tree("hydra", 1),
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            seed: 0,
+        }
+    )
+    .is_err());
+    // Unknown variant.
+    assert!(Engine::new(
+        &rt,
+        EngineConfig {
+            size,
+            variant: "nope".into(),
+            tree: TreeTopology::ar(),
+            batch: 1,
+            mode: AcceptMode::Greedy,
+            seed: 0,
+        }
+    )
+    .is_err());
+}

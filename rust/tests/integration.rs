@@ -1,0 +1,203 @@
+//! Integration tests over the built artifacts: manifest + weights loading,
+//! Rust/Python tokenizer parity, and raw executable-level semantics
+//! (prefill → verify → commit KV-cache contracts).
+//!
+//! Requires `make artifacts` (or `make artifacts-fast`) to have run.
+
+use hydra_serve::model::Manifest;
+use hydra_serve::runtime::{HostTensor, Runtime};
+use hydra_serve::tokenizer::Tokenizer;
+use hydra_serve::util::json::Json;
+
+fn artifacts() -> std::path::PathBuf {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    dir
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    assert_eq!(m.vocab, 512);
+    assert_eq!(m.accept_max, m.num_heads + 1);
+    assert!(!m.sizes.is_empty());
+    for (z, dims) in &m.sizes {
+        assert_eq!(dims.kv_dim, dims.n_kv_heads * (dims.d_model / dims.n_heads));
+        // Every (B, T) bucket must have verify + commit executables.
+        for &b in &m.batch_buckets[z] {
+            assert!(m.has_exe(&format!("prefill_{z}_b{b}")), "prefill_{z}_b{b}");
+            for &t in &m.tree_buckets {
+                assert!(m.has_exe(&format!("verify_{z}_b{b}_t{t}")), "verify_{z}_b{b}_t{t}");
+                assert!(m.has_exe(&format!("commit_{z}_b{b}_t{t}")), "commit_{z}_b{b}_t{t}");
+            }
+        }
+        for v in &m.head_variants[z] {
+            assert!(m.weight_files.contains_key(&format!("heads_{z}_{}", v.name)));
+        }
+    }
+}
+
+#[test]
+fn tokenizer_parity_with_python() {
+    let dir = artifacts();
+    let tok = Tokenizer::load(&dir.join("tokenizer.json")).unwrap();
+    let vectors = Json::parse_file(&dir.join("tokenizer_vectors.json")).unwrap();
+    let mut checked = 0;
+    for v in vectors.as_arr().unwrap() {
+        let text = v.req("text").as_str().unwrap();
+        let want: Vec<u32> =
+            v.req("ids").as_arr().unwrap().iter().map(|x| x.as_usize().unwrap() as u32).collect();
+        let got = tok.encode(text);
+        assert_eq!(got, want, "tokenizer mismatch on {text:?}");
+        assert_eq!(tok.decode(&got), text, "decode roundtrip on {text:?}");
+        checked += 1;
+    }
+    assert!(checked >= 50, "expected >= 50 parity vectors, got {checked}");
+}
+
+#[test]
+fn weight_sets_load_and_upload() {
+    let rt = Runtime::new(artifacts()).unwrap();
+    for z in rt.manifest.sizes.keys() {
+        let ws = rt.weight_set(&format!("base_{z}")).unwrap();
+        assert!(ws.get("tok_emb").is_some());
+        assert!(ws.get("lm_head").is_some());
+        assert!(ws.get("layer00.wq").is_some());
+    }
+}
+
+/// Raw executable-level decode cycle: prefill, then verify a 1-token tree,
+/// commit it, and verify again — the second step must see the committed
+/// token (deterministic continuation), proving the KV-cache contract.
+#[test]
+fn prefill_verify_commit_cycle() {
+    let rt = Runtime::new(artifacts()).unwrap();
+    let z = rt.manifest.sizes.keys().next().unwrap().clone();
+    let dims = rt.manifest.dims(&z).unwrap().clone();
+    let (s, v, a) = (rt.manifest.seq_max, rt.manifest.vocab, rt.manifest.accept_max);
+    let base = rt.weight_set(&format!("base_{z}")).unwrap();
+
+    // Prefill a short prompt.
+    let prompt: Vec<i32> = vec![104, 105, 32, 116, 104, 101, 114, 101]; // "hi there" bytes
+    let n = prompt.len();
+    let mut tokens = HostTensor::zeros_i32(&[1, s]);
+    tokens.i32s_mut()[..n].copy_from_slice(&prompt);
+    let lens = HostTensor::from_i32(&[1], vec![n as i32]);
+    let out = rt.call(&format!("prefill_{z}_b1"), &[&tokens, &lens], &[&base]).unwrap();
+    let (_, last_logits, kv, _) = (&out[0], &out[1], &out[2], &out[3]);
+    assert_eq!(kv.shape, vec![1, dims.n_layers, 2, s, dims.kv_dim]);
+    let root = hydra_serve::util::stats::argmax(last_logits.f32s()) as i32;
+
+    // Verify the root token as a 1-node tree at position n.
+    let t1 = HostTensor::from_i32(&[1, 1], vec![root]);
+    let p1 = HostTensor::from_i32(&[1, 1], vec![n as i32]);
+    let cl = HostTensor::from_i32(&[1], vec![n as i32]);
+    let anc = HostTensor::from_i32(&[1, 1, 1], vec![1]);
+    let out = rt
+        .call(&format!("verify_{z}_b1_t1"), &[&t1, &p1, &cl, &anc, kv], &[&base])
+        .unwrap();
+    let (logits1, hidden1, tree_kv1) = (&out[0], &out[1], &out[2]);
+    assert_eq!(logits1.shape, vec![1, 1, v]);
+    assert!(logits1.f32s().iter().all(|x| x.is_finite()), "non-finite verify logits");
+
+    // Commit it.
+    let ai = HostTensor::zeros_i32(&[1, a]);
+    let al = HostTensor::from_i32(&[1], vec![1]);
+    let out = rt
+        .call(&format!("commit_{z}_b1_t1"), &[kv, tree_kv1, hidden1, &ai, &al, &cl], &[])
+        .unwrap();
+    let kv2 = &out[0];
+    // Committed row must equal the tree kv row at position n.
+    let kvd = dims.kv_dim;
+    for l in 0..dims.n_layers {
+        for ch in 0..2 {
+            let dst_off = ((l * 2 + ch) * s + n) * kvd;
+            let src_off = (l * 2 + ch) * kvd;
+            assert_eq!(
+                &kv2.f32s()[dst_off..dst_off + kvd],
+                &tree_kv1.f32s()[src_off..src_off + kvd],
+                "layer {l} ch {ch} not committed"
+            );
+        }
+    }
+
+    // Second verify at position n+1 conditioned on the committed token must
+    // be deterministic: running it twice gives identical logits.
+    let next = hydra_serve::util::stats::argmax(&logits1.f32s()[..v]) as i32;
+    let t2 = HostTensor::from_i32(&[1, 1], vec![next]);
+    let p2 = HostTensor::from_i32(&[1, 1], vec![(n + 1) as i32]);
+    let cl2 = HostTensor::from_i32(&[1], vec![(n + 1) as i32]);
+    let outa = rt
+        .call(&format!("verify_{z}_b1_t1"), &[&t2, &p2, &cl2, &anc, kv2], &[&base])
+        .unwrap();
+    let outb = rt
+        .call(&format!("verify_{z}_b1_t1"), &[&t2, &p2, &cl2, &anc, kv2], &[&base])
+        .unwrap();
+    assert_eq!(outa[0].f32s(), outb[0].f32s(), "verify must be deterministic");
+}
+
+/// A packed chain tree must reproduce sequential decoding: verifying
+/// [x1, x2] as a path gives the same next-token logits at x2 as verifying
+/// x1, committing, then verifying x2.
+#[test]
+fn chain_tree_matches_sequential_decode() {
+    let rt = Runtime::new(artifacts()).unwrap();
+    let z = rt.manifest.sizes.keys().next().unwrap().clone();
+    let (s, v, a) = (rt.manifest.seq_max, rt.manifest.vocab, rt.manifest.accept_max);
+    let base = rt.weight_set(&format!("base_{z}")).unwrap();
+
+    let prompt: Vec<i32> = "describe a day".bytes().map(|b| b as i32).collect();
+    let n = prompt.len();
+    let mut tokens = HostTensor::zeros_i32(&[1, s]);
+    tokens.i32s_mut()[..n].copy_from_slice(&prompt);
+    let lens = HostTensor::from_i32(&[1], vec![n as i32]);
+    let out = rt.call(&format!("prefill_{z}_b1"), &[&tokens, &lens], &[&base]).unwrap();
+    let kv = out[2].clone();
+    let x1 = hydra_serve::util::stats::argmax(out[1].f32s()) as i32;
+
+    // Path A: verify chain [x1, x2guess] where x2guess from step-by-step.
+    // First sequential: verify x1 alone, commit, verify x2.
+    let anc1 = HostTensor::from_i32(&[1, 1, 1], vec![1]);
+    let cl = HostTensor::from_i32(&[1], vec![n as i32]);
+    let t1 = HostTensor::from_i32(&[1, 1], vec![x1]);
+    let p1 = HostTensor::from_i32(&[1, 1], vec![n as i32]);
+    let o = rt.call(&format!("verify_{z}_b1_t1"), &[&t1, &p1, &cl, &anc1, &kv], &[&base]).unwrap();
+    let x2 = hydra_serve::util::stats::argmax(&o[0].f32s()[..v]) as i32;
+    let ai = HostTensor::zeros_i32(&[1, a]);
+    let al = HostTensor::from_i32(&[1], vec![1]);
+    let oc = rt
+        .call(&format!("commit_{z}_b1_t1"), &[&kv, &o[2], &o[1], &ai, &al, &cl], &[])
+        .unwrap();
+    let cl2 = HostTensor::from_i32(&[1], vec![(n + 1) as i32]);
+    let t2 = HostTensor::from_i32(&[1, 1], vec![x2]);
+    let p2 = HostTensor::from_i32(&[1, 1], vec![(n + 1) as i32]);
+    let seq =
+        rt.call(&format!("verify_{z}_b1_t1"), &[&t2, &p2, &cl2, &anc1, &oc[0]], &[&base]).unwrap();
+    let seq_logits = &seq[0].f32s()[..v];
+
+    // Path B: verify [x1, x2] as a 2-node chain in the t4 bucket.
+    let mut tc = HostTensor::zeros_i32(&[1, 4]);
+    tc.i32s_mut()[0] = x1;
+    tc.i32s_mut()[1] = x2;
+    let mut pc = HostTensor::zeros_i32(&[1, 4]);
+    pc.i32s_mut()[0] = n as i32;
+    pc.i32s_mut()[1] = (n + 1) as i32;
+    let mut anc = HostTensor::zeros_i32(&[1, 4, 4]);
+    for i in 0..4 {
+        anc.i32s_mut()[i * 4 + i] = 1;
+    }
+    anc.i32s_mut()[1 * 4 + 0] = 1; // node1's ancestor is node0
+    let tree =
+        rt.call(&format!("verify_{z}_b1_t4"), &[&tc, &pc, &cl, &anc, &kv], &[&base]).unwrap();
+    let tree_logits = &tree[0].f32s()[v..2 * v]; // node 1 row
+
+    let max_diff = seq_logits
+        .iter()
+        .zip(tree_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "chain-vs-sequential logits diverge: {max_diff}");
+}

@@ -1,0 +1,56 @@
+//! Server end-to-end: spawn the TCP front-end in-process, issue concurrent
+//! requests from multiple client connections, and validate the responses.
+
+use std::sync::atomic::Ordering;
+
+use hydra_serve::server::{spawn_local, Client};
+
+#[test]
+fn serve_and_respond_over_tcp() {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    let (port, shutdown, handle) =
+        spawn_local(dir, "s".into(), "hydra".into(), 1).expect("spawn server");
+    let addr = format!("127.0.0.1:{port}");
+
+    let mut c = Client::connect(&addr).expect("connect");
+    let resp = c.generate("tell me about alice.", 24).expect("generate");
+    assert!(resp.get("error").is_none(), "server error: {resp}");
+    assert_eq!(resp.req("id").as_usize(), Some(1));
+    assert_eq!(resp.req("tokens").as_usize(), Some(24));
+    assert!(resp.req("accept_len").as_f64().unwrap() >= 1.0);
+    assert!(!resp.req("text").as_str().unwrap().is_empty());
+
+    // Second request on the same connection.
+    let resp2 = c.generate("compute 2 + 2.", 16).expect("generate 2");
+    assert_eq!(resp2.req("tokens").as_usize(), Some(16));
+
+    // Concurrent clients are batched by the scheduler.
+    let mut joins = Vec::new();
+    for _ in 0..3 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.generate("who is bob?", 12).unwrap()
+        }));
+    }
+    for j in joins {
+        let r = j.join().unwrap();
+        assert_eq!(r.req("tokens").as_usize(), Some(12));
+    }
+
+    // Malformed request gets a JSON error, not a dropped connection.
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"this is not json\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let v = hydra_serve::util::json::Json::parse(line.trim()).unwrap();
+        assert!(v.get("error").is_some());
+    }
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = handle.join();
+}
