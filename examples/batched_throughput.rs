@@ -8,7 +8,7 @@
 
 use hydra_serve::bench::Table;
 use hydra_serve::draft;
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig};
+use hydra_serve::engine::{Engine, EngineConfig};
 use hydra_serve::metrics::RunMetrics;
 use hydra_serve::runtime::Runtime;
 use hydra_serve::scheduler::Scheduler;
@@ -45,21 +45,21 @@ fn main() -> anyhow::Result<()> {
                 variant: variant.to_string(),
                 tree,
                 batch,
-                mode: AcceptMode::Greedy,
                 seed: 9,
             },
         )?;
-        // Warmup (compiles this config's executables).
-        let w = workload::to_requests(&chat[..1], &tok, 4, 999);
+        // Warmup (compiles this config's executables). Requests default to
+        // greedy acceptance via their per-request SamplingParams.
+        let w = workload::to_requests(&chat[..1], &tok, &workload::default_params(&tok, 4), 999);
         engine.admit(w)?;
         engine.run_to_completion()?;
         engine.take_outputs();
 
-        let mut sched = Scheduler::new();
+        let mut sched = Scheduler::default();
         sched.submit_all(workload::to_requests(
             &chat[..n_requests.min(chat.len())],
             &tok,
-            max_new,
+            &workload::default_params(&tok, max_new),
             0,
         ));
         let mut m = RunMetrics::new(variant);

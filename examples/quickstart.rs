@@ -7,7 +7,7 @@
 //!        --prompt "..."  --max-new 64
 
 use hydra_serve::draft;
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request};
+use hydra_serve::engine::{Engine, EngineConfig, Request, SamplingParams};
 use hydra_serve::runtime::Runtime;
 use hydra_serve::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
 use hydra_serve::util::cli::Args;
@@ -38,18 +38,18 @@ fn main() -> anyhow::Result<()> {
             variant: variant.clone(),
             tree,
             batch: 1,
-            mode: AcceptMode::Greedy,
             seed: 42,
         },
     )?;
 
-    // 3. Admit a request and decode.
-    engine.admit(vec![Request {
-        id: 0,
-        prompt_ids: tok.encode(&format_prompt(&prompt)),
+    // 3. Admit a request and decode. Generation knobs (acceptance mode,
+    //    budget, stop marker) ride on the request's SamplingParams.
+    let params = SamplingParams {
         max_new,
         stop_ids: tok.encode(STOP_TEXT),
-    }])?;
+        ..SamplingParams::default()
+    };
+    engine.admit(vec![Request::new(0, tok.encode(&format_prompt(&prompt)), params)])?;
     let t0 = std::time::Instant::now();
     engine.run_to_completion()?;
     let dt = t0.elapsed().as_secs_f64();

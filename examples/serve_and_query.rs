@@ -1,6 +1,15 @@
-//! Serving front-end demo: spawn the TCP JSON-lines server in-process,
-//! connect several clients concurrently, and print the exchanges — the
-//! request path is pure Rust + PJRT (Python was only used at build time).
+//! Serving front-end demo: spawn the TCP JSON-lines server in-process and
+//! exercise the per-request generation API — concurrent clients with
+//! different acceptance modes batched into one engine, plus a streaming
+//! session that prints delta frames as tokens commit. The request path is
+//! pure Rust + PJRT (Python was only used at build time).
+//!
+//! Wire schema (one JSON object per line; see `src/server/mod.rs`):
+//!   request:  {"id":1, "prompt":"...", "max_new":48,
+//!              "mode":"greedy"|"typical", "eps":0.15, "temp":0.7,
+//!              "top_k":0, "seed":7, "stop":"<end>", "stream":false}
+//!   frames:   {"event":"delta","text":...} ... {"event":"done", ...}
+//!   errors:   {"event":"error","error":"..."}
 //!
 //!     cargo run --release --example serve_and_query
 
@@ -8,6 +17,7 @@ use std::sync::atomic::Ordering;
 
 use hydra_serve::server::{spawn_local, Client};
 use hydra_serve::util::cli::Args;
+use hydra_serve::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
@@ -18,31 +28,63 @@ fn main() -> anyhow::Result<()> {
     let (port, shutdown, handle) =
         spawn_local(hydra_serve::artifacts_dir(), size, variant, batch)?;
     println!("server starting on 127.0.0.1:{port} (compiling executables)…");
-
-    let prompts = [
-        "tell me about alice.",
-        "compute 17 + 25.",
-        "who is frank?",
-        "describe a day for judy in tokyo.",
-    ];
     let addr = format!("127.0.0.1:{port}");
 
-    // Query concurrently from separate client threads; the server batches
-    // them into one engine (continuous batching).
+    // Mixed per-request modes, queried concurrently: the server batches
+    // them into one engine, applying each sequence's own criterion.
+    let requests = [
+        ("greedy", Json::obj(vec![
+            ("id", Json::num(0.0)),
+            ("prompt", Json::str("tell me about alice.")),
+            ("max_new", Json::num(48.0)),
+        ])),
+        ("greedy", Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("prompt", Json::str("compute 17 + 25.")),
+            ("max_new", Json::num(48.0)),
+        ])),
+        ("typical", Json::obj(vec![
+            ("id", Json::num(2.0)),
+            ("prompt", Json::str("who is frank?")),
+            ("max_new", Json::num(48.0)),
+            ("mode", Json::str("typical")),
+            ("eps", Json::num(0.15)),
+            ("temp", Json::num(0.7)),
+            ("seed", Json::num(7.0)),
+        ])),
+        ("typical", Json::obj(vec![
+            ("id", Json::num(3.0)),
+            ("prompt", Json::str("describe a day for judy in tokyo.")),
+            ("max_new", Json::num(48.0)),
+            ("mode", Json::str("typical")),
+            ("eps", Json::num(0.25)),
+            ("temp", Json::num(0.7)),
+            ("seed", Json::num(8.0)),
+        ])),
+    ];
     let mut joins = Vec::new();
-    for (i, p) in prompts.iter().enumerate() {
+    for (label, body) in requests {
         let addr = addr.clone();
-        let p = p.to_string();
-        joins.push(std::thread::spawn(move || -> anyhow::Result<(usize, String)> {
+        joins.push(std::thread::spawn(move || -> anyhow::Result<(String, String)> {
             let mut c = Client::connect(&addr)?;
-            let resp = c.generate(&p, 48)?;
-            Ok((i, resp.to_string()))
+            let resp = c.request(&body)?;
+            Ok((label.to_string(), resp.to_string()))
         }));
     }
     for j in joins {
-        let (i, resp) = j.join().expect("client thread")?;
-        println!("\nclient {i} <- {resp}");
+        let (label, resp) = j.join().expect("client thread")?;
+        println!("\n[{label}] <- {resp}");
     }
+
+    // Streaming session: deltas arrive as the engine commits tokens.
+    println!("\nstreaming \"tell me about alice.\" …");
+    let mut c = Client::connect(&addr)?;
+    let fin = c.generate_stream("tell me about alice.", 48, |delta| {
+        print!("{delta}");
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+    })?;
+    println!("\nfinal frame: {fin}");
 
     shutdown.store(true, Ordering::Relaxed);
     let _ = handle.join();

@@ -3,11 +3,16 @@
 //! thresholds ε, and show that Hydra++ keeps long acceptances while the
 //! output remains base-typical (quality proxy: mean log p_base).
 //!
+//! Since the acceptance criterion is a per-request `SamplingParams`, ONE
+//! engine serves all four configurations — the requests simply carry
+//! different modes (and per-request seeds) through the scheduler.
+//!
 //!     cargo run --release --example typical_sampling [-- --eps 0.15]
 
 use hydra_serve::draft;
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request};
+use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request, SamplingParams};
 use hydra_serve::runtime::Runtime;
+use hydra_serve::scheduler::Scheduler;
 use hydra_serve::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
 use hydra_serve::util::cli::Args;
 
@@ -23,38 +28,47 @@ fn main() -> anyhow::Result<()> {
     let tree = draft::tuned_tree(&rt.manifest, &size, &variant, 1)?;
 
     println!("prompt: {prompt}\n");
-    for (label, mode) in [
+    let eps_flag = args.f64_or("eps", 0.15) as f32;
+    let configs: Vec<(String, AcceptMode)> = vec![
         ("greedy".to_string(), AcceptMode::Greedy),
         ("typical ε=0.05".to_string(),
          AcceptMode::Typical { eps: 0.05, alpha: 0.05f32.sqrt(), temp: 0.7 }),
-        (format!("typical ε={}", args.f64_or("eps", 0.15)),
-         AcceptMode::Typical {
-             eps: args.f64_or("eps", 0.15) as f32,
-             alpha: (args.f64_or("eps", 0.15) as f32).sqrt(),
-             temp: 0.7,
-         }),
+        (format!("typical ε={eps_flag}"),
+         AcceptMode::Typical { eps: eps_flag, alpha: eps_flag.sqrt(), temp: 0.7 }),
         ("typical ε=0.25".to_string(),
          AcceptMode::Typical { eps: 0.25, alpha: 0.25f32.sqrt(), temp: 0.7 }),
-    ] {
-        let mut engine = Engine::new(
-            &rt,
-            EngineConfig {
-                size: size.clone(),
-                variant: variant.clone(),
-                tree: tree.clone(),
-                batch: 1,
-                mode,
-                seed: 2024,
+    ];
+
+    // One engine, one scheduler — each request carries its own criterion.
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: variant.clone(),
+            tree,
+            batch: 1,
+            seed: 2024,
+        },
+    )?;
+    let mut sched = Scheduler::default();
+    for (i, (_, mode)) in configs.iter().enumerate() {
+        sched.submit(Request::new(
+            i as u64,
+            tok.encode(&format_prompt(&prompt)),
+            SamplingParams {
+                mode: *mode,
+                max_new,
+                stop_ids: tok.encode(STOP_TEXT),
+                top_k: args.usize_or("top-k", 0),
+                seed: Some(2024 + i as u64),
+                stream: false,
             },
-        )?;
-        engine.admit(vec![Request {
-            id: 0,
-            prompt_ids: tok.encode(&format_prompt(&prompt)),
-            max_new,
-            stop_ids: tok.encode(STOP_TEXT),
-        }])?;
-        engine.run_to_completion()?;
-        let out = engine.take_outputs().pop().unwrap();
+        ));
+    }
+    let outputs = sched.run_all(&mut engine)?;
+
+    for (i, (label, _)) in configs.iter().enumerate() {
+        let out = outputs.iter().find(|o| o.req_id == i as u64).expect("output");
         let mut text = tok.decode(&out.generated);
         if let Some(p) = text.find(STOP_TEXT) {
             text.truncate(p);

@@ -5,7 +5,7 @@
 //! decoder layer) but wins end-to-end on acceptance length.
 
 use hydra_serve::bench::{fmt2, save_result, BenchCtx, Table};
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig};
+use hydra_serve::engine::{Engine, EngineConfig};
 use hydra_serve::util::json::Json;
 use hydra_serve::workload;
 
@@ -33,16 +33,22 @@ fn main() -> anyhow::Result<()> {
                 variant: variant.to_string(),
                 tree,
                 batch: 1,
-                mode: AcceptMode::Greedy,
                 seed: 5,
             },
         )?;
-        // Warmup (compile), then measure.
-        let reqs = workload::to_requests(&prompts[..1], &ctx.tok, 8, 0);
+        // Warmup (compile), then measure. Requests default to greedy
+        // acceptance via their per-request SamplingParams.
+        let reqs =
+            workload::to_requests(&prompts[..1], &ctx.tok, &workload::default_params(&ctx.tok, 8), 0);
         engine.admit(reqs)?;
         engine.run_to_completion()?;
         engine.phase = Default::default();
-        let reqs = workload::to_requests(&prompts[1..4], &ctx.tok, gen_tokens, 10);
+        let reqs = workload::to_requests(
+            &prompts[1..4],
+            &ctx.tok,
+            &workload::default_params(&ctx.tok, gen_tokens),
+            10,
+        );
         for r in reqs {
             engine.admit(vec![r])?;
             engine.run_to_completion()?;

@@ -98,26 +98,32 @@ pub fn run_decode_bench_full(
                 variant: cfg.variant.clone(),
                 tree: tree.clone(),
                 batch: cfg.batch,
-                mode: cfg.mode,
                 seed,
             },
         )
+    };
+    // The bench's acceptance mode rides on every request's SamplingParams.
+    let mk_params = |max_new: usize| {
+        let mut p = workload::default_params(&ctx.tok, max_new);
+        p.mode = cfg.mode;
+        p
     };
 
     // Warmup: compiles all lazy executables for this config.
     {
         let mut eng = mk_engine(1)?;
-        let reqs = workload::to_requests(&prompts[..1.min(prompts.len())], &ctx.tok, 8, 0);
+        let reqs =
+            workload::to_requests(&prompts[..1.min(prompts.len())], &ctx.tok, &mk_params(8), 0);
         eng.admit(reqs)?;
         eng.run_to_completion()?;
     }
 
     let mut engine = mk_engine(1234)?;
-    let mut sched = Scheduler::new();
+    let mut sched = Scheduler::default();
     let reqs = workload::to_requests(
         &prompts[..cfg.n_prompts.min(prompts.len())],
         &ctx.tok,
-        cfg.gen_tokens,
+        &mk_params(cfg.gen_tokens),
         0,
     );
     let total_reqs = reqs.len();

@@ -35,7 +35,10 @@ pub struct StepDecision {
 
 /// `node_tokens[i]` — candidate token at tree node i;
 /// `logits` — row-major [T >= tree.len(), V] base logits per node;
-/// `root_logits` — base logits the root was sampled from (previous step).
+/// `root_logits` — base logits the root was sampled from (previous step);
+/// `top_k` — root-sampling restriction (0 = unrestricted; typical mode
+/// only). Called once per slot with that slot's own mode and RNG — the
+/// acceptance criterion is a per-sequence property, not a batch one.
 pub fn decide(
     tree: &TreeTopology,
     node_tokens: &[u32],
@@ -43,6 +46,7 @@ pub fn decide(
     vocab: usize,
     root_logits: &[f32],
     mode: AcceptMode,
+    top_k: usize,
     rng: &mut Pcg32,
 ) -> StepDecision {
     debug_assert!(node_tokens.len() >= tree.len());
@@ -86,7 +90,7 @@ pub fn decide(
     }
 
     let last = *accepted.last().unwrap();
-    let next_root = sample_next(row(last), mode, rng);
+    let next_root = sample_root(row(last), mode, top_k, rng);
     StepDecision { accepted, next_root, logprobs }
 }
 
@@ -104,30 +108,52 @@ fn log_prob_of(logits: &[f32], idx: usize, mode: AcceptMode) -> f32 {
 /// Greedy mode: argmax (keeps output == base greedy decoding). Typical
 /// mode: temperature sample truncated to tokens passing the criterion —
 /// the same "typicality" filter applied to speculated tokens, so the
-/// sampled stream has the same acceptability properties.
-pub fn sample_next(logits: &[f32], mode: AcceptMode, rng: &mut Pcg32) -> u32 {
+/// sampled stream has the same acceptability properties — optionally
+/// restricted to the `top_k` most probable tokens (0 = unrestricted).
+pub fn sample_root(logits: &[f32], mode: AcceptMode, top_k: usize, rng: &mut Pcg32) -> u32 {
     match mode {
         AcceptMode::Greedy => argmax(logits) as u32,
         AcceptMode::Typical { eps, alpha, temp } => {
             let probs = softmax(logits, temp);
             let h = entropy(&probs);
             let threshold = eps.min(alpha * (-h).exp());
-            let total: f32 = probs.iter().filter(|&&p| p > threshold).sum();
-            if total <= 0.0 {
-                return argmax(logits) as u32;
-            }
-            let mut x = rng.f32() * total;
-            for (i, &p) in probs.iter().enumerate() {
-                if p > threshold {
-                    x -= p;
-                    if x <= 0.0 {
-                        return i as u32;
-                    }
-                }
-            }
-            argmax(logits) as u32
+            let drawn = if top_k > 0 && top_k < probs.len() {
+                let candidates = crate::util::stats::top_k_indices(&probs, top_k);
+                draw_typical(&probs, candidates.into_iter(), threshold, rng)
+            } else {
+                // Hot path (top_k = 0): iterate indices directly, no
+                // candidate-list allocation.
+                draw_typical(&probs, 0..probs.len(), threshold, rng)
+            };
+            drawn.unwrap_or(argmax(logits) as u32)
         }
     }
+}
+
+/// Weighted draw over `candidates` restricted to probabilities above the
+/// typicality threshold; `None` when no candidate passes (caller falls
+/// back to argmax). Consumes one RNG sample iff the total mass is positive.
+fn draw_typical(
+    probs: &[f32],
+    candidates: impl Iterator<Item = usize> + Clone,
+    threshold: f32,
+    rng: &mut Pcg32,
+) -> Option<u32> {
+    let total: f32 = candidates.clone().map(|i| probs[i]).filter(|&p| p > threshold).sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let mut x = rng.f32() * total;
+    for i in candidates {
+        let p = probs[i];
+        if p > threshold {
+            x -= p;
+            if x <= 0.0 {
+                return Some(i as u32);
+            }
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -161,7 +187,7 @@ mod tests {
         set_peak(&mut logits, v, 3, 9, 5.0);
         let tokens = vec![2u32, 3, 4, 7];
         let mut rng = Pcg32::new(0);
-        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], AcceptMode::Greedy, &mut rng);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], AcceptMode::Greedy, 0, &mut rng);
         assert_eq!(d.accepted, vec![0, 1, 3]);
         assert_eq!(d.next_root, 9);
         assert_eq!(d.logprobs.len(), 3);
@@ -175,7 +201,7 @@ mod tests {
         set_peak(&mut logits, v, 0, 5, 4.0); // wants 5, children have 3 and 4
         let tokens = vec![2u32, 3, 4, 7];
         let mut rng = Pcg32::new(0);
-        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], AcceptMode::Greedy, &mut rng);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], AcceptMode::Greedy, 0, &mut rng);
         assert_eq!(d.accepted, vec![0]);
         assert_eq!(d.next_root, 5);
     }
@@ -187,7 +213,7 @@ mod tests {
         let mut logits = uniform_logits(1, v);
         set_peak(&mut logits, v, 0, 2, 3.0);
         let mut rng = Pcg32::new(1);
-        let d = decide(&tree, &[6], &logits, v, &vec![0.0; v], AcceptMode::Greedy, &mut rng);
+        let d = decide(&tree, &[6], &logits, v, &vec![0.0; v], AcceptMode::Greedy, 0, &mut rng);
         assert_eq!(d.accepted, vec![0]);
         assert_eq!(d.next_root, 2);
     }
@@ -201,7 +227,7 @@ mod tests {
         let tokens = vec![2u32, 3, 4, 7];
         let mode = AcceptMode::Typical { eps: 0.2, alpha: 0.447, temp: 0.7 };
         let mut rng = Pcg32::new(2);
-        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], mode, &mut rng);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], mode, 0, &mut rng);
         assert!(d.accepted.contains(&1));
     }
 
@@ -218,9 +244,34 @@ mod tests {
         let tokens = vec![2u32, 3, 4, 7];
         let mode = AcceptMode::Typical { eps: 0.1, alpha: 0.316, temp: 0.7 };
         let mut rng = Pcg32::new(3);
-        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], mode, &mut rng);
+        let d = decide(&tree, &tokens, &logits, v, &vec![0.0; v], mode, 0, &mut rng);
         assert_eq!(d.accepted, vec![0]);
         assert_eq!(d.next_root, 9); // only 9 passes the filter
+    }
+
+    #[test]
+    fn top_k_restricts_root_sampling() {
+        // Flat-ish distribution where many tokens pass the typicality
+        // threshold: with top_k = 2 only the two most probable tokens may
+        // ever be drawn.
+        let v = 16;
+        let mut logits = vec![0.0f32; v];
+        logits[3] = 1.0;
+        logits[9] = 0.9;
+        let mode = AcceptMode::Typical { eps: 0.9, alpha: 0.001, temp: 1.0 };
+        let mut rng = Pcg32::new(11);
+        for _ in 0..64 {
+            let tok = sample_root(&logits, mode, 2, &mut rng);
+            assert!(tok == 3 || tok == 9, "top_k=2 drew token {tok}");
+        }
+        // Unrestricted sampling from the same distribution reaches other
+        // tokens (threshold α·e^{-H} is tiny, ε=0.9 never binds first).
+        let mut seen_other = false;
+        for _ in 0..256 {
+            let tok = sample_root(&logits, mode, 0, &mut rng);
+            seen_other |= tok != 3 && tok != 9;
+        }
+        assert!(seen_other, "unrestricted sampling never left the top 2");
     }
 
     #[test]
@@ -258,7 +309,7 @@ mod tests {
                 AcceptMode::Greedy,
                 AcceptMode::Typical { eps: 0.15, alpha: 0.387, temp: 0.7 },
             ] {
-                let d = decide(&tree, &tokens, &logits, v, &root_logits, mode, rng);
+                let d = decide(&tree, &tokens, &logits, v, &root_logits, mode, 0, rng);
                 prop_assert_eq!(d.accepted[0], 0);
                 for w in d.accepted.windows(2) {
                     prop_assert_eq!(tree.parent[w[1]], w[0]);

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 pub use accept::{AcceptMode, StepDecision};
-pub use seq::{FinishReason, Request, SeqOutput, Slot};
+pub use seq::{FinishReason, Request, SamplingParams, SeqEvent, SeqOutput, Slot};
 
 use crate::model::{Manifest, ModelDims};
 use crate::runtime::{HostTensor, Runtime, WeightSet};
@@ -32,6 +32,10 @@ use crate::tree::TreeTopology;
 use crate::util::rng::Pcg32;
 use crate::util::stats::top_k_indices;
 
+/// Process-level engine configuration. Note what is NOT here: the
+/// acceptance mode, sampling temperature, and generation budget are
+/// per-request `SamplingParams` carried on each `Request` and applied
+/// per slot — one batch can mix greedy and typical sequences.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub size: String,
@@ -40,7 +44,8 @@ pub struct EngineConfig {
     pub variant: String,
     pub tree: TreeTopology,
     pub batch: usize,
-    pub mode: AcceptMode,
+    /// Base seed; requests without an explicit `SamplingParams::seed` get a
+    /// deterministic per-request RNG stream derived from this and their id.
     pub seed: u64,
 }
 
@@ -65,7 +70,7 @@ pub struct PhaseTimes {
     pub steps: u64,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StepStats {
     pub tokens_committed: usize,
     pub active_slots: usize,
@@ -85,12 +90,17 @@ pub struct Engine<'rt> {
     pkv: Option<HostTensor>,
     /// EAGLE draft-layer cache [B, 2, S, KVD].
     ekv: Option<HostTensor>,
-    rng: Pcg32,
     pub phase: PhaseTimes,
     // Precomputed per-tree constants.
     t_bucket: usize,
     anc_mask: Vec<i32>,
     pub outputs: Vec<SeqOutput>,
+    /// Incremental per-sequence events (`enable_events`): token deltas per
+    /// step plus a terminal `Finished`. When enabled, finished sequences go
+    /// to `events` instead of `outputs` so a streaming consumer sees one
+    /// coherent, ordered stream per sequence.
+    events: Vec<SeqEvent>,
+    emit_events: bool,
     /// §Perf fused path: when the artifacts provide `verify_commit_*`
     /// executables, the previous step's KV commit is folded into the next
     /// verify call (one PJRT call + one KV round-trip per step instead of
@@ -194,11 +204,12 @@ impl<'rt> Engine<'rt> {
             kv,
             pkv,
             ekv,
-            rng: Pcg32::new(cfg.seed),
             phase: PhaseTimes::default(),
             t_bucket,
             anc_mask,
             outputs: Vec::new(),
+            events: Vec::new(),
+            emit_events: false,
             probe: None,
             use_fused,
             pending: None,
@@ -213,6 +224,18 @@ impl<'rt> Engine<'rt> {
     /// Enable §4 tree-search probing (see `ProbeState`).
     pub fn enable_probe(&mut self) {
         self.probe = Some(ProbeState::new(self.cfg.batch, self.cfg.tree.len()));
+    }
+
+    /// Enable incremental event emission (streaming sessions): every step
+    /// pushes a `SeqEvent::Delta` per slot that committed tokens, and
+    /// finished sequences are retired as `SeqEvent::Finished` instead of
+    /// into `outputs`. The consumer must drain `take_events` regularly.
+    pub fn enable_events(&mut self) {
+        self.emit_events = true;
+    }
+
+    pub fn take_events(&mut self) -> Vec<SeqEvent> {
+        std::mem::take(&mut self.events)
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -287,6 +310,15 @@ impl<'rt> Engine<'rt> {
         for (&i, req) in vacant.iter().zip(&reqs) {
             let logits = &last_logits.f32s()[i * v..(i + 1) * v];
             let h = last_h.f32s()[i * d..(i + 1) * d].to_vec();
+            let mut params = req.params.clone();
+            params.max_new = params.max_new.max(1);
+            // Per-slot RNG: an explicit seed reproduces the sequence exactly;
+            // otherwise derive a request-unique stream from the engine seed,
+            // so batch composition never perturbs a neighbour's sampling.
+            let rng = match params.seed {
+                Some(s) => Pcg32::new(s),
+                None => Pcg32::with_stream(self.cfg.seed, req.id),
+            };
             let slot = &mut self.slots[i];
             *slot = Slot::vacant();
             slot.active = true;
@@ -295,10 +327,11 @@ impl<'rt> Engine<'rt> {
             slot.tokens = req.prompt_ids.clone();
             slot.prompt_len = req.prompt_ids.len();
             slot.cur_len = req.prompt_ids.len();
-            slot.max_new = req.max_new.max(1);
-            slot.stop_ids = req.stop_ids.clone();
+            slot.params = params;
+            slot.rng = rng;
             slot.root_logits = logits.to_vec();
-            slot.root_token = accept::sample_next(logits, self.cfg.mode, &mut self.rng);
+            slot.root_token =
+                accept::sample_root(logits, slot.params.mode, slot.params.top_k, &mut slot.rng);
             slot.h_last = h.clone();
             slot.h_star = h;
             slot.enqueue_at = Some(Instant::now());
@@ -419,26 +452,32 @@ impl<'rt> Engine<'rt> {
                 continue;
             }
             let slot_logits = &logits.f32s()[i * tb * v..(i * tb + t) * v];
+            // The acceptance walk runs with THIS slot's criterion and RNG —
+            // per-request SamplingParams, not a batch-global mode.
+            let (mode, top_k) = (slot.params.mode, slot.params.top_k);
             let mut dec = accept::decide(
                 &self.cfg.tree,
                 &node_tokens[i],
                 slot_logits,
                 v,
                 &slot.root_logits,
-                self.cfg.mode,
-                &mut self.rng,
+                mode,
+                top_k,
+                &mut slot.rng,
             );
             // Truncate to the generation budget and the cache capacity.
-            let budget =
-                (slot.max_new - slot.generated).min(s.saturating_sub(slot.cur_len + 1)).max(1);
+            let budget = (slot.params.max_new - slot.generated)
+                .min(s.saturating_sub(slot.cur_len + 1))
+                .max(1);
             if dec.accepted.len() > budget {
                 dec.accepted.truncate(budget);
                 dec.logprobs.truncate(dec.accepted.len());
                 let last = *dec.accepted.last().unwrap();
-                dec.next_root = accept::sample_next(
+                dec.next_root = accept::sample_root(
                     &slot_logits[last * v..(last + 1) * v],
-                    self.cfg.mode,
-                    &mut self.rng,
+                    mode,
+                    top_k,
+                    &mut slot.rng,
                 );
             }
             accept_len.i32s_mut()[i] = dec.accepted.len() as i32;
@@ -520,6 +559,13 @@ impl<'rt> Engine<'rt> {
             if slot.first_token_at.is_none() {
                 slot.first_token_at = Some(Instant::now());
             }
+            // Streaming sessions: surface this step's newly committed ids
+            // (only for sequences that asked to stream — no delta
+            // materialization cost for the non-streaming majority).
+            if self.emit_events && slot.params.stream && n_acc > 0 {
+                let tokens: Vec<u32> = dec.accepted.iter().map(|&n| node_tokens[i][n]).collect();
+                self.events.push(SeqEvent::Delta { req_id: slot.req_id, tokens });
+            }
             // Base hidden / logits at the deepest accepted node become the
             // next step's draft inputs and root distribution.
             let last_node = *dec.accepted.last().unwrap();
@@ -534,7 +580,7 @@ impl<'rt> Engine<'rt> {
                 slot.h_star = slot.h_last.clone();
             }
             // Termination checks.
-            if slot.generated >= slot.max_new {
+            if slot.generated >= slot.params.max_new {
                 slot.done = true;
                 slot.finish = FinishReason::MaxTokens;
             } else if slot.hit_stop() {
@@ -604,12 +650,13 @@ impl<'rt> Engine<'rt> {
             _ => {}
         }
 
-        // Retire finished slots into outputs.
+        // Retire finished slots: into the event stream when streaming is
+        // enabled (terminal `Finished` frame), else into `outputs`.
         for i in 0..b {
             if self.slots[i].active && self.slots[i].done {
                 let slot = &mut self.slots[i];
                 let now = Instant::now();
-                self.outputs.push(SeqOutput {
+                let out = SeqOutput {
                     req_id: slot.req_id,
                     generated: slot.generated_ids().to_vec(),
                     finish: slot.finish,
@@ -626,8 +673,13 @@ impl<'rt> Engine<'rt> {
                         .zip(slot.first_token_at)
                         .map(|(e, f)| f.duration_since(e).as_secs_f64() * 1e3),
                     total_ms: slot.enqueue_at.map(|e| now.duration_since(e).as_secs_f64() * 1e3),
-                });
+                };
                 slot.active = false;
+                if self.emit_events {
+                    self.events.push(SeqEvent::Finished(out));
+                } else {
+                    self.outputs.push(out);
+                }
             }
         }
 

@@ -1,12 +1,75 @@
-//! Per-sequence serving state (one slot of the batched engine).
+//! Per-sequence serving state (one slot of the batched engine) and the
+//! per-request generation parameters that travel with it.
+
+use crate::util::rng::Pcg32;
+
+use super::accept::AcceptMode;
+
+/// Per-request generation parameters (Medusa/Hydra define the acceptance
+/// criterion *per sequence*, not per process — §2, §6.3). Every request
+/// carries its own copy; the engine applies it slot-locally, so one batch
+/// can mix greedy and typical-acceptance sequences.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Verification criterion for speculated tokens and root sampling.
+    pub mode: AcceptMode,
+    /// Generation budget (committed tokens after the prompt).
+    pub max_new: usize,
+    /// Optional stop marker (token-id subsequence, e.g. encode("<end>")).
+    /// Empty means "no stop marker".
+    pub stop_ids: Vec<u32>,
+    /// Restrict typical-mode root sampling to the top-k tokens by
+    /// probability (0 = no restriction). Ignored under greedy acceptance.
+    pub top_k: usize,
+    /// Per-request RNG seed. `None` derives a deterministic per-request
+    /// stream from the engine seed and the request id.
+    pub seed: Option<u64>,
+    /// Emit incremental per-step token deltas (`SeqEvent::Delta`) for this
+    /// sequence. Only observable when the engine has `enable_events` on;
+    /// non-streaming sequences then still finish via `SeqEvent::Finished`.
+    pub stream: bool,
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams {
+            mode: AcceptMode::Greedy,
+            max_new: 64,
+            stop_ids: Vec::new(),
+            top_k: 0,
+            seed: None,
+            stream: false,
+        }
+    }
+}
+
+impl SamplingParams {
+    /// Greedy acceptance with a generation budget — the common case.
+    pub fn greedy(max_new: usize) -> SamplingParams {
+        SamplingParams { max_new, ..SamplingParams::default() }
+    }
+
+    /// Typical acceptance (Cai et al. 2024) with α = √ε.
+    pub fn typical(eps: f32, temp: f32, max_new: usize) -> SamplingParams {
+        SamplingParams {
+            mode: AcceptMode::Typical { eps, alpha: eps.sqrt(), temp },
+            max_new,
+            ..SamplingParams::default()
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt_ids: Vec<u32>,
-    pub max_new: usize,
-    /// Optional stop marker (token-id subsequence, e.g. encode("<end>")).
-    pub stop_ids: Vec<u32>,
+    pub params: SamplingParams,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt_ids: Vec<u32>, params: SamplingParams) -> Request {
+        Request { id, prompt_ids, params }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,8 +97,11 @@ pub struct Slot {
     /// Draft-model input state [D]: == h_last for Medusa/Hydra, the
     /// prefix-attention output for Hydra++, f̂ for EAGLE.
     pub h_star: Vec<f32>,
-    pub max_new: usize,
-    pub stop_ids: Vec<u32>,
+    /// Generation parameters carried by the admitted request.
+    pub params: SamplingParams,
+    /// Slot-local RNG (seeded per request) — acceptance sampling of one
+    /// sequence never perturbs its batch neighbours.
+    pub rng: Pcg32,
     pub generated: usize,
     pub done: bool,
     pub finish: FinishReason,
@@ -60,8 +126,8 @@ impl Slot {
             root_logits: Vec::new(),
             h_last: Vec::new(),
             h_star: Vec::new(),
-            max_new: 0,
-            stop_ids: Vec::new(),
+            params: SamplingParams { max_new: 0, ..SamplingParams::default() },
+            rng: Pcg32::new(0),
             generated: 0,
             done: true,
             finish: FinishReason::Running,
@@ -79,9 +145,8 @@ impl Slot {
     /// Check whether the generated suffix ends with the stop marker.
     pub fn hit_stop(&self) -> bool {
         let g = self.generated_ids();
-        !self.stop_ids.is_empty()
-            && g.len() >= self.stop_ids.len()
-            && g[g.len() - self.stop_ids.len()..] == self.stop_ids[..]
+        let stop = &self.params.stop_ids;
+        !stop.is_empty() && g.len() >= stop.len() && g[g.len() - stop.len()..] == stop[..]
     }
 
     pub fn mean_accept_len(&self) -> f64 {
@@ -106,6 +171,27 @@ pub struct SeqOutput {
     pub total_ms: Option<f64>,
 }
 
+/// Incremental per-sequence event, emitted by the engine when event
+/// streaming is enabled (`Engine::enable_events`). A sequence produces
+/// zero or more `Delta`s (one per decode step that committed tokens for
+/// it) terminated by exactly one `Finished` carrying the final summary.
+#[derive(Debug, Clone)]
+pub enum SeqEvent {
+    /// Token ids newly committed for a sequence at one decode step.
+    Delta { req_id: u64, tokens: Vec<u32> },
+    /// Sequence retired from its slot; carries the final summary.
+    Finished(SeqOutput),
+}
+
+impl SeqEvent {
+    pub fn req_id(&self) -> u64 {
+        match self {
+            SeqEvent::Delta { req_id, .. } => *req_id,
+            SeqEvent::Finished(out) => out.req_id,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,11 +201,11 @@ mod tests {
         let mut s = Slot::vacant();
         s.prompt_len = 2;
         s.tokens = vec![1, 2, 9, 8, 7];
-        s.stop_ids = vec![8, 7];
+        s.params.stop_ids = vec![8, 7];
         assert!(s.hit_stop());
-        s.stop_ids = vec![9, 9];
+        s.params.stop_ids = vec![9, 9];
         assert!(!s.hit_stop());
-        s.stop_ids = vec![];
+        s.params.stop_ids = vec![];
         assert!(!s.hit_stop());
     }
 
@@ -128,5 +214,27 @@ mod tests {
         let mut s = Slot::vacant();
         s.accept_hist = vec![1, 2, 3];
         assert!((s.mean_accept_len() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn params_builders() {
+        let g = SamplingParams::greedy(32);
+        assert_eq!(g.mode, AcceptMode::Greedy);
+        assert_eq!(g.max_new, 32);
+        let t = SamplingParams::typical(0.16, 0.7, 8);
+        match t.mode {
+            AcceptMode::Typical { eps, alpha, temp } => {
+                assert!((eps - 0.16).abs() < 1e-6);
+                assert!((alpha - 0.4).abs() < 1e-6);
+                assert!((temp - 0.7).abs() < 1e-6);
+            }
+            _ => panic!("expected typical"),
+        }
+    }
+
+    #[test]
+    fn event_req_id() {
+        let d = SeqEvent::Delta { req_id: 7, tokens: vec![1] };
+        assert_eq!(d.req_id(), 7);
     }
 }

@@ -8,6 +8,18 @@
 //!   continuous batcher, KV-cache manager, speculative decoding engine
 //!   (tree draft → packed verification → acceptance → commit), the paper's
 //!   §4 decoding-tree search, workload generators and the bench harness.
+//!
+//! ## Request API
+//!
+//! Generation is configured **per request**, not per process: every
+//! [`engine::Request`] carries [`engine::SamplingParams`] (acceptance
+//! mode — greedy or typical with ε/α/temperature —, top-k root sampling,
+//! per-request seed, generation budget, stop marker), and the engine
+//! applies each sequence's criterion slot-locally, so one batch mixes
+//! greedy and typical requests. The TCP front-end ([`server`]) exposes
+//! the same surface as JSON-lines fields plus `"stream": true` sessions
+//! that emit incremental `{"event":"delta"}` frames ahead of the final
+//! summary frame ([`engine::SeqEvent`] / `Scheduler::tick_events`).
 //! * **Layer 2 (python/compile)** — the base transformer + draft heads in
 //!   JAX, AOT-lowered to HLO text once at build time (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels)** — the Pallas tree-attention

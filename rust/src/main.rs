@@ -8,13 +8,17 @@
 //!
 //! Common flags: --size {s,m,l} --variant {ar,medusa,hydra,hydra_pp,eagle}
 //!               --batch N --mode {greedy,typical} --eps 0.15 --temp 0.7
+//!               --top-k K --seed N
+//!
+//! `generate` flags map onto the per-request `SamplingParams`; `serve`'s
+//! --mode only sets the default for requests that don't pick their own.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request};
+use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request, SamplingParams};
 use hydra_serve::runtime::Runtime;
 use hydra_serve::server::{serve, ServerConfig};
 use hydra_serve::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
@@ -73,7 +77,9 @@ fn print_help() {
          \n\
          generate  --prompt \"...\" [--size s] [--variant hydra_pp] [--max-new 64]\n\
                    [--mode greedy|typical --eps 0.15 --temp 0.7]\n\
+                   [--top-k K] [--seed N]\n\
          serve     [--addr 127.0.0.1:7070] [--size s] [--variant hydra_pp] [--batch 4]\n\
+                   [--mode greedy|typical] [--max-new-ceiling 256]\n\
          treesearch [--size s] [--variants medusa,hydra,hydra_pp] [--batches 1]\n\
                    [--max-nodes 48]\n"
     );
@@ -133,14 +139,23 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let tree = draft::tuned_tree(&rt.manifest, &size, &variant, 1)?;
     let mut engine = Engine::new(
         &rt,
-        EngineConfig { size, variant, tree, batch: 1, mode, seed: 42 },
+        EngineConfig { size, variant, tree, batch: 1, seed: 42 },
     )?;
-    engine.admit(vec![Request {
-        id: 0,
-        prompt_ids: tok.encode(&format_prompt(&prompt)),
+    let params = SamplingParams {
+        mode,
         max_new,
         stop_ids: tok.encode(STOP_TEXT),
-    }])?;
+        top_k: args.usize_or("top-k", 0),
+        seed: match args.get("seed") {
+            Some(s) => Some(
+                s.parse()
+                    .map_err(|_| anyhow::anyhow!("--seed expects an integer, got `{s}`"))?,
+            ),
+            None => None,
+        },
+        stream: false,
+    };
+    engine.admit(vec![Request::new(0, tok.encode(&format_prompt(&prompt)), params)])?;
     let t0 = std::time::Instant::now();
     engine.run_to_completion()?;
     let dt = t0.elapsed();
@@ -174,7 +189,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         size,
         variant,
         batch,
-        mode: parse_mode(args),
+        default_mode: parse_mode(args),
+        max_new_ceiling: args.usize_or("max-new-ceiling", 256),
         conn_threads: args.usize_or("conn-threads", 8),
     };
     serve(&rt, cfg, Arc::new(AtomicBool::new(false)))

@@ -47,6 +47,12 @@ pub struct RunMetrics {
     pub mean_logprob: f64,
 }
 
+impl Default for RunMetrics {
+    fn default() -> RunMetrics {
+        RunMetrics::new("")
+    }
+}
+
 impl RunMetrics {
     pub fn new(label: impl Into<String>) -> RunMetrics {
         RunMetrics {

@@ -2,12 +2,19 @@
 //! engine's B slots. Between decode steps, vacant slots are refilled from
 //! the queue (prefill joins the running batch — Orca-style iteration-level
 //! scheduling), so throughput does not stall on stragglers.
+//!
+//! Admission carries each request's `SamplingParams` into its slot, so one
+//! batch freely mixes acceptance criteria. Completion is surfaced two
+//! ways: `run_all`/`tick` retain finished `SeqOutput`s (batch consumers),
+//! while `tick_events` drains the engine's incremental `SeqEvent` stream
+//! (token deltas + terminal summaries) into a callback — the serving
+//! front-end's streaming-session hook.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::engine::{Engine, Request, SeqOutput, StepStats};
+use crate::engine::{Engine, Request, SeqEvent, SeqOutput, StepStats};
 
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerStats {
@@ -26,13 +33,19 @@ pub struct Scheduler {
     pub max_admit_per_step: usize,
 }
 
-impl Scheduler {
-    pub fn new() -> Scheduler {
+impl Default for Scheduler {
+    fn default() -> Scheduler {
         Scheduler {
             queue: VecDeque::new(),
             stats: SchedulerStats::default(),
             max_admit_per_step: usize::MAX,
         }
+    }
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler::default()
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -82,7 +95,27 @@ impl Scheduler {
         Ok(Some(stats))
     }
 
+    /// One scheduling iteration that routes the engine's incremental
+    /// sequence events (token deltas, terminal summaries) to `on_event`.
+    /// Requires `engine.enable_events()`; the serving front-end uses this
+    /// to drive streaming sessions.
+    pub fn tick_events(
+        &mut self,
+        engine: &mut Engine,
+        mut on_event: impl FnMut(SeqEvent),
+    ) -> Result<Option<StepStats>> {
+        let stats = self.tick(engine)?;
+        for ev in engine.take_events() {
+            if matches!(ev, SeqEvent::Finished(_)) {
+                self.stats.completed += 1;
+            }
+            on_event(ev);
+        }
+        Ok(stats)
+    }
+
     /// Drive everything in the queue to completion (bench entry point).
+    /// Uses the retained-output path; not for event-enabled engines.
     pub fn run_all(&mut self, engine: &mut Engine) -> Result<Vec<SeqOutput>> {
         let mut outputs = Vec::new();
         while self.has_work(engine) {
@@ -94,23 +127,18 @@ impl Scheduler {
     }
 }
 
-impl Default for Scheduler {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::SamplingParams;
     use crate::util::prop;
     use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn queue_fifo() {
-        let mut s = Scheduler::new();
+        let mut s = Scheduler::default();
         for i in 0..5 {
-            s.submit(Request { id: i, prompt_ids: vec![1], max_new: 1, stop_ids: vec![] });
+            s.submit(Request::new(i, vec![1], SamplingParams::greedy(1)));
         }
         assert_eq!(s.queue_depth(), 5);
         assert_eq!(s.stats.max_queue_depth, 5);
@@ -119,18 +147,22 @@ mod tests {
     }
 
     #[test]
+    fn admission_preserves_params() {
+        let mut s = Scheduler::default();
+        s.submit(Request::new(0, vec![1], SamplingParams::typical(0.2, 0.7, 9)));
+        let r = s.queue.pop_front().unwrap();
+        assert_eq!(r.params.max_new, 9);
+        assert_eq!(r.params, SamplingParams::typical(0.2, 0.7, 9));
+    }
+
+    #[test]
     fn prop_queue_depth_tracks_submissions() {
         prop::check("scheduler-queue", 100, |rng| {
-            let mut s = Scheduler::new();
+            let mut s = Scheduler::default();
             let mut expect = 0usize;
             for i in 0..rng.range(1, 40) {
                 if rng.f64() < 0.7 {
-                    s.submit(Request {
-                        id: i as u64,
-                        prompt_ids: vec![1],
-                        max_new: 4,
-                        stop_ids: vec![],
-                    });
+                    s.submit(Request::new(i as u64, vec![1], SamplingParams::greedy(4)));
                     expect += 1;
                 } else if expect > 0 {
                     let take = rng.range(1, expect + 1);

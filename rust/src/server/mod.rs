@@ -1,15 +1,47 @@
-//! TCP serving front-end (JSON-lines protocol).
+//! TCP serving front-end (JSON-lines protocol) with per-request
+//! generation parameters and optional streaming sessions.
 //!
-//! Request:  {"id": 1, "prompt": "tell me about alice.", "max_new": 64,
-//!            "mode": "greedy" | "typical", "eps": 0.15}\n
-//! Response: {"id": 1, "text": "...", "tokens": 42, "steps": 17,
-//!            "accept_len": 2.5, "ttft_ms": ..., "total_ms": ...}\n
+//! Request (one JSON object per line; only "prompt" is required):
+//!
+//!   {"id": 1, "prompt": "tell me about alice.", "max_new": 64,
+//!    "mode": "greedy" | "typical", "eps": 0.15, "temp": 0.7,
+//!    "alpha": 0.39, "top_k": 0, "seed": 7, "stop": "<end>",
+//!    "stream": false}\n
+//!
+//! Every field maps onto the request's own `SamplingParams`: the
+//! acceptance criterion, typical-acceptance knobs, top-k root sampling,
+//! RNG seed, budget and stop marker are all per sequence, so one engine
+//! batch freely mixes greedy and typical requests. `max_new` above the
+//! server's configured ceiling is clamped and reported via
+//! `"truncated_max_new": true` in the summary frame.
+//!
+//! Response, non-streaming (default) — a single summary frame:
+//!
+//!   {"id": 1, "event": "done", "text": "...", "tokens": 42, "steps": 17,
+//!    "accept_len": 2.5, "finish": "MaxTokens", "ttft_ms": ...,
+//!    "total_ms": ...}\n
+//!
+//! Response, `"stream": true` — one frame per decode step that committed
+//! tokens, then the same summary frame:
+//!
+//!   {"id": 1, "event": "delta", "text": "..."}\n      (zero or more)
+//!   {"id": 1, "event": "done", ...}\n
+//!
+//! Delta text is raw (stop-marker-gated, UTF-8 reassembled across
+//! chunks); the summary frame's "text" is the same content
+//! whitespace-trimmed, so clients reconciling the two should compare
+//! trimmed strings.
+//!
+//! Errors are structured frames, never dropped connections:
+//!
+//!   {"id": 1, "event": "error", "error": "bad request: ..."}\n
 //!
 //! Connection handlers run on a thread pool and forward requests over an
 //! mpsc channel to the single engine thread (the engine and PJRT client
 //! are deliberately single-threaded — one CPU core, DESIGN.md §8). The
 //! engine thread runs the continuous-batching scheduler loop and routes
-//! completions back to per-connection channels.
+//! per-sequence events (token deltas + terminal summaries) back to
+//! per-connection channels.
 
 pub mod proto;
 
@@ -22,8 +54,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{AcceptMode, Engine, EngineConfig, SeqOutput};
-use crate::engine::Request;
+use crate::engine::{AcceptMode, Engine, EngineConfig, Request, SeqEvent};
 use crate::runtime::Runtime;
 use crate::scheduler::Scheduler;
 use crate::tokenizer::Tokenizer;
@@ -36,13 +67,16 @@ pub struct ServerConfig {
     pub size: String,
     pub variant: String,
     pub batch: usize,
-    pub mode: AcceptMode,
+    /// Acceptance mode for requests that don't specify one.
+    pub default_mode: AcceptMode,
+    /// Ceiling applied to per-request `max_new` (reported when clamped).
+    pub max_new_ceiling: usize,
     pub conn_threads: usize,
 }
 
 struct Submission {
     req: Request,
-    reply: Sender<SeqOutput>,
+    reply: Sender<SeqEvent>,
 }
 
 /// Run the server until `shutdown` flips. Returns when the listener closes.
@@ -56,11 +90,18 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
             variant: cfg.variant.clone(),
             tree,
             batch: cfg.batch,
-            mode: cfg.mode,
             seed: 42,
         },
     )?;
-    let mut sched = Scheduler::new();
+    engine.enable_events();
+    let mut sched = Scheduler::default();
+    let pcfg = proto::ProtoConfig {
+        default_mode: cfg.default_mode,
+        max_new_ceiling: cfg.max_new_ceiling,
+        // Mirror Engine::admit's hard limit so an over-long prompt is a
+        // per-request error, not a serve-loop-fatal admit failure.
+        max_prompt_tokens: rt.manifest.seq_max / 2,
+    };
 
     let listener = TcpListener::bind(&cfg.addr).context("bind")?;
     listener.set_nonblocking(true)?;
@@ -73,7 +114,9 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
     let pool = ThreadPool::new(cfg.conn_threads);
     let next_id = Arc::new(AtomicU64::new(1));
 
-    let mut pending_replies: HashMap<u64, Sender<SeqOutput>> = HashMap::new();
+    // req_id -> reply channel. Deltas only arrive for sequences whose
+    // params requested streaming (the engine gates emission per slot).
+    let mut pending: HashMap<u64, Sender<SeqEvent>> = HashMap::new();
 
     // Engine loop with inline (non-blocking) accept.
     loop {
@@ -88,7 +131,7 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
                 let ids = Arc::clone(&next_id);
                 let sd = Arc::clone(&shutdown);
                 pool.execute(move || {
-                    if let Err(e) = handle_conn(stream, tx, tok, ids, sd) {
+                    if let Err(e) = handle_conn(stream, tx, tok, ids, sd, pcfg) {
                         log::warn!("connection error: {e}");
                     }
                 });
@@ -98,17 +141,25 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
         }
         // Drain submissions into the scheduler.
         while let Ok(sub) = rx.try_recv() {
-            pending_replies.insert(sub.req.id, sub.reply);
+            pending.insert(sub.req.id, sub.reply);
             sched.submit(sub.req);
         }
-        // One scheduling tick (refill + step) if there is work.
+        // One scheduling tick (refill + step) if there is work; route the
+        // resulting sequence events to their sessions.
         if sched.has_work(&engine) {
-            sched.tick(&mut engine)?;
-            for out in engine.take_outputs() {
-                if let Some(reply) = pending_replies.remove(&out.req_id) {
-                    let _ = reply.send(out);
+            sched.tick_events(&mut engine, |ev| {
+                let (req_id, is_final) = match &ev {
+                    SeqEvent::Delta { req_id, .. } => (*req_id, false),
+                    SeqEvent::Finished(out) => (out.req_id, true),
+                };
+                if is_final {
+                    if let Some(reply) = pending.remove(&req_id) {
+                        let _ = reply.send(ev);
+                    }
+                } else if let Some(reply) = pending.get(&req_id) {
+                    let _ = reply.send(ev);
                 }
-            }
+            })?;
         } else {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
@@ -121,6 +172,7 @@ fn handle_conn(
     tok: Arc<Tokenizer>,
     ids: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
+    pcfg: proto::ProtoConfig,
 ) -> Result<()> {
     let peer = stream.peer_addr()?;
     // Periodic read timeout so idle connections don't pin a pool worker
@@ -150,18 +202,64 @@ fn handle_conn(
             continue;
         }
         let line = line.trim().to_string();
-        let resp = match proto::parse_request(&line, &tok) {
-            Ok((mut req, client_id)) => {
+        let resp = match proto::parse_request(&line, &tok, &pcfg) {
+            Ok(parsed) => {
+                let mut req = parsed.req;
                 req.id = ids.fetch_add(1, Ordering::Relaxed);
                 let (rtx, rrx) = channel();
                 tx.send(Submission { req, reply: rtx })
                     .map_err(|_| anyhow::anyhow!("engine gone"))?;
-                match rrx.recv() {
-                    Ok(out) => proto::render_response(&out, client_id, &tok),
-                    Err(_) => proto::render_error(client_id, "engine shut down"),
+                // Session loop: zero or more deltas, then the summary.
+                // Token chunks are raw bytes: reassemble UTF-8 across
+                // chunk boundaries, then gate on the stop marker.
+                let mut utf8 = proto::Utf8Assembler::new();
+                let mut gate = proto::DeltaGate::new(&parsed.stop_text);
+                let mut write_delta = |writer: &mut TcpStream, chunk: &str| -> Result<()> {
+                    let frame = proto::render_delta(parsed.client_id, chunk);
+                    writer.write_all(frame.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                    Ok(())
+                };
+                loop {
+                    match rrx.recv() {
+                        Ok(SeqEvent::Delta { tokens, .. }) => {
+                            let text = utf8.push(&tok.decode_bytes(&tokens));
+                            if let Some(chunk) = gate.push(&text) {
+                                write_delta(&mut writer, &chunk)?;
+                            }
+                        }
+                        Ok(SeqEvent::Finished(out)) => {
+                            // Flush: any bytes held mid-character, then any
+                            // text the gate held back as a potential stop
+                            // prefix — the stream ended without the marker,
+                            // so both are real output.
+                            let mut tail = gate.push(&utf8.finish()).unwrap_or_default();
+                            tail.push_str(&gate.finish().unwrap_or_default());
+                            if !tail.is_empty() {
+                                write_delta(&mut writer, &tail)?;
+                            }
+                            break proto::render_response(
+                                &out,
+                                parsed.client_id,
+                                &tok,
+                                parsed.truncated_max_new,
+                                &parsed.stop_text,
+                            );
+                        }
+                        Err(_) => break proto::render_error(parsed.client_id, "engine shut down"),
+                    }
                 }
             }
-            Err(e) => proto::render_error(0, &format!("bad request: {e}")),
+            // Validation failed: still echo the client's id if the line was
+            // at least parseable JSON, so errors are correlatable.
+            Err(e) => {
+                let cid = Json::parse(&line)
+                    .ok()
+                    .and_then(|v| v.get("id").and_then(|x| x.as_i64()))
+                    .unwrap_or(0) as u64;
+                proto::render_error(cid, &format!("bad request: {e}"))
+            }
         };
         writer.write_all(resp.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -193,7 +291,8 @@ pub fn spawn_local(
             size,
             variant,
             batch,
-            mode: AcceptMode::Greedy,
+            default_mode: AcceptMode::Greedy,
+            max_new_ceiling: 256,
             conn_threads: 4,
         };
         if let Err(e) = serve(&rt, cfg, sd) {
@@ -224,37 +323,68 @@ impl Client {
         Err(anyhow::anyhow!("connect {addr}: {last:?}"))
     }
 
-    pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<Json> {
-        let req = Json::obj(vec![
-            ("id", Json::num(1.0)),
-            ("prompt", Json::str(prompt)),
-            ("max_new", Json::num(max_new as f64)),
-        ]);
-        self.stream.write_all(req.to_string().as_bytes())?;
+    fn send_line(&mut self, body: &Json) -> Result<()> {
+        self.stream.write_all(body.to_string().as_bytes())?;
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Send one request object and read one response frame.
+    pub fn request(&mut self, body: &Json) -> Result<Json> {
+        self.send_line(body)?;
         let mut reader = BufReader::new(self.stream.try_clone()?);
         let mut line = String::new();
         reader.read_line(&mut line)?;
         Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?)
     }
 
+    pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+        ]))
+    }
+
     /// Ask the generator for a typical-acceptance sample.
     pub fn generate_typical(&mut self, prompt: &str, max_new: usize, eps: f64) -> Result<Json> {
-        let req = Json::obj(vec![
+        self.request(&Json::obj(vec![
             ("id", Json::num(1.0)),
             ("prompt", Json::str(prompt)),
             ("max_new", Json::num(max_new as f64)),
             ("mode", Json::str("typical")),
             ("eps", Json::num(eps)),
-        ]);
-        self.stream.write_all(req.to_string().as_bytes())?;
-        self.stream.write_all(b"\n")?;
-        self.stream.flush()?;
+        ]))
+    }
+
+    /// Streaming session: send `"stream": true`, invoke `on_delta` for
+    /// every incremental text frame, and return the final summary frame.
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        mut on_delta: impl FnMut(&str),
+    ) -> Result<Json> {
+        self.send_line(&Json::obj(vec![
+            ("id", Json::num(1.0)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+            ("stream", Json::Bool(true)),
+        ]))?;
         let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?)
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed mid-stream");
+            }
+            let frame = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if frame.get("event").and_then(|e| e.as_str()) == Some("delta") {
+                on_delta(frame.get("text").and_then(|t| t.as_str()).unwrap_or(""));
+            } else {
+                return Ok(frame);
+            }
+        }
     }
 }
 

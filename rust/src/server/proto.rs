@@ -1,42 +1,152 @@
-//! Wire protocol: JSON-lines request/response rendering.
+//! Wire protocol: JSON-lines request parsing (per-request
+//! `SamplingParams` with validation), response/delta/error frame
+//! rendering, and the incremental stop-marker gate used by streaming
+//! sessions. See the module docs of [`crate::server`] for the schema.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::engine::{Request, SeqOutput};
+use crate::engine::{AcceptMode, Request, SamplingParams, SeqOutput};
 use crate::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
 use crate::util::json::Json;
 
-/// Parse a request line. Returns (engine request, client-chosen id echoed
-/// back in the response). Note: the engine's acceptance mode is a server
-/// startup setting; a per-request "mode" field is accepted but ignored
-/// (documented limitation — one verification criterion per batch).
-pub fn parse_request(line: &str, tok: &Tokenizer) -> Result<(Request, u64)> {
+/// Server-startup parsing policy: defaults and ceilings applied to every
+/// request. The per-request fields themselves live in `SamplingParams`.
+#[derive(Debug, Clone, Copy)]
+pub struct ProtoConfig {
+    /// Mode applied when a request carries no "mode" field.
+    pub default_mode: AcceptMode,
+    /// Upper bound on per-request `max_new`. Requests above it are clamped
+    /// and the response reports `"truncated_max_new": true`.
+    pub max_new_ceiling: usize,
+    /// Reject prompts encoding to more than this many tokens. The server
+    /// sets it from the model's context budget (`seq_max / 2` — the
+    /// engine's own admit limit); an over-long prompt must fail as a
+    /// request error, never reach `Engine::admit` (whose failure would
+    /// take down the whole serve loop).
+    pub max_prompt_tokens: usize,
+}
+
+impl Default for ProtoConfig {
+    fn default() -> ProtoConfig {
+        ProtoConfig {
+            default_mode: AcceptMode::Greedy,
+            max_new_ceiling: 256,
+            max_prompt_tokens: usize::MAX,
+        }
+    }
+}
+
+/// A validated request line plus its connection-level envelope.
+#[derive(Debug, Clone)]
+pub struct ParsedRequest {
+    pub req: Request,
+    /// Client-chosen id echoed back in every frame for this request.
+    pub client_id: u64,
+    /// The `max_new` ceiling was applied (reported in the summary frame).
+    pub truncated_max_new: bool,
+    /// Stop marker as text (drives streaming stop-gating); `stop_ids` on
+    /// the params is its encoding.
+    pub stop_text: String,
+}
+
+/// Parse and validate one request line against the server policy.
+pub fn parse_request(line: &str, tok: &Tokenizer, pc: &ProtoConfig) -> Result<ParsedRequest> {
     let v = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if v.as_obj().is_none() {
+        bail!("request must be a JSON object");
+    }
     let prompt = v
         .get("prompt")
         .and_then(|p| p.as_str())
         .context("prompt must be a string")?;
     if prompt.is_empty() {
-        anyhow::bail!("empty prompt");
+        bail!("empty prompt");
     }
     let client_id = v.get("id").and_then(|x| x.as_i64()).unwrap_or(0) as u64;
-    let max_new = v.get("max_new").and_then(|x| x.as_usize()).unwrap_or(64).clamp(1, 256);
-    let req = Request {
-        id: 0, // assigned by the server
-        prompt_ids: tok.encode(&format_prompt(prompt)),
-        max_new,
-        stop_ids: tok.encode(STOP_TEXT),
+
+    let requested_max = v.get("max_new").and_then(|x| x.as_usize()).unwrap_or(64).max(1);
+    let truncated_max_new = requested_max > pc.max_new_ceiling;
+    let max_new = requested_max.min(pc.max_new_ceiling);
+
+    let mode = match v.get("mode").and_then(|m| m.as_str()) {
+        None => pc.default_mode,
+        Some("greedy") => AcceptMode::Greedy,
+        Some("typical") => {
+            let eps = v.get("eps").and_then(|x| x.as_f64()).unwrap_or(0.15) as f32;
+            if !(eps > 0.0 && eps < 1.0) {
+                bail!("eps must be in (0, 1), got {eps}");
+            }
+            let temp = v.get("temp").and_then(|x| x.as_f64()).unwrap_or(0.7) as f32;
+            if !(temp > 0.0 && temp <= 4.0) {
+                bail!("temp must be in (0, 4], got {temp}");
+            }
+            let alpha =
+                v.get("alpha").and_then(|x| x.as_f64()).map(|a| a as f32).unwrap_or(eps.sqrt());
+            if !(alpha > 0.0 && alpha <= 1.0) {
+                bail!("alpha must be in (0, 1], got {alpha}");
+            }
+            AcceptMode::Typical { eps, alpha, temp }
+        }
+        Some(other) => bail!("unknown accept mode `{other}` (expected \"greedy\" or \"typical\")"),
     };
-    Ok((req, client_id))
+
+    let top_k = v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0);
+    let seed = v.get("seed").and_then(|x| x.as_i64()).map(|s| s as u64);
+    let stream = v.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+    let stop_text = v
+        .get("stop")
+        .and_then(|s| s.as_str())
+        .unwrap_or(STOP_TEXT)
+        .to_string();
+
+    let params = SamplingParams {
+        mode,
+        max_new,
+        stop_ids: tok.encode(&stop_text),
+        top_k,
+        seed,
+        stream,
+    };
+    let prompt_ids = tok.encode(&format_prompt(prompt));
+    if prompt_ids.len() > pc.max_prompt_tokens {
+        bail!(
+            "prompt too long: {} tokens (limit {})",
+            prompt_ids.len(),
+            pc.max_prompt_tokens
+        );
+    }
+    Ok(ParsedRequest {
+        req: Request {
+            id: 0, // assigned by the server
+            prompt_ids,
+            params,
+        },
+        client_id,
+        truncated_max_new,
+        stop_text,
+    })
 }
 
-pub fn render_response(out: &SeqOutput, client_id: u64, tok: &Tokenizer) -> Json {
+/// Final summary frame (`"event": "done"`), for both streaming and
+/// non-streaming sessions. `stop_text` is the request's own stop marker
+/// (default `STOP_TEXT`); the rendered text is truncated at its first
+/// occurrence, matching what the delta stream's gate emits.
+pub fn render_response(
+    out: &SeqOutput,
+    client_id: u64,
+    tok: &Tokenizer,
+    truncated_max_new: bool,
+    stop_text: &str,
+) -> Json {
     let mut text = tok.decode(&out.generated);
-    if let Some(pos) = text.find(STOP_TEXT) {
-        text.truncate(pos);
+    if !stop_text.is_empty() {
+        if let Some(pos) = text.find(stop_text) {
+            text.truncate(pos);
+        }
     }
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::num(client_id as f64)),
+        ("event", Json::str("done")),
         ("text", Json::str(text.trim())),
         ("tokens", Json::num(out.generated.len() as f64)),
         ("steps", Json::num(out.steps as f64)),
@@ -44,66 +154,383 @@ pub fn render_response(out: &SeqOutput, client_id: u64, tok: &Tokenizer) -> Json
         ("finish", Json::str(format!("{:?}", out.finish))),
         ("ttft_ms", out.ttft_ms.map(Json::num).unwrap_or(Json::Null)),
         ("total_ms", out.total_ms.map(Json::num).unwrap_or(Json::Null)),
+    ];
+    if truncated_max_new {
+        fields.push(("truncated_max_new", Json::Bool(true)));
+    }
+    Json::obj(fields)
+}
+
+/// Incremental token frame for a streaming session.
+pub fn render_delta(client_id: u64, text: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(client_id as f64)),
+        ("event", Json::str("delta")),
+        ("text", Json::str(text)),
     ])
 }
 
 pub fn render_error(client_id: u64, msg: &str) -> Json {
     Json::obj(vec![
         ("id", Json::num(client_id as f64)),
+        ("event", Json::str("error")),
         ("error", Json::str(msg)),
     ])
+}
+
+/// Incremental UTF-8 reassembler for streaming deltas: token chunks are
+/// raw bytes (byte-level BPE), so a multi-byte character can be split
+/// across two decode steps. Feed each chunk's bytes; complete characters
+/// come out, an incomplete trailing sequence is held for the next chunk.
+#[derive(Debug, Default)]
+pub struct Utf8Assembler {
+    buf: Vec<u8>,
+}
+
+impl Utf8Assembler {
+    pub fn new() -> Utf8Assembler {
+        Utf8Assembler::default()
+    }
+
+    pub fn push(&mut self, bytes: &[u8]) -> String {
+        self.buf.extend_from_slice(bytes);
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.buf) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.buf.clear();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.buf[..valid]).unwrap());
+                    match e.error_len() {
+                        // Genuinely invalid bytes mid-stream: replace just
+                        // them and keep scanning — a trailing incomplete
+                        // sequence after them must still be held, not
+                        // flushed (its continuation may be in-flight).
+                        Some(n) => {
+                            out.push('\u{FFFD}');
+                            self.buf.drain(..valid + n);
+                        }
+                        // Incomplete trailing sequence — hold it back.
+                        None => {
+                            self.buf.drain(..valid);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// End of stream: lossily flush whatever is still held.
+    pub fn finish(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.buf).into_owned();
+        self.buf.clear();
+        out
+    }
+}
+
+/// Incremental stop-marker gate for streaming deltas: feed decoded chunks
+/// as they commit; it emits only text that is certain to precede the stop
+/// marker, holding back any suffix that could be a marker prefix until
+/// disambiguated, and goes silent once the marker appears.
+#[derive(Debug)]
+pub struct DeltaGate {
+    stop: String,
+    held: String,
+    done: bool,
+}
+
+impl DeltaGate {
+    pub fn new(stop: &str) -> DeltaGate {
+        DeltaGate { stop: stop.to_string(), held: String::new(), done: false }
+    }
+
+    /// Returns the next printable chunk, if any.
+    pub fn push(&mut self, chunk: &str) -> Option<String> {
+        if self.done {
+            return None;
+        }
+        self.held.push_str(chunk);
+        if self.stop.is_empty() {
+            let out = std::mem::take(&mut self.held);
+            return if out.is_empty() { None } else { Some(out) };
+        }
+        if let Some(p) = self.held.find(&self.stop) {
+            self.done = true;
+            let out = self.held[..p].to_string();
+            self.held.clear();
+            return if out.is_empty() { None } else { Some(out) };
+        }
+        let keep = self.longest_marker_prefix_suffix();
+        let cut = self.held.len() - keep;
+        let out = self.held[..cut].to_string();
+        self.held.drain(..cut);
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// End of stream: release text held back as a potential stop-marker
+    /// prefix — generation finished without completing the marker, so the
+    /// held text is real output.
+    pub fn finish(&mut self) -> Option<String> {
+        if self.done {
+            return None;
+        }
+        let out = std::mem::take(&mut self.held);
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Length of the longest suffix of `held` that is a proper prefix of
+    /// the stop marker (at a char boundary).
+    fn longest_marker_prefix_suffix(&self) -> usize {
+        let s = self.held.as_bytes();
+        let stop = self.stop.as_bytes();
+        let max = (self.stop.len() - 1).min(s.len());
+        for k in (1..=max).rev() {
+            if self.held.is_char_boundary(self.held.len() - k) && stop[..k] == s[s.len() - k..] {
+                return k;
+            }
+        }
+        0
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::FinishReason;
 
     fn tok() -> Tokenizer {
         Tokenizer::new(vec![])
     }
 
+    fn pc() -> ProtoConfig {
+        ProtoConfig::default()
+    }
+
+    fn parse(line: &str) -> Result<ParsedRequest> {
+        parse_request(line, &tok(), &pc())
+    }
+
     #[test]
     fn parse_roundtrip() {
         let t = tok();
-        let (req, cid) =
-            parse_request(r#"{"id": 9, "prompt": "hi there", "max_new": 32}"#, &t).unwrap();
-        assert_eq!(cid, 9);
-        assert_eq!(req.max_new, 32);
-        assert!(!req.prompt_ids.is_empty());
-        assert_eq!(t.decode(&req.prompt_ids), format_prompt("hi there"));
+        let p = parse(r#"{"id": 9, "prompt": "hi there", "max_new": 32}"#).unwrap();
+        assert_eq!(p.client_id, 9);
+        assert_eq!(p.req.params.max_new, 32);
+        assert_eq!(p.req.params.mode, AcceptMode::Greedy);
+        assert!(!p.req.params.stream);
+        assert!(!p.truncated_max_new);
+        assert!(!p.req.prompt_ids.is_empty());
+        assert_eq!(t.decode(&p.req.prompt_ids), format_prompt("hi there"));
+        assert_eq!(p.req.params.stop_ids, t.encode(STOP_TEXT));
     }
 
     #[test]
-    fn rejects_missing_prompt() {
-        assert!(parse_request(r#"{"id": 1}"#, &tok()).is_err());
-        assert!(parse_request(r#"{"prompt": ""}"#, &tok()).is_err());
-        assert!(parse_request("not json", &tok()).is_err());
+    fn sampling_params_full_roundtrip() {
+        let p = parse(
+            r#"{"prompt": "x", "mode": "typical", "eps": 0.2, "temp": 0.9,
+                "top_k": 5, "seed": 77, "stream": true, "max_new": 12,
+                "stop": "<end>"}"#,
+        )
+        .unwrap();
+        match p.req.params.mode {
+            AcceptMode::Typical { eps, alpha, temp } => {
+                assert!((eps - 0.2).abs() < 1e-6);
+                assert!((alpha - 0.2f32.sqrt()).abs() < 1e-6);
+                assert!((temp - 0.9).abs() < 1e-6);
+            }
+            _ => panic!("expected typical mode"),
+        }
+        assert_eq!(p.req.params.top_k, 5);
+        assert_eq!(p.req.params.seed, Some(77));
+        assert_eq!(p.req.params.max_new, 12);
+        assert!(p.req.params.stream);
+        assert_eq!(p.stop_text, "<end>");
     }
 
     #[test]
-    fn max_new_clamped() {
-        let (req, _) =
-            parse_request(r#"{"prompt": "x", "max_new": 100000}"#, &tok()).unwrap();
-        assert_eq!(req.max_new, 256);
+    fn rejects_malformed_json() {
+        assert!(parse("not json").is_err());
+        assert!(parse(r#"{"prompt": "x""#).is_err());
+        assert!(parse(r#"[1, 2, 3]"#).is_err()); // not an object
     }
 
     #[test]
-    fn response_strips_stop_marker() {
-        let t = tok();
-        let gen = t.encode("hello world <end> junk");
-        let out = SeqOutput {
+    fn rejects_missing_or_empty_prompt() {
+        assert!(parse(r#"{"id": 1}"#).is_err());
+        assert!(parse(r#"{"prompt": ""}"#).is_err());
+        assert!(parse(r#"{"prompt": 7}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_mode() {
+        let e = parse(r#"{"prompt": "x", "mode": "nucleus"}"#).unwrap_err();
+        assert!(e.to_string().contains("unknown accept mode"), "{e}");
+    }
+
+    #[test]
+    fn validates_eps_and_temp_ranges() {
+        assert!(parse(r#"{"prompt": "x", "mode": "typical", "eps": 0.0}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "mode": "typical", "eps": 1.5}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "mode": "typical", "eps": -0.1}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "mode": "typical", "temp": 0.0}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "mode": "typical", "temp": 9.0}"#).is_err());
+        assert!(parse(r#"{"prompt": "x", "mode": "typical", "alpha": 2.0}"#).is_err());
+        // Greedy ignores the typical-only knobs entirely.
+        assert!(parse(r#"{"prompt": "x", "mode": "greedy", "eps": 9.0}"#).is_ok());
+    }
+
+    #[test]
+    fn rejects_over_long_prompt() {
+        let cfg = ProtoConfig { max_prompt_tokens: 4, ..ProtoConfig::default() };
+        let e = parse_request(r#"{"prompt": "definitely longer than four bytes"}"#, &tok(), &cfg)
+            .unwrap_err();
+        assert!(e.to_string().contains("prompt too long"), "{e}");
+        // Within the limit passes (byte tokenizer: 1 token per byte).
+        let cfg = ProtoConfig { max_prompt_tokens: 1024, ..ProtoConfig::default() };
+        assert!(parse_request(r#"{"prompt": "hi"}"#, &tok(), &cfg).is_ok());
+    }
+
+    #[test]
+    fn max_new_ceiling_is_configurable_and_reported() {
+        let cfg = ProtoConfig { max_new_ceiling: 100, ..ProtoConfig::default() };
+        let p = parse_request(r#"{"prompt": "x", "max_new": 100000}"#, &tok(), &cfg).unwrap();
+        assert_eq!(p.req.params.max_new, 100);
+        assert!(p.truncated_max_new);
+        let p = parse_request(r#"{"prompt": "x", "max_new": 100}"#, &tok(), &cfg).unwrap();
+        assert!(!p.truncated_max_new);
+    }
+
+    fn sample_out(generated: Vec<u32>) -> SeqOutput {
+        SeqOutput {
             req_id: 1,
-            generated: gen,
-            finish: crate::engine::FinishReason::Stop,
+            generated,
+            finish: FinishReason::Stop,
             steps: 3,
             mean_accept_len: 2.0,
             accept_hist: vec![2, 2, 2],
             mean_logprob: -1.0,
             ttft_ms: Some(5.0),
             total_ms: Some(11.0),
-        };
-        let r = render_response(&out, 4, &t);
+        }
+    }
+
+    #[test]
+    fn response_strips_stop_marker() {
+        let t = tok();
+        let out = sample_out(t.encode("hello world <end> junk"));
+        let r = render_response(&out, 4, &t, false, STOP_TEXT);
         assert_eq!(r.req("text").as_str(), Some("hello world"));
         assert_eq!(r.req("id").as_usize(), Some(4));
+        assert_eq!(r.req("event").as_str(), Some("done"));
+        assert!(r.get("truncated_max_new").is_none());
+    }
+
+    #[test]
+    fn response_strips_custom_stop_marker() {
+        let t = tok();
+        let out = sample_out(t.encode("alpha ### beta"));
+        let r = render_response(&out, 1, &t, false, "###");
+        assert_eq!(r.req("text").as_str(), Some("alpha"));
+        // Empty stop = no truncation.
+        let r = render_response(&out, 1, &t, false, "");
+        assert_eq!(r.req("text").as_str(), Some("alpha ### beta"));
+    }
+
+    #[test]
+    fn response_reports_truncated_max_new() {
+        let t = tok();
+        let r = render_response(&sample_out(t.encode("hi")), 2, &t, true, STOP_TEXT);
+        assert_eq!(r.req("truncated_max_new").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn error_and_delta_frames_carry_event_kind() {
+        let e = render_error(3, "boom");
+        assert_eq!(e.req("event").as_str(), Some("error"));
+        assert_eq!(e.req("error").as_str(), Some("boom"));
+        let d = render_delta(3, "chunk");
+        assert_eq!(d.req("event").as_str(), Some("delta"));
+        assert_eq!(d.req("text").as_str(), Some("chunk"));
+    }
+
+    #[test]
+    fn delta_gate_passes_plain_text() {
+        let mut g = DeltaGate::new("<end>");
+        assert_eq!(g.push("hello ").as_deref(), Some("hello "));
+        assert_eq!(g.push("world").as_deref(), Some("world"));
+    }
+
+    #[test]
+    fn delta_gate_stops_at_marker_and_goes_silent() {
+        let mut g = DeltaGate::new("<end>");
+        assert_eq!(g.push("hi <end> junk").as_deref(), Some("hi "));
+        assert_eq!(g.push("more"), None);
+    }
+
+    #[test]
+    fn delta_gate_holds_split_marker() {
+        let mut g = DeltaGate::new("<end>");
+        // "<e" could be the start of the marker — held back.
+        assert_eq!(g.push("abc<e").as_deref(), Some("abc"));
+        assert_eq!(g.push("nd>tail"), None); // marker completed; silent
+        // Held prefix that turns out NOT to be the marker is released.
+        let mut g = DeltaGate::new("<end>");
+        assert_eq!(g.push("abc<e").as_deref(), Some("abc"));
+        assert_eq!(g.push("xtra").as_deref(), Some("<extra"));
+    }
+
+    #[test]
+    fn delta_gate_empty_stop_passes_everything() {
+        let mut g = DeltaGate::new("");
+        assert_eq!(g.push("a<end>b").as_deref(), Some("a<end>b"));
+    }
+
+    #[test]
+    fn utf8_assembler_reunites_split_chars() {
+        let mut a = Utf8Assembler::new();
+        let e_acute = "é".as_bytes(); // [0xC3, 0xA9]
+        assert_eq!(a.push(&[b'x', e_acute[0]]), "x"); // dangling lead byte held
+        assert_eq!(a.push(&[e_acute[1], b'y']), "éy");
+        // Invalid byte mid-stream is surfaced lossily, not dropped.
+        let mut a = Utf8Assembler::new();
+        let out = a.push(&[0xC3, b'z']); // 0xC3 not followed by continuation
+        assert!(out.contains('\u{FFFD}') && out.contains('z'), "{out:?}");
+        // An invalid byte must not flush a trailing incomplete sequence:
+        // [0xFF, 0xC3] then [0xA9] still yields 'é' after the replacement.
+        let mut a = Utf8Assembler::new();
+        assert_eq!(a.push(&[0xFF, e_acute[0]]), "\u{FFFD}");
+        assert_eq!(a.push(&[e_acute[1]]), "é");
+        // finish() flushes a held incomplete sequence lossily.
+        let mut a = Utf8Assembler::new();
+        assert_eq!(a.push(&[0xC3]), "");
+        assert_eq!(a.finish(), "\u{FFFD}");
+        assert_eq!(a.finish(), "");
+    }
+
+    #[test]
+    fn delta_gate_finish_flushes_held_prefix() {
+        let mut g = DeltaGate::new("<end>");
+        assert_eq!(g.push("abc<e").as_deref(), Some("abc"));
+        // Stream ends before the marker completes: held text is output.
+        assert_eq!(g.finish().as_deref(), Some("<e"));
+        assert_eq!(g.finish(), None);
+        // After the marker fired, finish stays silent.
+        let mut g = DeltaGate::new("<end>");
+        assert_eq!(g.push("x<end>y").as_deref(), Some("x"));
+        assert_eq!(g.finish(), None);
     }
 }

@@ -91,13 +91,21 @@ impl Tokenizer {
     }
 
     pub fn decode(&self, ids: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode_bytes(ids)).into_owned()
+    }
+
+    /// Raw byte expansion of a token sequence. Streaming consumers use
+    /// this (plus a UTF-8 reassembler) because a multi-byte character can
+    /// be split across separately delivered chunks — per-chunk lossy
+    /// string conversion would corrupt it.
+    pub fn decode_bytes(&self, ids: &[u32]) -> Vec<u8> {
         let mut bytes = Vec::new();
         for &id in ids {
             if let Some(e) = self.expansions.get(id as usize) {
                 bytes.extend_from_slice(e);
             }
         }
-        String::from_utf8_lossy(&bytes).into_owned()
+        bytes
     }
 
     pub fn decode_one(&self, id: u32) -> String {

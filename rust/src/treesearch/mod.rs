@@ -15,7 +15,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::engine::{AcceptMode, Engine, EngineConfig, Request};
+use crate::engine::{Engine, EngineConfig, Request, SamplingParams};
 use crate::runtime::Runtime;
 use crate::tree::TreeTopology;
 use crate::util::json::Json;
@@ -104,18 +104,16 @@ fn simulate_gains(
                 variant: variant.to_string(),
                 tree: tree.clone(),
                 batch: 1,
-                mode: AcceptMode::Greedy,
                 seed: params.seed + ci as u64,
             },
         )?;
         engine.enable_probe();
         let prompt: Vec<u32> = w.iter().take(96).copied().collect();
-        engine.admit(vec![Request {
-            id: ci as u64,
-            prompt_ids: prompt,
-            max_new: params.steps_per_context * (rt.manifest.accept_max + 1),
-            stop_ids: vec![],
-        }])?;
+        engine.admit(vec![Request::new(
+            ci as u64,
+            prompt,
+            SamplingParams::greedy(params.steps_per_context * (rt.manifest.accept_max + 1)),
+        )])?;
         for _ in 0..params.steps_per_context {
             if engine.active_count() == 0 {
                 break;
@@ -150,17 +148,15 @@ pub fn measure_throughput(
             variant: variant.to_string(),
             tree: tree.clone(),
             batch,
-            mode: AcceptMode::Greedy,
             seed: 11,
         },
     )?;
     let reqs: Vec<Request> = (0..batch)
-        .map(|i| Request {
-            id: i as u64,
-            prompt_ids: windows[i % windows.len()].iter().take(64).copied().collect(),
-            max_new: gen_tokens,
-            stop_ids: vec![],
-        })
+        .map(|i| Request::new(
+            i as u64,
+            windows[i % windows.len()].iter().take(64).copied().collect(),
+            SamplingParams::greedy(gen_tokens),
+        ))
         .collect();
     engine.admit(reqs)?;
     // One warmup step triggers lazy executable compilation.

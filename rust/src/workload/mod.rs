@@ -7,8 +7,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::engine::Request;
-use crate::tokenizer::{format_prompt, Tokenizer};
+use crate::engine::{Request, SamplingParams};
+use crate::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
@@ -54,11 +54,19 @@ pub fn by_category<'a>(prompts: &'a [EvalPrompt], cat: &str) -> Vec<&'a EvalProm
     prompts.iter().filter(|p| p.category == cat).collect()
 }
 
-/// Turn eval prompts into engine requests (wire-format wrap + encode).
+/// Baseline per-request generation parameters for workload prompts:
+/// greedy, the standard stop marker, and the given budget. Callers tweak
+/// the returned value (mode, seeds, ...) before fanning out.
+pub fn default_params(tok: &Tokenizer, max_new: usize) -> SamplingParams {
+    SamplingParams { max_new, stop_ids: tok.encode(STOP_TEXT), ..SamplingParams::default() }
+}
+
+/// Turn eval prompts into engine requests (wire-format wrap + encode);
+/// every request carries a copy of `params`.
 pub fn to_requests(
     prompts: &[&EvalPrompt],
     tok: &Tokenizer,
-    max_new: usize,
+    params: &SamplingParams,
     id_base: u64,
 ) -> Vec<Request> {
     prompts
@@ -67,8 +75,7 @@ pub fn to_requests(
         .map(|(i, p)| Request {
             id: id_base + i as u64,
             prompt_ids: tok.encode(&format_prompt(&p.prompt)),
-            max_new,
-            stop_ids: tok.encode(crate::tokenizer::STOP_TEXT),
+            params: params.clone(),
         })
         .collect()
 }

@@ -7,7 +7,9 @@
 //! change speed, never output (paper §2, "greedy acceptance").
 
 use hydra_serve::draft;
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, FinishReason, Request};
+use hydra_serve::engine::{
+    AcceptMode, Engine, EngineConfig, FinishReason, Request, SamplingParams, SeqEvent,
+};
 use hydra_serve::runtime::Runtime;
 use hydra_serve::scheduler::Scheduler;
 use hydra_serve::tokenizer::{format_prompt, Tokenizer};
@@ -39,14 +41,12 @@ fn decode_with(
             variant: variant.into(),
             tree,
             batch: 1,
-            mode,
             seed: 77,
         },
     )
     .unwrap();
-    engine
-        .admit(vec![Request { id: 0, prompt_ids, max_new, stop_ids: vec![] }])
-        .unwrap();
+    let params = SamplingParams { mode, max_new, ..SamplingParams::default() };
+    engine.admit(vec![Request::new(0, prompt_ids, params)]).unwrap();
     engine.run_to_completion().unwrap();
     let out = engine.take_outputs().pop().unwrap();
     (out.generated, out.mean_accept_len, out.steps)
@@ -184,19 +184,13 @@ fn continuous_batching_completes_all_and_matches_bs1() {
             variant: variant.into(),
             tree: tree.clone(),
             batch: b,
-            mode: AcceptMode::Greedy,
             seed: 3,
         },
     )
     .unwrap();
-    let mut sched = Scheduler::new();
+    let mut sched = Scheduler::default();
     for (i, ids) in prompts.iter().enumerate() {
-        sched.submit(Request {
-            id: i as u64,
-            prompt_ids: ids.clone(),
-            max_new: 24,
-            stop_ids: vec![],
-        });
+        sched.submit(Request::new(i as u64, ids.clone(), SamplingParams::greedy(24)));
     }
     let outputs = sched.run_all(&mut engine).unwrap();
     assert_eq!(outputs.len(), prompts.len(), "all requests must finish");
@@ -228,14 +222,12 @@ fn stop_sequence_terminates_generation() {
             variant: "ar".into(),
             tree: TreeTopology::ar(),
             batch: 1,
-            mode: AcceptMode::Greedy,
             seed: 1,
         },
     )
     .unwrap();
-    engine
-        .admit(vec![Request { id: 0, prompt_ids: prompt, max_new: 200, stop_ids: stop.clone() }])
-        .unwrap();
+    let params = SamplingParams { max_new: 200, stop_ids: stop.clone(), ..SamplingParams::default() };
+    engine.admit(vec![Request::new(0, prompt, params)]).unwrap();
     engine.run_to_completion().unwrap();
     let out = engine.take_outputs().pop().unwrap();
     if out.finish == FinishReason::Stop {
@@ -260,7 +252,6 @@ fn engine_rejects_invalid_configs() {
             variant: "ar".into(),
             tree: TreeTopology::ar(),
             batch: 3,
-            mode: AcceptMode::Greedy,
             seed: 0,
         }
     )
@@ -273,7 +264,6 @@ fn engine_rejects_invalid_configs() {
             variant: "ar".into(),
             tree: draft::default_tree("hydra", 1),
             batch: 1,
-            mode: AcceptMode::Greedy,
             seed: 0,
         }
     )
@@ -286,9 +276,128 @@ fn engine_rejects_invalid_configs() {
             variant: "nope".into(),
             tree: TreeTopology::ar(),
             batch: 1,
-            mode: AcceptMode::Greedy,
             seed: 0,
         }
     )
     .is_err());
+}
+
+#[test]
+fn per_slot_accept_modes_in_one_batch() {
+    // The per-request API's core promise: one engine batch serves a greedy
+    // sequence and a typical-acceptance sequence SIMULTANEOUSLY, honoring
+    // each slot's own criterion. The greedy slot must reproduce the bs=1
+    // greedy stream exactly — any cross-slot leakage of the typical
+    // criterion (the old batch-global AcceptMode) would break it.
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let buckets = rt.manifest.batch_buckets[&size].clone();
+    let Some(b) = buckets.iter().copied().filter(|&b| b >= 2).min() else {
+        return; // fast artifacts: no batched buckets
+    };
+    let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
+    let tree = if variant == "ar" {
+        TreeTopology::ar()
+    } else {
+        draft::default_tree(variant, b)
+    };
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: variant.into(),
+            tree: tree.clone(),
+            batch: b,
+            seed: 5,
+        },
+    )
+    .unwrap();
+    let p_greedy = t.encode(&format_prompt("tell me about alice."));
+    let p_typical = t.encode(&format_prompt("describe a day for erin in paris."));
+    let typical = AcceptMode::Typical { eps: 0.15, alpha: 0.387, temp: 0.7 };
+    engine
+        .admit(vec![
+            Request::new(0, p_greedy.clone(), SamplingParams::greedy(32)),
+            Request::new(
+                1,
+                p_typical,
+                SamplingParams {
+                    mode: typical,
+                    max_new: 32,
+                    seed: Some(123),
+                    ..SamplingParams::default()
+                },
+            ),
+        ])
+        .unwrap();
+    while engine.active_count() > 0 {
+        engine.step().unwrap();
+    }
+    let outs = engine.take_outputs();
+    assert_eq!(outs.len(), 2, "both sequences must finish");
+    let greedy_out = outs.iter().find(|o| o.req_id == 0).unwrap();
+    let typical_out = outs.iter().find(|o| o.req_id == 1).unwrap();
+    assert_eq!(greedy_out.generated.len(), 32);
+    assert_eq!(typical_out.generated.len(), 32);
+    assert!(typical_out.generated.iter().all(|&x| (x as usize) < rt.manifest.vocab));
+
+    // Per-slot criterion check: the greedy slot's stream equals a solo
+    // bs=1 greedy run of the same prompt (greedy output is invariant to
+    // tree shape and batch composition).
+    let solo_tree =
+        if variant == "ar" { TreeTopology::ar() } else { draft::default_tree(variant, 1) };
+    let (solo, _, _) =
+        decode_with(&rt, &size, variant, solo_tree, p_greedy, 32, AcceptMode::Greedy);
+    assert_eq!(
+        greedy_out.generated, solo,
+        "greedy slot diverged from solo greedy — typical neighbour leaked into its criterion"
+    );
+}
+
+#[test]
+fn delta_events_reassemble_the_output_stream() {
+    // Streaming sessions: with events enabled, every step emits the newly
+    // committed ids per slot and retirement emits a terminal Finished.
+    // Concatenated deltas must equal the final generated stream.
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: "ar".into(),
+            tree: TreeTopology::ar(),
+            batch: 1,
+            seed: 2,
+        },
+    )
+    .unwrap();
+    engine.enable_events();
+    let prompt = t.encode(&format_prompt("who is bob?"));
+    let params = SamplingParams { stream: true, ..SamplingParams::greedy(16) };
+    engine.admit(vec![Request::new(7, prompt, params)]).unwrap();
+    let mut streamed: Vec<u32> = Vec::new();
+    let mut finished = None;
+    while engine.active_count() > 0 {
+        engine.step().unwrap();
+        for ev in engine.take_events() {
+            match ev {
+                SeqEvent::Delta { req_id, tokens } => {
+                    assert_eq!(req_id, 7);
+                    assert!(finished.is_none(), "delta after Finished");
+                    streamed.extend(tokens);
+                }
+                SeqEvent::Finished(out) => {
+                    assert_eq!(out.req_id, 7);
+                    finished = Some(out);
+                }
+            }
+        }
+    }
+    let out = finished.expect("terminal Finished event");
+    assert_eq!(streamed, out.generated, "deltas must reassemble the final stream");
+    assert_eq!(out.generated.len(), 16);
+    assert!(engine.take_outputs().is_empty(), "event mode must not retain outputs");
 }

@@ -1,17 +1,32 @@
 //! Server end-to-end: spawn the TCP front-end in-process, issue concurrent
-//! requests from multiple client connections, and validate the responses.
+//! requests from multiple client connections, and validate the responses —
+//! including per-request acceptance modes mixed in one engine batch and
+//! streaming sessions (delta frames before the final summary frame).
 
 use std::sync::atomic::Ordering;
 
+use hydra_serve::model::Manifest;
 use hydra_serve::server::{spawn_local, Client};
+use hydra_serve::util::json::Json;
 
 #[test]
 fn serve_and_respond_over_tcp() {
     let dir = hydra_serve::artifacts_dir();
     assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
 
+    // Prefer a batched bucket so concurrent requests genuinely share one
+    // engine batch (per-slot SamplingParams); fall back to bs=1.
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let size = "s".to_string();
+    let batch = manifest.batch_buckets[&size]
+        .iter()
+        .copied()
+        .filter(|&b| b >= 2)
+        .min()
+        .unwrap_or(1);
+
     let (port, shutdown, handle) =
-        spawn_local(dir, "s".into(), "hydra".into(), 1).expect("spawn server");
+        spawn_local(dir, size, "hydra".into(), batch).expect("spawn server");
     let addr = format!("127.0.0.1:{port}");
 
     let mut c = Client::connect(&addr).expect("connect");
@@ -19,12 +34,43 @@ fn serve_and_respond_over_tcp() {
     assert!(resp.get("error").is_none(), "server error: {resp}");
     assert_eq!(resp.req("id").as_usize(), Some(1));
     assert_eq!(resp.req("tokens").as_usize(), Some(24));
+    assert_eq!(resp.req("event").as_str(), Some("done"));
     assert!(resp.req("accept_len").as_f64().unwrap() >= 1.0);
     assert!(!resp.req("text").as_str().unwrap().is_empty());
 
     // Second request on the same connection.
     let resp2 = c.generate("compute 2 + 2.", 16).expect("generate 2");
     assert_eq!(resp2.req("tokens").as_usize(), Some(16));
+
+    // Per-request acceptance modes served concurrently — with batch >= 2
+    // these share one engine batch: one greedy, one typical (ε, temp, seed
+    // all request-local).
+    let greedy_addr = addr.clone();
+    let greedy = std::thread::spawn(move || {
+        let mut c = Client::connect(&greedy_addr).unwrap();
+        c.generate("who is bob?", 16).unwrap()
+    });
+    let typical_addr = addr.clone();
+    let typical = std::thread::spawn(move || {
+        let mut c = Client::connect(&typical_addr).unwrap();
+        c.request(&Json::obj(vec![
+            ("id", Json::num(2.0)),
+            ("prompt", Json::str("describe a day for erin in paris.")),
+            ("max_new", Json::num(16.0)),
+            ("mode", Json::str("typical")),
+            ("eps", Json::num(0.15)),
+            ("temp", Json::num(0.7)),
+            ("seed", Json::num(9.0)),
+        ]))
+        .unwrap()
+    });
+    let g = greedy.join().unwrap();
+    let t = typical.join().unwrap();
+    assert!(g.get("error").is_none(), "greedy request failed: {g}");
+    assert!(t.get("error").is_none(), "typical request failed: {t}");
+    assert_eq!(g.req("tokens").as_usize(), Some(16));
+    assert_eq!(t.req("tokens").as_usize(), Some(16));
+    assert_eq!(t.req("id").as_usize(), Some(2));
 
     // Concurrent clients are batched by the scheduler.
     let mut joins = Vec::new();
@@ -40,6 +86,40 @@ fn serve_and_respond_over_tcp() {
         assert_eq!(r.req("tokens").as_usize(), Some(12));
     }
 
+    // Streaming session: at least one delta frame precedes the summary
+    // frame, and the deltas reassemble (a prefix of) the final text.
+    {
+        let mut c = Client::connect(&addr).unwrap();
+        let mut deltas: Vec<String> = Vec::new();
+        let fin = c
+            .generate_stream("tell me about alice.", 24, |d| deltas.push(d.to_string()))
+            .expect("stream");
+        assert!(fin.get("error").is_none(), "stream error: {fin}");
+        assert_eq!(fin.req("event").as_str(), Some("done"));
+        assert_eq!(fin.req("tokens").as_usize(), Some(24));
+        assert!(!deltas.is_empty(), "expected at least one delta frame before the summary");
+        let assembled: String = deltas.concat();
+        let final_text = fin.req("text").as_str().unwrap().to_string();
+        assert!(
+            assembled.trim().starts_with(final_text.trim())
+                || final_text.trim().starts_with(assembled.trim()),
+            "streamed text {assembled:?} inconsistent with final {final_text:?}"
+        );
+    }
+
+    // Unknown accept mode gets a structured error frame.
+    {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c
+            .request(&Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("mode", Json::str("nucleus")),
+            ]))
+            .unwrap();
+        assert_eq!(r.req("event").as_str(), Some("error"));
+        assert!(r.req("error").as_str().unwrap().contains("unknown accept mode"));
+    }
+
     // Malformed request gets a JSON error, not a dropped connection.
     {
         use std::io::{BufRead, BufReader, Write};
@@ -49,6 +129,7 @@ fn serve_and_respond_over_tcp() {
         BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
         let v = hydra_serve::util::json::Json::parse(line.trim()).unwrap();
         assert!(v.get("error").is_some());
+        assert_eq!(v.req("event").as_str(), Some("error"));
     }
 
     shutdown.store(true, Ordering::Relaxed);
