@@ -5,6 +5,11 @@
 //!
 //! Flags: --size s|m|l  --variant ar|medusa|hydra|hydra_pp|eagle
 //!        --prompt "..."  --max-new 64
+//!
+//! Next steps: `serve_and_query` for the TCP front-end (streaming +
+//! per-request params), `shared_prefix_serving` for the prefix-reuse KV
+//! cache (shared-prompt admissions restored by copy instead of prefill),
+//! `batched_throughput` for continuous batching under load.
 
 use hydra_serve::draft;
 use hydra_serve::engine::{Engine, EngineConfig, Request, SamplingParams};

@@ -7,15 +7,22 @@
 //! Wire schema (one JSON object per line; see `src/server/mod.rs`):
 //!   request:  {"id":1, "prompt":"...", "max_new":48,
 //!              "mode":"greedy"|"typical", "eps":0.15, "temp":0.7,
-//!              "top_k":0, "seed":7, "stop":"<end>", "stream":false}
+//!              "top_k":0, "seed":7, "stop":"<end>", "stream":false,
+//!              "prefix_cache":true}
+//!   control:  {"op":"stats"}  ->  {"event":"stats", ...}
 //!   frames:   {"event":"delta","text":...} ... {"event":"done", ...}
 //!   errors:   {"event":"error","error":"..."}
+//!
+//! The server runs with the prefix-reuse KV cache on, so the repeated
+//! "tell me about alice." prompt below is served from cache on its second
+//! appearance (`"cached_tokens"` in its done frame, hit counters in the
+//! final stats frame).
 //!
 //!     cargo run --release --example serve_and_query
 
 use std::sync::atomic::Ordering;
 
-use hydra_serve::server::{spawn_local, Client};
+use hydra_serve::server::{spawn_local_opts, Client};
 use hydra_serve::util::cli::Args;
 use hydra_serve::util::json::Json;
 
@@ -24,9 +31,10 @@ fn main() -> anyhow::Result<()> {
     let size = args.str_or("size", "s");
     let variant = args.str_or("variant", "hydra_pp");
     let batch = args.usize_or("batch", 4);
+    let cache_mb = args.usize_or("cache-mb", 64);
 
     let (port, shutdown, handle) =
-        spawn_local(hydra_serve::artifacts_dir(), size, variant, batch)?;
+        spawn_local_opts(hydra_serve::artifacts_dir(), size, variant, batch, cache_mb)?;
     println!("server starting on 127.0.0.1:{port} (compiling executables)…");
     let addr = format!("127.0.0.1:{port}");
 
@@ -85,6 +93,11 @@ fn main() -> anyhow::Result<()> {
         let _ = std::io::stdout().flush();
     })?;
     println!("\nfinal frame: {fin}");
+
+    // The streamed prompt repeated an earlier one — served from the
+    // prefix cache this time. Ask the server for its counters.
+    let stats = c.stats()?;
+    println!("\nserver stats: {stats}");
 
     shutdown.store(true, Ordering::Relaxed);
     let _ = handle.join();

@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
                 stop_ids: tok.encode(STOP_TEXT),
                 top_k: args.usize_or("top-k", 0),
                 seed: Some(2024 + i as u64),
-                stream: false,
+                ..SamplingParams::default()
             },
         ));
     }

@@ -1,0 +1,136 @@
+//! Prefix-reuse KV cache — cold vs warm shared-prefix serving.
+//!
+//! Scenario (fig6_prefix-style A/B): N personas × M user turns over one
+//! common system preamble (`workload::shared_prefix`), served through the
+//! continuous-batching scheduler. Pass 1 runs against a cold cache — every
+//! admission prefills, and completed prefixes are published. Pass 2
+//! resubmits the same workload warm: admissions hit the radix tree, KV
+//! rows restore by copy, and the `prefill_*` call count collapses.
+//!
+//! Reported per pass: decode throughput, prefill-call count, cache
+//! hit/miss/reuse counters. The warm pass must show strictly fewer
+//! prefill calls (the ISSUE's acceptance criterion); byte-identical
+//! greedy output warm vs cold is asserted by tests/prefix_cache_e2e.rs.
+
+use hydra_serve::bench::{fmt1, save_result, BenchCtx, Table};
+use hydra_serve::engine::{Engine, EngineConfig};
+use hydra_serve::scheduler::Scheduler;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let variant = ["hydra_pp", "hydra", "medusa"]
+        .into_iter()
+        .find(|v| ctx.has_variant(&size, v))
+        .unwrap_or("ar")
+        .to_string();
+    let batch = ctx.rt.manifest.batch_buckets[&size]
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(1);
+    let tree = if variant == "ar" {
+        hydra_serve::tree::TreeTopology::ar()
+    } else {
+        hydra_serve::draft::tuned_tree(&ctx.rt.manifest, &size, &variant, batch)?
+    };
+
+    let personas = ctx.scale(6);
+    let turns = if ctx.quick { 2 } else { 3 };
+    let gen_tokens = ctx.scale(24);
+    let params = workload::default_params(&ctx.tok, gen_tokens);
+    let limit = ctx.rt.manifest.seq_max / 2;
+
+    let mut engine = Engine::new(
+        &ctx.rt,
+        EngineConfig { size: size.clone(), variant: variant.clone(), tree, batch, seed: 1234 },
+    )?;
+    engine.enable_prefix_cache(64 << 20);
+
+    let mut table = Table::new(
+        &format!("Prefix cache — cold vs warm shared-prefix serving ({size}/{variant} b{batch})"),
+        &["pass", "reqs", "tok/s", "prefills", "full hits", "partial", "tokens reused"],
+    );
+    let mut results = Vec::new();
+    let mut cold_prefills = 0u64;
+    for (pass_idx, pass) in ["cold", "warm"].iter().enumerate() {
+        let reqs: Vec<_> = workload::shared_prefix(
+            &ctx.tok,
+            &params,
+            personas,
+            turns,
+            (pass_idx * 10_000) as u64,
+        )
+        .into_iter()
+        .filter(|r| r.prompt_ids.len() <= limit)
+        .collect();
+        let n_reqs = reqs.len();
+        let prefills0 = engine.phase.prefill_calls;
+        let stats0 = engine.prefix_cache_stats().unwrap();
+
+        let mut sched = Scheduler::default();
+        sched.submit_all(reqs);
+        let t0 = std::time::Instant::now();
+        let mut tokens = 0usize;
+        let mut done = 0usize;
+        while sched.has_work(&engine) {
+            if let Some(stats) = sched.tick(&mut engine)? {
+                tokens += stats.tokens_committed;
+            }
+            done += engine.take_outputs().len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(done, n_reqs, "all requests must complete");
+
+        let prefills = engine.phase.prefill_calls - prefills0;
+        let stats = engine.prefix_cache_stats().unwrap();
+        let full = stats.full_hits - stats0.full_hits;
+        let partial = stats.partial_hits - stats0.partial_hits;
+        let reused = stats.tokens_reused - stats0.tokens_reused;
+        let tps = tokens as f64 / dt;
+        table.row(vec![
+            pass.to_string(),
+            n_reqs.to_string(),
+            fmt1(tps),
+            prefills.to_string(),
+            full.to_string(),
+            partial.to_string(),
+            reused.to_string(),
+        ]);
+        results.push(Json::obj(vec![
+            ("pass", Json::str(*pass)),
+            ("variant", Json::str(variant.clone())),
+            ("batch", Json::num(batch as f64)),
+            ("requests", Json::num(n_reqs as f64)),
+            ("throughput", Json::num(tps)),
+            ("prefill_calls", Json::num(prefills as f64)),
+            ("full_hits", Json::num(full as f64)),
+            ("partial_hits", Json::num(partial as f64)),
+            ("tokens_reused", Json::num(reused as f64)),
+            ("cache_bytes", Json::num(stats.bytes_in_use as f64)),
+        ]));
+        if pass_idx == 0 {
+            cold_prefills = prefills;
+        } else {
+            println!(
+                "\nwarm admission cost: {} prefill calls vs {} cold ({} full hits, \
+                 {} partial hits, {} prompt tokens reused, {:.2} MiB cached)",
+                prefills,
+                cold_prefills,
+                full,
+                partial,
+                reused,
+                stats.bytes_in_use as f64 / (1 << 20) as f64
+            );
+            assert!(
+                prefills < cold_prefills,
+                "warm pass must need fewer prefill calls ({prefills} >= {cold_prefills})"
+            );
+        }
+    }
+    table.print();
+    save_result("prefix_cache", Json::Arr(results))?;
+    Ok(())
+}

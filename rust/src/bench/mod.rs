@@ -146,6 +146,8 @@ pub fn run_decode_bench_full(
     }
     m.wall = wall0.elapsed();
     m.decode_wall = m.wall; // prefills are part of serving; warmup excluded
+    m.prefill_calls = engine.phase.prefill_calls;
+    m.prefix = engine.prefix_cache_stats();
     assert_eq!(outputs.len(), total_reqs, "all requests must complete");
     let mut lp = 0.0;
     for o in &outputs {

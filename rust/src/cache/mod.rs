@@ -1,8 +1,10 @@
 //! KV-cache slot manager.
 //!
 //! The AOT artifacts operate on a batched cache tensor [B, L, 2, S, KVD];
-//! a "slot" is one batch row. This module tracks slot occupancy and
-//! lengths for the scheduler, and enforces the invariants the engine
+//! a "slot" is one batch row. The engine owns a `SlotPool` as the single
+//! source of truth for slot occupancy and committed lengths (allocated at
+//! admission, extended at commit, freed at retirement — `engine::Slot`
+//! keeps no shadow length), and it enforces the invariants the engine
 //! relies on (a slot's rows beyond `len` are never attended to — verified
 //! at the kernel level by test_tree_attention_ignores_stale_cache_rows).
 

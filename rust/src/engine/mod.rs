@@ -26,11 +26,18 @@ use anyhow::{bail, Context, Result};
 pub use accept::{AcceptMode, StepDecision};
 pub use seq::{FinishReason, Request, SamplingParams, SeqEvent, SeqOutput, Slot};
 
+use crate::cache::SlotPool;
 use crate::model::{Manifest, ModelDims};
+use crate::prefixcache::{CacheStats, EndSnapshot, PrefixCache, RestoredPrefix};
 use crate::runtime::{HostTensor, Runtime, WeightSet};
 use crate::tree::TreeTopology;
 use crate::util::rng::Pcg32;
 use crate::util::stats::top_k_indices;
+
+/// Longest prompt tail (in tokens) a partial prefix-cache hit will extend
+/// through the chain-mode verify/commit path before falling back to a
+/// full prefill.
+pub const CHAIN_TAIL_MAX: usize = 32;
 
 /// Process-level engine configuration. Note what is NOT here: the
 /// acceptance mode, sampling temperature, and generation budget are
@@ -68,6 +75,9 @@ pub struct PhaseTimes {
     pub accept: Duration,
     pub commit: Duration,
     pub steps: u64,
+    /// Number of `prefill_*` artifact invocations — the prefix cache's
+    /// headline savings metric (a fully warm admission batch skips one).
+    pub prefill_calls: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -85,6 +95,13 @@ pub struct Engine<'rt> {
     base_w: Rc<WeightSet>,
     head_w: Option<Rc<WeightSet>>,
     pub slots: Vec<Slot>,
+    /// Slot occupancy/length ledger — the single source of truth for how
+    /// many KV rows of each batch row are committed (`seq.rs::Slot` holds
+    /// no shadow length).
+    pool: SlotPool,
+    /// Prefix-reuse KV cache (`enable_prefix_cache`): committed prefixes
+    /// published on prefill/retirement, restored by copy at admission.
+    pcache: Option<PrefixCache>,
     kv: HostTensor,
     /// Prefix-attention layer cache (Hydra++) [B, 2, S, KVD].
     pkv: Option<HostTensor>,
@@ -201,6 +218,8 @@ impl<'rt> Engine<'rt> {
             base_w,
             head_w,
             slots: (0..b).map(|_| Slot::vacant()).collect(),
+            pool: SlotPool::new(b, s),
+            pcache: None,
             kv,
             pkv,
             ekv,
@@ -243,19 +262,43 @@ impl<'rt> Engine<'rt> {
     }
 
     pub fn has_vacancy(&self) -> bool {
-        self.slots.iter().any(|s| !s.active)
+        self.pool.free_count() > 0
     }
 
     pub fn vacancy_count(&self) -> usize {
-        self.slots.iter().filter(|s| !s.active).count()
+        self.pool.free_count()
     }
 
     pub fn active_count(&self) -> usize {
         self.slots.iter().filter(|s| s.active && !s.done).count()
     }
 
+    /// Committed length of a batch row, from the slot-pool ledger.
+    pub fn slot_len(&self, slot: usize) -> Option<usize> {
+        self.pool.slot_len(slot)
+    }
+
+    /// Turn on the prefix-reuse KV cache with the given byte budget.
+    /// Committed prefixes are published after cold prefills and at
+    /// sequence retirement; admission performs longest-prefix lookup and
+    /// restores hits by copy (skipping `prefill_*` when every new row is
+    /// a full-prompt hit). Per-request opt-out: `SamplingParams::prefix_cache`.
+    pub fn enable_prefix_cache(&mut self, byte_budget: usize) {
+        let extra = self.pkv.is_some() || self.ekv.is_some();
+        self.pcache = Some(PrefixCache::new(
+            byte_budget,
+            self.dims.n_layers,
+            self.dims.kv_dim,
+            extra,
+        ));
+    }
+
+    pub fn prefix_cache_stats(&self) -> Option<CacheStats> {
+        self.pcache.as_ref().map(|pc| pc.stats())
+    }
+
     // ---------------------------------------------------------------------
-    // Prefill — admit new requests into vacant slots.
+    // Admission — prefix-cache lookup, restore, prefill, tail extension.
     // ---------------------------------------------------------------------
 
     pub fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
@@ -265,58 +308,66 @@ impl<'rt> Engine<'rt> {
         let b = self.cfg.batch;
         let s = self.rt.manifest.seq_max;
         let d = self.dims.d_model;
-        let vacant: Vec<usize> =
-            (0..b).filter(|&i| !self.slots[i].active).take(reqs.len()).collect();
-        if vacant.len() < reqs.len() {
-            bail!("admit: {} requests but only {} vacant slots", reqs.len(), vacant.len());
+        let v = self.rt.manifest.vocab;
+        if self.pool.free_count() < reqs.len() {
+            bail!(
+                "admit: {} requests but only {} vacant slots",
+                reqs.len(),
+                self.pool.free_count()
+            );
         }
-
-        // Full-batch prefill: new rows carry real prompts; occupied rows get
-        // a dummy length-1 prompt whose outputs are discarded (their kv rows
-        // are not copied back).
-        let mut tokens = HostTensor::zeros_i32(&[b, s]);
-        let mut lens = HostTensor::zeros_i32(&[b]);
-        for (&slot_i, req) in vacant.iter().zip(&reqs) {
+        for req in &reqs {
             if req.prompt_ids.is_empty() || req.prompt_ids.len() > s / 2 {
                 bail!("prompt length {} out of range (max {})", req.prompt_ids.len(), s / 2);
             }
-            for (j, &tok) in req.prompt_ids.iter().enumerate() {
-                tokens.i32s_mut()[slot_i * s + j] = tok as i32;
-            }
-            lens.i32s_mut()[slot_i] = req.prompt_ids.len() as i32;
-        }
-        for i in 0..b {
-            if self.slots[i].active {
-                lens.i32s_mut()[i] = 1;
-            }
         }
 
-        let name = format!("prefill_{}_b{}", self.cfg.size, b);
-        let out = self.rt.call(&name, &[&tokens, &lens], &[&self.base_w])?;
-        let (last_h, last_logits, kv_new, hidden_seq) = (&out[0], &out[1], &out[2], &out[3]);
+        // Longest-prefix lookup per request (when the cache is on and the
+        // request didn't opt out), then slot allocation through the pool —
+        // the single source of truth for slot occupancy and lengths.
+        // EAGLE's per-step draft extension needs the parent hidden at the
+        // restore boundary, which only full-hit snapshots carry, so its
+        // partial hits are treated as misses (max_tail = 0).
+        let max_tail = if matches!(self.arch, DraftArch::Eagle) { 0 } else { CHAIN_TAIL_MAX };
+        struct Plan {
+            slot: usize,
+            hit: Option<RestoredPrefix>,
+        }
+        let mut plans: Vec<Plan> = Vec::with_capacity(reqs.len());
+        for req in &reqs {
+            let hit = match self.pcache.as_mut() {
+                Some(pc) if req.params.prefix_cache => pc.lookup(&req.prompt_ids, max_tail),
+                _ => None,
+            };
+            let init_len = hit.as_ref().map_or(req.prompt_ids.len(), |h| h.matched);
+            // Cannot fail here: free_count and prompt lengths were
+            // validated above, and init_len <= prompt_len < seq_max. Any
+            // future fallible step inside this loop must unwind earlier
+            // iterations' alloc/pin or it leaks pool rows and cache pins.
+            let slot = self.pool.alloc(init_len)?;
+            if let Some(h) = &hit {
+                self.pcache.as_mut().unwrap().pin(h.node);
+            }
+            plans.push(Plan { slot, hit });
+        }
 
-        let row = self.kv.stride(0);
-        for &i in &vacant {
-            let src = &kv_new.f32s()[i * row..(i + 1) * row];
-            self.kv.f32s_mut()[i * row..(i + 1) * row].copy_from_slice(src);
+        // Per-slot state init + KV restore for cache hits.
+        let srow = self.kv.stride(0);
+        let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
+        for (plan, req) in plans.iter().zip(&reqs) {
+            let i = plan.slot;
             // A recycled slot must not have the old occupant's pending
             // acceptance scattered over its fresh cache rows (fused path).
             if let Some(p) = &mut self.pending {
                 p.accept_len.i32s_mut()[i] = 0;
             }
-        }
-
-        let v = self.rt.manifest.vocab;
-        for (&i, req) in vacant.iter().zip(&reqs) {
-            let logits = &last_logits.f32s()[i * v..(i + 1) * v];
-            let h = last_h.f32s()[i * d..(i + 1) * d].to_vec();
             let mut params = req.params.clone();
             params.max_new = params.max_new.max(1);
             // Per-slot RNG: an explicit seed reproduces the sequence exactly;
             // otherwise derive a request-unique stream from the engine seed,
             // so batch composition never perturbs a neighbour's sampling.
             let rng = match params.seed {
-                Some(s) => Pcg32::new(s),
+                Some(sd) => Pcg32::new(sd),
                 None => Pcg32::with_stream(self.cfg.seed, req.id),
             };
             let slot = &mut self.slots[i];
@@ -326,48 +377,364 @@ impl<'rt> Engine<'rt> {
             slot.req_id = req.id;
             slot.tokens = req.prompt_ids.clone();
             slot.prompt_len = req.prompt_ids.len();
-            slot.cur_len = req.prompt_ids.len();
             slot.params = params;
             slot.rng = rng;
-            slot.root_logits = logits.to_vec();
-            slot.root_token =
-                accept::sample_root(logits, slot.params.mode, slot.params.top_k, &mut slot.rng);
-            slot.h_last = h.clone();
-            slot.h_star = h;
             slot.enqueue_at = Some(Instant::now());
+            let Some(h) = &plan.hit else { continue };
+            slot.cached_tokens = h.matched;
+            slot.prefix_node = Some(h.node);
+            // Restore the cached base KV rows (positions [0, matched)) by
+            // contiguous copy per (layer, k/v) pair.
+            let m = h.matched;
+            for li in 0..l {
+                for c in 0..2 {
+                    let src = ((li * 2 + c) * m) * kvd;
+                    let dst = i * srow + ((li * 2 + c) * s) * kvd;
+                    self.kv.f32s_mut()[dst..dst + m * kvd]
+                        .copy_from_slice(&h.kv[src..src + m * kvd]);
+                }
+            }
+            // Draft-state rows ride along per variant (Hydra++ pkv / EAGLE ekv).
+            if let Some(extra) = &h.extra {
+                if let Some(t) = self.pkv.as_mut() {
+                    restore_extra_rows(t, i, s, kvd, m, extra);
+                } else if let Some(t) = self.ekv.as_mut() {
+                    restore_extra_rows(t, i, s, kvd, m, extra);
+                }
+            }
+            if h.matched == req.prompt_ids.len() {
+                // Full-prompt hit: the snapshot replaces prefill outright.
+                // The root *token* is resampled with this request's own
+                // criterion and RNG — only the distribution is cached.
+                let end = h.end.as_ref().expect("full hit carries an end snapshot");
+                slot.root_logits = end.root_logits.clone();
+                slot.h_last = end.h_last.clone();
+                slot.h_star = end.h_star.clone();
+                slot.root_token = accept::sample_root(
+                    &slot.root_logits,
+                    slot.params.mode,
+                    slot.params.top_k,
+                    &mut slot.rng,
+                );
+            }
         }
 
-        match self.arch.clone() {
-            DraftArch::Hydra { ml, prefix: true } => {
-                let name = format!("prefix_prefill_{}_b{}_L{}", self.cfg.size, b, ml);
-                let hw = self.head_w.clone().unwrap();
-                let out = self.rt.call(&name, &[hidden_seq, &lens], &[&hw])?;
-                let (enriched, pkv_new) = (&out[0], &out[1]);
-                let pkv = self.pkv.as_mut().unwrap();
-                let prow = pkv.stride(0);
-                for &i in &vacant {
-                    pkv.f32s_mut()[i * prow..(i + 1) * prow]
-                        .copy_from_slice(&pkv_new.f32s()[i * prow..(i + 1) * prow]);
-                    self.slots[i].h_star = enriched.f32s()[i * d..(i + 1) * d].to_vec();
+        // Full-batch prefill for cold rows only. When EVERY new row was a
+        // cache hit, the admission batch skips the prefill call entirely —
+        // the prefix cache's headline saving. Rows without a cold prompt
+        // (occupied neighbours, cache hits) carry a dummy length-1 prompt
+        // whose outputs are discarded.
+        let cold: Vec<(usize, &Request)> = plans
+            .iter()
+            .zip(&reqs)
+            .filter(|(p, _)| p.hit.is_none())
+            .map(|(p, r)| (p.slot, r))
+            .collect();
+        if !cold.is_empty() {
+            let mut tokens = HostTensor::zeros_i32(&[b, s]);
+            let mut lens = HostTensor::zeros_i32(&[b]);
+            for i in 0..b {
+                lens.i32s_mut()[i] = 1;
+            }
+            for &(i, req) in &cold {
+                for (j, &tok) in req.prompt_ids.iter().enumerate() {
+                    tokens.i32s_mut()[i * s + j] = tok as i32;
+                }
+                lens.i32s_mut()[i] = req.prompt_ids.len() as i32;
+            }
+
+            self.phase.prefill_calls += 1;
+            let name = format!("prefill_{}_b{}", self.cfg.size, b);
+            let out = self.rt.call(&name, &[&tokens, &lens], &[&self.base_w])?;
+            let (last_h, last_logits, kv_new, hidden_seq) = (&out[0], &out[1], &out[2], &out[3]);
+
+            for &(i, _) in &cold {
+                let src = &kv_new.f32s()[i * srow..(i + 1) * srow];
+                self.kv.f32s_mut()[i * srow..(i + 1) * srow].copy_from_slice(src);
+            }
+            for &(i, _) in &cold {
+                let logits = &last_logits.f32s()[i * v..(i + 1) * v];
+                let h = last_h.f32s()[i * d..(i + 1) * d].to_vec();
+                let slot = &mut self.slots[i];
+                slot.root_logits = logits.to_vec();
+                slot.root_token = accept::sample_root(
+                    logits,
+                    slot.params.mode,
+                    slot.params.top_k,
+                    &mut slot.rng,
+                );
+                slot.h_last = h.clone();
+                slot.h_star = h;
+            }
+
+            match self.arch.clone() {
+                DraftArch::Hydra { ml, prefix: true } => {
+                    let name = format!("prefix_prefill_{}_b{}_L{}", self.cfg.size, b, ml);
+                    let hw = self.head_w.clone().unwrap();
+                    let out = self.rt.call(&name, &[hidden_seq, &lens], &[&hw])?;
+                    let (enriched, pkv_new) = (&out[0], &out[1]);
+                    let pkv = self.pkv.as_mut().unwrap();
+                    let prow = pkv.stride(0);
+                    for &(i, _) in &cold {
+                        pkv.f32s_mut()[i * prow..(i + 1) * prow]
+                            .copy_from_slice(&pkv_new.f32s()[i * prow..(i + 1) * prow]);
+                        self.slots[i].h_star = enriched.f32s()[i * d..(i + 1) * d].to_vec();
+                    }
+                }
+                DraftArch::Eagle => {
+                    let name = format!("eagle_prefill_{}_b{}", self.cfg.size, b);
+                    let hw = self.head_w.clone().unwrap();
+                    let out =
+                        self.rt.call(&name, &[&tokens, hidden_seq, &lens], &[&self.base_w, &hw])?;
+                    let (f_last, ekv_new) = (&out[0], &out[1]);
+                    let ekv = self.ekv.as_mut().unwrap();
+                    let erow = ekv.stride(0);
+                    for &(i, _) in &cold {
+                        ekv.f32s_mut()[i * erow..(i + 1) * erow]
+                            .copy_from_slice(&ekv_new.f32s()[i * erow..(i + 1) * erow]);
+                        self.slots[i].h_star = f_last.f32s()[i * d..(i + 1) * d].to_vec();
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Partial hits: extend the unmatched prompt tail through the
+        // chain-mode verify/commit path (falls back to full prefill above
+        // when the tail exceeds CHAIN_TAIL_MAX — the cache reports those
+        // as misses).
+        let partial: Vec<(usize, Vec<u32>)> = plans
+            .iter()
+            .zip(&reqs)
+            .filter_map(|(p, r)| match &p.hit {
+                Some(h) if h.matched < r.prompt_ids.len() => {
+                    Some((p.slot, r.prompt_ids[h.matched..].to_vec()))
+                }
+                _ => None,
+            })
+            .collect();
+        if !partial.is_empty() {
+            self.chain_extend(&partial)?;
+        }
+
+        // Publish the admitted prompts (cold and extended rows; full hits
+        // are already resident) so future admissions can reuse them.
+        if self.pcache.is_some() {
+            for (plan, req) in plans.iter().zip(&reqs) {
+                let full_hit =
+                    plan.hit.as_ref().is_some_and(|h| h.matched == req.prompt_ids.len());
+                if !full_hit {
+                    self.publish_slot_prefix(plan.slot);
                 }
             }
-            DraftArch::Eagle => {
-                let name = format!("eagle_prefill_{}_b{}", self.cfg.size, b);
-                let hw = self.head_w.clone().unwrap();
-                let out =
-                    self.rt.call(&name, &[&tokens, hidden_seq, &lens], &[&self.base_w, &hw])?;
-                let (f_last, ekv_new) = (&out[0], &out[1]);
-                let ekv = self.ekv.as_mut().unwrap();
-                let erow = ekv.stride(0);
-                for &i in &vacant {
-                    ekv.f32s_mut()[i * erow..(i + 1) * erow]
-                        .copy_from_slice(&ekv_new.f32s()[i * erow..(i + 1) * erow]);
-                    self.slots[i].h_star = f_last.f32s()[i * d..(i + 1) * d].to_vec();
-                }
-            }
-            _ => {}
         }
         Ok(())
+    }
+
+    /// Extend partially-restored rows through the chain-mode verify/commit
+    /// path: each round scores up to `min(accept_max, tree_bucket)` tail
+    /// tokens as a root-to-leaf chain (the ancestor mask is a path),
+    /// force-accepts them in order, and commits their KV rows — exactly
+    /// the rows and hidden states a full prefill would produce. The final
+    /// round's last node yields the row's next root distribution and
+    /// draft-input state.
+    fn chain_extend(&mut self, rows: &[(usize, Vec<u32>)]) -> Result<()> {
+        let b = self.cfg.batch;
+        let tb = self.t_bucket;
+        let v = self.rt.manifest.vocab;
+        let d = self.dims.d_model;
+        let a = self.rt.manifest.accept_max;
+        let chunk_max = a.min(tb);
+        let mut off = vec![0usize; rows.len()];
+        loop {
+            let mut tokens = HostTensor::zeros_i32(&[b, tb]);
+            let mut positions = HostTensor::zeros_i32(&[b, tb]);
+            let mut cur_len = HostTensor::zeros_i32(&[b]);
+            let mut anc = HostTensor::zeros_i32(&[b, tb, tb]);
+            // Every row defaults to self-only attention (no NaN softmax on
+            // rows that are idle this round).
+            for i in 0..b {
+                for j in 0..tb {
+                    anc.i32s_mut()[(i * tb + j) * tb + j] = 1;
+                }
+            }
+            let mut accept_idx = HostTensor::zeros_i32(&[b, a]);
+            let mut accept_len = HostTensor::zeros_i32(&[b]);
+            let mut chunk: Vec<usize> = vec![0; rows.len()];
+            let mut any = false;
+            for (r, (i, tail)) in rows.iter().enumerate() {
+                let i = *i;
+                let c = chunk_max.min(tail.len() - off[r]);
+                if c == 0 {
+                    continue;
+                }
+                any = true;
+                chunk[r] = c;
+                let base = self.pool.slot_len(i).unwrap_or(0);
+                cur_len.i32s_mut()[i] = base as i32;
+                for j in 0..c {
+                    tokens.i32s_mut()[i * tb + j] = tail[off[r] + j] as i32;
+                    positions.i32s_mut()[i * tb + j] = (base + j) as i32;
+                    accept_idx.i32s_mut()[i * a + j] = j as i32;
+                    for k in 0..j {
+                        anc.i32s_mut()[(i * tb + j) * tb + k] = 1;
+                    }
+                }
+                accept_len.i32s_mut()[i] = c as i32;
+            }
+            if !any {
+                break;
+            }
+            let name = format!("verify_{}_b{}_t{}", self.cfg.size, b, tb);
+            let out = self.rt.call(
+                &name,
+                &[&tokens, &positions, &cur_len, &anc, &self.kv],
+                &[&self.base_w],
+            )?;
+            let (logits, hidden, tree_kv) = (&out[0], &out[1], &out[2]);
+            let name = format!("commit_{}_b{}_t{}", self.cfg.size, b, tb);
+            let mut cout = self.rt.call(
+                &name,
+                &[&self.kv, tree_kv, hidden, &accept_idx, &accept_len, &cur_len],
+                &[],
+            )?;
+            let gathered = cout.pop().context("commit outputs")?;
+            self.kv = cout.pop().context("commit outputs")?;
+
+            // Hydra++: extend the prefix-attention cache over the newly
+            // committed rows, chunk by chunk (rows idle this round pass
+            // through with accept_len 0, as in step()).
+            if let DraftArch::Hydra { ml, prefix: true } = self.arch.clone() {
+                let name = format!("prefix_step_{}_b{}_L{}", self.cfg.size, b, ml);
+                let hw = self.head_w.clone().unwrap();
+                let pout = self.rt.call(
+                    &name,
+                    &[&gathered, &accept_len, &cur_len, self.pkv.as_ref().unwrap()],
+                    &[&hw],
+                )?;
+                let (enriched, pkv_new) = (&pout[0], &pout[1]);
+                self.pkv = Some(pkv_new.clone());
+                for (r, (i, tail)) in rows.iter().enumerate() {
+                    let i = *i;
+                    if chunk[r] > 0 && off[r] + chunk[r] == tail.len() {
+                        self.slots[i].h_star = enriched.f32s()[i * d..(i + 1) * d].to_vec();
+                    }
+                }
+            }
+
+            for (r, (i, tail)) in rows.iter().enumerate() {
+                let i = *i;
+                let c = chunk[r];
+                if c == 0 {
+                    continue;
+                }
+                self.pool.extend(i, c)?;
+                if off[r] + c == tail.len() {
+                    // Final chunk: its last node is the new sequence end.
+                    let last = c - 1;
+                    let slot = &mut self.slots[i];
+                    slot.h_last = hidden.f32s()
+                        [(i * tb + last) * d..(i * tb + last + 1) * d]
+                        .to_vec();
+                    slot.root_logits = logits.f32s()
+                        [(i * tb + last) * v..(i * tb + last + 1) * v]
+                        .to_vec();
+                    slot.root_token = accept::sample_root(
+                        &slot.root_logits,
+                        slot.params.mode,
+                        slot.params.top_k,
+                        &mut slot.rng,
+                    );
+                    if !matches!(self.arch, DraftArch::Hydra { prefix: true, .. }) {
+                        slot.h_star = slot.h_last.clone();
+                    }
+                }
+                off[r] += c;
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish slot `i`'s committed prefix (the prompt at admission, the
+    /// whole committed sequence at retirement) into the prefix cache.
+    /// No-op when the cache is off or the request opted out.
+    fn publish_slot_prefix(&mut self, i: usize) {
+        if self.pcache.is_none() || !self.slots[i].params.prefix_cache {
+            return;
+        }
+        let Some(len) = self.pool.slot_len(i) else { return };
+        if len == 0 || self.slots[i].tokens.len() < len || self.slots[i].root_logits.is_empty() {
+            return;
+        }
+        // Repeated traffic: when the whole prefix is already resident with
+        // a snapshot at its exact end, skip the slab assembly outright —
+        // the insert would only refresh an identical snapshot (same
+        // engine, deterministic state).
+        if self.pcache.as_ref().unwrap().is_resident(&self.slots[i].tokens[..len]) {
+            return;
+        }
+        // Fused path: this row's share of the last step's KV commit may
+        // still be pending — apply it host-side so the snapshot is whole.
+        self.materialize_pending_row(i);
+        let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
+        let s = self.rt.manifest.seq_max;
+        let srow = self.kv.stride(0);
+        let mut slab = vec![0f32; l * 2 * len * kvd];
+        for li in 0..l {
+            for c in 0..2 {
+                let src = i * srow + ((li * 2 + c) * s) * kvd;
+                let dst = ((li * 2 + c) * len) * kvd;
+                slab[dst..dst + len * kvd]
+                    .copy_from_slice(&self.kv.f32s()[src..src + len * kvd]);
+            }
+        }
+        let extra = self.pkv.as_ref().or(self.ekv.as_ref()).map(|t| {
+            let prow = t.stride(0);
+            let mut e = vec![0f32; 2 * len * kvd];
+            for c in 0..2 {
+                let src = i * prow + (c * s) * kvd;
+                e[(c * len) * kvd..(c * len + len) * kvd]
+                    .copy_from_slice(&t.f32s()[src..src + len * kvd]);
+            }
+            e
+        });
+        let slot = &self.slots[i];
+        let end = EndSnapshot {
+            h_last: slot.h_last.clone(),
+            h_star: slot.h_star.clone(),
+            root_logits: slot.root_logits.clone(),
+        };
+        let tokens = &slot.tokens[..len];
+        self.pcache.as_mut().unwrap().insert(tokens, &slab, extra.as_deref(), end);
+    }
+
+    /// Host-side application of slot `i`'s share of a pending fused
+    /// commit: scatters the accepted tree rows into the batched KV cache
+    /// exactly as the deferred `verify_commit_*` call would, then zeroes
+    /// the row so the device-side scatter becomes a no-op.
+    fn materialize_pending_row(&mut self, i: usize) {
+        let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
+        let s = self.rt.manifest.seq_max;
+        let tb = self.t_bucket;
+        let a = self.rt.manifest.accept_max;
+        let Some(p) = self.pending.as_mut() else { return };
+        let n = p.accept_len.i32s()[i] as usize;
+        if n == 0 {
+            return;
+        }
+        let base = p.commit_base.i32s()[i] as usize;
+        for j in 0..n {
+            let node = p.accept_idx.i32s()[i * a + j] as usize;
+            for li in 0..l {
+                for c in 0..2 {
+                    let src = (((i * l + li) * 2 + c) * tb + node) * kvd;
+                    let dst = (((i * l + li) * 2 + c) * s + base + j) * kvd;
+                    self.kv.f32s_mut()[dst..dst + kvd]
+                        .copy_from_slice(&p.tree_kv.f32s()[src..src + kvd]);
+                }
+            }
+        }
+        p.accept_len.i32s_mut()[i] = 0;
     }
 
     // ---------------------------------------------------------------------
@@ -403,11 +770,12 @@ impl<'rt> Engine<'rt> {
             if !slot.active || slot.done {
                 continue;
             }
-            cur_len.i32s_mut()[i] = slot.cur_len as i32;
+            let len_i = self.pool.slot_len(i).unwrap_or(0);
+            cur_len.i32s_mut()[i] = len_i as i32;
             for n in 0..t {
                 tokens.i32s_mut()[i * tb + n] = node_tokens[i][n] as i32;
                 positions.i32s_mut()[i * tb + n] =
-                    (slot.cur_len + self.cfg.tree.depth[n] - 1) as i32;
+                    (len_i + self.cfg.tree.depth[n] - 1) as i32;
             }
         }
         let t0 = Instant::now();
@@ -466,8 +834,9 @@ impl<'rt> Engine<'rt> {
                 &mut slot.rng,
             );
             // Truncate to the generation budget and the cache capacity.
+            let len_i = cur_len.i32s()[i] as usize;
             let budget = (slot.params.max_new - slot.generated)
-                .min(s.saturating_sub(slot.cur_len + 1))
+                .min(s.saturating_sub(len_i + 1))
                 .max(1);
             if dec.accepted.len() > budget {
                 dec.accepted.truncate(budget);
@@ -553,7 +922,7 @@ impl<'rt> Engine<'rt> {
                 slot.tokens.push(node_tokens[i][n]);
                 slot.sum_logprob += dec.logprobs[j] as f64;
             }
-            slot.cur_len += n_acc;
+            let new_len = self.pool.extend(i, n_acc)?;
             slot.generated += n_acc;
             slot.accept_hist.push(n_acc);
             if slot.first_token_at.is_none() {
@@ -586,7 +955,7 @@ impl<'rt> Engine<'rt> {
             } else if slot.hit_stop() {
                 slot.done = true;
                 slot.finish = FinishReason::Stop;
-            } else if slot.cur_len + a + 1 >= s {
+            } else if new_len + a + 1 >= s {
                 slot.done = true;
                 slot.finish = FinishReason::CacheFull;
             }
@@ -650,10 +1019,20 @@ impl<'rt> Engine<'rt> {
             _ => {}
         }
 
-        // Retire finished slots: into the event stream when streaming is
-        // enabled (terminal `Finished` frame), else into `outputs`.
+        // Retire finished slots: publish the committed sequence into the
+        // prefix cache (multi-turn follow-ups reuse it), release the
+        // slot's pool row and cache pin, then surface the output — into
+        // the event stream when streaming is enabled (terminal `Finished`
+        // frame), else into `outputs`.
         for i in 0..b {
             if self.slots[i].active && self.slots[i].done {
+                self.publish_slot_prefix(i);
+                if let Some(node) = self.slots[i].prefix_node.take() {
+                    if let Some(pc) = self.pcache.as_mut() {
+                        pc.unpin(node);
+                    }
+                }
+                self.pool.free(i)?;
                 let slot = &mut self.slots[i];
                 let now = Instant::now();
                 let out = SeqOutput {
@@ -673,6 +1052,7 @@ impl<'rt> Engine<'rt> {
                         .zip(slot.first_token_at)
                         .map(|(e, f)| f.duration_since(e).as_secs_f64() * 1e3),
                     total_ms: slot.enqueue_at.map(|e| now.duration_since(e).as_secs_f64() * 1e3),
+                    cached_tokens: slot.cached_tokens,
                 };
                 slot.active = false;
                 if self.emit_events {
@@ -883,7 +1263,7 @@ impl<'rt> Engine<'rt> {
         let k = self.rt.manifest.num_heads;
         // Estimated hidden per node (filled depth by depth).
         let mut node_h: Vec<Vec<f32>> = vec![Vec::new(); tree.len()];
-        let cur_len = self.slots[slot].cur_len;
+        let cur_len = self.pool.slot_len(slot).unwrap_or(0);
 
         let max_eval_depth = if self.probe.is_some() {
             tree.max_depth().min(k)
@@ -942,6 +1322,25 @@ impl<'rt> Engine<'rt> {
             }
         }
         Ok(())
+    }
+}
+
+/// Copy restored draft-state rows (`[2, m, KVD]`) into batch row `i` of a
+/// per-variant layer cache tensor (`[B, 2, S, KVD]` — Hydra++ pkv / EAGLE
+/// ekv), positions `[0, m)`.
+fn restore_extra_rows(
+    t: &mut HostTensor,
+    i: usize,
+    s: usize,
+    kvd: usize,
+    m: usize,
+    extra: &[f32],
+) {
+    let prow = t.stride(0); // 2 * S * KVD
+    for c in 0..2 {
+        let src = (c * m) * kvd;
+        let dst = i * prow + (c * s) * kvd;
+        t.f32s_mut()[dst..dst + m * kvd].copy_from_slice(&extra[src..src + m * kvd]);
     }
 }
 

@@ -28,6 +28,10 @@ pub struct SamplingParams {
     /// sequence. Only observable when the engine has `enable_events` on;
     /// non-streaming sequences then still finish via `SeqEvent::Finished`.
     pub stream: bool,
+    /// Per-request prefix-cache opt-out: when false, this request neither
+    /// reuses cached prefixes at admission nor publishes its own prefix.
+    /// No effect when the engine runs without a prefix cache.
+    pub prefix_cache: bool,
 }
 
 impl Default for SamplingParams {
@@ -39,6 +43,7 @@ impl Default for SamplingParams {
             top_k: 0,
             seed: None,
             stream: false,
+            prefix_cache: true,
         }
     }
 }
@@ -85,9 +90,11 @@ pub struct Slot {
     pub active: bool,
     pub req_id: u64,
     /// Committed tokens (prompt + generated) — mirrors the KV cache rows.
+    /// The committed *length* itself is not duplicated here: the engine's
+    /// `cache::SlotPool` is the single source of truth for slot
+    /// occupancy/lengths.
     pub tokens: Vec<u32>,
     pub prompt_len: usize,
-    pub cur_len: usize,
     /// Next root candidate (sampled from base logits at the last step).
     pub root_token: u32,
     /// Base logits the root was drawn from (quality metric bookkeeping).
@@ -112,6 +119,10 @@ pub struct Slot {
     /// Wall-clock bookkeeping for latency metrics (set by the scheduler).
     pub enqueue_at: Option<std::time::Instant>,
     pub first_token_at: Option<std::time::Instant>,
+    /// Prefix-cache node pinned for this slot's lifetime (hit admissions).
+    pub prefix_node: Option<usize>,
+    /// Prompt tokens restored from the prefix cache at admission (0 = cold).
+    pub cached_tokens: usize,
 }
 
 impl Slot {
@@ -121,7 +132,6 @@ impl Slot {
             req_id: 0,
             tokens: Vec::new(),
             prompt_len: 0,
-            cur_len: 0,
             root_token: 0,
             root_logits: Vec::new(),
             h_last: Vec::new(),
@@ -135,6 +145,8 @@ impl Slot {
             sum_logprob: 0.0,
             enqueue_at: None,
             first_token_at: None,
+            prefix_node: None,
+            cached_tokens: 0,
         }
     }
 
@@ -169,6 +181,8 @@ pub struct SeqOutput {
     pub mean_logprob: f64,
     pub ttft_ms: Option<f64>,
     pub total_ms: Option<f64>,
+    /// Prompt tokens restored from the prefix cache at admission (0 = cold).
+    pub cached_tokens: usize,
 }
 
 /// Incremental per-sequence event, emitted by the engine when event

@@ -5,21 +5,44 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request router,
-//!   continuous batcher, KV-cache manager, speculative decoding engine
-//!   (tree draft → packed verification → acceptance → commit), the paper's
-//!   §4 decoding-tree search, workload generators and the bench harness.
+//!   continuous batcher, KV-cache slot manager ([`cache::SlotPool`] — the
+//!   single source of truth for slot occupancy/lengths), the prefix-reuse
+//!   KV cache ([`prefixcache`]), speculative decoding engine (tree draft →
+//!   packed verification → acceptance → commit), the paper's §4
+//!   decoding-tree search, workload generators and the bench harness.
 //!
 //! ## Request API
 //!
 //! Generation is configured **per request**, not per process: every
 //! [`engine::Request`] carries [`engine::SamplingParams`] (acceptance
 //! mode — greedy or typical with ε/α/temperature —, top-k root sampling,
-//! per-request seed, generation budget, stop marker), and the engine
-//! applies each sequence's criterion slot-locally, so one batch mixes
-//! greedy and typical requests. The TCP front-end ([`server`]) exposes
-//! the same surface as JSON-lines fields plus `"stream": true` sessions
-//! that emit incremental `{"event":"delta"}` frames ahead of the final
-//! summary frame ([`engine::SeqEvent`] / `Scheduler::tick_events`).
+//! per-request seed, generation budget, stop marker, prefix-cache
+//! opt-out), and the engine applies each sequence's criterion
+//! slot-locally, so one batch mixes greedy and typical requests. The TCP
+//! front-end ([`server`]) exposes the same surface as JSON-lines fields
+//! plus `"stream": true` sessions that emit incremental
+//! `{"event":"delta"}` frames ahead of the final summary frame
+//! ([`engine::SeqEvent`] / `Scheduler::tick_events`), and an
+//! `{"op":"stats"}` request returning scheduler/engine/prefix-cache
+//! counters as a JSON frame.
+//!
+//! ## Prefix-reuse KV cache
+//!
+//! Shared-prompt traffic (system prompts, few-shot preambles, multi-turn
+//! histories) is dominated by recomputing the same prefix through
+//! `prefill_*`. With [`engine::Engine::enable_prefix_cache`] (CLI:
+//! `--prefix-cache` / `--prefix-cache-mb` on `serve` and `generate`), the
+//! engine publishes committed prefixes — after cold prefills and when
+//! sequences retire — into a radix tree over token ids whose nodes own
+//! ref-counted host KV segments plus an end snapshot (last hidden, draft
+//! input state, root logits; Hydra++ `pkv` / EAGLE `ekv` rows ride
+//! along). Admission does longest-prefix lookup: a full-prompt hit
+//! restores rows by copy and skips `prefill_*` entirely when every new
+//! row hits; a partial hit restores the shared prefix and extends the
+//! tail through the chain-mode verify/commit path (long tails fall back
+//! to prefill). Eviction is LRU-with-byte-budget; nodes pinned by active
+//! slots are never dropped. Under greedy acceptance, warm-hit output is
+//! token-for-token identical to the cold path.
 //! * **Layer 2 (python/compile)** — the base transformer + draft heads in
 //!   JAX, AOT-lowered to HLO text once at build time (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels)** — the Pallas tree-attention
@@ -34,6 +57,7 @@ pub mod model;
 pub mod runtime;
 pub mod tree;
 pub mod cache;
+pub mod prefixcache;
 pub mod draft;
 pub mod engine;
 pub mod scheduler;

@@ -8,10 +8,12 @@
 //!
 //! Common flags: --size {s,m,l} --variant {ar,medusa,hydra,hydra_pp,eagle}
 //!               --batch N --mode {greedy,typical} --eps 0.15 --temp 0.7
-//!               --top-k K --seed N
+//!               --top-k K --seed N --prefix-cache --prefix-cache-mb 64
 //!
 //! `generate` flags map onto the per-request `SamplingParams`; `serve`'s
 //! --mode only sets the default for requests that don't pick their own.
+//! `--prefix-cache` turns on the prefix-reuse KV cache (shared-prompt
+//! serving: repeated prefixes restore by copy instead of prefill).
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -28,7 +30,7 @@ use hydra_serve::{artifacts_dir, draft, workload};
 
 fn main() {
     init_logging();
-    let args = Args::from_env(&["help", "quick"]);
+    let args = Args::from_env(&["help", "quick", "prefix-cache"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "info" => cmd_info(),
@@ -77,12 +79,23 @@ fn print_help() {
          \n\
          generate  --prompt \"...\" [--size s] [--variant hydra_pp] [--max-new 64]\n\
                    [--mode greedy|typical --eps 0.15 --temp 0.7]\n\
-                   [--top-k K] [--seed N]\n\
+                   [--top-k K] [--seed N] [--prefix-cache] [--prefix-cache-mb 64]\n\
          serve     [--addr 127.0.0.1:7070] [--size s] [--variant hydra_pp] [--batch 4]\n\
                    [--mode greedy|typical] [--max-new-ceiling 256]\n\
+                   [--prefix-cache] [--prefix-cache-mb 64]\n\
          treesearch [--size s] [--variants medusa,hydra,hydra_pp] [--batches 1]\n\
-                   [--max-nodes 48]\n"
+                   [--max-nodes 48]\n\
+         \n\
+         --prefix-cache enables the prefix-reuse KV cache (shared-prompt\n\
+         serving); --prefix-cache-mb sets its byte budget in MiB.\n"
     );
+}
+
+/// Prefix-cache budget in MiB from `--prefix-cache` / `--prefix-cache-mb`
+/// (0 = off; the flag alone enables the 64 MiB default).
+fn parse_prefix_cache_mb(args: &Args) -> usize {
+    let default = if args.flag("prefix-cache") { 64 } else { 0 };
+    args.usize_or("prefix-cache-mb", default)
 }
 
 fn parse_mode(args: &Args) -> AcceptMode {
@@ -141,6 +154,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         &rt,
         EngineConfig { size, variant, tree, batch: 1, seed: 42 },
     )?;
+    let prefix_cache_mb = parse_prefix_cache_mb(args);
+    if prefix_cache_mb > 0 {
+        engine.enable_prefix_cache(prefix_cache_mb << 20);
+    }
     let params = SamplingParams {
         mode,
         max_new,
@@ -154,6 +171,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
             None => None,
         },
         stream: false,
+        prefix_cache: true,
     };
     engine.admit(vec![Request::new(0, tok.encode(&format_prompt(&prompt)), params)])?;
     let t0 = std::time::Instant::now();
@@ -192,6 +210,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_mode: parse_mode(args),
         max_new_ceiling: args.usize_or("max-new-ceiling", 256),
         conn_threads: args.usize_or("conn-threads", 8),
+        prefix_cache_mb: parse_prefix_cache_mb(args),
     };
     serve(&rt, cfg, Arc::new(AtomicBool::new(false)))
 }

@@ -2,6 +2,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::prefixcache::CacheStats;
 use crate::util::stats::{summarize, Summary};
 
 /// Histogram over acceptance lengths (1..=K+1).
@@ -45,6 +46,11 @@ pub struct RunMetrics {
     pub step_ms: Vec<f64>,
     pub seq_latency_ms: Vec<f64>,
     pub mean_logprob: f64,
+    /// `prefill_*` artifact invocations during the run — the prefix
+    /// cache's headline savings metric.
+    pub prefill_calls: u64,
+    /// Prefix-cache counters at the end of the run (None: cache off).
+    pub prefix: Option<CacheStats>,
 }
 
 impl Default for RunMetrics {
@@ -65,6 +71,8 @@ impl RunMetrics {
             step_ms: Vec::new(),
             seq_latency_ms: Vec::new(),
             mean_logprob: 0.0,
+            prefill_calls: 0,
+            prefix: None,
         }
     }
 

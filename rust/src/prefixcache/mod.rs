@@ -1,0 +1,843 @@
+//! Prefix-reuse KV cache: a radix tree over committed token-id prefixes
+//! whose nodes own ref-counted, length-tagged host KV segments.
+//!
+//! Shared-prompt serving (system prompts, few-shot preambles, multi-turn
+//! histories) recomputes the same prefix KVs over and over through
+//! `prefill_*` — the single most expensive artifact call in the loop.
+//! Because the engine keeps all KV state in a host-side batched cache
+//! tensor (`[B, L, 2, S, KVD]`), a prefix cache can snapshot committed
+//! rows on publish and restore them by memcpy at admission, without
+//! touching the AOT kernels.
+//!
+//! Layout per node:
+//! * `edge` — the token-id span this node covers (compressed radix edge);
+//! * `kv` — the base-model KV rows for those positions, `[L, 2, n, KVD]`
+//!   (contiguous per (layer, k/v) so restore is one `copy_from_slice`
+//!   per (layer, k/v) pair);
+//! * `extra` — the per-variant draft-state rows for the same positions
+//!   (`pkv` for Hydra++ prefix attention, `ekv` for EAGLE), `[2, n, KVD]`;
+//! * `end` — an optional [`EndSnapshot`] (last hidden, draft input state,
+//!   root logits) valid when a published prefix ends exactly at this
+//!   node's last token. Full-prompt hits need it to skip prefill; KV-only
+//!   restores (partial hits) do not.
+//!
+//! Eviction is LRU over unpinned leaves under a byte budget: only leaf
+//! nodes with `refs == 0` are evictable (evicting a leaf may expose its
+//! parent as the next candidate), a node pinned by an active slot — and,
+//! structurally, its whole ancestor path — is never dropped, and the
+//! accounted byte total never exceeds the budget: an insertion that
+//! cannot make room is rejected, not squeezed in. Pins are per node *id*:
+//! if a later insert splits a pinned edge, the pin stays with the head
+//! (prefix) part and the split-off tail becomes independently evictable —
+//! safe, because restores are by copy, so eviction can never corrupt an
+//! active slot; a pin is a residency hint, not a data dependency.
+
+use std::collections::BTreeMap;
+
+pub type NodeId = usize;
+
+/// Aggregate counters, also snapshotted into `metrics::RunMetrics` and the
+/// server's `{"op":"stats"}` frame.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    /// Lookup matched the whole prompt at a snapshot point (prefill skipped).
+    pub full_hits: u64,
+    /// Lookup restored a proper prefix; the tail went through chain-mode
+    /// verify/commit extension.
+    pub partial_hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Insertions refused because the byte budget could not be met.
+    pub rejected_inserts: u64,
+    /// Total committed tokens restored by copy instead of prefill.
+    pub tokens_reused: u64,
+    pub bytes_in_use: usize,
+    pub byte_budget: usize,
+    pub nodes: usize,
+    pub pinned: usize,
+}
+
+/// Engine state at a published prefix end: everything `admit` needs to
+/// resume decoding without calling `prefill_*`.
+#[derive(Debug, Clone)]
+pub struct EndSnapshot {
+    /// Base hidden of the last committed token `[D]`.
+    pub h_last: Vec<f32>,
+    /// Draft-model input state `[D]` (== h_last for Medusa/Hydra, the
+    /// prefix-attention output for Hydra++, f̂ for EAGLE).
+    pub h_star: Vec<f32>,
+    /// Base logits at the last committed token `[V]` — the next root
+    /// distribution. The root *token* is resampled per request with the
+    /// admitting request's own mode/RNG, so caching stays sampling-safe.
+    pub root_logits: Vec<f32>,
+}
+
+impl EndSnapshot {
+    fn bytes(&self) -> usize {
+        (self.h_last.len() + self.h_star.len() + self.root_logits.len()) * 4
+    }
+}
+
+/// An assembled restore: KV (and draft-state) rows for `matched` leading
+/// tokens of the queried prompt, plus the end snapshot when the match
+/// lands exactly on a published prefix end.
+#[derive(Debug, Clone)]
+pub struct RestoredPrefix {
+    /// Deepest node used by the restore — pin it for the slot's lifetime.
+    pub node: NodeId,
+    pub matched: usize,
+    /// `[L, 2, matched, KVD]`.
+    pub kv: Vec<f32>,
+    /// `[2, matched, KVD]` when the cache carries draft-state rows.
+    pub extra: Option<Vec<f32>>,
+    pub end: Option<EndSnapshot>,
+}
+
+#[derive(Debug)]
+struct Node {
+    edge: Vec<u32>,
+    /// `[L, 2, n, KVD]`, n == edge.len(). Empty for the root.
+    kv: Vec<f32>,
+    /// `[2, n, KVD]`.
+    extra: Option<Vec<f32>>,
+    end: Option<EndSnapshot>,
+    children: BTreeMap<u32, NodeId>,
+    parent: NodeId,
+    /// Pin count — segments referenced by active slots are never evicted.
+    refs: usize,
+    last_used: u64,
+    live: bool,
+}
+
+impl Node {
+    fn bytes(&self) -> usize {
+        self.edge.len() * 4
+            + self.kv.len() * 4
+            + self.extra.as_ref().map_or(0, |e| e.len() * 4)
+            + self.end.as_ref().map_or(0, |e| e.bytes())
+    }
+}
+
+pub struct PrefixCache {
+    nodes: Vec<Node>,
+    free: Vec<NodeId>,
+    /// KV geometry: layers, kv_dim, whether draft-state rows are carried.
+    l: usize,
+    kvd: usize,
+    has_extra: bool,
+    byte_budget: usize,
+    bytes_in_use: usize,
+    clock: u64,
+    stats: CacheStats,
+}
+
+const ROOT: NodeId = 0;
+
+impl PrefixCache {
+    pub fn new(byte_budget: usize, n_layers: usize, kv_dim: usize, has_extra: bool) -> PrefixCache {
+        PrefixCache {
+            nodes: vec![Node {
+                edge: Vec::new(),
+                kv: Vec::new(),
+                extra: None,
+                end: None,
+                children: BTreeMap::new(),
+                parent: ROOT,
+                refs: 1, // the root is never evicted
+                last_used: 0,
+                live: true,
+            }],
+            free: Vec::new(),
+            l: n_layers,
+            kvd: kv_dim,
+            has_extra,
+            byte_budget,
+            bytes_in_use: 0,
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut s = self.stats.clone();
+        s.bytes_in_use = self.bytes_in_use;
+        s.byte_budget = self.byte_budget;
+        s.nodes = self.nodes.iter().filter(|n| n.live).count() - 1; // excl. root
+        s.pinned = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, n)| i != ROOT && n.live && n.refs > 0)
+            .count();
+        s
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.bytes_in_use
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+
+    /// Pin a node (and thereby its whole ancestor path — eviction is
+    /// leaf-only, so ancestors of a live node are structurally protected).
+    pub fn pin(&mut self, id: NodeId) {
+        if let Some(n) = self.nodes.get_mut(id) {
+            if n.live {
+                n.refs += 1;
+            }
+        }
+    }
+
+    pub fn unpin(&mut self, id: NodeId) {
+        if let Some(n) = self.nodes.get_mut(id) {
+            if n.live && n.refs > 0 {
+                n.refs -= 1;
+            }
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Walk the radix tree along `tokens`. Returns the path as
+    /// `(node, taken)` pairs (tokens consumed within each node, root
+    /// excluded) and the total matched length.
+    fn walk(&self, tokens: &[u32]) -> (Vec<(NodeId, usize)>, usize) {
+        let mut path = Vec::new();
+        let mut at = ROOT;
+        let mut matched = 0usize;
+        while matched < tokens.len() {
+            let Some(&child) = self.nodes[at].children.get(&tokens[matched]) else {
+                break;
+            };
+            let edge = &self.nodes[child].edge;
+            let mut k = 0;
+            while k < edge.len() && matched + k < tokens.len() && edge[k] == tokens[matched + k] {
+                k += 1;
+            }
+            path.push((child, k));
+            matched += k;
+            if k < edge.len() {
+                break; // diverged or exhausted mid-edge
+            }
+            at = child;
+        }
+        (path, matched)
+    }
+
+    /// Longest-prefix lookup for an admission prompt. `max_tail` bounds
+    /// how many unmatched tail tokens the caller is willing to extend
+    /// through chain-mode verify/commit (0 = full hits only). When the
+    /// whole prompt matches but no [`EndSnapshot`] exists at that exact
+    /// point, the match backs off one token so the caller has a non-empty
+    /// tail to recover the root distribution from.
+    pub fn lookup(&mut self, tokens: &[u32], max_tail: usize) -> Option<RestoredPrefix> {
+        self.stats.lookups += 1;
+        let (path, mut matched) = self.walk(tokens);
+        let end_at = |cache: &PrefixCache, path: &[(NodeId, usize)], m: usize| -> Option<EndSnapshot> {
+            let &(node, taken) = path.last()?;
+            let n = &cache.nodes[node];
+            if m > 0 && taken == n.edge.len() {
+                n.end.clone()
+            } else {
+                None
+            }
+        };
+        let mut end = end_at(self, &path, matched);
+        if matched == tokens.len() && end.is_none() {
+            // Full textual match without a snapshot (e.g. the prompt ends
+            // mid-edge of a longer published sequence): restore one token
+            // less and chain-verify the last prompt token as the tail.
+            matched -= 1;
+            end = None;
+        }
+        if matched == 0 {
+            self.stats.misses += 1;
+            return None;
+        }
+        let tail = tokens.len() - matched;
+        if tail > 0 && (max_tail == 0 || tail > max_tail) {
+            self.stats.misses += 1;
+            return None;
+        }
+
+        // Assemble [L, 2, matched, KVD] (+ extra [2, matched, KVD]) from
+        // the path segments; trim the last segment to the matched span.
+        // The caller copies this transient slab into its batched tensor —
+        // one extra pass of memory traffic, accepted so the cache never
+        // hands out references into its arena (evictions stay trivially
+        // safe and the engine-side borrow story stays field-local).
+        let (l, kvd) = (self.l, self.kvd);
+        let mut kv = vec![0f32; l * 2 * matched * kvd];
+        let mut extra = self.has_extra.then(|| vec![0f32; 2 * matched * kvd]);
+        let mut start = 0usize;
+        let mut deepest = ROOT;
+        let now = self.tick();
+        for &(node, taken) in &path {
+            let take = taken.min(matched - start);
+            if take == 0 {
+                break;
+            }
+            let n = &self.nodes[node];
+            let nn = n.edge.len();
+            for li in 0..l {
+                for c in 0..2 {
+                    let src = ((li * 2 + c) * nn) * kvd;
+                    let dst = ((li * 2 + c) * matched + start) * kvd;
+                    kv[dst..dst + take * kvd].copy_from_slice(&n.kv[src..src + take * kvd]);
+                }
+            }
+            if let (Some(out), Some(src_extra)) = (extra.as_mut(), n.extra.as_ref()) {
+                for c in 0..2 {
+                    let src = (c * nn) * kvd;
+                    let dst = (c * matched + start) * kvd;
+                    out[dst..dst + take * kvd]
+                        .copy_from_slice(&src_extra[src..src + take * kvd]);
+                }
+            }
+            deepest = node;
+            start += take;
+            self.nodes[node].last_used = now;
+        }
+        debug_assert_eq!(start, matched);
+
+        if tail == 0 {
+            self.stats.full_hits += 1;
+        } else {
+            self.stats.partial_hits += 1;
+        }
+        self.stats.tokens_reused += matched as u64;
+        Some(RestoredPrefix { node: deepest, matched, kv, extra, end })
+    }
+
+    /// Publish a committed prefix: `tokens` with its KV slab
+    /// `[L, 2, P, KVD]`, optional draft-state slab `[2, P, KVD]`, and the
+    /// end snapshot. Shared leading segments are deduplicated against the
+    /// existing tree; only the unseen suffix (plus the snapshot) costs
+    /// bytes. Returns false when the byte budget could not be met.
+    pub fn insert(
+        &mut self,
+        tokens: &[u32],
+        kv_slab: &[f32],
+        extra_slab: Option<&[f32]>,
+        end: EndSnapshot,
+    ) -> bool {
+        let p = tokens.len();
+        if p == 0 {
+            return false;
+        }
+        debug_assert_eq!(kv_slab.len(), self.l * 2 * p * self.kvd);
+        let (path, matched) = self.walk(tokens);
+
+        // Cost of what this insert will add: the new suffix segment plus
+        // the snapshot (an existing snapshot at the same point is
+        // replaced, so its bytes come back).
+        let suffix = p - matched;
+        let seg_bytes = suffix * 4 + (self.l * 2 * suffix * self.kvd) * 4
+            + extra_slab.map_or(0, |_| (2 * suffix * self.kvd) * 4);
+        let replaced_end = match path.last() {
+            Some(&(node, taken)) if matched == p && taken == self.nodes[node].edge.len() => {
+                self.nodes[node].end.as_ref().map_or(0, |e| e.bytes())
+            }
+            _ => 0,
+        };
+        let added = (seg_bytes + end.bytes()).saturating_sub(replaced_end);
+
+        // Protect the insertion path from eviction while making room.
+        let anchor = path.last().map(|&(n, _)| n);
+        if let Some(a) = anchor {
+            self.pin(a);
+        }
+        let fits = self.make_room(added);
+        if let Some(a) = anchor {
+            self.unpin(a);
+        }
+        if !fits {
+            self.stats.rejected_inserts += 1;
+            return false;
+        }
+
+        let now = self.tick();
+        // Position in the tree where the new suffix (or snapshot) attaches.
+        let attach = match path.last() {
+            None => ROOT,
+            Some(&(node, taken)) => {
+                if taken < self.nodes[node].edge.len() {
+                    // The match ends mid-edge: split so the boundary is a node.
+                    self.split(node, taken)
+                } else {
+                    node
+                }
+            }
+        };
+
+        if matched == p {
+            // Prefix already present: (re)attach the snapshot at `attach`.
+            let old = self.nodes[attach].end.take().map_or(0, |e| e.bytes());
+            self.bytes_in_use -= old;
+            self.bytes_in_use += end.bytes();
+            self.nodes[attach].end = Some(end);
+            self.nodes[attach].last_used = now;
+        } else {
+            // Append one compressed node carrying the whole unseen suffix.
+            let (l, kvd) = (self.l, self.kvd);
+            let mut kv = vec![0f32; l * 2 * suffix * kvd];
+            for li in 0..l {
+                for c in 0..2 {
+                    let src = ((li * 2 + c) * p + matched) * kvd;
+                    let dst = ((li * 2 + c) * suffix) * kvd;
+                    kv[dst..dst + suffix * kvd]
+                        .copy_from_slice(&kv_slab[src..src + suffix * kvd]);
+                }
+            }
+            let extra = extra_slab.map(|es| {
+                let mut e = vec![0f32; 2 * suffix * kvd];
+                for c in 0..2 {
+                    let src = (c * p + matched) * kvd;
+                    let dst = (c * suffix) * kvd;
+                    e[dst..dst + suffix * kvd].copy_from_slice(&es[src..src + suffix * kvd]);
+                }
+                e
+            });
+            let child = self.alloc_node(Node {
+                edge: tokens[matched..].to_vec(),
+                kv,
+                extra,
+                end: Some(end),
+                children: BTreeMap::new(),
+                parent: attach,
+                refs: 0,
+                last_used: now,
+                live: true,
+            });
+            let child_bytes = self.nodes[child].bytes();
+            self.bytes_in_use += child_bytes;
+            self.nodes[attach].children.insert(tokens[matched], child);
+        }
+        self.stats.insertions += 1;
+        debug_assert!(self.bytes_in_use <= self.byte_budget);
+        true
+    }
+
+    fn alloc_node(&mut self, node: Node) -> NodeId {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Split `node`'s edge at `k` (0 < k < edge.len()): the node keeps the
+    /// first `k` tokens (and any pins), a new child inherits the rest of
+    /// the edge, segment rows, snapshot, and children. Byte-neutral.
+    fn split(&mut self, node: NodeId, k: usize) -> NodeId {
+        let (l, kvd) = (self.l, self.kvd);
+        let n_len = self.nodes[node].edge.len();
+        debug_assert!(k > 0 && k < n_len);
+        let tail_len = n_len - k;
+        let tail_edge = self.nodes[node].edge.split_off(k);
+        let old_kv = std::mem::take(&mut self.nodes[node].kv);
+        let mut head_kv = vec![0f32; l * 2 * k * kvd];
+        let mut tail_kv = vec![0f32; l * 2 * tail_len * kvd];
+        for li in 0..l {
+            for c in 0..2 {
+                let src = ((li * 2 + c) * n_len) * kvd;
+                let hd = ((li * 2 + c) * k) * kvd;
+                let td = ((li * 2 + c) * tail_len) * kvd;
+                head_kv[hd..hd + k * kvd].copy_from_slice(&old_kv[src..src + k * kvd]);
+                tail_kv[td..td + tail_len * kvd]
+                    .copy_from_slice(&old_kv[src + k * kvd..src + n_len * kvd]);
+            }
+        }
+        let (head_extra, tail_extra) = match self.nodes[node].extra.take() {
+            None => (None, None),
+            Some(old) => {
+                let mut he = vec![0f32; 2 * k * kvd];
+                let mut te = vec![0f32; 2 * tail_len * kvd];
+                for c in 0..2 {
+                    let src = (c * n_len) * kvd;
+                    he[(c * k) * kvd..(c * k + k) * kvd]
+                        .copy_from_slice(&old[src..src + k * kvd]);
+                    te[(c * tail_len) * kvd..(c * tail_len + tail_len) * kvd]
+                        .copy_from_slice(&old[src + k * kvd..src + n_len * kvd]);
+                }
+                (Some(he), Some(te))
+            }
+        };
+        let end = self.nodes[node].end.take();
+        let children = std::mem::take(&mut self.nodes[node].children);
+        let last_used = self.nodes[node].last_used;
+        let first = tail_edge[0];
+        let child = self.alloc_node(Node {
+            edge: tail_edge,
+            kv: tail_kv,
+            extra: tail_extra,
+            end,
+            children,
+            parent: node,
+            refs: 0,
+            last_used,
+            live: true,
+        });
+        for (_, &grand) in self.nodes[child].children.clone().iter() {
+            self.nodes[grand].parent = child;
+        }
+        self.nodes[node].kv = head_kv;
+        self.nodes[node].extra = head_extra;
+        self.nodes[node].children.insert(first, child);
+        node_split_debug_assert(&self.nodes[node], &self.nodes[child]);
+        node
+    }
+
+    /// Evict LRU unpinned leaves until `needed` more bytes fit under the
+    /// budget. Returns false (leaving the cache unchanged beyond the
+    /// evictions already performed) when the budget cannot be met.
+    fn make_room(&mut self, needed: usize) -> bool {
+        if needed > self.byte_budget {
+            return false;
+        }
+        while self.bytes_in_use + needed > self.byte_budget {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|&(i, n)| {
+                    i != ROOT && n.live && n.refs == 0 && n.children.is_empty()
+                })
+                .min_by_key(|&(_, n)| n.last_used)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { return false };
+            self.evict(v);
+        }
+        true
+    }
+
+    fn evict(&mut self, id: NodeId) {
+        debug_assert!(id != ROOT && self.nodes[id].live);
+        let bytes = self.nodes[id].bytes();
+        let parent = self.nodes[id].parent;
+        let first = self.nodes[id].edge[0];
+        self.nodes[parent].children.remove(&first);
+        self.bytes_in_use -= bytes;
+        let n = &mut self.nodes[id];
+        n.live = false;
+        n.edge.clear();
+        n.kv.clear();
+        n.extra = None;
+        n.end = None;
+        n.children.clear();
+        self.free.push(id);
+        self.stats.evictions += 1;
+    }
+
+    /// A node is still resident (for tests / invariant checks).
+    pub fn contains_node(&self, id: NodeId) -> bool {
+        self.nodes.get(id).is_some_and(|n| n.live)
+    }
+
+    /// Matched prefix length for `tokens` without touching stats/LRU.
+    pub fn peek_match(&self, tokens: &[u32]) -> usize {
+        self.walk(tokens).1
+    }
+
+    /// Whole prefix already resident with an end snapshot at its exact
+    /// end — a publish of `tokens` would store nothing new beyond
+    /// refreshing the snapshot. Lets publishers skip slab assembly for
+    /// repeated traffic (the retirement hot path).
+    pub fn is_resident(&self, tokens: &[u32]) -> bool {
+        let (path, matched) = self.walk(tokens);
+        if matched != tokens.len() || matched == 0 {
+            return false;
+        }
+        match path.last() {
+            Some(&(node, taken)) => {
+                let n = &self.nodes[node];
+                taken == n.edge.len() && n.end.is_some()
+            }
+            None => false,
+        }
+    }
+}
+
+#[inline]
+fn node_split_debug_assert(head: &Node, tail: &Node) {
+    debug_assert!(!head.edge.is_empty() && !tail.edge.is_empty());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+    use crate::{prop_assert, prop_assert_eq};
+
+    const L: usize = 2;
+    const KVD: usize = 3;
+
+    /// Deterministic fake KV slab for a token sequence: position `p`
+    /// carrying token `t` gets value `t as f32 + p as f32 / 100.0` in
+    /// every (layer, k/v, kvd) cell — so restores are checkable.
+    fn slab(tokens: &[u32]) -> Vec<f32> {
+        let p = tokens.len();
+        let mut s = vec![0f32; L * 2 * p * KVD];
+        for li in 0..L {
+            for c in 0..2 {
+                for (pos, &t) in tokens.iter().enumerate() {
+                    for x in 0..KVD {
+                        s[(((li * 2 + c) * p) + pos) * KVD + x] =
+                            t as f32 + pos as f32 / 100.0 + li as f32 * 1000.0 + c as f32 * 500.0;
+                    }
+                }
+            }
+        }
+        s
+    }
+
+    fn snap(tag: f32) -> EndSnapshot {
+        EndSnapshot {
+            h_last: vec![tag; 4],
+            h_star: vec![tag + 0.5; 4],
+            root_logits: vec![tag; 8],
+        }
+    }
+
+    fn cache(budget: usize) -> PrefixCache {
+        PrefixCache::new(budget, L, KVD, false)
+    }
+
+    #[test]
+    fn insert_then_full_hit_roundtrip() {
+        let mut pc = cache(1 << 20);
+        let toks = vec![5, 6, 7, 8];
+        assert!(pc.insert(&toks, &slab(&toks), None, snap(1.0)));
+        let r = pc.lookup(&toks, 8).expect("hit");
+        assert_eq!(r.matched, 4);
+        assert!(r.end.is_some());
+        assert_eq!(r.kv, slab(&toks));
+        let st = pc.stats();
+        assert_eq!(st.full_hits, 1);
+        assert_eq!(st.tokens_reused, 4);
+    }
+
+    #[test]
+    fn partial_hit_restores_shared_prefix_only() {
+        let mut pc = cache(1 << 20);
+        let a = vec![1, 2, 3, 4];
+        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
+        // Query diverges after 2 tokens.
+        let q = vec![1, 2, 9, 9, 9];
+        let r = pc.lookup(&q, 8).expect("partial hit");
+        assert_eq!(r.matched, 2);
+        assert!(r.end.is_none());
+        assert_eq!(r.kv, {
+            let full = slab(&a);
+            // positions 0..2 of each (l, c) chunk
+            let mut out = vec![0f32; L * 2 * 2 * KVD];
+            for li in 0..L {
+                for c in 0..2 {
+                    let src = ((li * 2 + c) * 4) * KVD;
+                    let dst = ((li * 2 + c) * 2) * KVD;
+                    out[dst..dst + 2 * KVD].copy_from_slice(&full[src..src + 2 * KVD]);
+                }
+            }
+            out
+        });
+        assert_eq!(pc.stats().partial_hits, 1);
+    }
+
+    #[test]
+    fn full_text_match_without_snapshot_backs_off_one_token() {
+        let mut pc = cache(1 << 20);
+        let long = vec![1, 2, 3, 4, 5, 6];
+        assert!(pc.insert(&long, &slab(&long), None, snap(1.0)));
+        // Query is a strict prefix ending mid-edge: no snapshot there.
+        let q = vec![1, 2, 3, 4];
+        assert!(pc.is_resident(&long) && !pc.is_resident(&q));
+        let r = pc.lookup(&q, 8).expect("hit");
+        assert_eq!(r.matched, 3, "backed off one token for the tail root");
+        assert!(r.end.is_none());
+        // Publishing the short prefix splits the edge and attaches an end.
+        assert!(pc.insert(&q, &slab(&q), None, snap(2.0)));
+        assert!(pc.is_resident(&q), "split point now carries a snapshot");
+        let r2 = pc.lookup(&q, 8).expect("hit");
+        assert_eq!(r2.matched, 4);
+        let e = r2.end.expect("snapshot at split point");
+        assert_eq!(e.h_last, vec![2.0; 4]);
+        // The longer entry still restores fully through the split.
+        let r3 = pc.lookup(&long, 8).expect("hit");
+        assert_eq!(r3.matched, 6);
+        assert_eq!(r3.kv, slab(&long));
+    }
+
+    #[test]
+    fn divergent_insert_splits_edge_and_both_restore() {
+        let mut pc = cache(1 << 20);
+        let a = vec![1, 2, 3, 4];
+        let b = vec![1, 2, 8, 9];
+        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
+        assert!(pc.insert(&b, &slab(&b), None, snap(2.0)));
+        let ra = pc.lookup(&a, 8).unwrap();
+        assert_eq!((ra.matched, ra.kv), (4, slab(&a)));
+        let rb = pc.lookup(&b, 8).unwrap();
+        assert_eq!((rb.matched, rb.kv), (4, slab(&b)));
+    }
+
+    #[test]
+    fn extra_rows_travel_with_segments() {
+        let mut pc = PrefixCache::new(1 << 20, L, KVD, true);
+        let toks = vec![3, 1, 4];
+        let extra: Vec<f32> = (0..2 * 3 * KVD).map(|x| x as f32).collect();
+        assert!(pc.insert(&toks, &slab(&toks), Some(&extra), snap(1.0)));
+        let r = pc.lookup(&toks, 8).unwrap();
+        assert_eq!(r.extra.as_deref(), Some(&extra[..]));
+    }
+
+    #[test]
+    fn max_tail_zero_means_full_hits_only() {
+        let mut pc = cache(1 << 20);
+        let a = vec![1, 2, 3, 4];
+        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
+        assert!(pc.lookup(&[1, 2, 3, 4, 5], 0).is_none(), "tail of 1 > max_tail 0");
+        assert!(pc.lookup(&[1, 2, 3, 4], 0).is_some(), "exact full hit allowed");
+        assert!(pc.lookup(&[1, 2, 3, 4, 5, 6], 1).is_none(), "tail of 2 > max_tail 1");
+    }
+
+    #[test]
+    fn eviction_respects_budget_and_lru_order() {
+        // Budget fits roughly two 4-token entries (plus snapshots).
+        let one = {
+            let t = vec![0, 1, 2, 3];
+            let mut pc = cache(usize::MAX / 2);
+            pc.insert(&t, &slab(&t), None, snap(0.0));
+            pc.bytes_in_use()
+        };
+        let mut pc = cache(one * 2 + one / 2);
+        let a = vec![10, 11, 12, 13];
+        let b = vec![20, 21, 22, 23];
+        let c = vec![30, 31, 32, 33];
+        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
+        assert!(pc.insert(&b, &slab(&b), None, snap(2.0)));
+        // Touch `a` so `b` is LRU.
+        assert!(pc.lookup(&a, 8).is_some());
+        assert!(pc.insert(&c, &slab(&c), None, snap(3.0)));
+        assert!(pc.bytes_in_use() <= pc.byte_budget());
+        assert!(pc.lookup(&b, 8).is_none(), "LRU entry must be the one evicted");
+        assert!(pc.lookup(&a, 8).is_some());
+        assert!(pc.lookup(&c, 8).is_some());
+        assert!(pc.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn pinned_segments_are_never_evicted() {
+        let one = {
+            let t = vec![0, 1, 2, 3];
+            let mut pc = cache(usize::MAX / 2);
+            pc.insert(&t, &slab(&t), None, snap(0.0));
+            pc.bytes_in_use()
+        };
+        let mut pc = cache(one + one / 2);
+        let a = vec![10, 11, 12, 13];
+        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
+        let ra = pc.lookup(&a, 8).unwrap();
+        pc.pin(ra.node);
+        // No room for b while a is pinned: insert must be REJECTED, not
+        // evict the pinned segment and not blow the budget.
+        let b = vec![20, 21, 22, 23];
+        assert!(!pc.insert(&b, &slab(&b), None, snap(2.0)));
+        assert!(pc.contains_node(ra.node));
+        assert!(pc.bytes_in_use() <= pc.byte_budget());
+        assert_eq!(pc.stats().rejected_inserts, 1);
+        // Unpinning frees it for eviction.
+        pc.unpin(ra.node);
+        assert!(pc.insert(&b, &slab(&b), None, snap(2.0)));
+        assert!(pc.lookup(&b, 8).is_some());
+    }
+
+    #[test]
+    fn oversized_insert_is_rejected_outright() {
+        let mut pc = cache(64); // tiny budget
+        let t = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        assert!(!pc.insert(&t, &slab(&t), None, snap(1.0)));
+        assert_eq!(pc.bytes_in_use(), 0);
+    }
+
+    /// Satellite: property test — pinned segments are never evicted and
+    /// the byte budget is never exceeded, under random insert / lookup /
+    /// pin / unpin traffic with heavy prefix sharing.
+    #[test]
+    fn prop_budget_and_pins_hold_under_random_traffic() {
+        prop::check("prefix-cache-budget", 150, |rng| {
+            let budget = rng.range(500, 8000);
+            let mut pc = cache(budget);
+            let mut pinned: Vec<NodeId> = Vec::new();
+            let gen_tokens = |rng: &mut Pcg32| -> Vec<u32> {
+                // Small alphabet + short lengths → lots of shared prefixes,
+                // splits, and re-inserts.
+                let len = rng.range(1, 10);
+                (0..len).map(|_| rng.below(4) as u32).collect()
+            };
+            for _ in 0..rng.range(10, 80) {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let t = gen_tokens(rng);
+                        pc.insert(&t, &slab(&t), None, snap(t.len() as f32));
+                    }
+                    2 => {
+                        let t = gen_tokens(rng);
+                        if let Some(r) = pc.lookup(&t, 16) {
+                            prop_assert!(
+                                r.matched >= 1 && r.matched <= t.len(),
+                                "matched {} of {}",
+                                r.matched,
+                                t.len()
+                            );
+                            if rng.f64() < 0.5 && pinned.len() < 4 {
+                                pc.pin(r.node);
+                                pinned.push(r.node);
+                            }
+                        }
+                    }
+                    _ => {
+                        if !pinned.is_empty() {
+                            let i = rng.below(pinned.len());
+                            let id = pinned.swap_remove(i);
+                            pc.unpin(id);
+                        }
+                    }
+                }
+                prop_assert!(
+                    pc.bytes_in_use() <= pc.byte_budget(),
+                    "budget exceeded: {} > {}",
+                    pc.bytes_in_use(),
+                    pc.byte_budget()
+                );
+                for &id in &pinned {
+                    prop_assert!(id != ROOT, "root handed out as a hit node");
+                    prop_assert!(!pc.free.contains(&id), "pinned node {id} was evicted");
+                    prop_assert!(pc.contains_node(id), "pinned node {id} not live");
+                }
+            }
+            // Recount bytes from live nodes: accounting must be exact.
+            let recount: usize = pc
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|&(i, n)| i != ROOT && n.live)
+                .map(|(_, n)| n.bytes())
+                .sum();
+            prop_assert_eq!(recount, pc.bytes_in_use());
+            Ok(())
+        });
+    }
+}

@@ -6,14 +6,28 @@
 //!   {"id": 1, "prompt": "tell me about alice.", "max_new": 64,
 //!    "mode": "greedy" | "typical", "eps": 0.15, "temp": 0.7,
 //!    "alpha": 0.39, "top_k": 0, "seed": 7, "stop": "<end>",
-//!    "stream": false}\n
+//!    "stream": false, "prefix_cache": true}\n
 //!
 //! Every field maps onto the request's own `SamplingParams`: the
 //! acceptance criterion, typical-acceptance knobs, top-k root sampling,
-//! RNG seed, budget and stop marker are all per sequence, so one engine
-//! batch freely mixes greedy and typical requests. `max_new` above the
-//! server's configured ceiling is clamped and reported via
-//! `"truncated_max_new": true` in the summary frame.
+//! RNG seed, budget, stop marker and prefix-cache opt-out are all per
+//! sequence, so one engine batch freely mixes greedy and typical
+//! requests. `max_new` above the server's configured ceiling is clamped
+//! and reported via `"truncated_max_new": true` in the summary frame.
+//! When the server runs with `--prefix-cache`, prompt tokens restored
+//! from the prefix-reuse KV cache are reported as `"cached_tokens": N`
+//! in the summary frame; `"prefix_cache": false` opts one request out of
+//! both reuse and publication.
+//!
+//! Operator control requests carry `"op"` instead of `"prompt"`:
+//!
+//!   {"op": "stats"}\n
+//!
+//! answered with an `{"event": "stats", ...}` frame carrying scheduler
+//! counters (queue depth, admitted/completed/steps/tokens), engine slot
+//! occupancy, the `prefill_*` call count, and — when the prefix cache is
+//! on — its hit/miss/evict/byte counters, so operators can observe hit
+//! rates without restarting the server.
 //!
 //! Response, non-streaming (default) — a single summary frame:
 //!
@@ -72,11 +86,15 @@ pub struct ServerConfig {
     /// Ceiling applied to per-request `max_new` (reported when clamped).
     pub max_new_ceiling: usize,
     pub conn_threads: usize,
+    /// Prefix-reuse KV cache byte budget in MiB (0 = cache off).
+    pub prefix_cache_mb: usize,
 }
 
-struct Submission {
-    req: Request,
-    reply: Sender<SeqEvent>,
+enum Submission {
+    Generate { req: Request, reply: Sender<SeqEvent> },
+    /// `{"op":"stats"}` — answer with a scheduler/engine/prefix-cache
+    /// counter frame so operators can observe hit rates live.
+    Stats { reply: Sender<Json> },
 }
 
 /// Run the server until `shutdown` flips. Returns when the listener closes.
@@ -94,6 +112,9 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
         },
     )?;
     engine.enable_events();
+    if cfg.prefix_cache_mb > 0 {
+        engine.enable_prefix_cache(cfg.prefix_cache_mb << 20);
+    }
     let mut sched = Scheduler::default();
     let pcfg = proto::ProtoConfig {
         default_mode: cfg.default_mode,
@@ -139,10 +160,17 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
             Err(e) => return Err(e.into()),
         }
-        // Drain submissions into the scheduler.
+        // Drain submissions into the scheduler; answer stats ops inline.
         while let Ok(sub) = rx.try_recv() {
-            pending.insert(sub.req.id, sub.reply);
-            sched.submit(sub.req);
+            match sub {
+                Submission::Generate { req, reply } => {
+                    pending.insert(req.id, reply);
+                    sched.submit(req);
+                }
+                Submission::Stats { reply } => {
+                    let _ = reply.send(render_stats(&sched, &engine));
+                }
+            }
         }
         // One scheduling tick (refill + step) if there is work; route the
         // resulting sequence events to their sessions.
@@ -202,12 +230,31 @@ fn handle_conn(
             continue;
         }
         let line = line.trim().to_string();
+        // Operator control requests (`{"op": "stats"}`) bypass generation.
+        if let Some(op) = proto::parse_op(&line) {
+            let resp = match op.as_str() {
+                "stats" => {
+                    let (rtx, rrx) = channel();
+                    if tx.send(Submission::Stats { reply: rtx }).is_ok() {
+                        rrx.recv()
+                            .unwrap_or_else(|_| proto::render_error(0, "engine shut down"))
+                    } else {
+                        proto::render_error(0, "engine gone")
+                    }
+                }
+                other => proto::render_error(0, &format!("unknown op `{other}`")),
+            };
+            writer.write_all(resp.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            continue;
+        }
         let resp = match proto::parse_request(&line, &tok, &pcfg) {
             Ok(parsed) => {
                 let mut req = parsed.req;
                 req.id = ids.fetch_add(1, Ordering::Relaxed);
                 let (rtx, rrx) = channel();
-                tx.send(Submission { req, reply: rtx })
+                tx.send(Submission::Generate { req, reply: rtx })
                     .map_err(|_| anyhow::anyhow!("engine gone"))?;
                 // Session loop: zero or more deltas, then the summary.
                 // Token chunks are raw bytes: reassemble UTF-8 across
@@ -269,6 +316,45 @@ fn handle_conn(
     Ok(())
 }
 
+/// Render the `{"op":"stats"}` observability frame: scheduler counters,
+/// engine occupancy, prefill-call count, and (when enabled) the prefix
+/// cache's hit/miss/evict/byte counters.
+fn render_stats(sched: &Scheduler, engine: &Engine) -> Json {
+    let st = &sched.stats;
+    let mut fields = vec![
+        ("event", Json::str("stats")),
+        ("queue_depth", Json::num(sched.queue_depth() as f64)),
+        ("active_slots", Json::num(engine.active_count() as f64)),
+        ("vacant_slots", Json::num(engine.vacancy_count() as f64)),
+        ("admitted", Json::num(st.admitted as f64)),
+        ("completed", Json::num(st.completed as f64)),
+        ("steps", Json::num(st.steps as f64)),
+        ("tokens", Json::num(st.tokens as f64)),
+        ("max_queue_depth", Json::num(st.max_queue_depth as f64)),
+        ("prefill_calls", Json::num(engine.phase.prefill_calls as f64)),
+    ];
+    if let Some(cs) = engine.prefix_cache_stats() {
+        fields.push((
+            "prefix_cache",
+            Json::obj(vec![
+                ("lookups", Json::num(cs.lookups as f64)),
+                ("full_hits", Json::num(cs.full_hits as f64)),
+                ("partial_hits", Json::num(cs.partial_hits as f64)),
+                ("misses", Json::num(cs.misses as f64)),
+                ("insertions", Json::num(cs.insertions as f64)),
+                ("evictions", Json::num(cs.evictions as f64)),
+                ("rejected_inserts", Json::num(cs.rejected_inserts as f64)),
+                ("tokens_reused", Json::num(cs.tokens_reused as f64)),
+                ("bytes_in_use", Json::num(cs.bytes_in_use as f64)),
+                ("byte_budget", Json::num(cs.byte_budget as f64)),
+                ("nodes", Json::num(cs.nodes as f64)),
+                ("pinned", Json::num(cs.pinned as f64)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
 /// Spawn a server on an OS-assigned port; returns (port, shutdown handle,
 /// join handle). Used by tests and examples.
 pub fn spawn_local(
@@ -276,6 +362,17 @@ pub fn spawn_local(
     size: String,
     variant: String,
     batch: usize,
+) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+    spawn_local_opts(artifacts, size, variant, batch, 0)
+}
+
+/// As `spawn_local`, with a prefix-cache budget in MiB (0 = cache off).
+pub fn spawn_local_opts(
+    artifacts: std::path::PathBuf,
+    size: String,
+    variant: String,
+    batch: usize,
+    prefix_cache_mb: usize,
 ) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
     // Bind first so the port is known before the engine warms up.
     let probe = TcpListener::bind("127.0.0.1:0")?;
@@ -294,6 +391,7 @@ pub fn spawn_local(
             default_mode: AcceptMode::Greedy,
             max_new_ceiling: 256,
             conn_threads: 4,
+            prefix_cache_mb,
         };
         if let Err(e) = serve(&rt, cfg, sd) {
             eprintln!("server error: {e}");
@@ -345,6 +443,11 @@ impl Client {
             ("prompt", Json::str(prompt)),
             ("max_new", Json::num(max_new as f64)),
         ]))
+    }
+
+    /// Fetch the server's observability counters (`{"op":"stats"}`).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.request(&Json::obj(vec![("op", Json::str("stats"))]))
     }
 
     /// Ask the generator for a typical-acceptance sample.

@@ -49,6 +49,16 @@ pub struct ParsedRequest {
     pub stop_text: String,
 }
 
+/// Operator request dispatch: a line carrying `"op"` is a control
+/// request (`{"op": "stats"}`), not a generation. Returns the op name.
+pub fn parse_op(line: &str) -> Option<String> {
+    Json::parse(line)
+        .ok()?
+        .get("op")?
+        .as_str()
+        .map(str::to_string)
+}
+
 /// Parse and validate one request line against the server policy.
 pub fn parse_request(line: &str, tok: &Tokenizer, pc: &ProtoConfig) -> Result<ParsedRequest> {
     let v = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -93,6 +103,9 @@ pub fn parse_request(line: &str, tok: &Tokenizer, pc: &ProtoConfig) -> Result<Pa
     let top_k = v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0);
     let seed = v.get("seed").and_then(|x| x.as_i64()).map(|s| s as u64);
     let stream = v.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+    // Per-request prefix-cache opt-out: `"prefix_cache": false` makes the
+    // request neither reuse cached prefixes nor publish its own.
+    let prefix_cache = v.get("prefix_cache").and_then(|x| x.as_bool()).unwrap_or(true);
     let stop_text = v
         .get("stop")
         .and_then(|s| s.as_str())
@@ -106,6 +119,7 @@ pub fn parse_request(line: &str, tok: &Tokenizer, pc: &ProtoConfig) -> Result<Pa
         top_k,
         seed,
         stream,
+        prefix_cache,
     };
     let prompt_ids = tok.encode(&format_prompt(prompt));
     if prompt_ids.len() > pc.max_prompt_tokens {
@@ -157,6 +171,10 @@ pub fn render_response(
     ];
     if truncated_max_new {
         fields.push(("truncated_max_new", Json::Bool(true)));
+    }
+    if out.cached_tokens > 0 {
+        // Prompt tokens served from the prefix cache instead of prefill.
+        fields.push(("cached_tokens", Json::num(out.cached_tokens as f64)));
     }
     Json::obj(fields)
 }
@@ -425,6 +443,7 @@ mod tests {
             mean_logprob: -1.0,
             ttft_ms: Some(5.0),
             total_ms: Some(11.0),
+            cached_tokens: 0,
         }
     }
 
@@ -448,6 +467,29 @@ mod tests {
         // Empty stop = no truncation.
         let r = render_response(&out, 1, &t, false, "");
         assert_eq!(r.req("text").as_str(), Some("alpha ### beta"));
+    }
+
+    #[test]
+    fn prefix_cache_opt_out_and_op_dispatch() {
+        let p = parse(r#"{"prompt": "x"}"#).unwrap();
+        assert!(p.req.params.prefix_cache, "prefix cache reuse is the default");
+        let p = parse(r#"{"prompt": "x", "prefix_cache": false}"#).unwrap();
+        assert!(!p.req.params.prefix_cache);
+        assert_eq!(parse_op(r#"{"op": "stats"}"#).as_deref(), Some("stats"));
+        assert_eq!(parse_op(r#"{"prompt": "x"}"#), None);
+        assert_eq!(parse_op("not json"), None);
+    }
+
+    #[test]
+    fn response_reports_cached_tokens() {
+        let t = tok();
+        let mut out = sample_out(t.encode("hi"));
+        out.cached_tokens = 7;
+        let r = render_response(&out, 2, &t, false, STOP_TEXT);
+        assert_eq!(r.req("cached_tokens").as_usize(), Some(7));
+        out.cached_tokens = 0;
+        let r = render_response(&out, 2, &t, false, STOP_TEXT);
+        assert!(r.get("cached_tokens").is_none());
     }
 
     #[test]

@@ -80,6 +80,55 @@ pub fn to_requests(
         .collect()
 }
 
+/// Shared-prefix serving workload (prefix-cache benchmarks): N personas ×
+/// M user turns over one common system preamble. Turn `t`'s prompt for a
+/// persona is `system + persona line + user turns 1..=t`, so prompts share
+/// (a) the system preamble across all personas and (b) each persona's
+/// whole history across its turns — the traffic shape a prefix-reuse KV
+/// cache converts from prefill work into memcpys. Requests are ordered
+/// turn-major (all personas' turn 1, then turn 2, ...) so earlier turns
+/// warm the cache for later ones; every request carries a copy of
+/// `params`. Callers should drop prompts exceeding the engine's admission
+/// limit (`seq_max / 2` tokens) for large `turns`.
+pub fn shared_prefix(
+    tok: &Tokenizer,
+    params: &SamplingParams,
+    personas: usize,
+    turns: usize,
+    id_base: u64,
+) -> Vec<Request> {
+    const NAMES: &[&str] = &[
+        "alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi", "ivan", "judy",
+        "mike", "nina", "oscar", "peggy",
+    ];
+    const TURNS: &[&str] = &[
+        "tell me about NAME.",
+        "who is NAME?",
+        "where does NAME live?",
+        "compute 3 + 4.",
+    ];
+    let system = "answer briefly and truthfully.";
+    let mut reqs = Vec::new();
+    let mut id = id_base;
+    for t in 0..turns {
+        for p in 0..personas {
+            let name = NAMES[p % NAMES.len()];
+            let mut text = format!("{system} persona: {name}.");
+            for j in 0..=t {
+                text.push(' ');
+                text.push_str(&TURNS[j % TURNS.len()].replace("NAME", name));
+            }
+            reqs.push(Request {
+                id,
+                prompt_ids: tok.encode(&format_prompt(&text)),
+                params: params.clone(),
+            });
+            id += 1;
+        }
+    }
+    reqs
+}
+
 /// Tokenized held-out corpus windows for the §4 tree-search simulation
 /// (the paper uses a 100-prompt Alpaca subset).
 pub fn load_corpus_windows(artifacts: &Path) -> Result<Vec<Vec<u32>>> {
@@ -113,6 +162,33 @@ impl ArrivalProcess {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_prefix_shapes() {
+        let tok = Tokenizer::new(vec![]);
+        let params = default_params(&tok, 8);
+        let reqs = shared_prefix(&tok, &params, 3, 2, 100);
+        assert_eq!(reqs.len(), 6);
+        // Unique, contiguous ids from the base.
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (100..106).collect::<Vec<u64>>());
+        // All prompts share the system preamble prefix.
+        let sys = tok.encode("<user> answer briefly");
+        for r in &reqs {
+            assert_eq!(&r.prompt_ids[..sys.len()], &sys[..], "system prefix must be shared");
+            assert_eq!(r.params, params);
+        }
+        // Turn-major order: a persona's turn-2 prompt extends its turn-1
+        // prompt minus the trailing assistant marker.
+        let t1 = &reqs[0].prompt_ids; // persona 0, turn 1
+        let t2 = &reqs[3].prompt_ids; // persona 0, turn 2
+        let marker = tok.encode(" <bot>");
+        let t1_body = &t1[..t1.len() - marker.len()];
+        assert_eq!(&t2[..t1_body.len()], t1_body, "turn 2 must extend turn 1's history");
+        assert!(t2.len() > t1.len());
+        // Different personas diverge after the system preamble.
+        assert_ne!(reqs[0].prompt_ids, reqs[1].prompt_ids);
+    }
 
     #[test]
     fn arrivals_monotone() {

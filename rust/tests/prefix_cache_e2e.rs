@@ -1,0 +1,195 @@
+//! Prefix-cache end-to-end tests: warm-hit admissions must be
+//! token-for-token identical to cold decoding (greedy acceptance changes
+//! cost, never content), across draft-head variants, and the cache
+//! counters must show the prefill-call savings.
+//!
+//! Requires `make artifacts` (as all engine e2e tests do).
+
+use hydra_serve::draft;
+use hydra_serve::engine::{Engine, EngineConfig, Request, SamplingParams, SeqOutput};
+use hydra_serve::runtime::Runtime;
+use hydra_serve::tokenizer::{format_prompt, Tokenizer};
+
+fn runtime() -> Runtime {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    Runtime::new(dir).unwrap()
+}
+
+fn tok(rt: &Runtime) -> Tokenizer {
+    Tokenizer::load(&rt.manifest.dir.join("tokenizer.json")).unwrap()
+}
+
+fn engine_for<'rt>(rt: &'rt Runtime, size: &str, variant: &str, cache: bool) -> Engine<'rt> {
+    let tree = draft::default_tree(variant, 1);
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            size: size.into(),
+            variant: variant.into(),
+            tree,
+            batch: 1,
+            seed: 77,
+        },
+    )
+    .unwrap();
+    if cache {
+        engine.enable_prefix_cache(64 << 20);
+    }
+    engine
+}
+
+fn run_one(engine: &mut Engine, id: u64, prompt_ids: Vec<u32>, max_new: usize) -> SeqOutput {
+    engine
+        .admit(vec![Request::new(id, prompt_ids, SamplingParams::greedy(max_new))])
+        .unwrap();
+    engine.run_to_completion().unwrap();
+    engine.take_outputs().pop().unwrap()
+}
+
+#[test]
+fn warm_full_hit_is_token_identical_to_cold() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let prompt = t.encode(&format_prompt("tell me about alice."));
+    for variant in ["medusa", "hydra", "hydra_pp"] {
+        if !draft::available(&rt.manifest, &size, variant) {
+            continue;
+        }
+        // Cold reference: cache off.
+        let mut cold_eng = engine_for(&rt, &size, variant, false);
+        let cold = run_one(&mut cold_eng, 0, prompt.clone(), 32);
+        assert_eq!(cold.cached_tokens, 0);
+
+        // Cache on: run 1 publishes, run 2 is a full-prompt hit that must
+        // skip prefill and reproduce the stream exactly.
+        let mut eng = engine_for(&rt, &size, variant, true);
+        let first = run_one(&mut eng, 1, prompt.clone(), 32);
+        assert_eq!(
+            first.generated, cold.generated,
+            "{variant}: cache-enabled cold run diverged from plain cold run"
+        );
+        assert_eq!(first.cached_tokens, 0);
+        assert_eq!(eng.phase.prefill_calls, 1);
+
+        let warm = run_one(&mut eng, 2, prompt.clone(), 32);
+        assert_eq!(
+            warm.generated, cold.generated,
+            "{variant}: warm full-hit output diverged from cold output"
+        );
+        assert_eq!(warm.cached_tokens, prompt.len(), "{variant}: whole prompt must restore");
+        assert_eq!(
+            eng.phase.prefill_calls, 1,
+            "{variant}: warm full-hit admission must skip the prefill call"
+        );
+        let stats = eng.prefix_cache_stats().unwrap();
+        assert!(stats.full_hits >= 1, "{variant}: {stats:?}");
+        assert!(stats.tokens_reused as usize >= prompt.len());
+        println!(
+            "{variant}: full hit reused {} tokens, {} prefill call(s)",
+            warm.cached_tokens, eng.phase.prefill_calls
+        );
+    }
+}
+
+#[test]
+fn warm_partial_hit_extends_tail_and_matches_cold() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let p1 = t.encode(&format_prompt("tell me about alice."));
+    let p2 = t.encode(&format_prompt("tell me about alice. who is bob?"));
+    for variant in ["medusa", "hydra", "hydra_pp"] {
+        if !draft::available(&rt.manifest, &size, variant) {
+            continue;
+        }
+        // Cold reference for the longer prompt.
+        let mut cold_eng = engine_for(&rt, &size, variant, false);
+        let cold = run_one(&mut cold_eng, 0, p2.clone(), 24);
+
+        // Cache on: serve the short prompt first (publishes its prefix),
+        // then the longer one — its shared prefix restores from cache and
+        // the unseen tail goes through chain-mode verify/commit.
+        let mut eng = engine_for(&rt, &size, variant, true);
+        let _ = run_one(&mut eng, 1, p1.clone(), 24);
+        let warm = run_one(&mut eng, 2, p2.clone(), 24);
+        assert_eq!(
+            warm.generated, cold.generated,
+            "{variant}: partial-hit output diverged from cold output"
+        );
+        assert!(
+            warm.cached_tokens > 0 && warm.cached_tokens < p2.len(),
+            "{variant}: expected a partial restore, got {} of {}",
+            warm.cached_tokens,
+            p2.len()
+        );
+        let stats = eng.prefix_cache_stats().unwrap();
+        assert!(stats.partial_hits >= 1, "{variant}: {stats:?}");
+        println!("{variant}: partial hit reused {} of {} tokens", warm.cached_tokens, p2.len());
+    }
+}
+
+#[test]
+fn resubmitting_a_completed_prompt_hits_via_retirement_publish() {
+    // Multi-turn shape: after a sequence completes, its full committed
+    // prefix (prompt + answer) is published; a follow-up prompt that
+    // extends the *conversation* reuses it, and an exact resubmission is
+    // a full hit even on a fresh radix path (split at the prompt end).
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
+    if variant == "ar" {
+        return; // fast artifacts: nothing to test beyond the e2e basics
+    }
+    let prompt = t.encode(&format_prompt("who is bob?"));
+    let mut eng = engine_for(&rt, &size, variant, true);
+    let first = run_one(&mut eng, 1, prompt.clone(), 16);
+    // Follow-up turn: previous prompt + answer + a new question — the
+    // retirement-published prefix covers prompt+answer entirely.
+    let mut follow = prompt.clone();
+    follow.extend_from_slice(&first.generated);
+    follow.extend_from_slice(&t.encode(" where does bob live?"));
+    let s = rt.manifest.seq_max;
+    if follow.len() <= s / 2 {
+        let out = run_one(&mut eng, 2, follow.clone(), 16);
+        assert!(
+            out.cached_tokens > prompt.len(),
+            "follow-up should reuse beyond the original prompt: {} <= {}",
+            out.cached_tokens,
+            prompt.len()
+        );
+    }
+}
+
+#[test]
+fn per_request_opt_out_bypasses_cache() {
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
+    let tree = if variant == "ar" {
+        hydra_serve::tree::TreeTopology::ar()
+    } else {
+        draft::default_tree(variant, 1)
+    };
+    let mut eng = Engine::new(
+        &rt,
+        EngineConfig { size: size.clone(), variant: variant.into(), tree, batch: 1, seed: 5 },
+    )
+    .unwrap();
+    eng.enable_prefix_cache(64 << 20);
+    let prompt = t.encode(&format_prompt("tell me about alice."));
+    let params = SamplingParams { prefix_cache: false, ..SamplingParams::greedy(12) };
+    for id in 0..2u64 {
+        eng.admit(vec![Request::new(id, prompt.clone(), params.clone())]).unwrap();
+        eng.run_to_completion().unwrap();
+        let out = eng.take_outputs().pop().unwrap();
+        assert_eq!(out.cached_tokens, 0, "opted-out request must not reuse");
+    }
+    let stats = eng.prefix_cache_stats().unwrap();
+    assert_eq!(stats.lookups, 0, "opted-out requests must not touch the cache");
+    assert_eq!(stats.insertions, 0, "opted-out requests must not publish");
+    assert_eq!(eng.phase.prefill_calls, 2, "both admissions must prefill");
+}

@@ -6,7 +6,7 @@
 use std::sync::atomic::Ordering;
 
 use hydra_serve::model::Manifest;
-use hydra_serve::server::{spawn_local, Client};
+use hydra_serve::server::{spawn_local, spawn_local_opts, Client};
 use hydra_serve::util::json::Json;
 
 #[test]
@@ -131,6 +131,46 @@ fn serve_and_respond_over_tcp() {
         assert!(v.get("error").is_some());
         assert_eq!(v.req("event").as_str(), Some("error"));
     }
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = handle.join();
+}
+
+#[test]
+fn stats_op_and_prefix_cache_over_tcp() {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    // Prefix cache on (16 MiB): the repeated prompt below must be served
+    // from cache, and {"op":"stats"} must surface the hit counters.
+    let (port, shutdown, handle) =
+        spawn_local_opts(dir, "s".into(), "hydra".into(), 1, 16).expect("spawn server");
+    let addr = format!("127.0.0.1:{port}");
+
+    let mut c = Client::connect(&addr).expect("connect");
+    let cold = c.generate("tell me about alice.", 12).expect("cold generate");
+    assert!(cold.get("error").is_none(), "cold request failed: {cold}");
+    assert!(cold.get("cached_tokens").is_none(), "cold run must not report reuse");
+
+    let warm = c.generate("tell me about alice.", 12).expect("warm generate");
+    assert!(warm.get("error").is_none(), "warm request failed: {warm}");
+    let reused = warm.req("cached_tokens").as_usize().expect("cached_tokens in warm frame");
+    assert!(reused > 0, "warm repeat must reuse prompt tokens: {warm}");
+    // Greedy + identical prompt: warm text must match cold text exactly.
+    assert_eq!(warm.req("text").as_str(), cold.req("text").as_str());
+
+    let stats = c.stats().expect("stats op");
+    assert_eq!(stats.req("event").as_str(), Some("stats"));
+    assert_eq!(stats.req("completed").as_usize(), Some(2));
+    assert!(stats.req("prefill_calls").as_usize().unwrap() >= 1);
+    let pc = stats.req("prefix_cache");
+    assert!(pc.req("full_hits").as_usize().unwrap() >= 1, "stats: {stats}");
+    assert!(pc.req("insertions").as_usize().unwrap() >= 1);
+    assert!(pc.req("bytes_in_use").as_usize().unwrap() > 0);
+
+    // Unknown ops get structured errors, not dropped connections.
+    let r = c.request(&Json::obj(vec![("op", Json::str("nope"))])).unwrap();
+    assert_eq!(r.req("event").as_str(), Some("error"));
+    assert!(r.req("error").as_str().unwrap().contains("unknown op"));
 
     shutdown.store(true, Ordering::Relaxed);
     let _ = handle.join();
