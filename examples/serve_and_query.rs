@@ -4,14 +4,10 @@
 //! session that prints delta frames as tokens commit. The request path is
 //! pure Rust + PJRT (Python was only used at build time).
 //!
-//! Wire schema (one JSON object per line; see `src/server/mod.rs`):
-//!   request:  {"id":1, "prompt":"...", "max_new":48,
-//!              "mode":"greedy"|"typical", "eps":0.15, "temp":0.7,
-//!              "top_k":0, "seed":7, "stop":"<end>", "stream":false,
-//!              "prefix_cache":true}
-//!   control:  {"op":"stats"}  ->  {"event":"stats", ...}
-//!   frames:   {"event":"delta","text":...} ... {"event":"done", ...}
-//!   errors:   {"event":"error","error":"..."}
+//! Wire schema: one JSON object per line; requests carry per-request
+//! generation fields, responses are `delta`/`done`/`error` frames, and
+//! `{"op":"stats"}` returns live counters. The complete protocol
+//! reference is docs/PROTOCOL.md at the repository root.
 //!
 //! The server runs with the prefix-reuse KV cache on, so the repeated
 //! "tell me about alice." prompt below is served from cache on its second

@@ -1,0 +1,690 @@
+//! Adaptive speculation: per-slot dynamic draft trees plus a batch-aware
+//! verification throttle.
+//!
+//! The paper's §4 evaluation (and Medusa's tree-construction analysis)
+//! shows that the best draft-tree size depends on the acceptance rate of
+//! the sequence being decoded and on how full the batch is: large trees
+//! win at batch 1, but as the batch fills, verifying many nodes per slot
+//! wastes base-model FLOPs on speculation that mostly gets rejected. A
+//! static tree therefore charges every step the worst-case speculation
+//! cost. This module turns that compile-time choice into a runtime
+//! control loop:
+//!
+//! * [`TreeLadder`] — a small precomputed family of tree shapes
+//!   T_1 ⊂ T_2 ⊂ … ⊂ T_N obtained by prefix-truncating the engine's
+//!   (tuned or default) tree at increasing node budgets. Because
+//!   [`TreeTopology`] stores its choice paths in canonical order
+//!   (parents before children, sibling ranks contiguous), every prefix
+//!   of the node list is itself a valid tree — the ladder inherits the
+//!   §4-searched shape at every size.
+//! * [`Adaptive`] — the per-slot controller. It tracks, per batch slot,
+//!   an EMA of accepted-tokens-per-step and per-depth acceptance rates
+//!   (with an optimistic prior so cold slots start from the largest
+//!   tree, matching the batch-1 optimum), and each step selects the rung
+//!   whose depth the acceptance statistics justify. A global throttle
+//!   then shrinks the largest `auto` trees until the whole batch's
+//!   verification cost fits a configurable per-step token budget — the
+//!   batch-aware half of the loop.
+//!
+//! Under greedy acceptance the selected tree shape can only change
+//! *speed*, never output (the accepted path is always the base model's
+//! own greedy chain), so adaptive runs are token-identical to static
+//! ones — asserted end-to-end by `tests/engine_e2e.rs` and
+//! `benches/adaptive.rs`.
+//!
+//! The controller is pure policy: it owns no tensors and calls no
+//! executables, so its behaviour is fully unit-tested without artifacts.
+//! The engine feeds it observations from the verify/commit path and
+//! consumes its per-slot rung choices (see `engine::step`).
+
+use std::rc::Rc;
+
+use crate::tree::TreeTopology;
+
+/// Per-request speculation policy, carried on
+/// [`SamplingParams`](crate::engine::SamplingParams).
+///
+/// Only consulted when the engine runs the adaptive controller
+/// ([`crate::engine::Engine::enable_adaptive`]); a static-tree engine
+/// verifies its configured tree for every slot regardless.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpeculationMode {
+    /// Let the controller size this slot's draft tree from its online
+    /// acceptance statistics (and the global throttle). The default.
+    #[default]
+    Auto,
+    /// Pin the slot to the largest ladder rung of at most this many
+    /// nodes. `Fixed(1)` is pure autoregressive decoding for this slot;
+    /// fixed slots are never shrunk by the batch throttle.
+    Fixed(usize),
+}
+
+impl SpeculationMode {
+    /// Largest node count a `Fixed` pin may request — the sanity bound
+    /// shared by the CLI and wire-protocol validators.
+    pub const MAX_FIXED_NODES: usize = 1024;
+
+    /// Parse the shared textual form used by both the CLI flag and the
+    /// wire protocol: `"auto"`, or an integer node count in
+    /// `[1, MAX_FIXED_NODES]`.
+    pub fn parse(s: &str) -> Result<SpeculationMode, String> {
+        if s == "auto" {
+            return Ok(SpeculationMode::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(k) if (1..=Self::MAX_FIXED_NODES).contains(&k) => Ok(SpeculationMode::Fixed(k)),
+            _ => Err(format!(
+                "expected `auto` or an integer in [1, {}], got `{s}`",
+                Self::MAX_FIXED_NODES
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for SpeculationMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpeculationMode::Auto => write!(f, "auto"),
+            SpeculationMode::Fixed(n) => write!(f, "fixed({n})"),
+        }
+    }
+}
+
+/// A nested family of draft-tree shapes, ascending by node count. The
+/// top rung is the engine's configured tree; deeper rungs are its
+/// canonical-prefix truncations (see [`TreeTopology::truncate_prefix`]).
+/// Rungs are `Rc`-shared so per-step selection hands out handles, not
+/// deep topology clones.
+#[derive(Debug, Clone)]
+pub struct TreeLadder {
+    /// Rungs in strictly increasing node count; `rungs[0]` is the 1-node
+    /// (autoregressive) tree, the last rung is the full tree.
+    pub rungs: Vec<Rc<TreeTopology>>,
+}
+
+impl TreeLadder {
+    /// Build a ladder from the engine's full tree, keeping the requested
+    /// node budgets that fall inside `[1, full.len()]` (deduplicated;
+    /// the 1-node rung and the full tree are always included).
+    pub fn from_tree(full: &TreeTopology, sizes: &[usize]) -> TreeLadder {
+        let mut wanted: Vec<usize> = sizes
+            .iter()
+            .copied()
+            .filter(|&n| n >= 1 && n < full.len())
+            .chain([1, full.len()])
+            .collect();
+        wanted.sort_unstable();
+        wanted.dedup();
+        let rungs = wanted.iter().map(|&n| Rc::new(full.truncate_prefix(n))).collect();
+        TreeLadder { rungs }
+    }
+
+    /// Number of rungs.
+    pub fn len(&self) -> usize {
+        self.rungs.len()
+    }
+
+    /// A ladder always has at least the 1-node rung.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Index of the largest rung (the full tree).
+    pub fn top(&self) -> usize {
+        self.rungs.len() - 1
+    }
+
+    /// Node count of rung `r`.
+    pub fn nodes_of(&self, r: usize) -> usize {
+        self.rungs[r].len()
+    }
+
+    /// Tree depth of the deepest rung.
+    pub fn max_depth(&self) -> usize {
+        self.rungs[self.top()].max_depth()
+    }
+
+    /// Largest rung with at most `n` nodes (rung 0 — one node — always
+    /// qualifies once `n` is clamped to at least 1).
+    pub fn rung_for_nodes(&self, n: usize) -> usize {
+        let n = n.max(1);
+        (0..self.rungs.len()).rev().find(|&r| self.rungs[r].len() <= n).unwrap_or(0)
+    }
+
+    /// Largest (widest) rung whose depth does not exceed `d`.
+    pub fn rung_for_depth(&self, d: usize) -> usize {
+        let d = d.max(1);
+        (0..self.rungs.len()).rev().find(|&r| self.rungs[r].max_depth() <= d).unwrap_or(0)
+    }
+}
+
+/// Tuning knobs for the adaptive controller. The defaults are
+/// conservative: no throttle until a budget is set, mild EMA smoothing,
+/// and a 10% reach threshold for keeping a tree depth.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Per-step verification budget: the batch's selected trees are
+    /// shrunk (largest `auto` tree first) until their total node count
+    /// fits. At the controller level 0 disables the throttle;
+    /// `Engine::enable_adaptive` resolves 0 (the default) to its
+    /// batch-aware default budget, so engine callers pass `usize::MAX`
+    /// to run unthrottled. Fixed-mode slots count toward the budget but
+    /// are never shrunk.
+    pub step_token_budget: usize,
+    /// Keep extending the target depth while the estimated probability
+    /// that the acceptance walk reaches it stays at or above this.
+    pub min_reach: f64,
+    /// Smoothing factor for the per-slot accepted-tokens-per-step EMA
+    /// (weight of the newest observation).
+    pub ema_alpha: f64,
+    /// Requested rung node budgets (intersected with the actual tree
+    /// size; 1 and the full size are always present).
+    pub rung_sizes: Vec<usize>,
+    /// A slot parked below the top rung probes a one-depth-deeper tree
+    /// every this many steps, so a sequence that turns easy can climb
+    /// back up the ladder (per-depth rates only update at depths the
+    /// current tree reaches).
+    pub probe_every: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> AdaptiveConfig {
+        AdaptiveConfig {
+            step_token_budget: 0,
+            min_reach: 0.1,
+            ema_alpha: 0.25,
+            rung_sizes: vec![1, 2, 4, 6, 8, 12, 16, 24, 32, 48, 64],
+            probe_every: 16,
+        }
+    }
+}
+
+/// Per-slot online acceptance statistics.
+#[derive(Debug, Clone)]
+struct SlotStats {
+    /// EMA of accepted tokens per step (the root token counts, so >= 1
+    /// in steady state). Initialized optimistically to the ladder's max
+    /// depth so cold slots start from the largest tree.
+    ema: f64,
+    /// attempts[d]: steps where this slot's tree had depth >= d (d is
+    /// 1-based; index 0/1 unused — the root is always accepted).
+    attempts: Vec<u64>,
+    /// accepts[d]: steps where the acceptance walk reached depth d.
+    accepts: Vec<u64>,
+    /// Steps spent parked below the top rung since the last deep probe
+    /// (re-probing applies at every parked depth, not just the AR rung).
+    since_probe: u64,
+}
+
+impl SlotStats {
+    fn fresh(max_depth: usize) -> SlotStats {
+        SlotStats {
+            ema: max_depth as f64,
+            attempts: vec![0; max_depth + 1],
+            accepts: vec![0; max_depth + 1],
+            since_probe: 0,
+        }
+    }
+
+    /// Acceptance rate at depth `d` with an optimistic +1/+1 prior:
+    /// untested depths look perfect, so the controller explores them.
+    fn rate(&self, d: usize) -> f64 {
+        (self.accepts[d] + 1) as f64 / (self.attempts[d] + 1) as f64
+    }
+}
+
+/// Aggregate controller counters (monotonic over the engine's life).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaptiveTotals {
+    /// Throttle demotions applied (rung downgrades to fit the budget).
+    pub throttled: u64,
+    /// Controller selection passes (== engine decode steps).
+    pub selections: u64,
+}
+
+/// Point-in-time view of the controller for observability frames.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSnapshot {
+    /// Currently selected tree node count per batch slot (stale entries
+    /// for vacant slots — pair with engine occupancy when rendering).
+    pub tree_nodes: Vec<usize>,
+    /// The configured per-step verification budget (0 = unlimited).
+    pub step_token_budget: usize,
+    /// Node counts of the ladder rungs.
+    pub ladder: Vec<usize>,
+    /// Aggregate controller counters.
+    pub totals: AdaptiveTotals,
+}
+
+/// The per-slot adaptive speculation controller. Pure policy: the engine
+/// feeds it acceptance observations ([`Adaptive::observe`]) and asks it
+/// to (re)select per-slot rungs each step ([`Adaptive::select`]).
+#[derive(Debug, Clone)]
+pub struct Adaptive {
+    /// The tree family selection happens over.
+    pub ladder: TreeLadder,
+    /// Tuning knobs (budget, thresholds, smoothing).
+    pub cfg: AdaptiveConfig,
+    /// Current rung choice per batch slot.
+    pub choice: Vec<usize>,
+    slots: Vec<SlotStats>,
+    totals: AdaptiveTotals,
+}
+
+impl Adaptive {
+    /// Controller for `batch` slots over `ladder`, all slots cold.
+    pub fn new(ladder: TreeLadder, cfg: AdaptiveConfig, batch: usize) -> Adaptive {
+        let md = ladder.max_depth();
+        let top = ladder.top();
+        Adaptive {
+            ladder,
+            cfg,
+            choice: vec![top; batch],
+            slots: vec![SlotStats::fresh(md); batch],
+            totals: AdaptiveTotals::default(),
+        }
+    }
+
+    /// Reset slot `i` for a newly admitted request: statistics cleared
+    /// to the optimistic prior, rung chosen from the request's mode
+    /// (the next `select` pass applies the batch throttle).
+    pub fn reset_slot(&mut self, i: usize, mode: SpeculationMode) {
+        self.slots[i] = SlotStats::fresh(self.ladder.max_depth());
+        self.choice[i] = match mode {
+            SpeculationMode::Auto => self.ladder.top(),
+            SpeculationMode::Fixed(n) => self.ladder.rung_for_nodes(n),
+        };
+    }
+
+    /// Feed one step's outcome for slot `i`: the depth of the tree that
+    /// was verified and the length of the accepted path (root included —
+    /// acceptance length == depth reached).
+    pub fn observe(&mut self, i: usize, used_depth: usize, accepted: usize) {
+        let a = self.cfg.ema_alpha;
+        let s = &mut self.slots[i];
+        s.ema = a * accepted as f64 + (1.0 - a) * s.ema;
+        for d in 2..=used_depth.min(s.attempts.len() - 1) {
+            s.attempts[d] += 1;
+            if accepted >= d {
+                s.accepts[d] += 1;
+            }
+        }
+    }
+
+    /// Desired rung for an `auto` slot, before the batch throttle: the
+    /// widest rung whose depth both (a) the per-depth acceptance rates
+    /// say the walk still reaches with probability >= `min_reach`, and
+    /// (b) does not outrun the slot's pace (EMA + 1 level of headroom).
+    fn desired_rung(&mut self, i: usize) -> usize {
+        let top_depth = self.ladder.max_depth();
+        let s = &self.slots[i];
+        // rate(d) already estimates the UNCONDITIONAL frequency of the
+        // walk reaching depth d (accepts[d] counts whole-walk outcomes),
+        // so it is compared to min_reach directly — multiplying rates
+        // across depths would double-count and demote far too early.
+        let mut depth = 1usize;
+        for d in 2..=top_depth {
+            if s.rate(d) < self.cfg.min_reach {
+                break;
+            }
+            depth = d;
+        }
+        let pace = (s.ema + 1.0).ceil() as usize;
+        let target = depth.min(pace.max(2)).clamp(1, top_depth);
+        let mut rung = self.ladder.rung_for_depth(target);
+        // Parked below the top rung: periodically probe one depth deeper
+        // so a sequence that turns easy can climb back up. Necessary at
+        // EVERY parked depth, not just the AR rung — per-depth rates are
+        // only updated at depths the current tree reaches, so without
+        // probing a demotion to depth d could never re-test depth d+1.
+        let s = &mut self.slots[i];
+        if rung < self.ladder.top() {
+            s.since_probe += 1;
+            if s.since_probe >= self.cfg.probe_every {
+                s.since_probe = 0;
+                let deeper = self.ladder.rungs[rung].max_depth() + 1;
+                rung = self.ladder.rung_for_depth(deeper.min(self.ladder.max_depth()));
+            }
+        } else {
+            s.since_probe = 0;
+        }
+        rung
+    }
+
+    /// One selection pass over the batch. `modes[i]` is the speculation
+    /// mode of the active request in slot `i`, `None` for vacant/done
+    /// slots (their choice is left untouched and does not count toward
+    /// the budget). Deterministic: same statistics in, same choices out.
+    pub fn select(&mut self, modes: &[Option<SpeculationMode>]) {
+        self.totals.selections += 1;
+        for (i, m) in modes.iter().enumerate() {
+            let Some(mode) = m else { continue };
+            self.choice[i] = match mode {
+                SpeculationMode::Fixed(n) => self.ladder.rung_for_nodes(*n),
+                SpeculationMode::Auto => self.desired_rung(i),
+            };
+        }
+        // Batch-aware throttle: shrink the largest auto tree (ties:
+        // lowest slot index) until the batch fits the budget. Fixed
+        // slots count toward the total but are never demoted.
+        let budget = self.cfg.step_token_budget;
+        if budget == 0 {
+            return;
+        }
+        let mut total: usize = modes
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.is_some())
+            .map(|(i, _)| self.ladder.nodes_of(self.choice[i]))
+            .sum();
+        while total > budget {
+            let mut best: Option<(usize, usize)> = None; // (nodes, slot)
+            for (i, m) in modes.iter().enumerate() {
+                if matches!(m, Some(SpeculationMode::Auto)) && self.choice[i] > 0 {
+                    let n = self.ladder.nodes_of(self.choice[i]);
+                    if best.map_or(true, |(bn, _)| n > bn) {
+                        best = Some((n, i));
+                    }
+                }
+            }
+            let Some((n, i)) = best else { break };
+            self.choice[i] -= 1;
+            total -= n - self.ladder.nodes_of(self.choice[i]);
+            self.totals.throttled += 1;
+        }
+    }
+
+    /// Currently selected node count per slot.
+    pub fn tree_nodes(&self) -> Vec<usize> {
+        self.choice.iter().map(|&r| self.ladder.nodes_of(r)).collect()
+    }
+
+    /// Current EMA of accepted tokens per step for slot `i` (tests and
+    /// observability).
+    pub fn ema_accept(&self, i: usize) -> f64 {
+        self.slots[i].ema
+    }
+
+    /// Observability snapshot for the server's `{"op":"stats"}` frame.
+    pub fn snapshot(&self) -> AdaptiveSnapshot {
+        AdaptiveSnapshot {
+            tree_nodes: self.tree_nodes(),
+            step_token_budget: self.cfg.step_token_budget,
+            ladder: self.ladder.rungs.iter().map(|t| t.len()).collect(),
+            totals: self.totals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn ladder32() -> TreeLadder {
+        TreeLadder::from_tree(&TreeTopology::default_tree(32), &AdaptiveConfig::default().rung_sizes)
+    }
+
+    #[test]
+    fn ladder_is_strictly_increasing_and_bounded() {
+        let full = TreeTopology::default_tree(32);
+        let l = TreeLadder::from_tree(&full, &[1, 2, 4, 8, 16, 64, 0]);
+        assert_eq!(l.nodes_of(0), 1);
+        assert_eq!(l.nodes_of(l.top()), full.len());
+        for w in l.rungs.windows(2) {
+            assert!(w[0].len() < w[1].len(), "ladder must strictly increase");
+        }
+        // Every rung is a canonical-prefix subtree of the full tree.
+        for r in &l.rungs {
+            assert_eq!(r.paths[..], full.paths[..r.len() - 1]);
+        }
+    }
+
+    #[test]
+    fn ladder_rung_selectors() {
+        let l = ladder32();
+        assert_eq!(l.nodes_of(l.rung_for_nodes(0)), 1);
+        assert_eq!(l.nodes_of(l.rung_for_nodes(1)), 1);
+        for n in [2usize, 5, 9, 100] {
+            assert!(l.nodes_of(l.rung_for_nodes(n)) <= n.max(1));
+        }
+        assert_eq!(l.rung_for_nodes(usize::MAX), l.top());
+        assert_eq!(l.rungs[l.rung_for_depth(1)].max_depth(), 1);
+        for d in 2..=l.max_depth() {
+            assert!(l.rungs[l.rung_for_depth(d)].max_depth() <= d);
+        }
+        assert_eq!(l.rung_for_depth(99), l.top());
+    }
+
+    #[test]
+    fn cold_auto_slot_starts_at_the_top() {
+        let mut a = Adaptive::new(ladder32(), AdaptiveConfig::default(), 4);
+        a.select(&[Some(SpeculationMode::Auto), None, None, None]);
+        assert_eq!(a.choice[0], a.ladder.top(), "optimistic prior must pick the full tree");
+        // Vacant slots are untouched.
+        assert_eq!(a.choice[1], a.ladder.top());
+    }
+
+    #[test]
+    fn fixed_mode_pins_the_rung() {
+        let mut a = Adaptive::new(ladder32(), AdaptiveConfig::default(), 2);
+        let modes = [Some(SpeculationMode::Fixed(1)), Some(SpeculationMode::Fixed(6))];
+        a.select(&modes);
+        assert_eq!(a.ladder.nodes_of(a.choice[0]), 1, "fixed(1) is pure AR");
+        assert!(a.ladder.nodes_of(a.choice[1]) <= 6);
+        // Fixed choices survive arbitrary observations.
+        for _ in 0..50 {
+            a.observe(0, 1, 1);
+            a.observe(1, 4, 1);
+            a.select(&modes);
+        }
+        assert_eq!(a.ladder.nodes_of(a.choice[0]), 1);
+        assert!(a.ladder.nodes_of(a.choice[1]) <= 6);
+    }
+
+    #[test]
+    fn poor_acceptance_shrinks_the_tree() {
+        let mut a = Adaptive::new(ladder32(), AdaptiveConfig::default(), 1);
+        let modes = [Some(SpeculationMode::Auto)];
+        a.select(&modes);
+        let start = a.ladder.nodes_of(a.choice[0]);
+        // Hard sequence: only the root is ever accepted.
+        for _ in 0..40 {
+            let used = a.ladder.rungs[a.choice[0]].max_depth();
+            a.observe(0, used, 1);
+            a.select(&modes);
+        }
+        let end = a.ladder.nodes_of(a.choice[0]);
+        assert!(end < start, "tree must shrink under rejection: {start} -> {end}");
+        assert!(a.ema_accept(0) < 1.5, "EMA must converge toward 1");
+    }
+
+    #[test]
+    fn good_acceptance_keeps_or_recovers_depth() {
+        let cfg = AdaptiveConfig { probe_every: 4, ..AdaptiveConfig::default() };
+        let mut a = Adaptive::new(ladder32(), cfg, 1);
+        let modes = [Some(SpeculationMode::Auto)];
+        // Force the slot down first (a probe step may be in flight, so
+        // assert "near the bottom" rather than exactly 1 node).
+        for _ in 0..60 {
+            let used = a.ladder.rungs[a.choice[0]].max_depth();
+            a.observe(0, used, 1);
+            a.select(&modes);
+        }
+        assert!(
+            a.ladder.rungs[a.choice[0]].max_depth() <= 2,
+            "hard sequence must be parked at the bottom of the ladder"
+        );
+        // The sequence turns easy: every probe fully accepts. The slot
+        // must climb back off the AR rung.
+        let mut climbed = false;
+        for _ in 0..200 {
+            let used = a.ladder.rungs[a.choice[0]].max_depth();
+            a.observe(0, used, used);
+            a.select(&modes);
+            if a.ladder.nodes_of(a.choice[0]) > 1 {
+                climbed = true;
+            }
+        }
+        assert!(climbed, "probe steps must let an easy sequence recover depth");
+        assert!(
+            a.ladder.rungs[a.choice[0]].max_depth() >= 2,
+            "recovered slot should hold depth >= 2"
+        );
+    }
+
+    #[test]
+    fn throttle_fits_the_budget_and_spares_fixed_slots() {
+        let ladder = ladder32();
+        let full = ladder.nodes_of(ladder.top());
+        let budget = full + 6; // room for one full tree plus change
+        let cfg = AdaptiveConfig { step_token_budget: budget, ..AdaptiveConfig::default() };
+        let mut a = Adaptive::new(ladder, cfg, 4);
+        let modes = [
+            Some(SpeculationMode::Auto),
+            Some(SpeculationMode::Auto),
+            Some(SpeculationMode::Fixed(4)),
+            Some(SpeculationMode::Auto),
+        ];
+        a.select(&modes);
+        let total: usize = (0..4).map(|i| a.ladder.nodes_of(a.choice[i])).sum();
+        assert!(total <= budget, "throttle must fit the budget: {total} > {budget}");
+        assert!(
+            a.ladder.nodes_of(a.choice[2]) > 1 && a.ladder.nodes_of(a.choice[2]) <= 4,
+            "fixed slot must keep its rung"
+        );
+        assert!(a.snapshot().totals.throttled > 0);
+    }
+
+    #[test]
+    fn throttle_off_leaves_choices_alone() {
+        let mut a = Adaptive::new(ladder32(), AdaptiveConfig::default(), 8);
+        let modes: Vec<_> = (0..8).map(|_| Some(SpeculationMode::Auto)).collect();
+        a.select(&modes);
+        for i in 0..8 {
+            assert_eq!(a.choice[i], a.ladder.top(), "no budget -> every cold slot at the top");
+        }
+    }
+
+    #[test]
+    fn reset_slot_restores_optimism() {
+        let mut a = Adaptive::new(ladder32(), AdaptiveConfig::default(), 1);
+        let modes = [Some(SpeculationMode::Auto)];
+        for _ in 0..40 {
+            let used = a.ladder.rungs[a.choice[0]].max_depth();
+            a.observe(0, used, 1);
+            a.select(&modes);
+        }
+        assert!(a.ladder.nodes_of(a.choice[0]) < a.ladder.nodes_of(a.ladder.top()));
+        a.reset_slot(0, SpeculationMode::Auto);
+        a.select(&modes);
+        assert_eq!(a.choice[0], a.ladder.top(), "a new occupant must start cold/optimistic");
+    }
+
+    #[test]
+    fn speculation_mode_display() {
+        assert_eq!(SpeculationMode::Auto.to_string(), "auto");
+        assert_eq!(SpeculationMode::Fixed(3).to_string(), "fixed(3)");
+    }
+
+    #[test]
+    fn speculation_mode_parse_shared_by_cli_and_proto() {
+        assert_eq!(SpeculationMode::parse("auto"), Ok(SpeculationMode::Auto));
+        assert_eq!(SpeculationMode::parse("1"), Ok(SpeculationMode::Fixed(1)));
+        assert_eq!(SpeculationMode::parse("1024"), Ok(SpeculationMode::Fixed(1024)));
+        for bad in ["0", "1025", "-2", "2.5", "fast", ""] {
+            assert!(SpeculationMode::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn parked_slot_reprobes_one_depth_deeper() {
+        // A slot stuck at an INTERMEDIATE depth (not just the AR rung)
+        // must periodically re-test the next depth, otherwise its
+        // per-depth rates freeze and it can never climb back.
+        let cfg = AdaptiveConfig { probe_every: 3, ..AdaptiveConfig::default() };
+        let mut a = Adaptive::new(ladder32(), cfg, 1);
+        let modes = [Some(SpeculationMode::Auto)];
+        // Accept exactly 2/step: the slot settles around depth 2-3.
+        for _ in 0..40 {
+            let used = a.ladder.rungs[a.choice[0]].max_depth();
+            a.observe(0, used, 2.min(used));
+            a.select(&modes);
+        }
+        let settled = a.ladder.rungs[a.choice[0]].max_depth();
+        assert!(settled < a.ladder.max_depth(), "must be parked below the top");
+        // Now the sequence turns perfectly easy: probes must carry the
+        // slot strictly deeper than where it settled.
+        let mut deepest = settled;
+        for _ in 0..100 {
+            let used = a.ladder.rungs[a.choice[0]].max_depth();
+            a.observe(0, used, used);
+            a.select(&modes);
+            deepest = deepest.max(a.ladder.rungs[a.choice[0]].max_depth());
+        }
+        assert!(
+            deepest > settled,
+            "re-probing must let an easy sequence climb past depth {settled}"
+        );
+    }
+
+    #[test]
+    fn prop_throttle_never_exceeds_feasible_budget() {
+        prop::check("adaptive-throttle", 150, |rng| {
+            let full = TreeTopology::default_tree(rng.range(1, 40));
+            let ladder = TreeLadder::from_tree(&full, &[1, 2, 4, 8, 16, 24]);
+            let batch = rng.range(1, 10);
+            let active: Vec<Option<SpeculationMode>> = (0..batch)
+                .map(|_| {
+                    if rng.f64() < 0.2 {
+                        None
+                    } else if rng.f64() < 0.25 {
+                        Some(SpeculationMode::Fixed(rng.range(1, 8)))
+                    } else {
+                        Some(SpeculationMode::Auto)
+                    }
+                })
+                .collect();
+            let n_active = active.iter().filter(|m| m.is_some()).count();
+            // Feasible budget: every active slot can shrink to >= 1 node,
+            // but fixed slots stop at their pinned size.
+            let fixed_floor: usize = active
+                .iter()
+                .filter_map(|m| match m {
+                    Some(SpeculationMode::Fixed(n)) => {
+                        Some(ladder.nodes_of(ladder.rung_for_nodes(*n)))
+                    }
+                    _ => None,
+                })
+                .sum();
+            let auto_count = active
+                .iter()
+                .filter(|m| matches!(m, Some(SpeculationMode::Auto)))
+                .count();
+            let budget = fixed_floor + auto_count + rng.range(0, 16);
+            let cfg = AdaptiveConfig { step_token_budget: budget, ..AdaptiveConfig::default() };
+            let mut a = Adaptive::new(ladder, cfg, batch);
+            // Random warm-up observations.
+            for _ in 0..rng.range(0, 30) {
+                let i = rng.below(batch);
+                let used = a.ladder.rungs[a.choice[i]].max_depth();
+                let acc = rng.range(1, used + 1);
+                a.observe(i, used, acc);
+                a.select(&active);
+            }
+            a.select(&active);
+            let total: usize = active
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.is_some())
+                .map(|(i, _)| a.ladder.nodes_of(a.choice[i]))
+                .sum();
+            prop_assert!(
+                total <= budget,
+                "throttled total {total} exceeds feasible budget {budget} ({n_active} active)"
+            );
+            Ok(())
+        });
+    }
+}

@@ -19,11 +19,18 @@ use crate::tree::TreeTopology;
 use crate::util::json::Json;
 use crate::workload::{self, EvalPrompt};
 
+/// Shared state every bench binary opens once: runtime, tokenizer,
+/// eval prompts and corpus windows.
 pub struct BenchCtx {
+    /// The PJRT runtime over the built artifacts.
     pub rt: Runtime,
+    /// Tokenizer loaded from the artifacts.
     pub tok: Tokenizer,
+    /// Eval prompts (MT-Bench-sim / SpecBench-sim).
     pub prompts: Vec<EvalPrompt>,
+    /// Tokenized held-out corpus windows.
     pub windows: Vec<Vec<u32>>,
+    /// HYDRA_BENCH_QUICK=1 — shrink workloads ~4x.
     pub quick: bool,
 }
 
@@ -39,6 +46,7 @@ impl BenchCtx {
         Ok(BenchCtx { rt, tok, prompts, windows, quick })
     }
 
+    /// Scale a workload size down ~4x in quick mode.
     pub fn scale(&self, n: usize) -> usize {
         if self.quick {
             (n / 4).max(2)
@@ -47,23 +55,33 @@ impl BenchCtx {
         }
     }
 
+    /// The model sizes present in the artifacts.
     pub fn sizes(&self) -> Vec<String> {
         self.rt.manifest.sizes.keys().cloned().collect()
     }
 
+    /// Is this (size, variant) built?
     pub fn has_variant(&self, size: &str, variant: &str) -> bool {
         crate::draft::available(&self.rt.manifest, size, variant)
     }
 }
 
+/// One decoding benchmark configuration.
 #[derive(Debug, Clone)]
 pub struct DecodeBenchCfg {
+    /// Model size key.
     pub size: String,
+    /// Decoding strategy/head variant.
     pub variant: String,
+    /// Engine batch size (AOT bucket).
     pub batch: usize,
+    /// Acceptance mode applied to every request.
     pub mode: AcceptMode,
+    /// Draft tree (None = the tuned/default tree for the config).
     pub tree: Option<TreeTopology>,
+    /// Generation budget per prompt.
     pub gen_tokens: usize,
+    /// Number of prompts driven through the scheduler.
     pub n_prompts: usize,
 }
 
@@ -140,6 +158,7 @@ pub fn run_decode_bench_full(
         if let Some(stats) = sched.tick(&mut engine)? {
             m.step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             m.tokens_generated += stats.tokens_committed;
+            m.spec_tokens_verified += stats.spec_tokens;
             m.steps += 1;
         }
         outputs.extend(engine.take_outputs());
@@ -165,13 +184,18 @@ pub fn run_decode_bench_full(
 // Output helpers
 // ---------------------------------------------------------------------------
 
+/// Minimal aligned-text table for bench output.
 pub struct Table {
+    /// Table title.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -180,10 +204,12 @@ impl Table {
         }
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: Vec<String>) {
         self.rows.push(cells);
     }
 
+    /// Print the table with aligned columns.
     pub fn print(&self) {
         println!("\n== {} ==", self.title);
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -230,10 +256,12 @@ pub fn save_result(bench: &str, result: Json) -> Result<()> {
     Ok(())
 }
 
+/// Format with 2 decimal places.
 pub fn fmt2(x: f64) -> String {
     format!("{x:.2}")
 }
 
+/// Format with 1 decimal place.
 pub fn fmt1(x: f64) -> String {
     format!("{x:.1}")
 }

@@ -10,22 +10,33 @@
 
 use anyhow::{bail, Result};
 
+/// Occupancy state of one batch row.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotState {
+    /// No sequence occupies the row.
     Free,
-    Occupied { len: usize },
+    /// A sequence with `len` committed KV rows occupies it.
+    Occupied {
+        /// Committed KV rows (prompt + generated tokens).
+        len: usize,
+    },
 }
 
+/// Batch-row ledger: who occupies each slot and how many KV rows are
+/// committed. The engine's single source of truth for slot lengths.
 #[derive(Debug, Clone)]
 pub struct SlotPool {
     slots: Vec<SlotState>,
+    /// Per-slot KV capacity (the model's sequence limit).
     pub seq_max: usize,
-    /// High-water marks for observability.
+    /// High-water mark of simultaneously occupied slots.
     pub peak_occupancy: usize,
+    /// Total allocations over the pool's lifetime.
     pub total_allocs: u64,
 }
 
 impl SlotPool {
+    /// A pool of `n` free slots with capacity `seq_max` each.
     pub fn new(n: usize, seq_max: usize) -> SlotPool {
         SlotPool {
             slots: vec![SlotState::Free; n],
@@ -35,18 +46,22 @@ impl SlotPool {
         }
     }
 
+    /// Total number of slots (free + occupied).
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// Whether the pool has zero slots.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }
 
+    /// Currently occupied slots.
     pub fn occupancy(&self) -> usize {
         self.slots.iter().filter(|s| !matches!(s, SlotState::Free)).count()
     }
 
+    /// Currently free slots.
     pub fn free_count(&self) -> usize {
         self.len() - self.occupancy()
     }
@@ -68,6 +83,7 @@ impl SlotPool {
         bail!("no free slots")
     }
 
+    /// Release a slot; double frees are errors.
     pub fn free(&mut self, slot: usize) -> Result<()> {
         match self.slots.get(slot) {
             Some(SlotState::Occupied { .. }) => {
@@ -93,6 +109,7 @@ impl SlotPool {
         }
     }
 
+    /// Committed length of an occupied slot (None when free/out of range).
     pub fn slot_len(&self, slot: usize) -> Option<usize> {
         match self.slots.get(slot) {
             Some(SlotState::Occupied { len }) => Some(*len),

@@ -10,6 +10,7 @@ use crate::tree::TreeTopology;
 use crate::util::rng::Pcg32;
 use crate::util::stats::{argmax, entropy, log_softmax_at, softmax};
 
+/// Verification criterion for speculated tokens and root sampling.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AcceptMode {
     /// Accept a child iff its token is the base model's greedy prediction
@@ -21,6 +22,7 @@ pub enum AcceptMode {
     Typical { eps: f32, alpha: f32, temp: f32 },
 }
 
+/// One slot's acceptance outcome for a decode step.
 #[derive(Debug, Clone)]
 pub struct StepDecision {
     /// Accepted nodes, root-first (always starts with node 0).

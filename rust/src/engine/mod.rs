@@ -14,10 +14,18 @@
 //!
 //! The engine runs a fixed batch of B slots (B = an AOT batch bucket);
 //! the scheduler refills vacant slots between steps (continuous batching).
+//!
+//! With [`Engine::enable_adaptive`], the draft tree is no longer a single
+//! compile-time choice: an [`adaptive`](crate::adaptive) controller picks
+//! each slot's tree each step from a precomputed ladder of shapes (driven
+//! by per-slot acceptance statistics and a batch-wide verification
+//! budget), and this module threads the per-slot topologies through
+//! drafting, verification masks, acceptance and commit.
 
 pub mod accept;
 pub mod seq;
 
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
@@ -26,6 +34,9 @@ use anyhow::{bail, Context, Result};
 pub use accept::{AcceptMode, StepDecision};
 pub use seq::{FinishReason, Request, SamplingParams, SeqEvent, SeqOutput, Slot};
 
+pub use crate::adaptive::SpeculationMode;
+
+use crate::adaptive::{Adaptive, AdaptiveConfig, AdaptiveSnapshot, TreeLadder};
 use crate::cache::SlotPool;
 use crate::model::{Manifest, ModelDims};
 use crate::prefixcache::{CacheStats, EndSnapshot, PrefixCache, RestoredPrefix};
@@ -45,11 +56,15 @@ pub const CHAIN_TAIL_MAX: usize = 32;
 /// per slot — one batch can mix greedy and typical sequences.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Model size key from the manifest ("s", "m", ...).
     pub size: String,
     /// "ar" for the autoregressive baseline, otherwise a head-variant name
     /// from the manifest ("medusa", "hydra", "hydra_pp", "eagle", ...).
     pub variant: String,
+    /// The draft tree — verified for every slot on a static engine; the
+    /// top rung of the adaptive ladder under `enable_adaptive`.
     pub tree: TreeTopology,
+    /// Batch size (must be an AOT batch bucket).
     pub batch: usize,
     /// Base seed; requests without an explicit `SamplingParams::seed` get a
     /// deterministic per-request RNG stream derived from this and their id.
@@ -67,33 +82,74 @@ enum DraftArch {
 /// Per-phase wall-clock accumulators (Table 1 + §Perf profiling).
 #[derive(Debug, Default, Clone)]
 pub struct PhaseTimes {
+    /// Total draft-expansion time.
     pub draft: Duration,
     /// Draft time split per head index (1-based; [0] unused).
     pub draft_per_head: [Duration; 8],
+    /// Hydra++ prefix-attention / EAGLE draft-cache-extension time.
     pub prefix_attn: Duration,
+    /// Base-model tree-verification time.
     pub verify: Duration,
+    /// Host-side acceptance-walk time.
     pub accept: Duration,
+    /// KV commit time (device scatter or deferred-gather bookkeeping).
     pub commit: Duration,
+    /// Decode steps executed.
     pub steps: u64,
     /// Number of `prefill_*` artifact invocations — the prefix cache's
     /// headline savings metric (a fully warm admission batch skips one).
     pub prefill_calls: u64,
 }
 
+/// Aggregate speculation counters over the engine's lifetime (decode
+/// steps only; prefill/chain-extension tokens are not speculation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecTotals {
+    /// Draft-tree nodes scored by verify calls.
+    pub nodes_verified: u64,
+    /// Tokens committed by the acceptance walk.
+    pub tokens_committed: u64,
+    /// Verified nodes the acceptance walk rejected — the speculation
+    /// FLOPs the adaptive controller exists to reclaim. (Walk-accepted
+    /// tokens clipped by a sequence's generation budget are counted
+    /// neither here nor in `tokens_committed`.)
+    pub wasted: u64,
+}
+
+impl SpecTotals {
+    /// Fraction of verified nodes that became committed tokens.
+    pub fn efficiency(&self) -> f64 {
+        if self.nodes_verified == 0 {
+            return 0.0;
+        }
+        self.tokens_committed as f64 / self.nodes_verified as f64
+    }
+}
+
+/// Outcome of one engine decode step.
 #[derive(Debug, Clone, Default)]
 pub struct StepStats {
+    /// Tokens committed across all active slots this step.
     pub tokens_committed: usize,
+    /// Slots that participated in the step.
     pub active_slots: usize,
+    /// Draft-tree nodes verified this step (Σ per-slot tree sizes).
+    pub spec_tokens: usize,
+    /// Wall-clock duration of the step.
     pub wall: Duration,
 }
 
+/// The speculative decoding engine: a fixed batch of slots decoded in
+/// lockstep through draft → verify → accept → commit steps.
 pub struct Engine<'rt> {
     rt: &'rt Runtime,
+    /// The engine's serving configuration.
     pub cfg: EngineConfig,
     arch: DraftArch,
     dims: ModelDims,
     base_w: Rc<WeightSet>,
     head_w: Option<Rc<WeightSet>>,
+    /// Per-sequence slot state, one entry per batch row.
     pub slots: Vec<Slot>,
     /// Slot occupancy/length ledger — the single source of truth for how
     /// many KV rows of each batch row are committed (`seq.rs::Slot` holds
@@ -107,10 +163,25 @@ pub struct Engine<'rt> {
     pkv: Option<HostTensor>,
     /// EAGLE draft-layer cache [B, 2, S, KVD].
     ekv: Option<HostTensor>,
+    /// Per-phase wall-clock accumulators.
     pub phase: PhaseTimes,
+    /// Lifetime speculation counters (verified/committed/wasted nodes).
+    pub spec: SpecTotals,
     // Precomputed per-tree constants.
     t_bucket: usize,
     anc_mask: Vec<i32>,
+    /// `cfg.tree` behind an Rc so per-step slot-tree selection hands out
+    /// handles instead of deep topology clones.
+    static_tree: Rc<TreeTopology>,
+    /// Adaptive speculation controller (`enable_adaptive`): per-slot
+    /// dynamic tree selection over a ladder of shapes + batch throttle.
+    adaptive: Option<Adaptive>,
+    /// Padded ancestor masks cached per (ladder rung, tree bucket) —
+    /// adaptive steps pick the smallest AOT bucket that fits the largest
+    /// selected tree, so the verify call itself shrinks with the batch
+    /// throttle (cached for every bucket a rung fits in).
+    rung_masks: HashMap<(usize, usize), Vec<i32>>,
+    /// Retired sequence summaries (non-event mode; see `take_outputs`).
     pub outputs: Vec<SeqOutput>,
     /// Incremental per-sequence events (`enable_events`): token deltas per
     /// step plus a terminal `Finished`. When enabled, finished sequences go
@@ -134,6 +205,10 @@ pub struct Engine<'rt> {
 
 /// Uncommitted acceptance from the previous fused step.
 struct PendingCommit {
+    /// Tree bucket the tensors are shaped for — a later step running a
+    /// different bucket must materialize this host-side instead of
+    /// passing it into its (differently shaped) fused call.
+    bucket: usize,
     tree_kv: HostTensor,
     hidden: HostTensor,
     accept_idx: HostTensor,
@@ -141,6 +216,7 @@ struct PendingCommit {
     commit_base: HostTensor,
 }
 
+/// §4 tree-search probe accumulators (see `Engine::enable_probe`).
 #[derive(Debug, Clone, Default)]
 pub struct ProbeState {
     /// Draft head logits per (slot, node): the distribution the head would
@@ -151,10 +227,12 @@ pub struct ProbeState {
     pub gains: Vec<u64>,
     /// stops[node]: # steps where the acceptance walk ended at this node.
     pub stops: Vec<u64>,
+    /// Probed decode steps.
     pub steps: u64,
 }
 
 impl ProbeState {
+    /// Zeroed accumulators for a `batch` × `tree_len` probe.
     pub fn new(batch: usize, tree_len: usize) -> ProbeState {
         ProbeState {
             head_logits: vec![vec![None; tree_len]; batch],
@@ -166,6 +244,8 @@ impl ProbeState {
 }
 
 impl<'rt> Engine<'rt> {
+    /// Build an engine for one (size, variant, tree, batch) serving
+    /// configuration, validating it against the AOT artifact buckets.
     pub fn new(rt: &'rt Runtime, cfg: EngineConfig) -> Result<Engine<'rt>> {
         let m = &rt.manifest;
         let dims = m.dims(&cfg.size)?.clone();
@@ -224,8 +304,12 @@ impl<'rt> Engine<'rt> {
             pkv,
             ekv,
             phase: PhaseTimes::default(),
+            spec: SpecTotals::default(),
             t_bucket,
             anc_mask,
+            static_tree: Rc::new(cfg.tree.clone()),
+            adaptive: None,
+            rung_masks: HashMap::new(),
             outputs: Vec::new(),
             events: Vec::new(),
             emit_events: false,
@@ -236,13 +320,84 @@ impl<'rt> Engine<'rt> {
         })
     }
 
+    /// The runtime's artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.rt.manifest
     }
 
-    /// Enable §4 tree-search probing (see `ProbeState`).
-    pub fn enable_probe(&mut self) {
+    /// Enable §4 tree-search probing (see `ProbeState`). Mutually
+    /// exclusive with adaptive speculation (same recoverable-error
+    /// contract as `enable_adaptive`): probe statistics are indexed by
+    /// the static tree's nodes.
+    pub fn enable_probe(&mut self) -> Result<()> {
+        if self.adaptive.is_some() {
+            bail!("tree-search probing and adaptive speculation are mutually exclusive");
+        }
         self.probe = Some(ProbeState::new(self.cfg.batch, self.cfg.tree.len()));
+        Ok(())
+    }
+
+    /// Turn on adaptive speculation: per-slot dynamic draft trees chosen
+    /// each step from a ladder of prefix-truncations of the configured
+    /// tree, plus the batch-aware verification throttle.
+    ///
+    /// `AdaptiveConfig::step_token_budget == 0` (the config default) is
+    /// resolved here to [`Engine::default_spec_budget`] — every entry
+    /// point (CLI, server, benches) gets the batch-aware throttle unless
+    /// it explicitly picks a budget; pass `usize::MAX` to disable the
+    /// throttle outright.
+    ///
+    /// Per-request policy rides on `SamplingParams::speculation`
+    /// (`auto` | `fixed(k)`). Under greedy acceptance the selected tree
+    /// shape never changes output, only speed.
+    pub fn enable_adaptive(&mut self, mut cfg: AdaptiveConfig) -> Result<()> {
+        if self.probe.is_some() {
+            bail!("adaptive speculation and tree-search probing are mutually exclusive");
+        }
+        if cfg.step_token_budget == 0 {
+            cfg.step_token_budget = self.default_spec_budget();
+        }
+        let ladder = TreeLadder::from_tree(&self.cfg.tree, &cfg.rung_sizes);
+        // Ancestor masks per (rung, bucket): an adaptive step runs the
+        // smallest AOT tree bucket that holds the largest selected tree,
+        // so every rung needs a mask padded to every bucket it fits in.
+        let buckets: Vec<usize> = self
+            .rt
+            .manifest
+            .tree_buckets
+            .iter()
+            .copied()
+            .filter(|&x| x <= self.t_bucket)
+            .collect();
+        self.rung_masks = HashMap::new();
+        for (r, rung) in ladder.rungs.iter().enumerate() {
+            for &tbx in &buckets {
+                if rung.len() <= tbx {
+                    self.rung_masks.insert((r, tbx), padded_anc_mask(rung, tbx));
+                }
+            }
+        }
+        self.adaptive = Some(Adaptive::new(ladder, cfg, self.cfg.batch));
+        Ok(())
+    }
+
+    /// Whether the adaptive speculation controller is running.
+    pub fn adaptive_enabled(&self) -> bool {
+        self.adaptive.is_some()
+    }
+
+    /// Controller observability snapshot (None on static engines).
+    pub fn adaptive_snapshot(&self) -> Option<AdaptiveSnapshot> {
+        self.adaptive.as_ref().map(|a| a.snapshot())
+    }
+
+    /// The batch-aware default for the adaptive verification budget: two
+    /// tree buckets' worth of nodes, or two nodes per slot, whichever is
+    /// larger. At batch 1 this admits the full tree; as the batch fills
+    /// it forces the per-slot average down — the §6.2 compute-saturation
+    /// trade the throttle encodes.
+    pub fn default_spec_budget(&self) -> usize {
+        (2 * self.t_bucket).max(2 * self.cfg.batch)
     }
 
     /// Enable incremental event emission (streaming sessions): every step
@@ -253,22 +408,27 @@ impl<'rt> Engine<'rt> {
         self.emit_events = true;
     }
 
+    /// Drain the pending per-sequence events (event mode only).
     pub fn take_events(&mut self) -> Vec<SeqEvent> {
         std::mem::take(&mut self.events)
     }
 
+    /// The PJRT runtime this engine executes on.
     pub fn runtime(&self) -> &Runtime {
         self.rt
     }
 
+    /// Whether at least one batch slot is free.
     pub fn has_vacancy(&self) -> bool {
         self.pool.free_count() > 0
     }
 
+    /// Number of free batch slots.
     pub fn vacancy_count(&self) -> usize {
         self.pool.free_count()
     }
 
+    /// Number of slots hosting a still-decoding sequence.
     pub fn active_count(&self) -> usize {
         self.slots.iter().filter(|s| s.active && !s.done).count()
     }
@@ -293,6 +453,7 @@ impl<'rt> Engine<'rt> {
         ));
     }
 
+    /// Prefix-cache counters (None when the cache is off).
     pub fn prefix_cache_stats(&self) -> Option<CacheStats> {
         self.pcache.as_ref().map(|pc| pc.stats())
     }
@@ -301,6 +462,10 @@ impl<'rt> Engine<'rt> {
     // Admission — prefix-cache lookup, restore, prefill, tail extension.
     // ---------------------------------------------------------------------
 
+    /// Admit new requests into vacant slots: prefix-cache lookup/restore,
+    /// a batched cold-row prefill, chain-mode tail extension for partial
+    /// hits, and per-slot state initialization (params, RNG, adaptive
+    /// speculation statistics).
     pub fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
         if reqs.is_empty() {
             return Ok(());
@@ -366,10 +531,21 @@ impl<'rt> Engine<'rt> {
             // Per-slot RNG: an explicit seed reproduces the sequence exactly;
             // otherwise derive a request-unique stream from the engine seed,
             // so batch composition never perturbs a neighbour's sampling.
+            // (Caveat on ADAPTIVE engines: the shared batch throttle can
+            // size a typical-mode slot's tree differently under different
+            // co-batched load, changing its candidate sets and RNG
+            // consumption — seeded typical runs are only reproducible
+            // under identical batch composition or `speculation: fixed(k)`.
+            // Greedy output is tree-shape-invariant and always exact.)
             let rng = match params.seed {
                 Some(sd) => Pcg32::new(sd),
                 None => Pcg32::with_stream(self.cfg.seed, req.id),
             };
+            // A fresh occupant starts the adaptive controller cold: the
+            // optimistic prior (or its pinned fixed rung).
+            if let Some(ad) = &mut self.adaptive {
+                ad.reset_slot(i, params.speculation);
+            }
             let slot = &mut self.slots[i];
             *slot = Slot::vacant();
             slot.active = true;
@@ -715,9 +891,11 @@ impl<'rt> Engine<'rt> {
     fn materialize_pending_row(&mut self, i: usize) {
         let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
         let s = self.rt.manifest.seq_max;
-        let tb = self.t_bucket;
         let a = self.rt.manifest.accept_max;
         let Some(p) = self.pending.as_mut() else { return };
+        // Index the tree rows with the bucket the pending tensors were
+        // shaped for (adaptive steps vary the bucket).
+        let tb = p.bucket;
         let n = p.accept_len.i32s()[i] as usize;
         if n == 0 {
             return;
@@ -741,11 +919,13 @@ impl<'rt> Engine<'rt> {
     // One speculative decoding step over all active slots.
     // ---------------------------------------------------------------------
 
+    /// One speculative decoding step over all active slots: adaptive tree
+    /// selection (when enabled), draft expansion, batched tree
+    /// verification, per-slot acceptance, KV commit, draft-state update,
+    /// and retirement of finished sequences.
     pub fn step(&mut self) -> Result<StepStats> {
         let wall0 = Instant::now();
         let b = self.cfg.batch;
-        let t = self.cfg.tree.len();
-        let tb = self.t_bucket;
         let s = self.rt.manifest.seq_max;
         let v = self.rt.manifest.vocab;
         let d = self.dims.d_model;
@@ -755,41 +935,108 @@ impl<'rt> Engine<'rt> {
             bail!("step() with no active slots");
         }
 
+        // -- 0. adaptive tree selection ------------------------------------
+        // The controller re-picks each active slot's ladder rung from its
+        // acceptance statistics, then the batch throttle shrinks the
+        // largest `auto` trees until the step fits the token budget.
+        if let Some(ad) = &mut self.adaptive {
+            let modes: Vec<Option<SpeculationMode>> = self
+                .slots
+                .iter()
+                .map(|sl| (sl.active && !sl.done).then(|| sl.params.speculation))
+                .collect();
+            ad.select(&modes);
+        }
+        // Per-slot topology for this step (Rc handles — no deep clones on
+        // the hot loop). Static engines use the configured tree for every
+        // slot; under greedy acceptance the shape only changes speed,
+        // never output.
+        let step_trees: Vec<Rc<TreeTopology>> = (0..b)
+            .map(|i| match &self.adaptive {
+                Some(ad) => Rc::clone(&ad.ladder.rungs[ad.choice[i]]),
+                None => Rc::clone(&self.static_tree),
+            })
+            .collect();
+        // The step's tree bucket: on adaptive engines, the smallest AOT
+        // bucket holding the largest selected tree — when the throttle
+        // shrinks everyone, the verify call itself gets cheaper, not just
+        // the node bookkeeping. Buckets whose verify/commit artifacts were
+        // not built fall back to the engine's static bucket (which the
+        // static path has always required). `tree_bucket` cannot fail:
+        // every selected tree is a subtree of cfg.tree, whose bucket was
+        // validated at engine init.
+        let tb = match &self.adaptive {
+            None => self.t_bucket,
+            Some(_) => {
+                let t_need = (0..b)
+                    .filter(|&i| self.slots[i].active && !self.slots[i].done)
+                    .map(|i| step_trees[i].len())
+                    .max()
+                    .unwrap_or(1);
+                let cand = self.rt.manifest.tree_bucket(t_need)?;
+                let m = &self.rt.manifest;
+                let fused_ok = self.use_fused
+                    && m.has_exe(&format!("verify_commit_{}_b{}_t{}", self.cfg.size, b, cand));
+                let unfused_ok = m.has_exe(&format!("verify_{}_b{}_t{}", self.cfg.size, b, cand))
+                    && m.has_exe(&format!("commit_{}_b{}_t{}", self.cfg.size, b, cand));
+                if fused_ok || unfused_ok {
+                    cand
+                } else {
+                    self.t_bucket
+                }
+            }
+        };
+
         // -- 1. draft -------------------------------------------------------
         let t0 = Instant::now();
-        let node_tokens = self.expand_tree()?;
+        let node_tokens = self.expand_tree(&step_trees)?;
         self.phase.draft += t0.elapsed();
 
         // -- 2. verify ------------------------------------------------------
         let mut tokens = HostTensor::zeros_i32(&[b, tb]);
         let mut positions = HostTensor::zeros_i32(&[b, tb]);
         let mut cur_len = HostTensor::zeros_i32(&[b]);
-        let anc = HostTensor::from_i32(&[b, tb, tb], tile(&self.anc_mask, b));
+        let anc = self.step_anc_mask(b, tb);
         for i in 0..b {
             let slot = &self.slots[i];
             if !slot.active || slot.done {
                 continue;
             }
+            let tree = &step_trees[i];
             let len_i = self.pool.slot_len(i).unwrap_or(0);
             cur_len.i32s_mut()[i] = len_i as i32;
-            for n in 0..t {
+            for n in 0..tree.len() {
                 tokens.i32s_mut()[i * tb + n] = node_tokens[i][n] as i32;
-                positions.i32s_mut()[i * tb + n] =
-                    (len_i + self.cfg.tree.depth[n] - 1) as i32;
+                positions.i32s_mut()[i * tb + n] = (len_i + tree.depth[n] - 1) as i32;
             }
         }
+        // Fused commit+verify needs the artifact at THIS step's bucket,
+        // and a pending commit shaped for a DIFFERENT bucket cannot ride
+        // into it — apply such leftovers host-side first, so the verify
+        // call always sees a fully committed cache.
+        let fused_name = format!("verify_commit_{}_b{}_t{}", self.cfg.size, b, tb);
+        let fused_step = self.use_fused && self.rt.manifest.has_exe(&fused_name);
+        let stale_pending =
+            self.pending.as_ref().is_some_and(|p| !fused_step || p.bucket != tb);
+        if stale_pending {
+            for i in 0..b {
+                self.materialize_pending_row(i);
+            }
+            self.pending = None;
+        }
         let t0 = Instant::now();
-        let out = if self.use_fused {
+        let out = if fused_step {
             // Fused path: commit the PREVIOUS step's acceptance and verify
             // the new tree in one PJRT call (§Perf).
-            let name = format!("verify_commit_{}_b{}_t{}", self.cfg.size, b, tb);
             let zeros = || PendingCommit {
+                bucket: tb,
                 tree_kv: HostTensor::zeros_f32(&[b, self.dims.n_layers, 2, tb, self.dims.kv_dim]),
                 hidden: HostTensor::zeros_f32(&[b, tb, d]),
                 accept_idx: HostTensor::zeros_i32(&[b, a]),
                 accept_len: HostTensor::zeros_i32(&[b]),
                 commit_base: HostTensor::zeros_i32(&[b]),
             };
+            let name = fused_name;
             let pend = self.pending.take().unwrap_or_else(zeros);
             let mut out = self.rt.call(
                 &name,
@@ -814,17 +1061,22 @@ impl<'rt> Engine<'rt> {
         let mut accept_len = HostTensor::zeros_i32(&[b]);
         let mut decisions: Vec<Option<StepDecision>> = vec![None; b];
         let mut committed = 0usize;
+        let mut spec_tokens = 0usize;
+        let mut rejected = 0usize;
         for i in 0..b {
             let slot = &mut self.slots[i];
             if !slot.active || slot.done {
                 continue;
             }
-            let slot_logits = &logits.f32s()[i * tb * v..(i * tb + t) * v];
+            let tree = &step_trees[i];
+            let t_i = tree.len();
+            let slot_logits = &logits.f32s()[i * tb * v..(i * tb + t_i) * v];
             // The acceptance walk runs with THIS slot's criterion and RNG —
-            // per-request SamplingParams, not a batch-global mode.
+            // per-request SamplingParams, not a batch-global mode — over
+            // THIS slot's tree (per-slot shapes under adaptive speculation).
             let (mode, top_k) = (slot.params.mode, slot.params.top_k);
             let mut dec = accept::decide(
-                &self.cfg.tree,
+                tree,
                 &node_tokens[i],
                 slot_logits,
                 v,
@@ -833,6 +1085,13 @@ impl<'rt> Engine<'rt> {
                 top_k,
                 &mut slot.rng,
             );
+            // Untruncated walk length == tree depth reached: the pure
+            // acceptance signal the adaptive controller learns from
+            // (budget clipping below is not a rejection).
+            let walk_len = dec.accepted.len();
+            if let Some(ad) = &mut self.adaptive {
+                ad.observe(i, tree.max_depth(), walk_len);
+            }
             // Truncate to the generation budget and the cache capacity.
             let len_i = cur_len.i32s()[i] as usize;
             let budget = (slot.params.max_new - slot.generated)
@@ -854,6 +1113,13 @@ impl<'rt> Engine<'rt> {
                 accept_idx.i32s_mut()[i * a + j] = n as i32;
             }
             committed += dec.accepted.len();
+            spec_tokens += t_i;
+            slot.spec_nodes += t_i;
+            // Waste = nodes the acceptance walk REJECTED. Tokens the walk
+            // accepted but the max_new/cache budget clipped are not
+            // rejections — use the pre-truncation walk length.
+            slot.wasted_draft += t_i - walk_len;
+            rejected += t_i - walk_len;
             // Tree-search probe bookkeeping (§4): would the next addable
             // child of the stopping node have matched the greedy token?
             if let Some(probe) = &mut self.probe {
@@ -873,10 +1139,13 @@ impl<'rt> Engine<'rt> {
             decisions[i] = Some(dec);
         }
         self.phase.accept += t0.elapsed();
+        self.spec.nodes_verified += spec_tokens as u64;
+        self.spec.tokens_committed += committed as u64;
+        self.spec.wasted += rejected as u64;
 
         // -- 4. commit ------------------------------------------------------
         let t0 = Instant::now();
-        let gathered = if self.use_fused {
+        let gathered = if fused_step {
             // Defer the device-side KV commit to the next fused call; gather
             // the accepted hiddens host-side for the draft-state update.
             let mut g = HostTensor::zeros_f32(&[b, a, d]);
@@ -890,6 +1159,7 @@ impl<'rt> Engine<'rt> {
                 }
             }
             self.pending = Some(PendingCommit {
+                bucket: tb,
                 tree_kv: tree_kv.clone(),
                 hidden: hidden.clone(),
                 accept_idx: accept_idx.clone(),
@@ -1053,6 +1323,9 @@ impl<'rt> Engine<'rt> {
                         .map(|(e, f)| f.duration_since(e).as_secs_f64() * 1e3),
                     total_ms: slot.enqueue_at.map(|e| now.duration_since(e).as_secs_f64() * 1e3),
                     cached_tokens: slot.cached_tokens,
+                    speculation: slot.params.speculation,
+                    mean_tree_nodes: slot.mean_tree_nodes(),
+                    wasted_draft_tokens: slot.wasted_draft,
                 };
                 slot.active = false;
                 if self.emit_events {
@@ -1067,8 +1340,33 @@ impl<'rt> Engine<'rt> {
         Ok(StepStats {
             tokens_committed: committed,
             active_slots: decisions.iter().filter(|d| d.is_some()).count(),
+            spec_tokens,
             wall: wall0.elapsed(),
         })
+    }
+
+    /// The `[B, tb, tb]` ancestor-mask tensor for this step: the static
+    /// tree's tiled mask, or — on adaptive engines — each slot's cached
+    /// rung mask padded to this step's bucket (vacant/done slots get the
+    /// 1-node mask, i.e. pure self-attention padding). Same per-step cost
+    /// as the static path's tile: one memcpy per slot from a precomputed
+    /// mask.
+    fn step_anc_mask(&self, b: usize, tb: usize) -> HostTensor {
+        match &self.adaptive {
+            None => HostTensor::from_i32(&[b, tb, tb], tile(&self.anc_mask, b)),
+            Some(ad) => {
+                let mut m = Vec::with_capacity(b * tb * tb);
+                for i in 0..b {
+                    let active = self.slots[i].active && !self.slots[i].done;
+                    let r = if active { ad.choice[i] } else { 0 };
+                    // Present by construction: enable_adaptive caches every
+                    // (rung, bucket) pair the rung fits in, and tb covers
+                    // the largest active tree this step.
+                    m.extend_from_slice(&self.rung_masks[&(r, tb)]);
+                }
+                HostTensor::from_i32(&[b, tb, tb], m)
+            }
+        }
     }
 
     /// Run until every admitted sequence finishes; returns committed tokens.
@@ -1080,6 +1378,7 @@ impl<'rt> Engine<'rt> {
         Ok(total)
     }
 
+    /// Drain the retired sequence summaries (non-event mode).
     pub fn take_outputs(&mut self) -> Vec<SeqOutput> {
         std::mem::take(&mut self.outputs)
     }
@@ -1088,26 +1387,34 @@ impl<'rt> Engine<'rt> {
     // Draft expansion.
     // ---------------------------------------------------------------------
 
-    /// Returns node_tokens[slot][node] for every tree node. Node 0 is the
-    /// slot's current root token; deeper nodes are proposed by the draft
-    /// heads depth by depth.
-    fn expand_tree(&mut self) -> Result<Vec<Vec<u32>>> {
+    /// Returns node_tokens[slot][node] for every node of each slot's tree
+    /// (`trees[i]`; entries past a slot's tree length stay 0). Node 0 is
+    /// the slot's current root token; deeper nodes are proposed by the
+    /// draft heads depth by depth.
+    fn expand_tree(&mut self, trees: &[Rc<TreeTopology>]) -> Result<Vec<Vec<u32>>> {
         let b = self.cfg.batch;
-        let t = self.cfg.tree.len();
-        let mut node_tokens = vec![vec![0u32; t]; b];
+        // Rows sized for the largest tree (the engine's configured one) so
+        // indexing by any slot-tree node is always in bounds.
+        let t_max = self.cfg.tree.len();
+        let mut node_tokens = vec![vec![0u32; t_max]; b];
+        let mut any_draft = false;
         for i in 0..b {
             if self.slots[i].active && !self.slots[i].done {
                 node_tokens[i][0] = self.slots[i].root_token;
+                any_draft |= trees[i].len() > 1;
             }
         }
-        if t == 1 {
+        if !any_draft {
+            // Every active slot runs a 1-node tree this step (AR baseline,
+            // or every adaptive slot throttled/pinned to the root) — no
+            // draft-head calls needed.
             return Ok(node_tokens);
         }
         match self.arch.clone() {
             DraftArch::Ar => {}
-            DraftArch::Medusa => self.expand_medusa(&mut node_tokens)?,
-            DraftArch::Hydra { ml, .. } => self.expand_hydra(ml, &mut node_tokens)?,
-            DraftArch::Eagle => self.expand_eagle(&mut node_tokens)?,
+            DraftArch::Medusa => self.expand_medusa(trees, &mut node_tokens)?,
+            DraftArch::Hydra { ml, .. } => self.expand_hydra(ml, trees, &mut node_tokens)?,
+            DraftArch::Eagle => self.expand_eagle(&trees[0], &mut node_tokens)?,
         }
         Ok(node_tokens)
     }
@@ -1115,8 +1422,13 @@ impl<'rt> Engine<'rt> {
     /// Medusa (sequentially independent): ONE draft call produces all K
     /// head distributions from h_t alone; every depth-(d) node's token is
     /// the rank-r entry of head (d-1)'s top-k — identical for all parents
-    /// (the paper's Fig. 1 left).
-    fn expand_medusa(&mut self, node_tokens: &mut [Vec<u32>]) -> Result<()> {
+    /// (the paper's Fig. 1 left). Per-slot trees only change which ranks
+    /// of each head's top-k are materialized per slot.
+    fn expand_medusa(
+        &mut self,
+        trees: &[Rc<TreeTopology>],
+        node_tokens: &mut [Vec<u32>],
+    ) -> Result<()> {
         let b = self.cfg.batch;
         let d = self.dims.d_model;
         let v = self.rt.manifest.vocab;
@@ -1134,11 +1446,11 @@ impl<'rt> Engine<'rt> {
         for head in 1..=k {
             self.phase.draft_per_head[head] += t0.elapsed() / k as u32;
         }
-        let tree = self.cfg.tree.clone();
         for i in 0..b {
             if !self.slots[i].active || self.slots[i].done {
                 continue;
             }
+            let tree = &trees[i];
             for depth in 2..=tree.max_depth() {
                 let head = depth - 2; // head index 0-based into [K]
                 let row = &logits.f32s()
@@ -1175,49 +1487,57 @@ impl<'rt> Engine<'rt> {
 
     /// Hydra (sequentially dependent): for each depth, head (depth-1) is
     /// evaluated once per *parent node*, conditioned on the token path to
-    /// that parent (paper §3, Eq. 3). Rows across (slot, parent) pairs are
-    /// flattened into one bucketed call per depth.
-    fn expand_hydra(&mut self, ml: usize, node_tokens: &mut [Vec<u32>]) -> Result<()> {
+    /// that parent (paper §3, Eq. 3). Rows across (slot, parent) pairs —
+    /// each slot contributing the parents of its OWN tree, which may be a
+    /// different ladder rung per slot — are flattened into one bucketed
+    /// call per depth, so smaller adaptive trees shrink the draft cost
+    /// through the m-bucket, not just the verify cost.
+    fn expand_hydra(
+        &mut self,
+        ml: usize,
+        trees: &[Rc<TreeTopology>],
+        node_tokens: &mut [Vec<u32>],
+    ) -> Result<()> {
         let b = self.cfg.batch;
         let d = self.dims.d_model;
         let v = self.rt.manifest.vocab;
-        let tree = self.cfg.tree.clone();
         let m_buckets = self.rt.manifest.hydra_m_buckets[&self.cfg.size].clone();
         let k = self.rt.manifest.num_heads;
+        let probing = self.probe.is_some();
 
+        let active: Vec<usize> = (0..b)
+            .filter(|&i| self.slots[i].active && !self.slots[i].done)
+            .collect();
+        let deepest = active.iter().map(|&i| trees[i].max_depth()).max().unwrap_or(1);
         // With probing we also evaluate childless nodes (and one depth past
         // the current tree) to estimate the gain of *candidate* children.
-        let max_parent_depth = if self.probe.is_some() {
-            tree.max_depth().min(k)
-        } else {
-            tree.max_depth() - 1
-        };
+        let max_parent_depth = if probing { deepest.min(k) } else { deepest - 1 };
         for depth in 2..=(max_parent_depth + 1) {
             let head = depth - 1; // 1-based head index
-            let parents: Vec<usize> = tree.by_depth[depth - 2]
-                .iter()
-                .copied()
-                .filter(|&n| self.probe.is_some() || !tree.children[n].is_empty())
-                .collect();
-            if parents.is_empty() {
+            // (slot, parent-node) rows, slot-major — identical ordering to
+            // the shared-tree case when every slot runs the same rung.
+            let mut row_of: Vec<(usize, usize)> = Vec::new();
+            for &i in &active {
+                let tree = &trees[i];
+                if depth - 2 >= tree.by_depth.len() {
+                    continue; // this slot's tree is shallower
+                }
+                for &p in &tree.by_depth[depth - 2] {
+                    if probing || !tree.children[p].is_empty() {
+                        row_of.push((i, p));
+                    }
+                }
+            }
+            if row_of.is_empty() {
                 continue;
             }
-            let active: Vec<usize> = (0..b)
-                .filter(|&i| self.slots[i].active && !self.slots[i].done)
-                .collect();
-            let rows = active.len() * parents.len();
-            let mb = Manifest::bucket(&m_buckets, rows)?;
+            let mb = Manifest::bucket(&m_buckets, row_of.len())?;
             let mut h = HostTensor::zeros_f32(&[mb, d]);
             let mut path = HostTensor::zeros_i32(&[mb, head]);
-            let mut row_of: Vec<(usize, usize)> = Vec::with_capacity(rows);
-            for &i in &active {
-                for &p in &parents {
-                    let r = row_of.len();
-                    h.f32s_mut()[r * d..(r + 1) * d].copy_from_slice(&self.slots[i].h_star);
-                    for (j, &anc) in tree.path_to(p).iter().enumerate() {
-                        path.i32s_mut()[r * head + j] = node_tokens[i][anc] as i32;
-                    }
-                    row_of.push((i, p));
+            for (r, &(i, p)) in row_of.iter().enumerate() {
+                h.f32s_mut()[r * d..(r + 1) * d].copy_from_slice(&self.slots[i].h_star);
+                for (j, &anc) in trees[i].path_to(p).iter().enumerate() {
+                    path.i32s_mut()[r * head + j] = node_tokens[i][anc] as i32;
                 }
             }
             let t0 = Instant::now();
@@ -1231,6 +1551,7 @@ impl<'rt> Engine<'rt> {
             self.phase.draft_per_head[head] += t0.elapsed();
             let logits = &out[0]; // [Mb, V]
             for (r, &(i, p)) in row_of.iter().enumerate() {
+                let tree = &trees[i];
                 let row = &logits.f32s()[r * v..(r + 1) * v];
                 if !tree.children[p].is_empty() {
                     let top = top_k_indices(row, tree.children[p].len());
@@ -1250,11 +1571,10 @@ impl<'rt> Engine<'rt> {
     /// consumes (its token embedding, its parent's estimated hidden) and
     /// yields both child logits and the node's own estimated hidden
     /// (App. C). Batch 1 only (bench configuration, as in the paper's
-    /// Fig. 10).
-    fn expand_eagle(&mut self, node_tokens: &mut [Vec<u32>]) -> Result<()> {
+    /// Fig. 10); `tree` is that single slot's topology for this step.
+    fn expand_eagle(&mut self, tree: &TreeTopology, node_tokens: &mut [Vec<u32>]) -> Result<()> {
         let d = self.dims.d_model;
         let v = self.rt.manifest.vocab;
-        let tree = self.cfg.tree.clone();
         let slot = 0usize;
         if !self.slots[slot].active || self.slots[slot].done {
             return Ok(());

@@ -1,6 +1,7 @@
 //! Per-sequence serving state (one slot of the batched engine) and the
 //! per-request generation parameters that travel with it.
 
+use crate::adaptive::SpeculationMode;
 use crate::util::rng::Pcg32;
 
 use super::accept::AcceptMode;
@@ -22,7 +23,12 @@ pub struct SamplingParams {
     /// probability (0 = no restriction). Ignored under greedy acceptance.
     pub top_k: usize,
     /// Per-request RNG seed. `None` derives a deterministic per-request
-    /// stream from the engine seed and the request id.
+    /// stream from the engine seed and the request id. On adaptive
+    /// engines, typical-mode reproducibility additionally requires a
+    /// stable tree per step (`speculation: Fixed(k)` or identical batch
+    /// composition) — the batch throttle may otherwise resize the tree,
+    /// changing candidate sets and RNG consumption. Greedy output is
+    /// tree-shape-invariant and always reproducible.
     pub seed: Option<u64>,
     /// Emit incremental per-step token deltas (`SeqEvent::Delta`) for this
     /// sequence. Only observable when the engine has `enable_events` on;
@@ -32,6 +38,13 @@ pub struct SamplingParams {
     /// reuses cached prefixes at admission nor publishes its own prefix.
     /// No effect when the engine runs without a prefix cache.
     pub prefix_cache: bool,
+    /// Per-request speculation policy: `Auto` lets the adaptive
+    /// controller size this sequence's draft tree online, `Fixed(k)`
+    /// pins it to at most `k` tree nodes (`Fixed(1)` = pure
+    /// autoregressive). Only consulted when the engine runs with
+    /// `Engine::enable_adaptive`; a static-tree engine verifies its
+    /// configured tree for every slot.
+    pub speculation: SpeculationMode,
 }
 
 impl Default for SamplingParams {
@@ -44,6 +57,7 @@ impl Default for SamplingParams {
             seed: None,
             stream: false,
             prefix_cache: true,
+            speculation: SpeculationMode::Auto,
         }
     }
 }
@@ -64,36 +78,54 @@ impl SamplingParams {
     }
 }
 
+/// One generation request: a tokenized prompt plus its own
+/// [`SamplingParams`], queued by the scheduler and admitted into an
+/// engine slot.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Engine-unique request id (echoed on outputs and events).
     pub id: u64,
+    /// Tokenized prompt (wire-format wrapped, see `tokenizer::format_prompt`).
     pub prompt_ids: Vec<u32>,
+    /// Per-request generation parameters.
     pub params: SamplingParams,
 }
 
 impl Request {
+    /// Bundle a prompt and parameters under a request id.
     pub fn new(id: u64, prompt_ids: Vec<u32>, params: SamplingParams) -> Request {
         Request { id, prompt_ids, params }
     }
 }
 
+/// Why a sequence stopped decoding.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
+    /// The generation budget (`SamplingParams::max_new`) was reached.
     MaxTokens,
+    /// The stop marker (`SamplingParams::stop_ids`) was emitted.
     Stop,
+    /// The slot's KV-cache rows ran out (sequence hit `seq_max`).
     CacheFull,
+    /// Still decoding (only observable on live slots, never on outputs).
     Running,
 }
 
+/// Per-sequence serving state: one batch row of the engine. Vacant slots
+/// are `!active`; the engine's `cache::SlotPool` is the source of truth
+/// for occupancy and committed lengths.
 #[derive(Debug, Clone)]
 pub struct Slot {
+    /// Whether this batch row currently hosts a sequence.
     pub active: bool,
+    /// Id of the request occupying the slot.
     pub req_id: u64,
     /// Committed tokens (prompt + generated) — mirrors the KV cache rows.
     /// The committed *length* itself is not duplicated here: the engine's
     /// `cache::SlotPool` is the single source of truth for slot
     /// occupancy/lengths.
     pub tokens: Vec<u32>,
+    /// Length of the prompt prefix of `tokens`.
     pub prompt_len: usize,
     /// Next root candidate (sampled from base logits at the last step).
     pub root_token: u32,
@@ -109,15 +141,25 @@ pub struct Slot {
     /// Slot-local RNG (seeded per request) — acceptance sampling of one
     /// sequence never perturbs its batch neighbours.
     pub rng: Pcg32,
+    /// Tokens committed after the prompt so far.
     pub generated: usize,
+    /// Finished decoding, awaiting retirement from the slot.
     pub done: bool,
+    /// Why decoding stopped (`Running` while the sequence is live).
     pub finish: FinishReason,
     /// Acceptance length of every decode step (incl. the root token).
     pub accept_hist: Vec<usize>,
+    /// Total draft-tree nodes verified for this sequence across its
+    /// decode steps (speculation-efficiency bookkeeping).
+    pub spec_nodes: usize,
+    /// Verified tree nodes that were NOT accepted — the wasted share of
+    /// the verification FLOPs the adaptive controller tries to minimize.
+    pub wasted_draft: usize,
     /// Σ log p_base of generated tokens (Fig. 4 quality metric).
     pub sum_logprob: f64,
-    /// Wall-clock bookkeeping for latency metrics (set by the scheduler).
+    /// Wall-clock bookkeeping for latency metrics (set at admission).
     pub enqueue_at: Option<std::time::Instant>,
+    /// When the first token committed (TTFT metric).
     pub first_token_at: Option<std::time::Instant>,
     /// Prefix-cache node pinned for this slot's lifetime (hit admissions).
     pub prefix_node: Option<usize>,
@@ -126,6 +168,7 @@ pub struct Slot {
 }
 
 impl Slot {
+    /// An unoccupied batch row.
     pub fn vacant() -> Slot {
         Slot {
             active: false,
@@ -142,6 +185,8 @@ impl Slot {
             done: true,
             finish: FinishReason::Running,
             accept_hist: Vec::new(),
+            spec_nodes: 0,
+            wasted_draft: 0,
             sum_logprob: 0.0,
             enqueue_at: None,
             first_token_at: None,
@@ -150,6 +195,7 @@ impl Slot {
         }
     }
 
+    /// The committed tokens after the prompt.
     pub fn generated_ids(&self) -> &[u32] {
         &self.tokens[self.prompt_len..]
     }
@@ -161,28 +207,55 @@ impl Slot {
         !stop.is_empty() && g.len() >= stop.len() && g[g.len() - stop.len()..] == stop[..]
     }
 
+    /// Mean acceptance length over this sequence's decode steps.
     pub fn mean_accept_len(&self) -> f64 {
         if self.accept_hist.is_empty() {
             return 0.0;
         }
         self.accept_hist.iter().sum::<usize>() as f64 / self.accept_hist.len() as f64
     }
+
+    /// Mean draft-tree size verified per decode step (== the static tree
+    /// size on non-adaptive engines).
+    pub fn mean_tree_nodes(&self) -> f64 {
+        if self.accept_hist.is_empty() {
+            return 0.0;
+        }
+        self.spec_nodes as f64 / self.accept_hist.len() as f64
+    }
 }
 
+/// Final summary of a retired sequence.
 #[derive(Debug, Clone)]
 pub struct SeqOutput {
+    /// Id of the request that produced this output.
     pub req_id: u64,
+    /// The committed tokens after the prompt.
     pub generated: Vec<u32>,
+    /// Why decoding stopped.
     pub finish: FinishReason,
+    /// Decode steps the sequence took.
     pub steps: usize,
+    /// Mean acceptance length over those steps (root token included).
     pub mean_accept_len: f64,
     /// Acceptance length of every decode step (root token included).
     pub accept_hist: Vec<usize>,
+    /// Mean base-model log-probability of the generated tokens.
     pub mean_logprob: f64,
+    /// Enqueue-to-first-token latency, when the slot was timestamped.
     pub ttft_ms: Option<f64>,
+    /// Enqueue-to-retirement latency, when the slot was timestamped.
     pub total_ms: Option<f64>,
     /// Prompt tokens restored from the prefix cache at admission (0 = cold).
     pub cached_tokens: usize,
+    /// The request's speculation policy (reported back in done frames).
+    pub speculation: SpeculationMode,
+    /// Mean draft-tree nodes verified per decode step — the adaptive
+    /// controller's chosen tree size (== the static size otherwise).
+    pub mean_tree_nodes: f64,
+    /// Verified tree nodes that were not accepted over the sequence's
+    /// lifetime (wasted speculation FLOPs).
+    pub wasted_draft_tokens: usize,
 }
 
 /// Incremental per-sequence event, emitted by the engine when event
@@ -198,6 +271,7 @@ pub enum SeqEvent {
 }
 
 impl SeqEvent {
+    /// The id of the request this event belongs to.
     pub fn req_id(&self) -> u64 {
         match self {
             SeqEvent::Delta { req_id, .. } => *req_id,

@@ -43,6 +43,22 @@
 //! to prefill). Eviction is LRU-with-byte-budget; nodes pinned by active
 //! slots are never dropped. Under greedy acceptance, warm-hit output is
 //! token-for-token identical to the cold path.
+//! ## Adaptive speculation
+//!
+//! A static draft tree charges every slot the worst-case speculation
+//! cost: large trees win at batch 1 but waste verification FLOPs as the
+//! batch fills (paper §4, §6.2). With
+//! [`engine::Engine::enable_adaptive`] (CLI: `--adaptive` /
+//! `--spec-budget` on `serve` and `generate`), the [`adaptive`]
+//! controller tracks per-slot acceptance statistics (EMA of accepted
+//! tokens per step + per-depth acceptance rates) and selects each slot's
+//! tree each step from a precomputed ladder of prefix-truncations of the
+//! tuned tree, while a batch-aware throttle shrinks the largest `auto`
+//! trees until the whole step fits a configurable verification token
+//! budget. Per request, `"speculation": "auto" | k` pins or frees the
+//! policy; under greedy acceptance adaptive output is token-identical to
+//! static. `benches/adaptive.rs` runs the static-vs-adaptive A/B.
+//!
 //! * **Layer 2 (python/compile)** — the base transformer + draft heads in
 //!   JAX, AOT-lowered to HLO text once at build time (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels)** — the Pallas tree-attention
@@ -50,6 +66,16 @@
 //!
 //! Python never runs on the request path: this crate loads the HLO-text
 //! artifacts through the PJRT C API (`xla` crate) and serves from them.
+//!
+//! ## Documentation site
+//!
+//! Narrative docs live under `docs/` in the repository root:
+//! `docs/ARCHITECTURE.md` (module map + the life of a request, including
+//! where the prefix cache and the adaptive controller hook in) and
+//! `docs/PROTOCOL.md` (the complete JSON-lines wire protocol). Start at
+//! `docs/README.md`.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod tokenizer;
@@ -58,6 +84,7 @@ pub mod runtime;
 pub mod tree;
 pub mod cache;
 pub mod prefixcache;
+pub mod adaptive;
 pub mod draft;
 pub mod engine;
 pub mod scheduler;

@@ -9,18 +9,26 @@
 //! Common flags: --size {s,m,l} --variant {ar,medusa,hydra,hydra_pp,eagle}
 //!               --batch N --mode {greedy,typical} --eps 0.15 --temp 0.7
 //!               --top-k K --seed N --prefix-cache --prefix-cache-mb 64
+//!               --adaptive --spec-budget N --speculation auto|K
 //!
 //! `generate` flags map onto the per-request `SamplingParams`; `serve`'s
 //! --mode only sets the default for requests that don't pick their own.
 //! `--prefix-cache` turns on the prefix-reuse KV cache (shared-prompt
 //! serving: repeated prefixes restore by copy instead of prefill).
+//! `--adaptive` turns on adaptive speculation (per-slot dynamic draft
+//! trees + batch-aware throttling); `--spec-budget` caps the verified
+//! tree nodes per step (0 = the engine's batch-aware default), and
+//! `--speculation` sets the per-request policy on `generate`.
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use hydra_serve::engine::{AcceptMode, Engine, EngineConfig, Request, SamplingParams};
+use hydra_serve::adaptive::AdaptiveConfig;
+use hydra_serve::engine::{
+    AcceptMode, Engine, EngineConfig, Request, SamplingParams, SpeculationMode,
+};
 use hydra_serve::runtime::Runtime;
 use hydra_serve::server::{serve, ServerConfig};
 use hydra_serve::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
@@ -30,7 +38,7 @@ use hydra_serve::{artifacts_dir, draft, workload};
 
 fn main() {
     init_logging();
-    let args = Args::from_env(&["help", "quick", "prefix-cache"]);
+    let args = Args::from_env(&["help", "quick", "prefix-cache", "adaptive"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "info" => cmd_info(),
@@ -80,14 +88,21 @@ fn print_help() {
          generate  --prompt \"...\" [--size s] [--variant hydra_pp] [--max-new 64]\n\
                    [--mode greedy|typical --eps 0.15 --temp 0.7]\n\
                    [--top-k K] [--seed N] [--prefix-cache] [--prefix-cache-mb 64]\n\
+                   [--adaptive] [--spec-budget N] [--speculation auto|K]\n\
          serve     [--addr 127.0.0.1:7070] [--size s] [--variant hydra_pp] [--batch 4]\n\
                    [--mode greedy|typical] [--max-new-ceiling 256]\n\
                    [--prefix-cache] [--prefix-cache-mb 64]\n\
+                   [--adaptive] [--spec-budget N]\n\
          treesearch [--size s] [--variants medusa,hydra,hydra_pp] [--batches 1]\n\
                    [--max-nodes 48]\n\
          \n\
          --prefix-cache enables the prefix-reuse KV cache (shared-prompt\n\
-         serving); --prefix-cache-mb sets its byte budget in MiB.\n"
+         serving); --prefix-cache-mb sets its byte budget in MiB.\n\
+         --adaptive enables adaptive speculation: per-slot dynamic draft\n\
+         trees sized from online acceptance statistics, throttled to\n\
+         --spec-budget verified tree nodes per step (0 = batch-aware\n\
+         default). --speculation pins one request: auto or a max node\n\
+         count (1 = pure autoregressive). See docs/ARCHITECTURE.md.\n"
     );
 }
 
@@ -158,6 +173,24 @@ fn cmd_generate(args: &Args) -> Result<()> {
     if prefix_cache_mb > 0 {
         engine.enable_prefix_cache(prefix_cache_mb << 20);
     }
+    if args.flag("adaptive") {
+        // --spec-budget 0 (the default) = the engine's batch-aware
+        // default budget (resolved inside enable_adaptive).
+        engine.enable_adaptive(AdaptiveConfig {
+            step_token_budget: args.usize_or("spec-budget", 0),
+            ..AdaptiveConfig::default()
+        })?;
+    }
+    // Shared validation surface with the wire protocol's "speculation"
+    // field (SpeculationMode::parse): "auto" or an integer in [1, 1024].
+    let speculation = SpeculationMode::parse(&args.str_or("speculation", "auto"))
+        .map_err(|e| anyhow::anyhow!("--speculation: {e}"))?;
+    if speculation != SpeculationMode::Auto && !args.flag("adaptive") {
+        bail!(
+            "--speculation requires --adaptive (a static engine verifies its \
+             configured tree for every request, so the pin would be silently ignored)"
+        );
+    }
     let params = SamplingParams {
         mode,
         max_new,
@@ -172,6 +205,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         },
         stream: false,
         prefix_cache: true,
+        speculation,
     };
     engine.admit(vec![Request::new(0, tok.encode(&format_prompt(&prompt)), params)])?;
     let t0 = std::time::Instant::now();
@@ -184,12 +218,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
     }
     println!("{}", text.trim());
     eprintln!(
-        "\n[{} tokens in {:.2}s = {:.1} tok/s; {} steps; mean acceptance {:.2}]",
+        "\n[{} tokens in {:.2}s = {:.1} tok/s; {} steps; mean acceptance {:.2}; \
+         mean tree {:.1} nodes ({})]",
         out.generated.len(),
         dt.as_secs_f64(),
         out.generated.len() as f64 / dt.as_secs_f64(),
         out.steps,
-        out.mean_accept_len
+        out.mean_accept_len,
+        out.mean_tree_nodes,
+        out.speculation
     );
     Ok(())
 }
@@ -211,6 +248,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_new_ceiling: args.usize_or("max-new-ceiling", 256),
         conn_threads: args.usize_or("conn-threads", 8),
         prefix_cache_mb: parse_prefix_cache_mb(args),
+        adaptive: args.flag("adaptive"),
+        spec_budget: args.usize_or("spec-budget", 0),
     };
     serve(&rt, cfg, Arc::new(AtomicBool::new(false)))
 }

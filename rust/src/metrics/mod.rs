@@ -8,10 +8,12 @@ use crate::util::stats::{summarize, Summary};
 /// Histogram over acceptance lengths (1..=K+1).
 #[derive(Debug, Clone, Default)]
 pub struct AcceptHist {
+    /// counts[len]: steps whose acceptance length was `len`.
     pub counts: Vec<u64>,
 }
 
 impl AcceptHist {
+    /// Record one step's acceptance length.
     pub fn record(&mut self, len: usize) {
         if self.counts.len() <= len {
             self.counts.resize(len + 1, 0);
@@ -19,6 +21,7 @@ impl AcceptHist {
         self.counts[len] += 1;
     }
 
+    /// Mean acceptance length over all recorded steps.
     pub fn mean(&self) -> f64 {
         let total: u64 = self.counts.iter().sum();
         if total == 0 {
@@ -29,6 +32,7 @@ impl AcceptHist {
         weighted as f64 / total as f64
     }
 
+    /// Total recorded steps.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
@@ -37,18 +41,30 @@ impl AcceptHist {
 /// One benchmark run's aggregate numbers.
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
+    /// Human-readable run label (config summary).
     pub label: String,
+    /// Total wall-clock time of the run.
     pub wall: Duration,
+    /// Wall-clock time attributed to decoding (warmup excluded).
     pub decode_wall: Duration,
+    /// Tokens committed across all sequences.
     pub tokens_generated: usize,
+    /// Engine decode steps driven.
     pub steps: usize,
+    /// Acceptance-length histogram over all steps.
     pub accept: AcceptHist,
+    /// Per-step decode latencies (ms).
     pub step_ms: Vec<f64>,
+    /// Per-sequence enqueue-to-retirement latencies (ms).
     pub seq_latency_ms: Vec<f64>,
+    /// Mean base-model log-probability of generated tokens (quality).
     pub mean_logprob: f64,
     /// `prefill_*` artifact invocations during the run — the prefix
     /// cache's headline savings metric.
     pub prefill_calls: u64,
+    /// Draft-tree nodes verified during the run — the speculation cost
+    /// the adaptive controller trades against acceptance.
+    pub spec_tokens_verified: usize,
     /// Prefix-cache counters at the end of the run (None: cache off).
     pub prefix: Option<CacheStats>,
 }
@@ -60,6 +76,7 @@ impl Default for RunMetrics {
 }
 
 impl RunMetrics {
+    /// Zeroed metrics under a label.
     pub fn new(label: impl Into<String>) -> RunMetrics {
         RunMetrics {
             label: label.into(),
@@ -72,6 +89,7 @@ impl RunMetrics {
             seq_latency_ms: Vec::new(),
             mean_logprob: 0.0,
             prefill_calls: 0,
+            spec_tokens_verified: 0,
             prefix: None,
         }
     }
@@ -89,8 +107,27 @@ impl RunMetrics {
         summarize(&self.step_ms)
     }
 
+    /// Mean acceptance length over all recorded steps.
     pub fn mean_accept_len(&self) -> f64 {
         self.accept.mean()
+    }
+
+    /// Speculation efficiency: committed tokens per verified tree node
+    /// (1.0 = every scored node became output; the adaptive controller's
+    /// objective alongside raw throughput).
+    pub fn speculation_efficiency(&self) -> f64 {
+        if self.spec_tokens_verified == 0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.spec_tokens_verified as f64
+    }
+
+    /// Mean draft-tree nodes verified per decode step.
+    pub fn mean_tree_nodes(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.spec_tokens_verified as f64 / self.steps as f64
     }
 }
 
@@ -98,9 +135,11 @@ impl RunMetrics {
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Stopwatch {
         Stopwatch(Instant::now())
     }
+    /// Elapsed time since `start`.
     pub fn lap(&self) -> Duration {
         self.0.elapsed()
     }
@@ -124,5 +163,17 @@ mod tests {
     fn throughput_zero_safe() {
         let m = RunMetrics::new("x");
         assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn speculation_efficiency_and_tree_size() {
+        let mut m = RunMetrics::new("x");
+        assert_eq!(m.speculation_efficiency(), 0.0);
+        assert_eq!(m.mean_tree_nodes(), 0.0);
+        m.tokens_generated = 30;
+        m.spec_tokens_verified = 120;
+        m.steps = 10;
+        assert!((m.speculation_efficiency() - 0.25).abs() < 1e-9);
+        assert!((m.mean_tree_nodes() - 12.0).abs() < 1e-9);
     }
 }

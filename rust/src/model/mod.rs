@@ -9,61 +9,98 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
+/// Transformer dimensions of one model size.
 #[derive(Debug, Clone)]
 pub struct ModelDims {
+    /// Hidden width.
     pub d_model: usize,
+    /// Decoder layers.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// KV heads (GQA).
     pub n_kv_heads: usize,
+    /// Feed-forward width.
     pub d_ffn: usize,
+    /// KV row width per layer (n_kv_heads × head_dim).
     pub kv_dim: usize,
+    /// Total parameter count.
     pub params: usize,
 }
 
+/// One trained draft-head variant of a model size.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HeadVariant {
+    /// Variant name as addressed by the CLI/benches.
     pub name: String,
     /// "medusa" | "hydra" | "eagle"
     pub kind: String,
+    /// Hydra head MLP depth.
     pub mlp_layers: usize,
+    /// Whether the variant uses prefix attention (Hydra++).
     pub prefix_attn: bool,
+    /// Training objective label ("ntp", "teacher", ...).
     pub objective: String,
 }
 
+/// One argument slot of an AOT executable.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
     /// "dyn" | "base" | "head"
     pub kind: String,
+    /// Argument name (weight tensors are resolved by it).
     pub name: String,
+    /// Expected shape (dyn args only).
     pub shape: Vec<usize>,
+    /// Expected dtype ("f32" | "i32").
     pub dtype: String,
 }
 
+/// Executable artifact descriptor: file plus its I/O contract.
 #[derive(Debug, Clone)]
 pub struct ExeSpec {
+    /// HLO-text file path relative to the artifacts dir.
     pub file: String,
+    /// Argument slots in call order.
     pub args: Vec<ArgSpec>,
+    /// Output (shape, dtype) pairs in tuple order.
     pub outputs: Vec<(Vec<usize>, String)>,
 }
 
+/// The artifacts/manifest.json contents: everything the engine needs to
+/// know about shapes, buckets and executable contracts.
 #[derive(Debug)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Per-slot KV capacity (max sequence length).
     pub seq_max: usize,
+    /// Max accepted tokens per step the commit path supports.
     pub accept_max: usize,
+    /// Number of draft heads K.
     pub num_heads: usize,
+    /// AOT tree-node buckets for verify/commit.
     pub tree_buckets: Vec<usize>,
+    /// AOT batch buckets per model size.
     pub batch_buckets: BTreeMap<String, Vec<usize>>,
+    /// Hydra draft-call row buckets per model size.
     pub hydra_m_buckets: BTreeMap<String, Vec<usize>>,
+    /// EAGLE per-depth node buckets.
     pub eagle_n_buckets: Vec<usize>,
+    /// Model dimensions per size key.
     pub sizes: BTreeMap<String, ModelDims>,
+    /// Trained head variants per size key.
     pub head_variants: BTreeMap<String, Vec<HeadVariant>>,
+    /// Weight-set name → HTB1 file.
     pub weight_files: BTreeMap<String, String>,
+    /// Executable name → artifact descriptor.
     pub executables: BTreeMap<String, ExeSpec>,
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from an artifacts directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let v = Json::parse_file(&dir.join("manifest.json"))?;
         let sizes = v
@@ -180,10 +217,12 @@ impl Manifest {
         })
     }
 
+    /// Dimensions of a model size.
     pub fn dims(&self, size: &str) -> Result<&ModelDims> {
         self.sizes.get(size).with_context(|| format!("unknown size `{size}`"))
     }
 
+    /// Look up a head variant by (size, name).
     pub fn variant(&self, size: &str, name: &str) -> Result<&HeadVariant> {
         self.head_variants
             .get(size)
@@ -201,14 +240,17 @@ impl Manifest {
             .with_context(|| format!("no bucket >= {n} in {buckets:?}"))
     }
 
+    /// Smallest AOT tree bucket holding `n` nodes.
     pub fn tree_bucket(&self, n: usize) -> Result<usize> {
         Self::bucket(&self.tree_buckets, n)
     }
 
+    /// Descriptor of a named executable.
     pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
         self.executables.get(name).with_context(|| format!("no executable `{name}`"))
     }
 
+    /// Whether a named executable was built.
     pub fn has_exe(&self, name: &str) -> bool {
         self.executables.contains_key(name)
     }

@@ -34,28 +34,38 @@
 
 use std::collections::BTreeMap;
 
+/// Stable identifier of a radix-tree node (index; ids are recycled only
+/// after eviction).
 pub type NodeId = usize;
 
 /// Aggregate counters, also snapshotted into `metrics::RunMetrics` and the
 /// server's `{"op":"stats"}` frame.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheStats {
+    /// Admission lookups performed.
     pub lookups: u64,
     /// Lookup matched the whole prompt at a snapshot point (prefill skipped).
     pub full_hits: u64,
     /// Lookup restored a proper prefix; the tail went through chain-mode
     /// verify/commit extension.
     pub partial_hits: u64,
+    /// Lookups that restored nothing.
     pub misses: u64,
+    /// Segments inserted (publishes that stored new data).
     pub insertions: u64,
+    /// Leaf segments evicted to make room.
     pub evictions: u64,
     /// Insertions refused because the byte budget could not be met.
     pub rejected_inserts: u64,
     /// Total committed tokens restored by copy instead of prefill.
     pub tokens_reused: u64,
+    /// Accounted bytes currently held.
     pub bytes_in_use: usize,
+    /// The configured byte budget.
     pub byte_budget: usize,
+    /// Live nodes (root excluded).
     pub nodes: usize,
+    /// Live nodes pinned by active slots.
     pub pinned: usize,
 }
 
@@ -87,11 +97,14 @@ impl EndSnapshot {
 pub struct RestoredPrefix {
     /// Deepest node used by the restore — pin it for the slot's lifetime.
     pub node: NodeId,
+    /// Number of leading prompt tokens restored.
     pub matched: usize,
     /// `[L, 2, matched, KVD]`.
     pub kv: Vec<f32>,
     /// `[2, matched, KVD]` when the cache carries draft-state rows.
     pub extra: Option<Vec<f32>>,
+    /// End snapshot when the match lands exactly on a published end
+    /// (required to skip prefill outright).
     pub end: Option<EndSnapshot>,
 }
 
@@ -120,6 +133,9 @@ impl Node {
     }
 }
 
+/// The prefix-reuse KV cache: a radix tree over committed token-id
+/// prefixes whose nodes own ref-counted host KV segments (see the
+/// module docs for layout and eviction policy).
 pub struct PrefixCache {
     nodes: Vec<Node>,
     free: Vec<NodeId>,
@@ -136,6 +152,8 @@ pub struct PrefixCache {
 const ROOT: NodeId = 0;
 
 impl PrefixCache {
+    /// An empty cache with the given byte budget and KV geometry
+    /// (`has_extra`: carry per-variant draft-state rows alongside).
     pub fn new(byte_budget: usize, n_layers: usize, kv_dim: usize, has_extra: bool) -> PrefixCache {
         PrefixCache {
             nodes: vec![Node {
@@ -160,6 +178,7 @@ impl PrefixCache {
         }
     }
 
+    /// Counter snapshot (with current byte/node/pin gauges).
     pub fn stats(&self) -> CacheStats {
         let mut s = self.stats.clone();
         s.bytes_in_use = self.bytes_in_use;
@@ -174,10 +193,12 @@ impl PrefixCache {
         s
     }
 
+    /// Accounted bytes currently held.
     pub fn bytes_in_use(&self) -> usize {
         self.bytes_in_use
     }
 
+    /// The configured byte budget.
     pub fn byte_budget(&self) -> usize {
         self.byte_budget
     }
@@ -192,6 +213,7 @@ impl PrefixCache {
         }
     }
 
+    /// Drop one pin from a node (no-op on dead nodes or zero refs).
     pub fn unpin(&mut self, id: NodeId) {
         if let Some(n) = self.nodes.get_mut(id) {
             if n.live && n.refs > 0 {

@@ -23,20 +23,26 @@ pub use tensor::{Data, HostTensor};
 
 /// A set of device-resident weight buffers, keyed by tensor name.
 pub struct WeightSet {
+    /// The manifest weight-set name this was loaded from.
     pub name: String,
     buffers: HashMap<String, xla::PjRtBuffer>,
 }
 
 impl WeightSet {
+    /// A named weight buffer, if present in the set.
     pub fn get(&self, name: &str) -> Option<&xla::PjRtBuffer> {
         self.buffers.get(name)
     }
+    /// Names of all buffers in the set.
     pub fn names(&self) -> impl Iterator<Item = &String> {
         self.buffers.keys()
     }
 }
 
+/// The L3↔L2 execution bridge: PJRT CPU client plus lazily compiled
+/// executables and uploaded weight sets over one artifacts directory.
 pub struct Runtime {
+    /// The artifacts manifest (shapes, buckets, contracts).
     pub manifest: Manifest,
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -44,12 +50,17 @@ pub struct Runtime {
     weights: RefCell<HashMap<String, Rc<WeightSet>>>,
     /// Cumulative time spent inside PJRT execute (profiling hook).
     pub exec_time: RefCell<std::time::Duration>,
+    /// Number of PJRT executions.
     pub exec_calls: RefCell<u64>,
+    /// Cumulative host→device argument upload time.
     pub upload_time: RefCell<std::time::Duration>,
+    /// Cumulative device→host output download time.
     pub download_time: RefCell<std::time::Duration>,
 }
 
 impl Runtime {
+    /// Open a runtime over an artifacts directory (loads the manifest,
+    /// creates the PJRT CPU client).
     pub fn new(dir: PathBuf) -> Result<Runtime> {
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()
@@ -67,6 +78,7 @@ impl Runtime {
         })
     }
 
+    /// Open the default artifacts directory (see `crate::artifacts_dir`).
     pub fn open_default() -> Result<Runtime> {
         Runtime::new(crate::artifacts_dir())
     }
@@ -227,6 +239,7 @@ impl Runtime {
         Ok(tensors)
     }
 
+    /// Zero the profiling counters (exec/upload/download times).
     pub fn reset_counters(&self) {
         *self.exec_time.borrow_mut() = Default::default();
         *self.upload_time.borrow_mut() = Default::default();

@@ -1,51 +1,65 @@
 //! Host-side tensors: the engine's working representation of model state
 //! (KV caches, logits, masks). Row-major, f32 or i32.
 
+/// Tensor payload: one flat row-major buffer per supported dtype.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
+    /// 32-bit float payload.
     F32(Vec<f32>),
+    /// 32-bit integer payload.
     I32(Vec<i32>),
 }
 
+/// A host-resident row-major tensor (f32 or i32).
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
+    /// Flat payload in row-major order.
     pub data: Data,
 }
 
 impl HostTensor {
+    /// An all-zero f32 tensor of the given shape.
     pub fn zeros_f32(shape: &[usize]) -> HostTensor {
         let n = shape.iter().product();
         HostTensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; n]) }
     }
 
+    /// An all-zero i32 tensor of the given shape.
     pub fn zeros_i32(shape: &[usize]) -> HostTensor {
         let n = shape.iter().product();
         HostTensor { shape: shape.to_vec(), data: Data::I32(vec![0; n]) }
     }
 
+    /// Wrap an f32 buffer (length must match the shape).
     pub fn from_f32(shape: &[usize], v: Vec<f32>) -> HostTensor {
         assert_eq!(shape.iter().product::<usize>(), v.len());
         HostTensor { shape: shape.to_vec(), data: Data::F32(v) }
     }
 
+    /// Wrap an i32 buffer (length must match the shape).
     pub fn from_i32(shape: &[usize], v: Vec<i32>) -> HostTensor {
         assert_eq!(shape.iter().product::<usize>(), v.len());
         HostTensor { shape: shape.to_vec(), data: Data::I32(v) }
     }
 
+    /// A rank-0 i32 tensor.
     pub fn scalar_i32(v: i32) -> HostTensor {
         HostTensor { shape: vec![], data: Data::I32(vec![v]) }
     }
 
+    /// Element count (product of the shape).
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The f32 payload (panics on dtype mismatch).
     pub fn f32s(&self) -> &[f32] {
         match &self.data {
             Data::F32(v) => v,
@@ -53,6 +67,7 @@ impl HostTensor {
         }
     }
 
+    /// Mutable f32 payload (panics on dtype mismatch).
     pub fn f32s_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
             Data::F32(v) => v,
@@ -60,6 +75,7 @@ impl HostTensor {
         }
     }
 
+    /// The i32 payload (panics on dtype mismatch).
     pub fn i32s(&self) -> &[i32] {
         match &self.data {
             Data::I32(v) => v,
@@ -67,6 +83,7 @@ impl HostTensor {
         }
     }
 
+    /// Mutable i32 payload (panics on dtype mismatch).
     pub fn i32s_mut(&mut self) -> &mut [i32] {
         match &mut self.data {
             Data::I32(v) => v,

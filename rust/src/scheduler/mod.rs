@@ -16,17 +16,47 @@ use anyhow::Result;
 
 use crate::engine::{Engine, Request, SeqEvent, SeqOutput, StepStats};
 
+/// Anything the scheduler can admit requests into: the engine in
+/// production, lightweight stubs in unit tests (admission throttling is
+/// pure queue/capacity logic and must be testable without artifacts).
+pub trait AdmitTarget {
+    /// Number of slots currently free for admission.
+    fn vacancy_count(&self) -> usize;
+    /// Take ownership of `reqs` and begin serving them.
+    fn admit(&mut self, reqs: Vec<Request>) -> Result<()>;
+}
+
+impl AdmitTarget for Engine<'_> {
+    fn vacancy_count(&self) -> usize {
+        Engine::vacancy_count(self)
+    }
+    fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
+        Engine::admit(self, reqs)
+    }
+}
+
+/// Aggregate scheduler counters (monotonic over the scheduler's life).
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerStats {
+    /// Requests handed to the engine.
     pub admitted: usize,
+    /// Sequences retired (run_all / tick_events accounting).
     pub completed: usize,
+    /// Engine steps driven.
     pub steps: usize,
+    /// Tokens committed across those steps.
     pub tokens: usize,
+    /// Draft-tree nodes verified across those steps (speculation cost;
+    /// `tokens / spec_tokens` is the batch's speculation efficiency).
+    pub spec_tokens: usize,
+    /// High-water mark of the admission queue depth.
     pub max_queue_depth: usize,
 }
 
+/// FIFO continuous-batching scheduler over one engine.
 pub struct Scheduler {
     queue: VecDeque<Request>,
+    /// Aggregate counters.
     pub stats: SchedulerStats,
     /// Admit at most this many new sequences per engine step (prefill cost
     /// control / head-of-line fairness knob).
@@ -44,31 +74,36 @@ impl Default for Scheduler {
 }
 
 impl Scheduler {
+    /// An empty scheduler with default policy (no admit cap).
     pub fn new() -> Scheduler {
         Scheduler::default()
     }
 
+    /// Enqueue one request (FIFO).
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(req);
         self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
     }
 
+    /// Enqueue a batch of requests in order.
     pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
         for r in reqs {
             self.submit(r);
         }
     }
 
+    /// Requests waiting for a slot.
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
     }
 
+    /// Anything queued or still decoding?
     pub fn has_work(&self, engine: &Engine) -> bool {
         !self.queue.is_empty() || engine.active_count() > 0
     }
 
     /// Refill vacant slots from the queue (up to the per-step admit cap).
-    pub fn refill(&mut self, engine: &mut Engine) -> Result<usize> {
+    pub fn refill(&mut self, engine: &mut impl AdmitTarget) -> Result<usize> {
         let n = engine
             .vacancy_count()
             .min(self.queue.len())
@@ -92,6 +127,7 @@ impl Scheduler {
         let stats = engine.step()?;
         self.stats.steps += 1;
         self.stats.tokens += stats.tokens_committed;
+        self.stats.spec_tokens += stats.spec_tokens;
         Ok(Some(stats))
     }
 
@@ -133,6 +169,96 @@ mod tests {
     use crate::engine::SamplingParams;
     use crate::util::prop;
     use crate::{prop_assert, prop_assert_eq};
+
+    /// Admission sink with a fixed number of vacancies: admitted requests
+    /// occupy slots until `retire` frees them.
+    struct StubTarget {
+        vacancies: usize,
+        admitted: Vec<u64>,
+        fail: bool,
+    }
+
+    impl StubTarget {
+        fn new(vacancies: usize) -> StubTarget {
+            StubTarget { vacancies, admitted: Vec::new(), fail: false }
+        }
+
+        fn retire(&mut self, n: usize) {
+            self.vacancies += n;
+        }
+    }
+
+    impl AdmitTarget for StubTarget {
+        fn vacancy_count(&self) -> usize {
+            self.vacancies
+        }
+        fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
+            if self.fail {
+                anyhow::bail!("admission failed");
+            }
+            assert!(reqs.len() <= self.vacancies, "scheduler over-admitted");
+            self.vacancies -= reqs.len();
+            self.admitted.extend(reqs.iter().map(|r| r.id));
+            Ok(())
+        }
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n as u64).map(|i| Request::new(i, vec![1], SamplingParams::greedy(4))).collect()
+    }
+
+    #[test]
+    fn max_admit_per_step_caps_each_refill() {
+        let mut s = Scheduler { max_admit_per_step: 2, ..Scheduler::default() };
+        let mut t = StubTarget::new(4);
+        s.submit_all(reqs(5));
+        // Plenty of vacancies, but the cap holds head-of-line prefill cost
+        // to 2 admissions per step.
+        assert_eq!(s.refill(&mut t).unwrap(), 2);
+        assert_eq!(s.queue_depth(), 3);
+        assert_eq!(s.refill(&mut t).unwrap(), 2);
+        // Third refill: 1 request left, 0 vacancies — capacity binds now.
+        assert_eq!(s.refill(&mut t).unwrap(), 0);
+        t.retire(1);
+        assert_eq!(s.refill(&mut t).unwrap(), 1);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.stats.admitted, 5);
+        assert_eq!(t.admitted, vec![0, 1, 2, 3, 4], "FIFO order must survive the cap");
+    }
+
+    #[test]
+    fn full_batch_stalls_admission_and_tracks_queue_depth() {
+        let mut s = Scheduler::default();
+        let mut t = StubTarget::new(0); // every slot busy
+        s.submit_all(reqs(7));
+        assert_eq!(s.refill(&mut t).unwrap(), 0, "no vacancy -> no admission");
+        assert_eq!(s.stats.admitted, 0);
+        assert_eq!(s.queue_depth(), 7, "queue must hold everything while the batch is full");
+        assert_eq!(s.stats.max_queue_depth, 7);
+        // A retirement opens one slot; exactly one request drains, and the
+        // high-water mark stays at its peak.
+        t.retire(1);
+        assert_eq!(s.refill(&mut t).unwrap(), 1);
+        assert_eq!(s.queue_depth(), 6);
+        assert_eq!(s.stats.max_queue_depth, 7);
+    }
+
+    #[test]
+    fn default_cap_is_unbounded() {
+        let mut s = Scheduler::default();
+        let mut t = StubTarget::new(64);
+        s.submit_all(reqs(10));
+        assert_eq!(s.refill(&mut t).unwrap(), 10, "uncapped refill drains to capacity");
+    }
+
+    #[test]
+    fn admit_failure_propagates() {
+        let mut s = Scheduler::default();
+        let mut t = StubTarget::new(4);
+        t.fail = true;
+        s.submit_all(reqs(2));
+        assert!(s.refill(&mut t).is_err());
+    }
 
     #[test]
     fn queue_fifo() {

@@ -1,54 +1,16 @@
 //! TCP serving front-end (JSON-lines protocol) with per-request
 //! generation parameters and optional streaming sessions.
 //!
-//! Request (one JSON object per line; only "prompt" is required):
-//!
-//!   {"id": 1, "prompt": "tell me about alice.", "max_new": 64,
-//!    "mode": "greedy" | "typical", "eps": 0.15, "temp": 0.7,
-//!    "alpha": 0.39, "top_k": 0, "seed": 7, "stop": "<end>",
-//!    "stream": false, "prefix_cache": true}\n
-//!
-//! Every field maps onto the request's own `SamplingParams`: the
-//! acceptance criterion, typical-acceptance knobs, top-k root sampling,
-//! RNG seed, budget, stop marker and prefix-cache opt-out are all per
-//! sequence, so one engine batch freely mixes greedy and typical
-//! requests. `max_new` above the server's configured ceiling is clamped
-//! and reported via `"truncated_max_new": true` in the summary frame.
-//! When the server runs with `--prefix-cache`, prompt tokens restored
-//! from the prefix-reuse KV cache are reported as `"cached_tokens": N`
-//! in the summary frame; `"prefix_cache": false` opts one request out of
-//! both reuse and publication.
-//!
-//! Operator control requests carry `"op"` instead of `"prompt"`:
-//!
-//!   {"op": "stats"}\n
-//!
-//! answered with an `{"event": "stats", ...}` frame carrying scheduler
-//! counters (queue depth, admitted/completed/steps/tokens), engine slot
-//! occupancy, the `prefill_*` call count, and — when the prefix cache is
-//! on — its hit/miss/evict/byte counters, so operators can observe hit
-//! rates without restarting the server.
-//!
-//! Response, non-streaming (default) — a single summary frame:
-//!
-//!   {"id": 1, "event": "done", "text": "...", "tokens": 42, "steps": 17,
-//!    "accept_len": 2.5, "finish": "MaxTokens", "ttft_ms": ...,
-//!    "total_ms": ...}\n
-//!
-//! Response, `"stream": true` — one frame per decode step that committed
-//! tokens, then the same summary frame:
-//!
-//!   {"id": 1, "event": "delta", "text": "..."}\n      (zero or more)
-//!   {"id": 1, "event": "done", ...}\n
-//!
-//! Delta text is raw (stop-marker-gated, UTF-8 reassembled across
-//! chunks); the summary frame's "text" is the same content
-//! whitespace-trimmed, so clients reconciling the two should compare
-//! trimmed strings.
-//!
-//! Errors are structured frames, never dropped connections:
-//!
-//!   {"id": 1, "event": "error", "error": "bad request: ..."}\n
+//! **The complete wire protocol — request fields, `delta`/`done`/`error`
+//! frames, and the `{"op":"stats"}` control request — is specified in
+//! `docs/PROTOCOL.md` at the repository root.** In one line: clients
+//! send one JSON object per line (only `"prompt"` is required; every
+//! other field maps onto that request's own `SamplingParams`, including
+//! the `"speculation"` knob for adaptive draft-tree sizing and the
+//! `"prefix_cache"` opt-out), and receive zero or more
+//! `{"event":"delta"}` frames (when `"stream": true`) followed by one
+//! `{"event":"done"}` summary frame; invalid input yields an
+//! `{"event":"error"}` frame, never a dropped connection.
 //!
 //! Connection handlers run on a thread pool and forward requests over an
 //! mpsc channel to the single engine thread (the engine and PJRT client
@@ -76,18 +38,30 @@ use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use crate::workload;
 
+/// Server startup configuration (one engine, one listener).
 pub struct ServerConfig {
+    /// Listen address, e.g. "127.0.0.1:7070".
     pub addr: String,
+    /// Model size key ("s", "m", ...).
     pub size: String,
+    /// Decoding strategy/head variant ("ar", "hydra_pp", ...).
     pub variant: String,
+    /// Engine batch size (must be an AOT bucket).
     pub batch: usize,
     /// Acceptance mode for requests that don't specify one.
     pub default_mode: AcceptMode,
     /// Ceiling applied to per-request `max_new` (reported when clamped).
     pub max_new_ceiling: usize,
+    /// Connection-handler thread-pool size.
     pub conn_threads: usize,
     /// Prefix-reuse KV cache byte budget in MiB (0 = cache off).
     pub prefix_cache_mb: usize,
+    /// Run the adaptive speculation controller (per-slot dynamic draft
+    /// trees + batch-aware verification throttle).
+    pub adaptive: bool,
+    /// Per-step verification token budget for the adaptive throttle
+    /// (0 = the engine's batch-aware default). Ignored without `adaptive`.
+    pub spec_budget: usize,
 }
 
 enum Submission {
@@ -115,6 +89,14 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
     if cfg.prefix_cache_mb > 0 {
         engine.enable_prefix_cache(cfg.prefix_cache_mb << 20);
     }
+    if cfg.adaptive {
+        // spec_budget 0 = the engine's batch-aware default (resolved
+        // inside enable_adaptive).
+        engine.enable_adaptive(crate::adaptive::AdaptiveConfig {
+            step_token_budget: cfg.spec_budget,
+            ..crate::adaptive::AdaptiveConfig::default()
+        })?;
+    }
     let mut sched = Scheduler::default();
     let pcfg = proto::ProtoConfig {
         default_mode: cfg.default_mode,
@@ -122,6 +104,8 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
         // Mirror Engine::admit's hard limit so an over-long prompt is a
         // per-request error, not a serve-loop-fatal admit failure.
         max_prompt_tokens: rt.manifest.seq_max / 2,
+        // Non-adaptive servers reject "speculation" pins up front.
+        adaptive: cfg.adaptive,
     };
 
     let listener = TcpListener::bind(&cfg.addr).context("bind")?;
@@ -317,8 +301,9 @@ fn handle_conn(
 }
 
 /// Render the `{"op":"stats"}` observability frame: scheduler counters,
-/// engine occupancy, prefill-call count, and (when enabled) the prefix
-/// cache's hit/miss/evict/byte counters.
+/// engine occupancy, prefill-call count, speculation efficiency, the
+/// adaptive controller's current tree choices (when enabled), and the
+/// prefix cache's hit/miss/evict/byte counters (when enabled).
 fn render_stats(sched: &Scheduler, engine: &Engine) -> Json {
     let st = &sched.stats;
     let mut fields = vec![
@@ -332,7 +317,30 @@ fn render_stats(sched: &Scheduler, engine: &Engine) -> Json {
         ("tokens", Json::num(st.tokens as f64)),
         ("max_queue_depth", Json::num(st.max_queue_depth as f64)),
         ("prefill_calls", Json::num(engine.phase.prefill_calls as f64)),
+        ("spec_tokens_verified", Json::num(engine.spec.nodes_verified as f64)),
+        ("spec_tokens_wasted", Json::num(engine.spec.wasted as f64)),
+        ("spec_efficiency", Json::num(engine.spec.efficiency())),
     ];
+    if let Some(ad) = engine.adaptive_snapshot() {
+        // Current per-slot tree sizes (active slots only — vacant rows
+        // hold their last occupant's choice).
+        let sizes: Vec<Json> = engine
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active && !s.done)
+            .map(|(i, _)| Json::num(ad.tree_nodes[i] as f64))
+            .collect();
+        fields.push((
+            "adaptive",
+            Json::obj(vec![
+                ("step_token_budget", Json::num(ad.step_token_budget as f64)),
+                ("ladder", Json::Arr(ad.ladder.iter().map(|&n| Json::num(n as f64)).collect())),
+                ("tree_nodes", Json::Arr(sizes)),
+                ("throttled", Json::num(ad.totals.throttled as f64)),
+            ]),
+        ));
+    }
     if let Some(cs) = engine.prefix_cache_stats() {
         fields.push((
             "prefix_cache",
@@ -392,6 +400,8 @@ pub fn spawn_local_opts(
             max_new_ceiling: 256,
             conn_threads: 4,
             prefix_cache_mb,
+            adaptive: false,
+            spec_budget: 0,
         };
         if let Err(e) = serve(&rt, cfg, sd) {
             eprintln!("server error: {e}");
@@ -406,6 +416,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect, retrying while the server thread warms up.
     pub fn connect(addr: &str) -> Result<Client> {
         // Retry while the server thread warms up (compiles executables).
         let mut last = None;
@@ -437,6 +448,7 @@ impl Client {
         Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?)
     }
 
+    /// One-shot greedy generation; returns the summary frame.
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<Json> {
         self.request(&Json::obj(vec![
             ("id", Json::num(1.0)),

@@ -5,6 +5,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::adaptive::SpeculationMode;
 use crate::engine::{AcceptMode, Request, SamplingParams, SeqOutput};
 use crate::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
 use crate::util::json::Json;
@@ -24,6 +25,11 @@ pub struct ProtoConfig {
     /// request error, never reach `Engine::admit` (whose failure would
     /// take down the whole serve loop).
     pub max_prompt_tokens: usize,
+    /// Whether the serving engine runs the adaptive speculation
+    /// controller. When false, a `"speculation"` pin is rejected as a
+    /// request error — the engine would silently ignore it, and the done
+    /// frame would then contradict the actual behavior.
+    pub adaptive: bool,
 }
 
 impl Default for ProtoConfig {
@@ -32,6 +38,7 @@ impl Default for ProtoConfig {
             default_mode: AcceptMode::Greedy,
             max_new_ceiling: 256,
             max_prompt_tokens: usize::MAX,
+            adaptive: false,
         }
     }
 }
@@ -39,6 +46,7 @@ impl Default for ProtoConfig {
 /// A validated request line plus its connection-level envelope.
 #[derive(Debug, Clone)]
 pub struct ParsedRequest {
+    /// The engine request (id assigned later by the server).
     pub req: Request,
     /// Client-chosen id echoed back in every frame for this request.
     pub client_id: u64,
@@ -106,6 +114,30 @@ pub fn parse_request(line: &str, tok: &Tokenizer, pc: &ProtoConfig) -> Result<Pa
     // Per-request prefix-cache opt-out: `"prefix_cache": false` makes the
     // request neither reuse cached prefixes nor publish its own.
     let prefix_cache = v.get("prefix_cache").and_then(|x| x.as_bool()).unwrap_or(true);
+    // Per-request speculation policy: "auto" (default) lets the adaptive
+    // controller size this sequence's draft tree; an integer k pins it to
+    // at most k tree nodes (1 = pure autoregressive). Validation (range,
+    // integer-ness, "auto" spelling) is shared with the CLI through
+    // `SpeculationMode::parse`; a pin on a non-adaptive server is a
+    // request error, not a silent ignore.
+    let speculation = match v.get("speculation") {
+        None => SpeculationMode::Auto,
+        Some(x) => {
+            let text = match (x.as_str(), x.as_f64()) {
+                (Some(s), _) => s.to_string(),
+                // Integral non-negative numbers only; 2.5 / -3 / true fail.
+                (None, Some(f)) if f.fract() == 0.0 && f >= 0.0 => format!("{}", f as u64),
+                _ => x.to_string(),
+            };
+            SpeculationMode::parse(&text).map_err(|e| anyhow::anyhow!("speculation: {e}"))?
+        }
+    };
+    if speculation != SpeculationMode::Auto && !pc.adaptive {
+        bail!(
+            "speculation pinning requires an adaptive server (start with --adaptive); \
+             this server would silently ignore it"
+        );
+    }
     let stop_text = v
         .get("stop")
         .and_then(|s| s.as_str())
@@ -120,6 +152,7 @@ pub fn parse_request(line: &str, tok: &Tokenizer, pc: &ProtoConfig) -> Result<Pa
         seed,
         stream,
         prefix_cache,
+        speculation,
     };
     let prompt_ids = tok.encode(&format_prompt(prompt));
     if prompt_ids.len() > pc.max_prompt_tokens {
@@ -176,6 +209,12 @@ pub fn render_response(
         // Prompt tokens served from the prefix cache instead of prefill.
         fields.push(("cached_tokens", Json::num(out.cached_tokens as f64)));
     }
+    // Speculation report: the request's policy, the mean draft-tree size
+    // actually verified per step (the adaptive controller's choices), and
+    // the rejected share of that work.
+    fields.push(("speculation", Json::str(out.speculation.to_string())));
+    fields.push(("mean_tree_nodes", Json::num(out.mean_tree_nodes)));
+    fields.push(("wasted_draft_tokens", Json::num(out.wasted_draft_tokens as f64)));
     Json::obj(fields)
 }
 
@@ -188,6 +227,8 @@ pub fn render_delta(client_id: u64, text: &str) -> Json {
     ])
 }
 
+/// Structured error frame (`"event": "error"`); connections are never
+/// dropped on bad input.
 pub fn render_error(client_id: u64, msg: &str) -> Json {
     Json::obj(vec![
         ("id", Json::num(client_id as f64)),
@@ -206,10 +247,13 @@ pub struct Utf8Assembler {
 }
 
 impl Utf8Assembler {
+    /// An assembler holding no pending bytes.
     pub fn new() -> Utf8Assembler {
         Utf8Assembler::default()
     }
 
+    /// Feed a chunk of raw token bytes; returns the complete characters,
+    /// holding back an incomplete trailing sequence for the next chunk.
     pub fn push(&mut self, bytes: &[u8]) -> String {
         self.buf.extend_from_slice(bytes);
         let mut out = String::new();
@@ -264,6 +308,7 @@ pub struct DeltaGate {
 }
 
 impl DeltaGate {
+    /// A gate for the given stop marker (empty = pass everything).
     pub fn new(stop: &str) -> DeltaGate {
         DeltaGate { stop: stop.to_string(), held: String::new(), done: false }
     }
@@ -444,6 +489,9 @@ mod tests {
             ttft_ms: Some(5.0),
             total_ms: Some(11.0),
             cached_tokens: 0,
+            speculation: SpeculationMode::Auto,
+            mean_tree_nodes: 6.0,
+            wasted_draft_tokens: 12,
         }
     }
 
@@ -467,6 +515,55 @@ mod tests {
         // Empty stop = no truncation.
         let r = render_response(&out, 1, &t, false, "");
         assert_eq!(r.req("text").as_str(), Some("alpha ### beta"));
+    }
+
+    #[test]
+    fn parses_and_validates_speculation() {
+        let ad = ProtoConfig { adaptive: true, ..ProtoConfig::default() };
+        let pad = |line: &str| parse_request(line, &tok(), &ad);
+        let p = pad(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(p.req.params.speculation, SpeculationMode::Auto);
+        let p = pad(r#"{"prompt": "x", "speculation": "auto"}"#).unwrap();
+        assert_eq!(p.req.params.speculation, SpeculationMode::Auto);
+        let p = pad(r#"{"prompt": "x", "speculation": 1}"#).unwrap();
+        assert_eq!(p.req.params.speculation, SpeculationMode::Fixed(1));
+        let p = pad(r#"{"prompt": "x", "speculation": 16}"#).unwrap();
+        assert_eq!(p.req.params.speculation, SpeculationMode::Fixed(16));
+        for bad in [
+            r#"{"prompt": "x", "speculation": 0}"#,
+            r#"{"prompt": "x", "speculation": 2000}"#,
+            r#"{"prompt": "x", "speculation": 2.5}"#,
+            r#"{"prompt": "x", "speculation": -3}"#,
+            r#"{"prompt": "x", "speculation": "fast"}"#,
+            r#"{"prompt": "x", "speculation": true}"#,
+        ] {
+            let e = pad(bad).unwrap_err();
+            assert!(e.to_string().contains("speculation"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn speculation_pin_rejected_without_adaptive_server() {
+        // The default ProtoConfig models a non-adaptive server: "auto"
+        // (explicit or implied) passes, a pin is a request error — the
+        // engine would silently ignore it otherwise.
+        assert!(parse(r#"{"prompt": "x"}"#).is_ok());
+        assert!(parse(r#"{"prompt": "x", "speculation": "auto"}"#).is_ok());
+        let e = parse(r#"{"prompt": "x", "speculation": 1}"#).unwrap_err();
+        assert!(e.to_string().contains("adaptive"), "{e}");
+    }
+
+    #[test]
+    fn response_reports_speculation() {
+        let t = tok();
+        let mut out = sample_out(t.encode("hi"));
+        let r = render_response(&out, 2, &t, false, STOP_TEXT);
+        assert_eq!(r.req("speculation").as_str(), Some("auto"));
+        assert_eq!(r.req("mean_tree_nodes").as_f64(), Some(6.0));
+        assert_eq!(r.req("wasted_draft_tokens").as_usize(), Some(12));
+        out.speculation = SpeculationMode::Fixed(1);
+        let r = render_response(&out, 2, &t, false, STOP_TEXT);
+        assert_eq!(r.req("speculation").as_str(), Some("fixed(1)"));
     }
 
     #[test]

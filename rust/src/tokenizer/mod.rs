@@ -11,8 +11,10 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
+/// Token ids below this are raw bytes; merges start here.
 pub const N_BYTE_TOKENS: u32 = 256;
 
+/// Byte-level BPE tokenizer applying a trained merge table.
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
     merges: Vec<(u32, u32)>,
@@ -22,6 +24,7 @@ pub struct Tokenizer {
 }
 
 impl Tokenizer {
+    /// Build from an ordered merge table (rank = index).
     pub fn new(merges: Vec<(u32, u32)>) -> Tokenizer {
         let ranks = merges
             .iter()
@@ -37,6 +40,7 @@ impl Tokenizer {
         Tokenizer { merges, ranks, expansions }
     }
 
+    /// Load the merge table from `tokenizer.json`.
     pub fn load(path: &Path) -> Result<Tokenizer> {
         let v = Json::parse_file(path)?;
         let merges = v
@@ -52,10 +56,13 @@ impl Tokenizer {
         Ok(Tokenizer::new(merges))
     }
 
+    /// Total vocabulary size (bytes + merges).
     pub fn vocab_size(&self) -> usize {
         256 + self.merges.len()
     }
 
+    /// Encode text to token ids (lowest-rank applicable merge first,
+    /// identical to the Python trainer's encode).
     pub fn encode(&self, text: &str) -> Vec<u32> {
         let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
         while ids.len() >= 2 {
@@ -90,6 +97,7 @@ impl Tokenizer {
         ids
     }
 
+    /// Decode token ids to text (lossy on invalid UTF-8).
     pub fn decode(&self, ids: &[u32]) -> String {
         String::from_utf8_lossy(&self.decode_bytes(ids)).into_owned()
     }
@@ -108,6 +116,7 @@ impl Tokenizer {
         bytes
     }
 
+    /// Decode a single token id.
     pub fn decode_one(&self, id: u32) -> String {
         self.decode(&[id])
     }
@@ -120,6 +129,7 @@ pub fn format_prompt(prompt: &str) -> String {
     format!("<user> {prompt} <bot>")
 }
 
+/// The default stop marker emitted by the trained model.
 pub const STOP_TEXT: &str = "<end>";
 
 #[cfg(test)]

@@ -19,8 +19,13 @@ use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
+/// Sentinel parent index of the root node.
 pub const NO_PARENT: usize = usize::MAX;
 
+/// A static candidate tree in packed canonical order: node 0 is the
+/// root; non-root nodes appear sorted by depth, then lexicographically by
+/// choice path — so parents always precede children and any prefix of
+/// the node list is itself a valid tree (see [`TreeTopology::truncate_prefix`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TreeTopology {
     /// Canonically ordered choice paths (parents before children).
@@ -90,14 +95,17 @@ impl TreeTopology {
         Ok(TreeTopology { paths, parent, depth, rank, children, by_depth })
     }
 
+    /// Number of nodes, root included.
     pub fn len(&self) -> usize {
         self.parent.len()
     }
 
+    /// A topology always contains at least the root.
     pub fn is_empty(&self) -> bool {
         false // always has the root
     }
 
+    /// Depth of the deepest node (root = 1).
     pub fn max_depth(&self) -> usize {
         self.by_depth.len()
     }
@@ -143,8 +151,25 @@ impl TreeTopology {
         self.children[node].len()
     }
 
+    /// The subtree spanned by the first `n_nodes` nodes of the packed
+    /// canonical order (clamped to `[1, len()]`).
+    ///
+    /// Always valid: canonical order sorts paths by depth then
+    /// lexicographically, so for every included non-root node its parent
+    /// (shorter path) and its lower-rank siblings (lexicographically
+    /// earlier at the same depth) are included too — exactly the
+    /// prefix-closure and rank-contiguity `from_paths` validates. This
+    /// is how the adaptive controller derives its tree ladder
+    /// (`adaptive::TreeLadder`) from one tuned tree.
+    pub fn truncate_prefix(&self, n_nodes: usize) -> TreeTopology {
+        let n = n_nodes.clamp(1, self.len());
+        TreeTopology::from_paths(self.paths[..n - 1].to_vec())
+            .expect("canonical prefix is always a valid tree")
+    }
+
     // ---- (de)serialization -------------------------------------------------
 
+    /// Serialize as the Medusa-style choice-path array.
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.paths
@@ -154,6 +179,7 @@ impl TreeTopology {
         )
     }
 
+    /// Parse a choice-path array written by [`TreeTopology::to_json`].
     pub fn from_json(v: &Json) -> Result<TreeTopology> {
         let paths = v
             .as_arr()
@@ -292,6 +318,39 @@ mod tests {
             paths.push(p);
         }
         TreeTopology::from_paths(paths).unwrap()
+    }
+
+    #[test]
+    fn truncate_prefix_basics() {
+        let t = TreeTopology::default_tree(16);
+        assert_eq!(t.truncate_prefix(1).len(), 1);
+        assert_eq!(t.truncate_prefix(0).len(), 1); // clamped
+        assert_eq!(t.truncate_prefix(t.len()).paths, t.paths);
+        assert_eq!(t.truncate_prefix(t.len() + 5).paths, t.paths); // clamped
+        let half = t.truncate_prefix(t.len() / 2);
+        assert_eq!(half.len(), t.len() / 2);
+        assert_eq!(half.paths[..], t.paths[..half.len() - 1]);
+    }
+
+    #[test]
+    fn prop_every_canonical_prefix_is_a_valid_subtree() {
+        prop::check("tree-prefix", 100, |rng| {
+            let t = random_tree(rng, 32);
+            for n in 1..=t.len() {
+                let sub = t.truncate_prefix(n); // must not panic
+                prop_assert_eq!(sub.len(), n);
+                prop_assert_eq!(sub.paths.clone(), t.paths[..n - 1].to_vec());
+                // The prefix preserves structure node-for-node.
+                for i in 0..n {
+                    prop_assert_eq!(sub.depth[i], t.depth[i]);
+                    prop_assert_eq!(sub.rank[i], t.rank[i]);
+                    if i > 0 {
+                        prop_assert_eq!(sub.parent[i], t.parent[i]);
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

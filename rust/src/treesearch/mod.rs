@@ -20,13 +20,16 @@ use crate::runtime::Runtime;
 use crate::tree::TreeTopology;
 use crate::util::json::Json;
 
+/// Tuning knobs for the §4 tree search.
 #[derive(Debug, Clone)]
 pub struct SearchParams {
+    /// Largest proposal tree grown.
     pub max_nodes: usize,
     /// Corpus windows used as simulation prompts per growth iteration.
     pub contexts: usize,
     /// Decode steps simulated per context.
     pub steps_per_context: usize,
+    /// Simulation RNG seed.
     pub seed: u64,
 }
 
@@ -36,8 +39,10 @@ impl Default for SearchParams {
     }
 }
 
+/// One grown proposal tree plus its simulated acceptance.
 #[derive(Debug, Clone)]
 pub struct Proposal {
+    /// The proposal topology.
     pub tree: TreeTopology,
     /// Mean acceptance length measured during the growth simulation.
     pub sim_accept_len: f64,
@@ -107,7 +112,7 @@ fn simulate_gains(
                 seed: params.seed + ci as u64,
             },
         )?;
-        engine.enable_probe();
+        engine.enable_probe()?;
         let prompt: Vec<u32> = w.iter().take(96).copied().collect();
         engine.admit(vec![Request::new(
             ci as u64,
@@ -169,12 +174,19 @@ pub fn measure_throughput(
     Ok(tokens as f64 / t0.elapsed().as_secs_f64())
 }
 
+/// Result of a full search: the probed size/accept/throughput curve and
+/// the winning tree.
 #[derive(Debug, Clone)]
 pub struct SearchOutcome {
+    /// Probed proposal sizes (node counts).
     pub sizes: Vec<usize>,
+    /// Simulated mean acceptance length per probed size.
     pub sim_accept: Vec<f64>,
+    /// Measured end-to-end throughput (tok/s) per probed size.
     pub throughput: Vec<f64>,
+    /// The throughput-argmax tree.
     pub best_tree: TreeTopology,
+    /// Node count of the winning tree.
     pub best_size: usize,
 }
 

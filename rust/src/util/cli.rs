@@ -3,10 +3,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default)]
 pub struct Args {
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional (non-flag) arguments in order.
     pub positional: Vec<String>,
 }
 
@@ -38,6 +40,8 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments; exits with an error message on
+    /// malformed input.
     pub fn from_env(known_flags: &[&str]) -> Args {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         match Args::parse(&argv, known_flags) {
@@ -49,22 +53,27 @@ impl Args {
         }
     }
 
+    /// Was a boolean switch passed?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of a `--key value` option.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String option with default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer option with default (panics on non-integer input).
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
     }
 
+    /// Float option with default (panics on non-float input).
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name).map(|v| v.parse().expect("float flag")).unwrap_or(default)
     }

@@ -4,25 +4,36 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with byte position.
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
 impl Json {
     // ---- accessors --------------------------------------------------------
+    /// Object field lookup (None for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,42 +46,50 @@ impl Json {
         self.get(key)
             .unwrap_or_else(|| panic!("missing json key `{key}` in {self:.60?}"))
     }
+    /// String value (None for other kinds).
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric value (None for other kinds).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Numeric value truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
+    /// Numeric value truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// Boolean value (None for other kinds).
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array elements (None for other kinds).
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object map (None for other kinds).
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
         }
     }
+    /// Numeric array as usizes (non-numbers silently dropped).
     pub fn usize_arr(&self) -> Vec<usize> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
@@ -78,17 +97,21 @@ impl Json {
     }
 
     // ---- constructors -----------------------------------------------------
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+    /// Numeric value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
     // ---- parsing ----------------------------------------------------------
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, pos: 0 };
@@ -101,6 +124,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON file, attaching the path to any error.
     pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
@@ -108,6 +132,8 @@ impl Json {
     }
 
     // ---- serialization ----------------------------------------------------
+    /// Serialize to compact JSON (deterministic: object keys are sorted).
+    #[allow(clippy::inherent_to_string_shadow_display)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

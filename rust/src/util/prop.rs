@@ -29,7 +29,8 @@ pub fn check<F: Fn(&mut Pcg32) -> Result<(), String>>(name: &str, cases: usize, 
     }
 }
 
-/// Assertion helpers returning Result for use inside properties.
+/// Assert a condition inside a property, returning `Err` (not
+/// panicking) so the harness can report the failing seed.
 #[macro_export]
 macro_rules! prop_assert {
     ($cond:expr, $($fmt:tt)*) => {
@@ -39,6 +40,8 @@ macro_rules! prop_assert {
     };
 }
 
+/// Assert equality inside a property, returning `Err` (not panicking)
+/// so the harness can report the failing seed.
 #[macro_export]
 macro_rules! prop_assert_eq {
     ($a:expr, $b:expr) => {

@@ -2,6 +2,7 @@
 //! generators, samplers, and the property-test harness — all benchmark
 //! randomness is seeded and reproducible.
 
+/// PCG-XSH-RR 64/32 generator.
 #[derive(Debug, Clone)]
 pub struct Pcg32 {
     state: u64,
@@ -9,10 +10,13 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Seeded generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// Seeded generator on an explicit stream (distinct streams from the
+    /// same seed are independent — used for per-request RNGs).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
         rng.next_u32();
@@ -21,6 +25,7 @@ impl Pcg32 {
         rng
     }
 
+    /// Next raw 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
@@ -29,6 +34,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next raw 64-bit output (two 32-bit draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
@@ -38,6 +44,7 @@ impl Pcg32 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -55,14 +62,17 @@ impl Pcg32 {
         }
     }
 
+    /// Uniform integer in [lo, hi).
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.below(hi - lo)
     }
 
+    /// Uniformly chosen element (panics on empty slices).
     pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len())]
     }
 
+    /// Fisher–Yates shuffle in place.
     pub fn shuffle<T>(&mut self, items: &mut [T]) {
         for i in (1..items.len()).rev() {
             items.swap(i, self.below(i + 1));

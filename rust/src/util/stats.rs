@@ -15,18 +15,28 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Distribution summary of a sample.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Maximum.
     pub max: f64,
 }
 
+/// Summarize a sample (sorts a copy; datasets here are small).
 pub fn summarize(values: &[f64]) -> Summary {
     if values.is_empty() {
         return Summary::default();
@@ -84,6 +94,7 @@ pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
     top
 }
 
+/// Index of the maximum value (first on ties; 0 for empty input).
 pub fn argmax(values: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in values.iter().enumerate() {

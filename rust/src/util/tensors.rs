@@ -9,13 +9,17 @@ use anyhow::{bail, Context, Result};
 
 use super::json::Json;
 
+/// Element type of a stored tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit integer.
     I32,
 }
 
 impl DType {
+    /// Parse a dtype name ("f32" | "i32").
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "f32" => Ok(DType::F32),
@@ -25,20 +29,26 @@ impl DType {
     }
 }
 
+/// One named tensor from an HTB1 file.
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Tensor name (the weight-set key).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions, outermost first.
     pub shape: Vec<usize>,
     /// Raw little-endian payload (4 bytes per element for both dtypes).
     pub data: Vec<u8>,
 }
 
 impl Tensor {
+    /// Element count (product of the shape).
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Decode the payload as f32 (panics on dtype mismatch).
     pub fn as_f32(&self) -> Vec<f32> {
         assert_eq!(self.dtype, DType::F32, "{}", self.name);
         self.data
@@ -47,6 +57,7 @@ impl Tensor {
             .collect()
     }
 
+    /// Decode the payload as i32 (panics on dtype mismatch).
     pub fn as_i32(&self) -> Vec<i32> {
         assert_eq!(self.dtype, DType::I32, "{}", self.name);
         self.data
@@ -56,6 +67,7 @@ impl Tensor {
     }
 }
 
+/// Read all tensors of an HTB1 file, keyed by name.
 pub fn read_tensors(path: &Path) -> Result<BTreeMap<String, Tensor>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     if bytes.len() < 8 || &bytes[..4] != b"HTB1" {

@@ -8,12 +8,14 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size worker pool; joins its workers on drop.
 pub struct ThreadPool {
     sender: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `size` workers (must be > 0).
     pub fn new(size: usize) -> ThreadPool {
         assert!(size > 0);
         let (sender, receiver) = mpsc::channel::<Job>();
@@ -36,6 +38,7 @@ impl ThreadPool {
         ThreadPool { sender: Some(sender), workers }
     }
 
+    /// Queue a job for the next free worker.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.sender
             .as_ref()

@@ -12,16 +12,23 @@ use crate::tokenizer::{format_prompt, Tokenizer, STOP_TEXT};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
+/// SpecBench-sim prompt categories.
 pub const CATEGORIES: &[&str] = &["chat", "translation", "summary", "qa", "math", "rag"];
 
+/// One evaluation prompt with its reference answer.
 #[derive(Debug, Clone)]
 pub struct EvalPrompt {
+    /// Stable prompt id.
     pub id: String,
+    /// Category (see [`CATEGORIES`]).
     pub category: String,
+    /// The user prompt text.
     pub prompt: String,
+    /// Reference answer from the generation grammar.
     pub answer: String,
 }
 
+/// Load artifacts/prompts.json.
 pub fn load_prompts(artifacts: &Path) -> Result<Vec<EvalPrompt>> {
     let v = Json::parse_file(&artifacts.join("prompts.json"))?;
     v.as_arr()
@@ -50,6 +57,7 @@ pub fn open_ended(prompts: &[EvalPrompt]) -> Vec<&EvalPrompt> {
     prompts.iter().filter(|p| p.category == "chat" || p.category == "summary").collect()
 }
 
+/// Prompts of one category.
 pub fn by_category<'a>(prompts: &'a [EvalPrompt], cat: &str) -> Vec<&'a EvalPrompt> {
     prompts.iter().filter(|p| p.category == cat).collect()
 }
@@ -143,11 +151,13 @@ pub fn load_corpus_windows(artifacts: &Path) -> Result<Vec<Vec<u32>>> {
 /// Poisson arrival process for server load tests.
 pub struct ArrivalProcess {
     rng: Pcg32,
+    /// Mean arrival rate (requests per second).
     pub rate_per_s: f64,
     t_next: f64,
 }
 
 impl ArrivalProcess {
+    /// A seeded process with the given mean rate.
     pub fn new(rate_per_s: f64, seed: u64) -> ArrivalProcess {
         ArrivalProcess { rng: Pcg32::new(seed), rate_per_s, t_next: 0.0 }
     }

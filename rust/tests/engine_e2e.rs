@@ -6,9 +6,11 @@
 //! stream of plain autoregressive greedy decoding — speculation may only
 //! change speed, never output (paper §2, "greedy acceptance").
 
+use hydra_serve::adaptive::AdaptiveConfig;
 use hydra_serve::draft;
 use hydra_serve::engine::{
     AcceptMode, Engine, EngineConfig, FinishReason, Request, SamplingParams, SeqEvent,
+    SpeculationMode,
 };
 use hydra_serve::runtime::Runtime;
 use hydra_serve::scheduler::Scheduler;
@@ -353,6 +355,98 @@ fn per_slot_accept_modes_in_one_batch() {
         greedy_out.generated, solo,
         "greedy slot diverged from solo greedy — typical neighbour leaked into its criterion"
     );
+}
+
+#[test]
+fn adaptive_mixed_fixed_and_auto_matches_solo_greedy() {
+    // Adaptive speculation's correctness contract: per-slot dynamic trees
+    // change SPEED only. One batch mixes a `speculation: fixed(1)` slot
+    // (pure autoregressive — a 1-node tree every step) with an `auto`
+    // slot (controller-sized trees); under greedy acceptance both must
+    // produce byte-identical output to their solo static-tree runs.
+    let rt = runtime();
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let buckets = rt.manifest.batch_buckets[&size].clone();
+    let Some(b) = buckets.iter().copied().filter(|&b| b >= 2).min() else {
+        return; // fast artifacts: no batched buckets
+    };
+    let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
+    let tree = if variant == "ar" {
+        TreeTopology::ar()
+    } else {
+        draft::default_tree(variant, b)
+    };
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: size.clone(),
+            variant: variant.into(),
+            tree: tree.clone(),
+            batch: b,
+            seed: 9,
+        },
+    )
+    .unwrap();
+    engine
+        .enable_adaptive(AdaptiveConfig::default())
+        .expect("enable adaptive");
+
+    let p_fixed = t.encode(&format_prompt("tell me about alice."));
+    let p_auto = t.encode(&format_prompt("who is bob?"));
+    let max_new = 32;
+    engine
+        .admit(vec![
+            Request::new(
+                0,
+                p_fixed.clone(),
+                SamplingParams {
+                    speculation: SpeculationMode::Fixed(1),
+                    ..SamplingParams::greedy(max_new)
+                },
+            ),
+            Request::new(
+                1,
+                p_auto.clone(),
+                SamplingParams {
+                    speculation: SpeculationMode::Auto,
+                    ..SamplingParams::greedy(max_new)
+                },
+            ),
+        ])
+        .unwrap();
+    while engine.active_count() > 0 {
+        engine.step().unwrap();
+    }
+    let outs = engine.take_outputs();
+    assert_eq!(outs.len(), 2, "both sequences must finish");
+    let fixed_out = outs.iter().find(|o| o.req_id == 0).unwrap();
+    let auto_out = outs.iter().find(|o| o.req_id == 1).unwrap();
+
+    // The fixed(1) slot must really have decoded autoregressively: one
+    // verified node per step, zero wasted speculation, one token per step.
+    assert_eq!(fixed_out.speculation, SpeculationMode::Fixed(1));
+    assert!(
+        (fixed_out.mean_tree_nodes - 1.0).abs() < 1e-9,
+        "fixed(1) slot verified {} nodes/step, expected exactly 1",
+        fixed_out.mean_tree_nodes
+    );
+    assert_eq!(fixed_out.wasted_draft_tokens, 0);
+    assert_eq!(fixed_out.steps, max_new);
+    assert_eq!(auto_out.speculation, SpeculationMode::Auto);
+
+    // Byte-identical to the solo static-tree greedy runs.
+    let solo_tree =
+        if variant == "ar" { TreeTopology::ar() } else { draft::default_tree(variant, 1) };
+    let (solo_fixed, _, _) = decode_with(
+        &rt, &size, variant, solo_tree.clone(), p_fixed, max_new, AcceptMode::Greedy);
+    let (solo_auto, _, _) =
+        decode_with(&rt, &size, variant, solo_tree, p_auto, max_new, AcceptMode::Greedy);
+    assert_eq!(
+        fixed_out.generated, solo_fixed,
+        "fixed(1) slot diverged from solo greedy output"
+    );
+    assert_eq!(auto_out.generated, solo_auto, "auto slot diverged from solo greedy output");
 }
 
 #[test]
