@@ -1,0 +1,242 @@
+//! Gateway scaling A/B — 1 vs N engine workers on the multi-tenant
+//! shared-prefix workload.
+//!
+//! The same trace (`workload::multi_tenant`: T tenants × shared system
+//! preambles × bursty arrivals) is driven through the replica gateway
+//! twice: once with a single worker, once with N >= 2 workers behind
+//! prefix-affinity routing, each worker with its own prefix cache.
+//!
+//! Assertions (the ISSUE acceptance criteria):
+//! * greedy output is token-identical between pool sizes — routing and
+//!   replication may change placement and speed, never text;
+//! * at N >= 2, pool throughput is at least the single-worker
+//!   throughput (a 0.95 noise floor absorbs shared-CI wall-clock
+//!   jitter; in quick mode the wall-clock comparison is advisory, the
+//!   identity check is the hard gate).
+//!
+//! Results append to bench_results/gateway.json (uploaded as a CI
+//! artifact so the scaling trajectory accumulates across PRs).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Instant;
+
+use hydra_serve::bench::{fmt1, save_result, BenchCtx, Table};
+use hydra_serve::engine::SeqEvent;
+use hydra_serve::gateway::{Gateway, GatewayConfig, GatewayReply};
+use hydra_serve::metrics::RunMetrics;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload::{self, TenantRequest};
+
+struct PoolResult {
+    /// Aggregated pool metrics (per-request numbers folded together).
+    m: RunMetrics,
+    /// trace index -> generated token ids (greedy identity check).
+    outputs: BTreeMap<usize, Vec<u32>>,
+    /// Merged `stats` frame after the run (prefill calls, cache hits).
+    stats: Json,
+}
+
+fn run_pool(
+    ctx: &BenchCtx,
+    size: &str,
+    variant: &str,
+    batch: usize,
+    workers: usize,
+    trace: &[TenantRequest],
+) -> anyhow::Result<PoolResult> {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let gw = Gateway::start(
+        GatewayConfig {
+            artifacts: ctx.rt.manifest.dir.clone(),
+            size: size.to_string(),
+            variant: variant.to_string(),
+            batch,
+            workers,
+            // The A/B measures routing + replication, not shedding:
+            // size the queues so nothing is shed.
+            queue_depth: trace.len().max(8),
+            prefix_cache_mb: 16,
+            adaptive: false,
+            spec_budget: 0,
+            seed: 1234,
+        },
+        shutdown,
+    )?;
+
+    // Warm every worker (engine build + lazy executable compiles) with
+    // two rounds of distinct prompts; the bounded-channel backlog spreads
+    // one per worker while the engines boot. Results discarded.
+    for round in 0..2 {
+        let warm: Vec<_> = (0..workers)
+            .map(|i| {
+                let params = workload::default_params(&ctx.tok, 8);
+                let prompt = format!("warmup round {round} for worker slot {i}.");
+                let ids = ctx.tok.encode(&hydra_serve::tokenizer::format_prompt(&prompt));
+                gw.submit(hydra_serve::engine::Request::new(0, ids, params))
+                    .expect("warmup must not shed")
+            })
+            .collect();
+        for (_, rx) in warm {
+            loop {
+                match rx.recv()? {
+                    GatewayReply::Event(SeqEvent::Finished(_)) => break,
+                    GatewayReply::Event(_) => {}
+                    GatewayReply::Overloaded { .. } => anyhow::bail!("warmup shed"),
+                    GatewayReply::Failed { error } => anyhow::bail!("warmup failed: {error}"),
+                }
+            }
+        }
+    }
+
+    // Timed run: submit the whole trace (arrival order; the burst
+    // structure drives affinity grouping) and collect every summary.
+    let t0 = Instant::now();
+    let mut sessions = Vec::with_capacity(trace.len());
+    for (i, tr) in trace.iter().enumerate() {
+        let (_, rx) = gw.submit(tr.req.clone()).expect("trace must not shed (queue sized)");
+        sessions.push((i, rx));
+    }
+    let mut m = RunMetrics::new(format!("gateway-{size}-{variant}-b{batch}-w{workers}"));
+    let mut outputs = BTreeMap::new();
+    for (i, rx) in sessions {
+        loop {
+            match rx.recv()? {
+                GatewayReply::Event(SeqEvent::Finished(out)) => {
+                    m.tokens_generated += out.generated.len();
+                    m.steps += out.steps;
+                    for &a in &out.accept_hist {
+                        m.accept.record(a);
+                    }
+                    outputs.insert(i, out.generated);
+                    break;
+                }
+                GatewayReply::Event(_) => {}
+                GatewayReply::Overloaded { .. } => anyhow::bail!("trace request {i} shed"),
+                GatewayReply::Failed { error } => {
+                    anyhow::bail!("trace request {i} failed: {error}")
+                }
+            }
+        }
+    }
+    m.decode_wall = t0.elapsed();
+    m.wall = m.decode_wall;
+
+    // Fold the per-worker engine counters into the pool metrics through
+    // the aggregated stats frame (prefill calls, speculation cost).
+    let stats = gw.stats();
+    let mut counters = RunMetrics::new("workers");
+    counters.prefill_calls = stats.req("prefill_calls").as_f64().unwrap_or(0.0) as u64;
+    counters.spec_tokens_verified =
+        stats.req("spec_tokens_verified").as_f64().unwrap_or(0.0) as usize;
+    m.absorb(&counters);
+
+    assert_eq!(outputs.len(), trace.len(), "all trace requests must complete");
+    Ok(PoolResult { m, outputs, stats })
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let size = "s".to_string();
+    let variant = ["hydra_pp", "hydra", "medusa"]
+        .into_iter()
+        .find(|v| ctx.has_variant(&size, v))
+        .unwrap_or("ar")
+        .to_string();
+    // Per-worker batch: the largest AOT bucket <= 4 keeps per-worker
+    // batching realistic without starving a small trace.
+    let batch = ctx.rt.manifest.batch_buckets[&size]
+        .iter()
+        .copied()
+        .filter(|&b| b <= 4)
+        .max()
+        .unwrap_or(1);
+    let workers_n = 2usize;
+    let gen_tokens = ctx.scale(24);
+    let (tenants, bursts, burst_len) = if ctx.quick { (2, 4, 2) } else { (4, 8, 3) };
+
+    let params = workload::default_params(&ctx.tok, gen_tokens);
+    let trace = workload::multi_tenant(&ctx.tok, &params, tenants, bursts, burst_len, 7, 0);
+    println!(
+        "gateway A/B: {size}/{variant} b{batch}, trace {} reqs x {gen_tokens} tokens \
+         ({tenants} tenants, {bursts} bursts)",
+        trace.len()
+    );
+
+    let solo = run_pool(&ctx, &size, &variant, batch, 1, &trace)?;
+    let pool = run_pool(&ctx, &size, &variant, batch, workers_n, &trace)?;
+
+    // Greedy identity: replication and affinity routing must never
+    // change the token stream, only the placement.
+    assert_eq!(
+        solo.outputs, pool.outputs,
+        "{workers_n}-worker greedy output diverged from single-worker"
+    );
+
+    let mut table = Table::new(
+        &format!("Gateway scaling A/B ({size}/{variant}, greedy, shared-prefix trace)"),
+        &["workers", "tok/s", "prefill calls", "cache hits", "mean accept"],
+    );
+    let cache_hits = |r: &PoolResult| {
+        r.stats
+            .get("prefix_cache")
+            .map(|pc| {
+                pc.req("full_hits").as_f64().unwrap_or(0.0)
+                    + pc.req("partial_hits").as_f64().unwrap_or(0.0)
+            })
+            .unwrap_or(0.0)
+    };
+    for (w, r) in [(1, &solo), (workers_n, &pool)] {
+        table.row(vec![
+            w.to_string(),
+            fmt1(r.m.throughput()),
+            r.m.prefill_calls.to_string(),
+            fmt1(cache_hits(r)),
+            fmt1(r.m.mean_accept_len()),
+        ]);
+    }
+    table.print();
+
+    save_result(
+        "gateway",
+        Json::Arr(vec![Json::obj(vec![
+            ("variant", Json::str(variant.clone())),
+            ("batch", Json::num(batch as f64)),
+            ("requests", Json::num(trace.len() as f64)),
+            ("gen_tokens", Json::num(gen_tokens as f64)),
+            ("workers", Json::num(workers_n as f64)),
+            ("solo_tps", Json::num(solo.m.throughput())),
+            ("pool_tps", Json::num(pool.m.throughput())),
+            ("solo_prefill_calls", Json::num(solo.m.prefill_calls as f64)),
+            ("pool_prefill_calls", Json::num(pool.m.prefill_calls as f64)),
+            ("solo_cache_hits", Json::num(cache_hits(&solo))),
+            ("pool_cache_hits", Json::num(cache_hits(&pool))),
+        ])]),
+    )?;
+
+    let (solo_tps, pool_tps) = (solo.m.throughput(), pool.m.throughput());
+    println!(
+        "\n1 worker: {solo_tps:.1} tok/s vs {workers_n} workers: {pool_tps:.1} tok/s \
+         ({:.2}x)",
+        pool_tps / solo_tps.max(1e-9)
+    );
+    // The wall-clock comparison is advisory in quick mode (CI runs on
+    // noisy shared runners); the deterministic identity assertion above
+    // is the hard gate there.
+    if ctx.quick {
+        if pool_tps < solo_tps * 0.95 {
+            println!(
+                "WARNING: {workers_n}-worker pool below the 0.95x floor \
+                 ({pool_tps:.1} vs {solo_tps:.1} tok/s) — quick mode, not failing"
+            );
+        }
+    } else {
+        assert!(
+            pool_tps >= solo_tps * 0.95,
+            "{workers_n}-worker pool must not serve the shared-prefix trace slower than \
+             one worker ({pool_tps:.1} < 0.95 * {solo_tps:.1} tok/s)"
+        );
+    }
+    Ok(())
+}

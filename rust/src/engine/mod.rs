@@ -438,6 +438,14 @@ impl<'rt> Engine<'rt> {
         self.pool.slot_len(slot)
     }
 
+    /// Ids of the requests currently occupying slots (decoding or awaiting
+    /// retirement). The gateway's drain protocol steps a worker until this
+    /// is empty — its in-flight sequences, unlike its queued ones, are
+    /// completed in place rather than re-routed.
+    pub fn active_req_ids(&self) -> Vec<u64> {
+        self.slots.iter().filter(|s| s.active).map(|s| s.req_id).collect()
+    }
+
     /// Turn on the prefix-reuse KV cache with the given byte budget.
     /// Committed prefixes are published after cold prefills and at
     /// sequence retirement; admission performs longest-prefix lookup and

@@ -1,0 +1,647 @@
+//! Replica gateway: a pool of N engine workers behind one front-end.
+//!
+//! The serving substrate is deliberately single-threaded per engine (one
+//! PJRT client, one decode loop — `docs/ARCHITECTURE.md`), so a single
+//! engine caps at one core no matter how good speculation gets. The
+//! gateway is the layer that multiplies it: it owns **N workers**, each
+//! a dedicated thread running its own `Runtime` + `Scheduler` + `Engine`
+//! (with per-worker prefix cache and adaptive controller), and routes
+//! requests between the TCP front-end and the pool.
+//!
+//! Placement is **prefix-affine**: a request's routing key is the
+//! [`prefix_fingerprint`](crate::prefixcache::prefix_fingerprint) of its
+//! prompt, so shared-prompt traffic pins to the worker whose prefix
+//! cache already holds those KV rows; everything else falls back to the
+//! least-loaded worker (queue depth × mean verified tree nodes — see
+//! [`router`]). Per-worker submission queues are **bounded**: when every
+//! eligible worker is at capacity the request is shed with a structured
+//! `overloaded` error (and a retry-after hint) instead of blocking the
+//! accept loop.
+//!
+//! Lifecycle: per-worker health (heartbeat, slot occupancy) is exported
+//! through [`Gateway::health`]; [`Gateway::drain`] stops admissions on
+//! one worker, re-routes its queued requests to siblings, and completes
+//! its in-flight sequences before reporting; [`Gateway::stats`]
+//! aggregates every worker's scheduler/engine/prefix-cache/speculation
+//! counters into one frame (per-worker blocks + merged totals).
+
+pub mod router;
+mod worker;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Request, SeqEvent};
+use crate::prefixcache::prefix_fingerprint;
+use crate::util::json::Json;
+use router::{Router, WorkerLoad};
+
+/// Gateway startup configuration: the pool shape plus the per-worker
+/// engine settings (every worker runs the same model configuration).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Artifacts directory each worker opens its own `Runtime` over.
+    pub artifacts: PathBuf,
+    /// Model size key ("s", "m", ...).
+    pub size: String,
+    /// Decoding strategy/head variant ("ar", "hydra_pp", ...).
+    pub variant: String,
+    /// Per-worker engine batch size (must be an AOT bucket).
+    pub batch: usize,
+    /// Number of engine workers (>= 1), one dedicated thread each.
+    pub workers: usize,
+    /// Bound on each worker's submission backlog (channel + scheduler
+    /// queue). A request routed to a worker at this bound is shed with
+    /// an `overloaded` frame. 0 = auto: `max(8, 4 × batch)`.
+    pub queue_depth: usize,
+    /// Per-worker prefix-reuse KV cache budget in MiB (0 = cache off).
+    pub prefix_cache_mb: usize,
+    /// Run the adaptive speculation controller in every worker.
+    pub adaptive: bool,
+    /// Per-step verification token budget for the adaptive throttle
+    /// (0 = the engine's batch-aware default). Ignored without `adaptive`.
+    pub spec_budget: usize,
+    /// Engine seed, same for every worker (greedy output is
+    /// seed-invariant; explicit per-request seeds override anyway).
+    pub seed: u64,
+}
+
+impl GatewayConfig {
+    /// The effective per-worker backlog bound (resolves `0` = auto to
+    /// `max(8, 4 × batch)`).
+    pub fn resolved_queue_depth(&self) -> usize {
+        if self.queue_depth == 0 {
+            (4 * self.batch).max(8)
+        } else {
+            self.queue_depth
+        }
+    }
+}
+
+/// A reply frame for one submitted request, delivered on the channel
+/// returned by [`Gateway::submit`].
+#[derive(Debug, Clone)]
+pub enum GatewayReply {
+    /// A sequence event from the serving worker: zero or more `Delta`s
+    /// (streaming requests only), then exactly one `Finished` — unless
+    /// the stream ends in `Overloaded`/`Failed` instead.
+    Event(SeqEvent),
+    /// The request was shed after submission (a drain re-route found no
+    /// worker with queue room). Terminal for this request.
+    Overloaded {
+        /// Suggested client backoff in milliseconds.
+        retry_after_ms: u64,
+    },
+    /// The serving worker failed before completing the request.
+    /// Terminal for this request.
+    Failed {
+        /// Human-readable failure description.
+        error: String,
+    },
+}
+
+/// Why a submission was rejected synchronously by [`Gateway::submit`].
+#[derive(Debug, Clone)]
+pub enum SubmitError {
+    /// Every eligible worker's bounded queue is full (or every worker is
+    /// draining/dead). Shed now, never block: answer the client with an
+    /// `overloaded` frame carrying the backoff hint.
+    Overloaded {
+        /// Suggested client backoff in milliseconds.
+        retry_after_ms: u64,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded (retry after {retry_after_ms} ms)")
+            }
+        }
+    }
+}
+
+/// Message on a worker's bounded submission channel.
+pub(crate) enum WorkerMsg {
+    /// Serve one generation request, replying on `reply`.
+    Generate { req: Request, reply: Sender<GatewayReply> },
+    /// Answer with this worker's stats block.
+    Stats { reply: Sender<Json> },
+    /// Stop admissions, re-route the queue, retire in-flight slots, then
+    /// reply with a `drained` frame.
+    Drain { reply: Sender<Json> },
+}
+
+/// Live per-worker state shared between the worker thread and the
+/// gateway front (router load snapshots, health op) — atomics only.
+pub(crate) struct WorkerShared {
+    /// False once the worker thread failed or exited.
+    pub alive: AtomicBool,
+    /// The worker no longer admits new requests.
+    pub draining: AtomicBool,
+    /// Drain finished: queue re-routed and all slots retired.
+    pub drained: AtomicBool,
+    /// `Generate` messages sent but not yet received by the worker loop.
+    pub inflight: AtomicUsize,
+    /// Requests in the worker's scheduler queue (received, not admitted).
+    pub queued: AtomicUsize,
+    /// Sequences currently decoding.
+    pub active_slots: AtomicUsize,
+    /// Requests admitted into the engine over the worker's lifetime.
+    pub admitted: AtomicU64,
+    /// Sequences retired over the worker's lifetime.
+    pub completed: AtomicU64,
+    /// EMA of verified tree nodes per active slot per step, ×1000.
+    pub mean_tree_nodes_milli: AtomicU64,
+    /// Worker-loop heartbeat: ms since the gateway epoch at the last turn.
+    pub last_beat_ms: AtomicU64,
+}
+
+impl WorkerShared {
+    fn new() -> WorkerShared {
+        WorkerShared {
+            alive: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            drained: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            active_slots: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            mean_tree_nodes_milli: AtomicU64::new(0),
+            last_beat_ms: AtomicU64::new(0),
+        }
+    }
+
+    /// Router-facing load snapshot.
+    fn load(&self, queue_depth: usize) -> WorkerLoad {
+        let backlog = self.inflight.load(Ordering::Relaxed) + self.queued.load(Ordering::Relaxed);
+        WorkerLoad {
+            backlog,
+            active: self.active_slots.load(Ordering::Relaxed),
+            mean_tree_nodes: self.mean_tree_nodes_milli.load(Ordering::Relaxed) as f64 / 1000.0,
+            draining: self.draining.load(Ordering::Relaxed) || !self.alive.load(Ordering::Relaxed),
+            full: backlog >= queue_depth,
+        }
+    }
+}
+
+pub(crate) struct WorkerEndpoint {
+    pub tx: SyncSender<WorkerMsg>,
+    pub shared: Arc<WorkerShared>,
+}
+
+/// State shared by the gateway front and every worker thread.
+pub(crate) struct GatewayInner {
+    pub cfg: GatewayConfig,
+    /// Resolved per-worker backlog bound.
+    pub qd: usize,
+    pub workers: Vec<WorkerEndpoint>,
+    pub router: Mutex<Router>,
+    pub next_id: AtomicU64,
+    pub shutdown: Arc<AtomicBool>,
+    /// Heartbeat time base.
+    pub epoch: Instant,
+}
+
+impl GatewayInner {
+    /// Route and dispatch one request, excluding `exclude` (a draining
+    /// worker re-routing its own queue must not pick itself).
+    fn route_and_send(
+        &self,
+        req: Request,
+        reply: Sender<GatewayReply>,
+        exclude: Option<usize>,
+    ) -> Result<usize, SubmitError> {
+        let fp = prefix_fingerprint(&req.prompt_ids);
+        let mut loads: Vec<WorkerLoad> =
+            self.workers.iter().map(|w| w.shared.load(self.qd)).collect();
+        if let Some(x) = exclude {
+            if let Some(l) = loads.get_mut(x) {
+                l.draining = true;
+            }
+        }
+        // A try_send can race full against concurrent routers even when
+        // the load snapshot said there was room; mark the loser's worker
+        // full in the snapshot and re-route until no candidate is left —
+        // the shed contract is "every eligible worker at its bound", not
+        // "lost one race".
+        let mut msg = WorkerMsg::Generate { req, reply };
+        loop {
+            let choice = self.router.lock().expect("router lock").route(fp, &loads);
+            let Some(w) = choice else {
+                return Err(SubmitError::Overloaded { retry_after_ms: retry_hint(&loads) });
+            };
+            let ep = &self.workers[w];
+            // Count the message toward the worker's backlog before sending
+            // so concurrent routers see it; roll back if the channel is
+            // full (the bound is enforced here — shed, never block).
+            ep.shared.inflight.fetch_add(1, Ordering::SeqCst);
+            match ep.tx.try_send(msg) {
+                Ok(()) => return Ok(w),
+                Err(e) => {
+                    ep.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    loads[w].full = true;
+                    msg = match e {
+                        std::sync::mpsc::TrySendError::Full(m)
+                        | std::sync::mpsc::TrySendError::Disconnected(m) => m,
+                    };
+                }
+            }
+        }
+    }
+
+    /// Re-route a request away from `from` (drain path). A shed here is
+    /// answered on the request's own reply channel — the session sees a
+    /// structured `Overloaded`, never silence.
+    pub fn reroute(&self, req: Request, reply: Sender<GatewayReply>, from: usize) {
+        if let Err(SubmitError::Overloaded { retry_after_ms }) =
+            self.route_and_send(req, reply.clone(), Some(from))
+        {
+            let _ = reply.send(GatewayReply::Overloaded { retry_after_ms });
+        }
+    }
+}
+
+/// Backoff hint: scale with the least-loaded *serving* worker's depth
+/// (~one decode step per queued request), clamped to a sane range.
+/// Draining/dead workers don't count — their empty backlogs would clamp
+/// the hint to the floor exactly when the pool is most overloaded; with
+/// no serving worker at all, hint the maximum backoff.
+fn retry_hint(loads: &[WorkerLoad]) -> u64 {
+    match loads.iter().filter(|l| !l.draining).map(|l| l.backlog + l.active).min() {
+        Some(depth) => (20 * (depth as u64 + 1)).clamp(10, 2000),
+        None => 2000,
+    }
+}
+
+/// The replica gateway: owns the worker pool, routes requests with
+/// prefix affinity and bounded backpressure, and exposes the lifecycle
+/// ops (`stats`, `health`, `drain`). Dropping the gateway flips the
+/// shutdown flag and joins every worker thread.
+pub struct Gateway {
+    inner: Arc<GatewayInner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Spawn `cfg.workers` engine worker threads and return the routing
+    /// front. Workers build their engines asynchronously; requests
+    /// submitted meanwhile wait in the bounded queues. `shutdown` is
+    /// polled by every worker loop (shared with the serving front-end so
+    /// one flag stops the whole process).
+    pub fn start(cfg: GatewayConfig, shutdown: Arc<AtomicBool>) -> Result<Gateway> {
+        anyhow::ensure!(cfg.workers >= 1, "gateway needs at least one worker");
+        let qd = cfg.resolved_queue_depth();
+        let mut rxs = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let (tx, rx) = sync_channel(qd);
+            rxs.push(rx);
+            workers.push(WorkerEndpoint { tx, shared: Arc::new(WorkerShared::new()) });
+        }
+        let inner = Arc::new(GatewayInner {
+            cfg,
+            qd,
+            workers,
+            router: Mutex::new(Router::new(8192)),
+            next_id: AtomicU64::new(1),
+            shutdown,
+            epoch: Instant::now(),
+        });
+        let handles = rxs
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("gw-worker-{i}"))
+                    .spawn(move || worker::run(i, inner, rx))
+                    .expect("spawn gateway worker")
+            })
+            .collect();
+        Ok(Gateway { inner, handles })
+    }
+
+    /// Number of workers in the pool.
+    pub fn worker_count(&self) -> usize {
+        self.inner.workers.len()
+    }
+
+    /// The effective per-worker backlog bound.
+    pub fn queue_depth(&self) -> usize {
+        self.inner.qd
+    }
+
+    /// Submit one request: assign it a gateway-unique id (any caller id
+    /// is overwritten), route it with prefix affinity, and return the id
+    /// plus the reply stream. `Err(Overloaded)` = shed synchronously —
+    /// every eligible worker's bounded queue is full.
+    pub fn submit(&self, mut req: Request) -> Result<(u64, Receiver<GatewayReply>), SubmitError> {
+        req.id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
+        let (reply, rx) = channel();
+        self.inner.route_and_send(req, reply, None)?;
+        Ok((id, rx))
+    }
+
+    /// Aggregated `{"op":"stats"}` frame: one block per worker (dead
+    /// workers get a stub) plus merged pool-level totals.
+    pub fn stats(&self) -> Json {
+        let mut blocks = Vec::with_capacity(self.inner.workers.len());
+        for (i, ep) in self.inner.workers.iter().enumerate() {
+            let stub = || {
+                Json::obj(vec![
+                    ("worker", Json::num(i as f64)),
+                    ("alive", Json::Bool(false)),
+                ])
+            };
+            if !ep.shared.alive.load(Ordering::SeqCst) {
+                blocks.push(stub());
+                continue;
+            }
+            let (tx, rx) = channel();
+            if ep.tx.send(WorkerMsg::Stats { reply: tx }).is_err() {
+                blocks.push(stub());
+                continue;
+            }
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(b) => blocks.push(b),
+                Err(_) => blocks.push(stub()),
+            }
+        }
+        merge_stats(blocks)
+    }
+
+    /// `{"op":"health"}` frame: per-worker liveness, drain state, slot
+    /// occupancy, backlog, lifetime counters, and heartbeat age — built
+    /// from shared atomics only, so it answers even when every worker is
+    /// busy decoding.
+    pub fn health(&self) -> Json {
+        let now = self.inner.epoch.elapsed().as_millis() as u64;
+        let workers: Vec<Json> = self
+            .inner
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                let s = &ep.shared;
+                let beat = s.last_beat_ms.load(Ordering::Relaxed);
+                Json::obj(vec![
+                    ("worker", Json::num(i as f64)),
+                    ("alive", Json::Bool(s.alive.load(Ordering::SeqCst))),
+                    ("draining", Json::Bool(s.draining.load(Ordering::SeqCst))),
+                    ("drained", Json::Bool(s.drained.load(Ordering::SeqCst))),
+                    ("active_slots", Json::num(s.active_slots.load(Ordering::Relaxed) as f64)),
+                    (
+                        "backlog",
+                        Json::num(
+                            (s.inflight.load(Ordering::Relaxed) + s.queued.load(Ordering::Relaxed))
+                                as f64,
+                        ),
+                    ),
+                    ("admitted", Json::num(s.admitted.load(Ordering::Relaxed) as f64)),
+                    ("completed", Json::num(s.completed.load(Ordering::Relaxed) as f64)),
+                    ("last_step_ms", Json::num(now.saturating_sub(beat) as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("event", Json::str("health")),
+            ("queue_depth_limit", Json::num(self.inner.qd as f64)),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+
+    /// Drain one worker: stop its admissions immediately, re-route its
+    /// queued requests to siblings, wait for its in-flight sequences to
+    /// retire, and return the worker's `drained` report. The rest of the
+    /// pool keeps serving throughout.
+    pub fn drain(&self, worker: usize) -> Result<Json> {
+        let ep = self
+            .inner
+            .workers
+            .get(worker)
+            .with_context(|| {
+                format!("no worker {worker} (pool size {})", self.inner.workers.len())
+            })?;
+        anyhow::ensure!(
+            ep.shared.alive.load(Ordering::SeqCst),
+            "worker {worker} is not alive"
+        );
+        // Flip the flag before messaging so the router stops placing new
+        // work here even while the drain message waits in the channel.
+        ep.shared.draining.store(true, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        ep.tx
+            .send(WorkerMsg::Drain { reply: tx })
+            .map_err(|_| anyhow::anyhow!("worker {worker} is gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("worker {worker} exited mid-drain"))
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Merge per-worker stats blocks into the aggregated frame: counters
+/// sum, high-water marks max, efficiency is recomputed from the summed
+/// verified/committed totals, prefix-cache blocks sum field-wise, and
+/// the raw per-worker blocks ride along under `"workers"`.
+fn merge_stats(blocks: Vec<Json>) -> Json {
+    let sum = |key: &str| -> f64 {
+        blocks.iter().filter_map(|b| b.get(key).and_then(Json::as_f64)).sum()
+    };
+    let maxv = |key: &str| -> f64 {
+        blocks
+            .iter()
+            .filter_map(|b| b.get(key).and_then(Json::as_f64))
+            .fold(0.0, f64::max)
+    };
+    let verified = sum("spec_tokens_verified");
+    // Committed tokens per worker = efficiency × verified (the blocks
+    // carry the ratio, not the raw committed count).
+    let committed: f64 = blocks
+        .iter()
+        .filter_map(|b| {
+            Some(b.get("spec_tokens_verified")?.as_f64()? * b.get("spec_efficiency")?.as_f64()?)
+        })
+        .sum();
+    let alive = blocks
+        .iter()
+        .filter(|b| b.get("alive").and_then(Json::as_bool) != Some(false))
+        .count();
+    let draining = blocks
+        .iter()
+        .filter(|b| b.get("draining").and_then(Json::as_bool) == Some(true))
+        .count();
+    let mut fields = vec![
+        ("event", Json::str("stats")),
+        ("workers_total", Json::num(blocks.len() as f64)),
+        ("workers_alive", Json::num(alive as f64)),
+        ("workers_draining", Json::num(draining as f64)),
+        ("queue_depth", Json::num(sum("queue_depth"))),
+        ("active_slots", Json::num(sum("active_slots"))),
+        ("vacant_slots", Json::num(sum("vacant_slots"))),
+        ("admitted", Json::num(sum("admitted"))),
+        ("completed", Json::num(sum("completed"))),
+        ("steps", Json::num(sum("steps"))),
+        ("tokens", Json::num(sum("tokens"))),
+        ("max_queue_depth", Json::num(maxv("max_queue_depth"))),
+        ("prefill_calls", Json::num(sum("prefill_calls"))),
+        ("spec_tokens_verified", Json::num(verified)),
+        ("spec_tokens_wasted", Json::num(sum("spec_tokens_wasted"))),
+        (
+            "spec_efficiency",
+            Json::num(if verified > 0.0 { committed / verified } else { 0.0 }),
+        ),
+    ];
+    let pcs: Vec<&Json> = blocks.iter().filter_map(|b| b.get("prefix_cache")).collect();
+    if !pcs.is_empty() {
+        let psum = |key: &str| -> Json {
+            Json::num(pcs.iter().filter_map(|p| p.get(key).and_then(Json::as_f64)).sum::<f64>())
+        };
+        fields.push((
+            "prefix_cache",
+            Json::obj(vec![
+                ("lookups", psum("lookups")),
+                ("full_hits", psum("full_hits")),
+                ("partial_hits", psum("partial_hits")),
+                ("misses", psum("misses")),
+                ("insertions", psum("insertions")),
+                ("evictions", psum("evictions")),
+                ("rejected_inserts", psum("rejected_inserts")),
+                ("tokens_reused", psum("tokens_reused")),
+                ("bytes_in_use", psum("bytes_in_use")),
+                ("byte_budget", psum("byte_budget")),
+                ("nodes", psum("nodes")),
+                ("pinned", psum("pinned")),
+            ]),
+        ));
+    }
+    fields.push(("workers", Json::Arr(blocks)));
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(worker: f64, completed: f64, verified: f64, eff: f64, pc_hits: Option<f64>) -> Json {
+        let mut fields = vec![
+            ("worker", Json::num(worker)),
+            ("alive", Json::Bool(true)),
+            ("draining", Json::Bool(false)),
+            ("queue_depth", Json::num(1.0)),
+            ("active_slots", Json::num(2.0)),
+            ("vacant_slots", Json::num(2.0)),
+            ("admitted", Json::num(completed + 2.0)),
+            ("completed", Json::num(completed)),
+            ("steps", Json::num(10.0)),
+            ("tokens", Json::num(30.0)),
+            ("max_queue_depth", Json::num(3.0 + worker)),
+            ("prefill_calls", Json::num(4.0)),
+            ("spec_tokens_verified", Json::num(verified)),
+            ("spec_tokens_wasted", Json::num(verified / 2.0)),
+            ("spec_efficiency", Json::num(eff)),
+        ];
+        if let Some(h) = pc_hits {
+            fields.push((
+                "prefix_cache",
+                Json::obj(vec![
+                    ("lookups", Json::num(10.0)),
+                    ("full_hits", Json::num(h)),
+                    ("bytes_in_use", Json::num(100.0)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    #[test]
+    fn merge_sums_counters_and_recomputes_efficiency() {
+        let m = merge_stats(vec![
+            block(0.0, 5.0, 100.0, 0.5, Some(3.0)),
+            block(1.0, 7.0, 300.0, 0.25, Some(4.0)),
+        ]);
+        assert_eq!(m.req("event").as_str(), Some("stats"));
+        assert_eq!(m.req("workers_total").as_usize(), Some(2));
+        assert_eq!(m.req("workers_alive").as_usize(), Some(2));
+        assert_eq!(m.req("completed").as_usize(), Some(12));
+        assert_eq!(m.req("queue_depth").as_usize(), Some(2));
+        assert_eq!(m.req("max_queue_depth").as_usize(), Some(4), "high-water mark maxes");
+        assert_eq!(m.req("spec_tokens_verified").as_usize(), Some(400));
+        // committed = 0.5·100 + 0.25·300 = 125; eff = 125/400.
+        let eff = m.req("spec_efficiency").as_f64().unwrap();
+        assert!((eff - 0.3125).abs() < 1e-9, "{eff}");
+        let pc = m.req("prefix_cache");
+        assert_eq!(pc.req("full_hits").as_usize(), Some(7));
+        assert_eq!(pc.req("lookups").as_usize(), Some(20));
+        assert_eq!(m.req("workers").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn merge_tolerates_dead_worker_stubs_and_missing_cache() {
+        let dead = Json::obj(vec![("worker", Json::num(1.0)), ("alive", Json::Bool(false))]);
+        let m = merge_stats(vec![block(0.0, 5.0, 100.0, 0.5, None), dead]);
+        assert_eq!(m.req("workers_alive").as_usize(), Some(1));
+        assert_eq!(m.req("completed").as_usize(), Some(5));
+        assert!(m.get("prefix_cache").is_none(), "no cache block without any worker cache");
+        // Zero verified work: efficiency reports 0, not NaN.
+        let m = merge_stats(vec![block(0.0, 0.0, 0.0, 0.0, None)]);
+        assert_eq!(m.req("spec_efficiency").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn queue_depth_auto_resolution() {
+        let mut cfg = GatewayConfig {
+            artifacts: PathBuf::from("."),
+            size: "s".into(),
+            variant: "hydra".into(),
+            batch: 4,
+            workers: 2,
+            queue_depth: 0,
+            prefix_cache_mb: 0,
+            adaptive: false,
+            spec_budget: 0,
+            seed: 1,
+        };
+        assert_eq!(cfg.resolved_queue_depth(), 16);
+        cfg.batch = 1;
+        assert_eq!(cfg.resolved_queue_depth(), 8, "floor of 8 at tiny batches");
+        cfg.queue_depth = 3;
+        assert_eq!(cfg.resolved_queue_depth(), 3, "explicit value wins");
+    }
+
+    #[test]
+    fn retry_hint_scales_with_least_loaded_serving_depth() {
+        let mk = |backlog, active| WorkerLoad {
+            backlog,
+            active,
+            mean_tree_nodes: 0.0,
+            draining: false,
+            full: true,
+        };
+        assert_eq!(retry_hint(&[mk(0, 0)]), 20);
+        assert_eq!(retry_hint(&[mk(4, 2), mk(9, 9)]), 140, "min depth drives the hint");
+        assert_eq!(retry_hint(&[mk(10_000, 0)]), 2000, "clamped");
+        // Draining/dead workers (idle by definition) must not clamp the
+        // hint to the floor while the serving workers are saturated.
+        let dead = WorkerLoad { draining: true, ..mk(0, 0) };
+        assert_eq!(retry_hint(&[dead, mk(15, 17)]), 660);
+        assert_eq!(retry_hint(&[dead]), 2000, "no serving worker: maximum backoff");
+        assert_eq!(retry_hint(&[]), 2000);
+    }
+}

@@ -1,0 +1,184 @@
+//! Prefix-affinity placement policy — pure logic, no threads or engines.
+//!
+//! The router answers one question per request: *which worker serves
+//! this prompt?* It keeps a bounded table of prefix-fingerprint → worker
+//! pins ([`crate::prefixcache::prefix_fingerprint`] is the key), so
+//! shared-prompt traffic lands on the worker whose prefix cache already
+//! holds the prefix's KV rows. When the pinned worker cannot take the
+//! request (draining, dead, or its bounded queue is full), placement
+//! falls back to the least-loaded eligible worker — scored as queue
+//! depth × mean verified tree nodes, the product of how many requests
+//! are waiting and how expensive that worker's steps currently are —
+//! and the pin moves with the request. When no worker is eligible the
+//! router returns `None`: the caller sheds the request with an
+//! `overloaded` frame instead of blocking the accept path.
+
+use std::collections::{HashMap, VecDeque};
+
+/// One worker's load snapshot at routing time (assembled by the gateway
+/// from the worker's shared atomics).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerLoad {
+    /// Requests handed to the worker and not yet admitted into a slot
+    /// (submission channel + scheduler queue).
+    pub backlog: usize,
+    /// Sequences currently decoding in the worker's engine.
+    pub active: usize,
+    /// EMA of verified draft-tree nodes per active slot per step — how
+    /// expensive this worker's steps currently are (an adaptive worker
+    /// serving easy traffic runs small trees and absorbs load cheaply).
+    pub mean_tree_nodes: f64,
+    /// The worker is not admitting new work (draining or dead).
+    pub draining: bool,
+    /// The worker's bounded submission backlog is at capacity.
+    pub full: bool,
+}
+
+impl WorkerLoad {
+    /// Placement score: queue depth × mean tree nodes (lower = less
+    /// loaded). The `+ 1` keeps idle workers comparable (score > 0) and
+    /// the `max(1.0)` keeps pre-first-step workers from scoring free.
+    pub fn score(&self) -> f64 {
+        (self.backlog + self.active + 1) as f64 * self.mean_tree_nodes.max(1.0)
+    }
+
+    fn eligible(&self) -> bool {
+        !self.draining && !self.full
+    }
+}
+
+/// Prefix-affinity router: a bounded FIFO table of fingerprint → worker
+/// pins plus the least-loaded fallback policy.
+pub struct Router {
+    pins: HashMap<u64, usize>,
+    order: VecDeque<u64>,
+    cap: usize,
+}
+
+impl Router {
+    /// A router remembering at most `cap` fingerprint pins (oldest pins
+    /// are forgotten first; losing a pin only costs a cache-warm worker
+    /// choice, never correctness).
+    pub fn new(cap: usize) -> Router {
+        Router { pins: HashMap::new(), order: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    /// Pick the worker for a prompt fingerprint given per-worker load
+    /// snapshots. Prefers the pinned worker when it is eligible;
+    /// otherwise the least-loaded eligible worker (ties break to the
+    /// lowest index), re-pinning the fingerprint there. `None` = every
+    /// worker is draining/dead/full — shed the request.
+    pub fn route(&mut self, fingerprint: u64, loads: &[WorkerLoad]) -> Option<usize> {
+        if let Some(&w) = self.pins.get(&fingerprint) {
+            if loads.get(w).is_some_and(|l| l.eligible()) {
+                return Some(w);
+            }
+        }
+        let (w, _) = loads
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.eligible())
+            .min_by(|a, b| a.1.score().total_cmp(&b.1.score()))?;
+        self.pin(fingerprint, w);
+        Some(w)
+    }
+
+    /// Record (or move) a fingerprint's pin, evicting the oldest entry
+    /// past the capacity.
+    pub fn pin(&mut self, fingerprint: u64, worker: usize) {
+        if self.pins.insert(fingerprint, worker).is_none() {
+            self.order.push_back(fingerprint);
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.pins.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// The worker a fingerprint is currently pinned to, if any.
+    pub fn pinned(&self, fingerprint: u64) -> Option<usize> {
+        self.pins.get(&fingerprint).copied()
+    }
+
+    /// Number of live pins.
+    pub fn pin_count(&self) -> usize {
+        self.pins.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle() -> WorkerLoad {
+        WorkerLoad { backlog: 0, active: 0, mean_tree_nodes: 0.0, draining: false, full: false }
+    }
+
+    #[test]
+    fn affinity_sticks_across_load_changes() {
+        let mut r = Router::new(64);
+        let mut loads = vec![idle(), idle(), idle()];
+        let w = r.route(42, &loads).unwrap();
+        assert_eq!(w, 0, "tie breaks to the lowest index");
+        // The pinned worker gets busier than its peers, but stays
+        // eligible: affinity wins over least-loaded.
+        loads[0].backlog = 5;
+        loads[0].active = 4;
+        assert_eq!(r.route(42, &loads), Some(0));
+        // A different fingerprint spreads to the least-loaded worker.
+        assert_eq!(r.route(43, &loads), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_scores_queue_depth_times_tree_nodes() {
+        let mut r = Router::new(64);
+        // Worker 0: short queue but huge trees; worker 1: longer queue,
+        // tiny trees — the product decides.
+        let loads = vec![
+            WorkerLoad { backlog: 2, active: 0, mean_tree_nodes: 48.0, ..idle() },
+            WorkerLoad { backlog: 4, active: 0, mean_tree_nodes: 2.0, ..idle() },
+        ];
+        assert_eq!(r.route(7, &loads), Some(1), "score 144 vs 10");
+    }
+
+    #[test]
+    fn draining_and_full_workers_are_skipped_and_pins_move() {
+        let mut r = Router::new(64);
+        let mut loads = vec![idle(), idle()];
+        assert_eq!(r.route(9, &loads), Some(0));
+        loads[0].draining = true;
+        assert_eq!(r.route(9, &loads), Some(1), "pin must not route to a draining worker");
+        assert_eq!(r.pinned(9), Some(1), "the pin moves with the fallback");
+        loads[0].draining = false;
+        loads[1].full = true;
+        assert_eq!(r.route(9, &loads), Some(0), "full worker falls back too");
+    }
+
+    #[test]
+    fn all_ineligible_sheds() {
+        let mut r = Router::new(64);
+        let loads = vec![
+            WorkerLoad { full: true, ..idle() },
+            WorkerLoad { draining: true, ..idle() },
+        ];
+        assert_eq!(r.route(1, &loads), None);
+        assert_eq!(r.route(1, &[]), None, "empty pool sheds");
+    }
+
+    #[test]
+    fn pin_table_is_bounded_fifo() {
+        let mut r = Router::new(2);
+        r.pin(1, 0);
+        r.pin(2, 1);
+        r.pin(3, 0); // evicts fingerprint 1
+        assert_eq!(r.pin_count(), 2);
+        assert_eq!(r.pinned(1), None);
+        assert_eq!(r.pinned(2), Some(1));
+        assert_eq!(r.pinned(3), Some(0));
+        // Re-pinning an existing fingerprint does not grow the table.
+        r.pin(2, 0);
+        assert_eq!(r.pin_count(), 2);
+        assert_eq!(r.pinned(2), Some(0));
+    }
+}

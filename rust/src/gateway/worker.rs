@@ -1,0 +1,311 @@
+//! One engine worker of the replica gateway: a dedicated thread owning
+//! its own `Runtime` (PJRT client), `Engine`, and `Scheduler`, fed by a
+//! bounded submission channel.
+//!
+//! The loop **parks** on the channel (`recv_timeout`) whenever the
+//! scheduler has no work, so an idle worker costs no CPU — this replaces
+//! the old serve loop's 1 ms sleep busy-wait. While decoding, messages
+//! are drained non-blockingly between steps.
+//!
+//! Drain protocol: a `Drain` message closes the scheduler's admission
+//! gate, extracts every queued (never admitted) request and re-routes it
+//! through the gateway to a sibling worker, then the loop keeps stepping
+//! until the engine's in-flight sequences retire; only then is the drain
+//! reply sent. New `Generate` messages that race in while draining are
+//! re-routed the same way — never dropped.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::adaptive::AdaptiveConfig;
+use crate::engine::{Engine, EngineConfig, SeqEvent};
+use crate::runtime::Runtime;
+use crate::scheduler::Scheduler;
+use crate::util::json::Json;
+
+use super::{GatewayInner, GatewayReply, WorkerMsg, WorkerShared};
+
+/// How long an idle worker sleeps in one park before re-checking the
+/// shutdown flag (also bounds drain/shutdown latency while idle).
+const PARK: Duration = Duration::from_millis(100);
+
+/// Worker thread entry point: build the engine, serve until shutdown;
+/// on a fatal engine error, stay alive answering messages with
+/// structured failures so no submitter ever hangs.
+pub(crate) fn run(idx: usize, inner: Arc<GatewayInner>, rx: Receiver<WorkerMsg>) {
+    let shared = Arc::clone(&inner.workers[idx].shared);
+    if let Err(e) = serve(idx, &inner, &rx, &shared) {
+        log::error!("gateway worker {idx} failed: {e:#}");
+        shared.alive.store(false, Ordering::SeqCst);
+        fail_loop(idx, &inner, &rx, &shared, &format!("{e:#}"));
+    }
+    shared.alive.store(false, Ordering::SeqCst);
+}
+
+fn serve(
+    idx: usize,
+    inner: &GatewayInner,
+    rx: &Receiver<WorkerMsg>,
+    shared: &WorkerShared,
+) -> Result<()> {
+    let cfg = &inner.cfg;
+    let rt = Runtime::new(cfg.artifacts.clone())?;
+    let tree = crate::draft::tuned_tree(&rt.manifest, &cfg.size, &cfg.variant, cfg.batch)?;
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig {
+            size: cfg.size.clone(),
+            variant: cfg.variant.clone(),
+            tree,
+            batch: cfg.batch,
+            seed: cfg.seed,
+        },
+    )?;
+    engine.enable_events();
+    if cfg.prefix_cache_mb > 0 {
+        engine.enable_prefix_cache(cfg.prefix_cache_mb << 20);
+    }
+    if cfg.adaptive {
+        engine.enable_adaptive(AdaptiveConfig {
+            step_token_budget: cfg.spec_budget,
+            ..AdaptiveConfig::default()
+        })?;
+    }
+    log::info!("gateway worker {idx} serving {}/{} b{}", cfg.size, cfg.variant, cfg.batch);
+
+    let mut sched = Scheduler::default();
+    // req_id -> reply channel of the connection/session that owns it.
+    let mut pending: HashMap<u64, Sender<GatewayReply>> = HashMap::new();
+    // Every caller awaiting this worker's drain completion (drains are
+    // idempotent; a repeated drain op must not starve the first caller).
+    let mut drain_replies: Vec<Sender<Json>> = Vec::new();
+    let mut draining = false;
+    let mut rerouted = 0usize;
+    // EMA of verified tree nodes per active slot per step — the router's
+    // cost weight for this worker.
+    let mut ema_nodes = 0.0f64;
+    let mut msgs: Vec<WorkerMsg> = Vec::new();
+
+    loop {
+        if inner.shutdown.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        // Blocking park on the submission channel while idle — an idle
+        // worker burns no CPU (satellite of the old 1 ms sleep loop).
+        if !sched.has_work(&engine) {
+            match rx.recv_timeout(PARK) {
+                Ok(m) => msgs.push(m),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+        msgs.extend(rx.try_iter());
+        for msg in msgs.drain(..) {
+            match msg {
+                WorkerMsg::Generate { req, reply } => {
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    if draining {
+                        // This worker no longer admits: hand the request
+                        // back to the gateway for a sibling.
+                        rerouted += 1;
+                        inner.reroute(req, reply, idx);
+                    } else {
+                        pending.insert(req.id, reply);
+                        sched.submit(req);
+                    }
+                }
+                WorkerMsg::Stats { reply } => {
+                    let _ = reply.send(render_stats(idx, &sched, &engine, draining));
+                }
+                WorkerMsg::Drain { reply } => {
+                    draining = true;
+                    shared.draining.store(true, Ordering::SeqCst);
+                    sched.set_admission(false);
+                    for req in sched.take_queue() {
+                        if let Some(r) = pending.remove(&req.id) {
+                            rerouted += 1;
+                            inner.reroute(req, r, idx);
+                        }
+                    }
+                    log::info!(
+                        "gateway worker {idx} draining: {rerouted} re-routed, \
+                         retiring in-flight requests {:?}",
+                        engine.active_req_ids()
+                    );
+                    drain_replies.push(reply);
+                }
+            }
+        }
+        // Publish the backlog gauge before the (potentially long) decode
+        // step: the messages just moved off the channel are now in the
+        // scheduler queue, and routers must keep seeing them — otherwise
+        // every burst overshoots the queue_depth bound by a step's worth.
+        shared.queued.store(sched.queue_depth(), Ordering::Relaxed);
+        if sched.has_work(&engine) {
+            let step = sched.tick_events(&mut engine, |ev| match ev {
+                SeqEvent::Finished(out) => {
+                    shared.completed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(reply) = pending.remove(&out.req_id) {
+                        let _ = reply.send(GatewayReply::Event(SeqEvent::Finished(out)));
+                    }
+                }
+                SeqEvent::Delta { req_id, tokens } => {
+                    if let Some(reply) = pending.get(&req_id) {
+                        let _ = reply.send(GatewayReply::Event(SeqEvent::Delta {
+                            req_id,
+                            tokens,
+                        }));
+                    }
+                }
+            });
+            match step {
+                Ok(Some(st)) if st.active_slots > 0 => {
+                    let per_slot = st.spec_tokens as f64 / st.active_slots as f64;
+                    ema_nodes = if ema_nodes == 0.0 {
+                        per_slot
+                    } else {
+                        0.8 * ema_nodes + 0.2 * per_slot
+                    };
+                    shared
+                        .mean_tree_nodes_milli
+                        .store((ema_nodes * 1000.0) as u64, Ordering::Relaxed);
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    // Fail every outstanding session with a structured
+                    // reply before surfacing the error.
+                    let msg = format!("engine step failed: {e:#}");
+                    for (_, reply) in pending.drain() {
+                        let _ = reply.send(GatewayReply::Failed { error: msg.clone() });
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        // Shared gauges the router and the health op read.
+        shared.active_slots.store(engine.active_count(), Ordering::Relaxed);
+        shared.queued.store(sched.queue_depth(), Ordering::Relaxed);
+        shared.admitted.store(sched.stats.admitted as u64, Ordering::Relaxed);
+        shared
+            .last_beat_ms
+            .store(inner.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+        // Drain completion: queue already re-routed, slots retired.
+        // Every waiting drain caller gets the same report.
+        if !drain_replies.is_empty() && engine.active_count() == 0 && sched.queue_depth() == 0 {
+            shared.drained.store(true, Ordering::SeqCst);
+            for reply in drain_replies.drain(..) {
+                let _ = reply.send(Json::obj(vec![
+                    ("event", Json::str("drained")),
+                    ("worker", Json::num(idx as f64)),
+                    ("rerouted", Json::num(rerouted as f64)),
+                    ("completed", Json::num(sched.stats.completed as f64)),
+                ]));
+            }
+        }
+    }
+}
+
+/// Answer messages after a fatal worker error (engine boot or step
+/// failure): generations get a structured `Failed` reply, control ops a
+/// stub — submitters never hang on a dead worker. Runs until shutdown.
+fn fail_loop(
+    idx: usize,
+    inner: &GatewayInner,
+    rx: &Receiver<WorkerMsg>,
+    shared: &WorkerShared,
+    error: &str,
+) {
+    while !inner.shutdown.load(Ordering::Relaxed) {
+        match rx.recv_timeout(PARK) {
+            Ok(WorkerMsg::Generate { reply, .. }) => {
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(GatewayReply::Failed { error: error.to_string() });
+            }
+            Ok(WorkerMsg::Stats { reply }) => {
+                let _ = reply.send(Json::obj(vec![
+                    ("worker", Json::num(idx as f64)),
+                    ("alive", Json::Bool(false)),
+                    ("error", Json::str(error)),
+                ]));
+            }
+            Ok(WorkerMsg::Drain { reply }) => {
+                let _ = reply.send(Json::obj(vec![
+                    ("event", Json::str("error")),
+                    ("error", Json::str(format!("worker {idx} is dead: {error}"))),
+                ]));
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// One worker's `{"op":"stats"}` block: scheduler counters, engine
+/// occupancy, speculation counters, and — when enabled — the adaptive
+/// controller's current choices and the prefix cache's counters. The
+/// gateway merges these blocks into the aggregated stats frame.
+fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) -> Json {
+    let st = &sched.stats;
+    let mut fields = vec![
+        ("worker", Json::num(idx as f64)),
+        ("alive", Json::Bool(true)),
+        ("draining", Json::Bool(draining)),
+        ("queue_depth", Json::num(sched.queue_depth() as f64)),
+        ("active_slots", Json::num(engine.active_count() as f64)),
+        ("vacant_slots", Json::num(engine.vacancy_count() as f64)),
+        ("admitted", Json::num(st.admitted as f64)),
+        ("completed", Json::num(st.completed as f64)),
+        ("steps", Json::num(st.steps as f64)),
+        ("tokens", Json::num(st.tokens as f64)),
+        ("max_queue_depth", Json::num(st.max_queue_depth as f64)),
+        ("prefill_calls", Json::num(engine.phase.prefill_calls as f64)),
+        ("spec_tokens_verified", Json::num(engine.spec.nodes_verified as f64)),
+        ("spec_tokens_wasted", Json::num(engine.spec.wasted as f64)),
+        ("spec_efficiency", Json::num(engine.spec.efficiency())),
+    ];
+    if let Some(ad) = engine.adaptive_snapshot() {
+        // Current per-slot tree sizes (active slots only — vacant rows
+        // hold their last occupant's choice).
+        let sizes: Vec<Json> = engine
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active && !s.done)
+            .map(|(i, _)| Json::num(ad.tree_nodes[i] as f64))
+            .collect();
+        fields.push((
+            "adaptive",
+            Json::obj(vec![
+                ("step_token_budget", Json::num(ad.step_token_budget as f64)),
+                ("ladder", Json::Arr(ad.ladder.iter().map(|&n| Json::num(n as f64)).collect())),
+                ("tree_nodes", Json::Arr(sizes)),
+                ("throttled", Json::num(ad.totals.throttled as f64)),
+            ]),
+        ));
+    }
+    if let Some(cs) = engine.prefix_cache_stats() {
+        fields.push((
+            "prefix_cache",
+            Json::obj(vec![
+                ("lookups", Json::num(cs.lookups as f64)),
+                ("full_hits", Json::num(cs.full_hits as f64)),
+                ("partial_hits", Json::num(cs.partial_hits as f64)),
+                ("misses", Json::num(cs.misses as f64)),
+                ("insertions", Json::num(cs.insertions as f64)),
+                ("evictions", Json::num(cs.evictions as f64)),
+                ("rejected_inserts", Json::num(cs.rejected_inserts as f64)),
+                ("tokens_reused", Json::num(cs.tokens_reused as f64)),
+                ("bytes_in_use", Json::num(cs.bytes_in_use as f64)),
+                ("byte_budget", Json::num(cs.byte_budget as f64)),
+                ("nodes", Json::num(cs.nodes as f64)),
+                ("pinned", Json::num(cs.pinned as f64)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}

@@ -59,6 +59,25 @@
 //! policy; under greedy acceptance adaptive output is token-identical to
 //! static. `benches/adaptive.rs` runs the static-vs-adaptive A/B.
 //!
+//! ## Replica gateway
+//!
+//! One engine is deliberately single-threaded (one PJRT client, one
+//! decode loop), so a single server caps at one core. The [`gateway`]
+//! subsystem multiplies it: `--workers N` on `serve` runs a pool of N
+//! engine workers — each a dedicated thread with its own runtime,
+//! scheduler, engine, prefix cache, and adaptive controller — behind
+//! the TCP front-end. Requests route with **prefix affinity** (the
+//! [`prefixcache::prefix_fingerprint`] of the prompt pins shared-prompt
+//! traffic to the worker whose cache is already warm), falling back to
+//! least-loaded placement (queue depth × mean verified tree nodes).
+//! Per-worker submission queues are bounded: overflow is shed with a
+//! structured `{"event":"error","code":"overloaded"}` frame and a
+//! retry-after hint, never by blocking the accept loop. Lifecycle ops:
+//! `{"op":"health"}` (per-worker heartbeat/occupancy),
+//! `{"op":"drain","worker":k}` (stop admissions, re-route the queue,
+//! retire in-flight sequences), and `{"op":"stats"}` (per-worker blocks
+//! plus merged pool totals).
+//!
 //! * **Layer 2 (python/compile)** — the base transformer + draft heads in
 //!   JAX, AOT-lowered to HLO text once at build time (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels)** — the Pallas tree-attention
@@ -88,6 +107,7 @@ pub mod adaptive;
 pub mod draft;
 pub mod engine;
 pub mod scheduler;
+pub mod gateway;
 pub mod server;
 pub mod metrics;
 pub mod treesearch;

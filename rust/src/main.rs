@@ -10,6 +10,7 @@
 //!               --batch N --mode {greedy,typical} --eps 0.15 --temp 0.7
 //!               --top-k K --seed N --prefix-cache --prefix-cache-mb 64
 //!               --adaptive --spec-budget N --speculation auto|K
+//!               --workers N --queue-depth N
 //!
 //! `generate` flags map onto the per-request `SamplingParams`; `serve`'s
 //! --mode only sets the default for requests that don't pick their own.
@@ -19,6 +20,10 @@
 //! trees + batch-aware throttling); `--spec-budget` caps the verified
 //! tree nodes per step (0 = the engine's batch-aware default), and
 //! `--speculation` sets the per-request policy on `generate`.
+//! `--workers` sizes the replica gateway's engine pool on `serve`
+//! (prefix-affinity routing + bounded per-worker queues; see
+//! docs/ARCHITECTURE.md), and `--queue-depth` bounds each worker's
+//! submission backlog (overflow is shed with an `overloaded` frame).
 
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
@@ -93,6 +98,7 @@ fn print_help() {
                    [--mode greedy|typical] [--max-new-ceiling 256]\n\
                    [--prefix-cache] [--prefix-cache-mb 64]\n\
                    [--adaptive] [--spec-budget N]\n\
+                   [--workers N] [--queue-depth N]\n\
          treesearch [--size s] [--variants medusa,hydra,hydra_pp] [--batches 1]\n\
                    [--max-nodes 48]\n\
          \n\
@@ -102,7 +108,14 @@ fn print_help() {
          trees sized from online acceptance statistics, throttled to\n\
          --spec-budget verified tree nodes per step (0 = batch-aware\n\
          default). --speculation pins one request: auto or a max node\n\
-         count (1 = pure autoregressive). See docs/ARCHITECTURE.md.\n"
+         count (1 = pure autoregressive).\n\
+         --workers runs a replica gateway: N engine workers (one thread,\n\
+         runtime, and prefix cache each) behind prefix-affinity routing\n\
+         with bounded per-worker queues; --queue-depth bounds each\n\
+         worker's backlog (0 = max(8, 4 x batch); overflow is shed with\n\
+         an `overloaded` frame). Operate the pool with {\"op\":\"stats\"},\n\
+         {\"op\":\"health\"}, and {\"op\":\"drain\",\"worker\":k}.\n\
+         See docs/ARCHITECTURE.md and docs/PROTOCOL.md.\n"
     );
 }
 
@@ -250,6 +263,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefix_cache_mb: parse_prefix_cache_mb(args),
         adaptive: args.flag("adaptive"),
         spec_budget: args.usize_or("spec-budget", 0),
+        workers: args.usize_or("workers", 1).max(1),
+        queue_depth: args.usize_or("queue-depth", 0),
     };
     serve(&rt, cfg, Arc::new(AtomicBool::new(false)))
 }

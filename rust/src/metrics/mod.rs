@@ -36,6 +36,17 @@ impl AcceptHist {
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
+
+    /// Fold another histogram's counts into this one (gateway-level
+    /// aggregation over per-worker runs).
+    pub fn merge(&mut self, other: &AcceptHist) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+    }
 }
 
 /// One benchmark run's aggregate numbers.
@@ -129,6 +140,46 @@ impl RunMetrics {
         }
         self.spec_tokens_verified as f64 / self.steps as f64
     }
+
+    /// Fold another run's numbers into this one — the gateway-pool
+    /// aggregation: workers run **concurrently**, so wall clocks take
+    /// the max while work counters sum, latency samples concatenate,
+    /// `mean_logprob` averages weighted by generated tokens, and
+    /// prefix-cache counters sum field-wise.
+    pub fn absorb(&mut self, other: &RunMetrics) {
+        let (t0, t1) = (self.tokens_generated as f64, other.tokens_generated as f64);
+        if t0 + t1 > 0.0 {
+            self.mean_logprob =
+                (self.mean_logprob * t0 + other.mean_logprob * t1) / (t0 + t1);
+        }
+        self.wall = self.wall.max(other.wall);
+        self.decode_wall = self.decode_wall.max(other.decode_wall);
+        self.tokens_generated += other.tokens_generated;
+        self.steps += other.steps;
+        self.accept.merge(&other.accept);
+        self.step_ms.extend_from_slice(&other.step_ms);
+        self.seq_latency_ms.extend_from_slice(&other.seq_latency_ms);
+        self.prefill_calls += other.prefill_calls;
+        self.spec_tokens_verified += other.spec_tokens_verified;
+        match (&mut self.prefix, &other.prefix) {
+            (Some(a), Some(b)) => {
+                a.lookups += b.lookups;
+                a.full_hits += b.full_hits;
+                a.partial_hits += b.partial_hits;
+                a.misses += b.misses;
+                a.insertions += b.insertions;
+                a.evictions += b.evictions;
+                a.rejected_inserts += b.rejected_inserts;
+                a.tokens_reused += b.tokens_reused;
+                a.bytes_in_use += b.bytes_in_use;
+                a.byte_budget += b.byte_budget;
+                a.nodes += b.nodes;
+                a.pinned += b.pinned;
+            }
+            (None, Some(b)) => self.prefix = Some(b.clone()),
+            _ => {}
+        }
+    }
 }
 
 /// Wall-clock stopwatch helper.
@@ -163,6 +214,38 @@ mod tests {
     fn throughput_zero_safe() {
         let m = RunMetrics::new("x");
         assert_eq!(m.throughput(), 0.0);
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_maxes_walls() {
+        let mut a = RunMetrics::new("pool");
+        a.decode_wall = Duration::from_millis(100);
+        a.tokens_generated = 30;
+        a.steps = 10;
+        a.spec_tokens_verified = 120;
+        a.prefill_calls = 2;
+        a.mean_logprob = -1.0;
+        a.accept.record(2);
+        let mut b = RunMetrics::new("worker-1");
+        b.decode_wall = Duration::from_millis(250);
+        b.tokens_generated = 10;
+        b.steps = 5;
+        b.spec_tokens_verified = 40;
+        b.prefill_calls = 1;
+        b.mean_logprob = -2.0;
+        b.accept.record(3);
+        b.prefix = Some(CacheStats { full_hits: 4, ..CacheStats::default() });
+        a.absorb(&b);
+        assert_eq!(a.decode_wall, Duration::from_millis(250), "concurrent: max, not sum");
+        assert_eq!(a.tokens_generated, 40);
+        assert_eq!(a.steps, 15);
+        assert_eq!(a.spec_tokens_verified, 160);
+        assert_eq!(a.prefill_calls, 3);
+        assert_eq!(a.accept.total(), 2);
+        assert!((a.mean_logprob - (-1.25)).abs() < 1e-9, "token-weighted: {}", a.mean_logprob);
+        assert_eq!(a.prefix.as_ref().unwrap().full_hits, 4);
+        // Throughput over the merged numbers uses the max wall.
+        assert!((a.throughput() - 160.0).abs() < 1e-9);
     }
 
     #[test]

@@ -108,6 +108,43 @@ pub struct RestoredPrefix {
     pub end: Option<EndSnapshot>,
 }
 
+/// Longest prompt prefix (in tokens) that [`prefix_fingerprint`] hashes.
+/// Prompts agreeing on their first `AFFINITY_PREFIX_MAX` tokens are
+/// indistinguishable to affinity routing — by then they share the whole
+/// system preamble, which is what per-worker caches key on.
+pub const AFFINITY_PREFIX_MAX: usize = 64;
+
+/// Granularity of [`prefix_fingerprint`]: the hashed span is rounded
+/// down to a multiple of this block size, so prompts that diverge only
+/// inside the last partial block still map to one fingerprint (e.g. a
+/// shared 16-token system preamble followed by different user turns).
+pub const AFFINITY_PREFIX_BLOCK: usize = 16;
+
+/// Stable 64-bit fingerprint of a prompt's leading tokens — the
+/// gateway's prefix-affinity routing key.
+///
+/// The key semantics mirror this module's radix tree: identity over a
+/// leading token-id span. The span is `min(len, AFFINITY_PREFIX_MAX)`
+/// rounded down to an [`AFFINITY_PREFIX_BLOCK`] multiple (prompts
+/// shorter than one block hash whole), FNV-1a over the little-endian
+/// token bytes. Two prompts sharing that span — shared-system-prompt
+/// traffic — get equal fingerprints and therefore the same worker,
+/// whose prefix cache already holds the span's KV rows.
+pub fn prefix_fingerprint(tokens: &[u32]) -> u64 {
+    let mut span = tokens.len().min(AFFINITY_PREFIX_MAX);
+    if span >= AFFINITY_PREFIX_BLOCK {
+        span -= span % AFFINITY_PREFIX_BLOCK;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in &tokens[..span] {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
 #[derive(Debug)]
 struct Node {
     edge: Vec<u32>,
@@ -859,6 +896,50 @@ mod tests {
                 .map(|(_, n)| n.bytes())
                 .sum();
             prop_assert_eq!(recount, pc.bytes_in_use());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fingerprint_keys_on_block_quantized_prefix() {
+        // Same system preamble (>= one block), different tails within the
+        // trailing partial block: one fingerprint (affinity groups hold).
+        let mut a: Vec<u32> = (0..AFFINITY_PREFIX_BLOCK as u32).collect();
+        let mut b = a.clone();
+        a.push(100);
+        b.push(200);
+        assert_eq!(prefix_fingerprint(&a), prefix_fingerprint(&b));
+        // Diverging inside the hashed span separates them.
+        let mut c = b.clone();
+        c[0] = 999;
+        assert_ne!(prefix_fingerprint(&b), prefix_fingerprint(&c));
+        // Short prompts (< one block) hash whole — distinct tails differ.
+        assert_ne!(prefix_fingerprint(&[1, 2, 3]), prefix_fingerprint(&[1, 2, 4]));
+        assert_eq!(prefix_fingerprint(&[1, 2, 3]), prefix_fingerprint(&[1, 2, 3]));
+        // The span caps at AFFINITY_PREFIX_MAX: divergence past it is
+        // invisible to the fingerprint.
+        let long_a: Vec<u32> = (0..AFFINITY_PREFIX_MAX as u32 + 9).collect();
+        let mut long_b = long_a.clone();
+        *long_b.last_mut().unwrap() = 7777;
+        assert_eq!(prefix_fingerprint(&long_a), prefix_fingerprint(&long_b));
+    }
+
+    #[test]
+    fn prop_fingerprint_stable_under_tail_edits() {
+        prop::check("prefix-fingerprint", 200, |rng| {
+            let blocks = rng.range(1, 4);
+            let prefix_len = blocks * AFFINITY_PREFIX_BLOCK;
+            let prefix: Vec<u32> = (0..prefix_len).map(|_| rng.next_u32() % 1000).collect();
+            // Two prompts sharing `prefix`, tails shorter than one block.
+            let mut a = prefix.clone();
+            let mut b = prefix.clone();
+            for _ in 0..rng.range(0, AFFINITY_PREFIX_BLOCK) {
+                a.push(rng.next_u32() % 1000);
+            }
+            for _ in 0..rng.range(0, AFFINITY_PREFIX_BLOCK) {
+                b.push(rng.next_u32() % 1000);
+            }
+            prop_assert_eq!(prefix_fingerprint(&a), prefix_fingerprint(&b));
             Ok(())
         });
     }

@@ -61,6 +61,10 @@ pub struct Scheduler {
     /// Admit at most this many new sequences per engine step (prefill cost
     /// control / head-of-line fairness knob).
     pub max_admit_per_step: usize,
+    /// Admission gate: while closed, `refill` admits nothing (queued and
+    /// active sequences are otherwise untouched). The gateway closes it
+    /// to drain a worker race-free before extracting the queue.
+    admission_open: bool,
 }
 
 impl Default for Scheduler {
@@ -69,6 +73,7 @@ impl Default for Scheduler {
             queue: VecDeque::new(),
             stats: SchedulerStats::default(),
             max_admit_per_step: usize::MAX,
+            admission_open: true,
         }
     }
 }
@@ -97,13 +102,38 @@ impl Scheduler {
         self.queue.len()
     }
 
+    /// Open or close the admission gate. While closed, `refill` admits
+    /// nothing; submissions still queue and active sequences keep
+    /// decoding. Used by the gateway's drain protocol: close the gate,
+    /// [`take_queue`](Scheduler::take_queue) the waiting requests for
+    /// re-routing, then step the engine until its slots retire.
+    pub fn set_admission(&mut self, open: bool) {
+        self.admission_open = open;
+    }
+
+    /// Whether `refill` may currently admit queued requests.
+    pub fn admission_open(&self) -> bool {
+        self.admission_open
+    }
+
+    /// Remove and return every queued (not yet admitted) request, in FIFO
+    /// order. Admission counters are untouched — the requests were never
+    /// handed to the engine. Drain re-routing hook.
+    pub fn take_queue(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
     /// Anything queued or still decoding?
     pub fn has_work(&self, engine: &Engine) -> bool {
         !self.queue.is_empty() || engine.active_count() > 0
     }
 
-    /// Refill vacant slots from the queue (up to the per-step admit cap).
+    /// Refill vacant slots from the queue (up to the per-step admit cap;
+    /// a no-op while the admission gate is closed).
     pub fn refill(&mut self, engine: &mut impl AdmitTarget) -> Result<usize> {
+        if !self.admission_open {
+            return Ok(0);
+        }
         let n = engine
             .vacancy_count()
             .min(self.queue.len())
@@ -249,6 +279,28 @@ mod tests {
         let mut t = StubTarget::new(64);
         s.submit_all(reqs(10));
         assert_eq!(s.refill(&mut t).unwrap(), 10, "uncapped refill drains to capacity");
+    }
+
+    #[test]
+    fn admission_gate_blocks_refill_and_take_queue_empties() {
+        let mut s = Scheduler::default();
+        let mut t = StubTarget::new(4);
+        s.submit_all(reqs(3));
+        assert!(s.admission_open());
+        s.set_admission(false);
+        assert_eq!(s.refill(&mut t).unwrap(), 0, "closed gate must admit nothing");
+        assert_eq!(s.queue_depth(), 3, "queued requests survive the closed gate");
+        assert_eq!(s.stats.admitted, 0);
+        // Drain extraction: FIFO, queue emptied, counters untouched.
+        let taken = s.take_queue();
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.stats.admitted, 0);
+        // Reopening restores normal admission.
+        s.set_admission(true);
+        s.submit_all(reqs(2));
+        assert_eq!(s.refill(&mut t).unwrap(), 2);
+        assert_eq!(s.stats.admitted, 2);
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! generation parameters and optional streaming sessions.
 //!
 //! **The complete wire protocol — request fields, `delta`/`done`/`error`
-//! frames, and the `{"op":"stats"}` control request — is specified in
-//! `docs/PROTOCOL.md` at the repository root.** In one line: clients
+//! frames, the `overloaded` shed frame, and the `{"op":"stats"}` /
+//! `{"op":"health"}` / `{"op":"drain"}` control requests — is specified
+//! in `docs/PROTOCOL.md` at the repository root.** In one line: clients
 //! send one JSON object per line (only `"prompt"` is required; every
 //! other field maps onto that request's own `SamplingParams`, including
 //! the `"speculation"` knob for adaptive draft-tree sizing and the
@@ -12,33 +13,35 @@
 //! `{"event":"done"}` summary frame; invalid input yields an
 //! `{"event":"error"}` frame, never a dropped connection.
 //!
-//! Connection handlers run on a thread pool and forward requests over an
-//! mpsc channel to the single engine thread (the engine and PJRT client
-//! are deliberately single-threaded — one CPU core, DESIGN.md §8). The
-//! engine thread runs the continuous-batching scheduler loop and routes
-//! per-sequence events (token deltas + terminal summaries) back to
-//! per-connection channels.
+//! Serving runs through the replica [`gateway`](crate::gateway): the
+//! accept loop here only hands connections to a thread pool, and each
+//! connection handler submits parsed requests to the gateway, which
+//! routes them (prefix-affinity + least-loaded, bounded per-worker
+//! queues) onto a pool of `--workers` engine worker threads — each with
+//! its own PJRT runtime, scheduler, and engine. When every eligible
+//! worker queue is full the request is shed with a structured
+//! `{"event":"error","code":"overloaded"}` frame instead of blocking
+//! the accept path. Idle workers park on their submission channels
+//! (`recv_timeout`), so an idle server burns no CPU.
 
 pub mod proto;
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::engine::{AcceptMode, Engine, EngineConfig, Request, SeqEvent};
+use crate::engine::{AcceptMode, SeqEvent};
+use crate::gateway::{Gateway, GatewayConfig, GatewayReply, SubmitError};
 use crate::runtime::Runtime;
-use crate::scheduler::Scheduler;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use crate::workload;
 
-/// Server startup configuration (one engine, one listener).
+/// Server startup configuration (one listener over a worker pool).
 pub struct ServerConfig {
     /// Listen address, e.g. "127.0.0.1:7070".
     pub addr: String,
@@ -46,7 +49,7 @@ pub struct ServerConfig {
     pub size: String,
     /// Decoding strategy/head variant ("ar", "hydra_pp", ...).
     pub variant: String,
-    /// Engine batch size (must be an AOT bucket).
+    /// Per-worker engine batch size (must be an AOT bucket).
     pub batch: usize,
     /// Acceptance mode for requests that don't specify one.
     pub default_mode: AcceptMode,
@@ -54,135 +57,96 @@ pub struct ServerConfig {
     pub max_new_ceiling: usize,
     /// Connection-handler thread-pool size.
     pub conn_threads: usize,
-    /// Prefix-reuse KV cache byte budget in MiB (0 = cache off).
+    /// Per-worker prefix-reuse KV cache byte budget in MiB (0 = off).
     pub prefix_cache_mb: usize,
     /// Run the adaptive speculation controller (per-slot dynamic draft
-    /// trees + batch-aware verification throttle).
+    /// trees + batch-aware verification throttle) in every worker.
     pub adaptive: bool,
     /// Per-step verification token budget for the adaptive throttle
     /// (0 = the engine's batch-aware default). Ignored without `adaptive`.
     pub spec_budget: usize,
+    /// Number of engine workers in the gateway pool (>= 1).
+    pub workers: usize,
+    /// Bound on each worker's submission backlog; overflow is shed with
+    /// an `overloaded` frame. 0 = auto (`max(8, 4 × batch)`).
+    pub queue_depth: usize,
 }
 
-enum Submission {
-    Generate { req: Request, reply: Sender<SeqEvent> },
-    /// `{"op":"stats"}` — answer with a scheduler/engine/prefix-cache
-    /// counter frame so operators can observe hit rates live.
-    Stats { reply: Sender<Json> },
-}
-
-/// Run the server until `shutdown` flips. Returns when the listener closes.
+/// Run the server until `shutdown` flips. Returns when the listener
+/// closes; dropping the internal gateway then joins every worker thread.
 pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Result<()> {
     let tok = Arc::new(Tokenizer::load(&rt.manifest.dir.join("tokenizer.json"))?);
-    let tree = crate::draft::tuned_tree(&rt.manifest, &cfg.size, &cfg.variant, cfg.batch)?;
-    let mut engine = Engine::new(
-        rt,
-        EngineConfig {
-            size: cfg.size.clone(),
-            variant: cfg.variant.clone(),
-            tree,
-            batch: cfg.batch,
-            seed: 42,
-        },
-    )?;
-    engine.enable_events();
-    if cfg.prefix_cache_mb > 0 {
-        engine.enable_prefix_cache(cfg.prefix_cache_mb << 20);
-    }
-    if cfg.adaptive {
-        // spec_budget 0 = the engine's batch-aware default (resolved
-        // inside enable_adaptive).
-        engine.enable_adaptive(crate::adaptive::AdaptiveConfig {
-            step_token_budget: cfg.spec_budget,
-            ..crate::adaptive::AdaptiveConfig::default()
-        })?;
-    }
-    let mut sched = Scheduler::default();
     let pcfg = proto::ProtoConfig {
         default_mode: cfg.default_mode,
         max_new_ceiling: cfg.max_new_ceiling,
         // Mirror Engine::admit's hard limit so an over-long prompt is a
-        // per-request error, not a serve-loop-fatal admit failure.
+        // per-request error, not a worker-fatal admit failure.
         max_prompt_tokens: rt.manifest.seq_max / 2,
         // Non-adaptive servers reject "speculation" pins up front.
         adaptive: cfg.adaptive,
     };
+    // Declared before the gateway so the gateway drops (and joins its
+    // workers, releasing any blocked sessions) before the pool joins the
+    // connection handlers.
+    let pool = ThreadPool::new(cfg.conn_threads);
+    let gateway = Arc::new(Gateway::start(
+        GatewayConfig {
+            artifacts: rt.manifest.dir.clone(),
+            size: cfg.size.clone(),
+            variant: cfg.variant.clone(),
+            batch: cfg.batch,
+            workers: cfg.workers.max(1),
+            queue_depth: cfg.queue_depth,
+            prefix_cache_mb: cfg.prefix_cache_mb,
+            adaptive: cfg.adaptive,
+            spec_budget: cfg.spec_budget,
+            seed: 42,
+        },
+        Arc::clone(&shutdown),
+    )?);
 
     let listener = TcpListener::bind(&cfg.addr).context("bind")?;
     listener.set_nonblocking(true)?;
     log::info!(
-        "serving {}/{} b{} on {}",
-        cfg.size, cfg.variant, cfg.batch, listener.local_addr()?
+        "serving {}/{} b{} x{} workers (queue depth {}) on {}",
+        cfg.size,
+        cfg.variant,
+        cfg.batch,
+        gateway.worker_count(),
+        gateway.queue_depth(),
+        listener.local_addr()?
     );
 
-    let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
-    let pool = ThreadPool::new(cfg.conn_threads);
-    let next_id = Arc::new(AtomicU64::new(1));
-
-    // req_id -> reply channel. Deltas only arrive for sequences whose
-    // params requested streaming (the engine gates emission per slot).
-    let mut pending: HashMap<u64, Sender<SeqEvent>> = HashMap::new();
-
-    // Engine loop with inline (non-blocking) accept.
+    // Accept-only loop: decoding happens on the gateway's worker threads
+    // (which park on their submission channels when idle), so this loop
+    // just polls for connections and the shutdown flag.
     loop {
         if shutdown.load(Ordering::Relaxed) {
             return Ok(());
         }
-        // Accept new connections without blocking the decode loop.
         match listener.accept() {
             Ok((stream, _)) => {
-                let tx = tx.clone();
+                let gw = Arc::clone(&gateway);
                 let tok = Arc::clone(&tok);
-                let ids = Arc::clone(&next_id);
                 let sd = Arc::clone(&shutdown);
                 pool.execute(move || {
-                    if let Err(e) = handle_conn(stream, tx, tok, ids, sd, pcfg) {
+                    if let Err(e) = handle_conn(stream, gw, tok, sd, pcfg) {
                         log::warn!("connection error: {e}");
                     }
                 });
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
-            Err(e) => return Err(e.into()),
-        }
-        // Drain submissions into the scheduler; answer stats ops inline.
-        while let Ok(sub) = rx.try_recv() {
-            match sub {
-                Submission::Generate { req, reply } => {
-                    pending.insert(req.id, reply);
-                    sched.submit(req);
-                }
-                Submission::Stats { reply } => {
-                    let _ = reply.send(render_stats(&sched, &engine));
-                }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
             }
-        }
-        // One scheduling tick (refill + step) if there is work; route the
-        // resulting sequence events to their sessions.
-        if sched.has_work(&engine) {
-            sched.tick_events(&mut engine, |ev| {
-                let (req_id, is_final) = match &ev {
-                    SeqEvent::Delta { req_id, .. } => (*req_id, false),
-                    SeqEvent::Finished(out) => (out.req_id, true),
-                };
-                if is_final {
-                    if let Some(reply) = pending.remove(&req_id) {
-                        let _ = reply.send(ev);
-                    }
-                } else if let Some(reply) = pending.get(&req_id) {
-                    let _ = reply.send(ev);
-                }
-            })?;
-        } else {
-            std::thread::sleep(std::time::Duration::from_millis(1));
+            Err(e) => return Err(e.into()),
         }
     }
 }
 
 fn handle_conn(
     stream: TcpStream,
-    tx: Sender<Submission>,
+    gw: Arc<Gateway>,
     tok: Arc<Tokenizer>,
-    ids: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
     pcfg: proto::ProtoConfig,
 ) -> Result<()> {
@@ -214,18 +178,20 @@ fn handle_conn(
             continue;
         }
         let line = line.trim().to_string();
-        // Operator control requests (`{"op": "stats"}`) bypass generation.
-        if let Some(op) = proto::parse_op(&line) {
+        // Operator control requests (`{"op": ...}`) bypass generation.
+        if let Some((op, body)) = proto::parse_op(&line) {
             let resp = match op.as_str() {
-                "stats" => {
-                    let (rtx, rrx) = channel();
-                    if tx.send(Submission::Stats { reply: rtx }).is_ok() {
-                        rrx.recv()
-                            .unwrap_or_else(|_| proto::render_error(0, "engine shut down"))
-                    } else {
-                        proto::render_error(0, "engine gone")
-                    }
-                }
+                "stats" => gw.stats(),
+                "health" => gw.health(),
+                "drain" => match body.get("worker").and_then(|w| w.as_usize()) {
+                    Some(w) => gw
+                        .drain(w)
+                        .unwrap_or_else(|e| proto::render_error(0, &format!("drain: {e:#}"))),
+                    None => proto::render_error(
+                        0,
+                        "drain requires a \"worker\" index (see {\"op\":\"health\"})",
+                    ),
+                },
                 other => proto::render_error(0, &format!("unknown op `{other}`")),
             };
             writer.write_all(resp.to_string().as_bytes())?;
@@ -234,51 +200,67 @@ fn handle_conn(
             continue;
         }
         let resp = match proto::parse_request(&line, &tok, &pcfg) {
-            Ok(parsed) => {
-                let mut req = parsed.req;
-                req.id = ids.fetch_add(1, Ordering::Relaxed);
-                let (rtx, rrx) = channel();
-                tx.send(Submission::Generate { req, reply: rtx })
-                    .map_err(|_| anyhow::anyhow!("engine gone"))?;
-                // Session loop: zero or more deltas, then the summary.
-                // Token chunks are raw bytes: reassemble UTF-8 across
-                // chunk boundaries, then gate on the stop marker.
-                let mut utf8 = proto::Utf8Assembler::new();
-                let mut gate = proto::DeltaGate::new(&parsed.stop_text);
-                let mut write_delta = |writer: &mut TcpStream, chunk: &str| -> Result<()> {
-                    let frame = proto::render_delta(parsed.client_id, chunk);
-                    writer.write_all(frame.to_string().as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    writer.flush()?;
-                    Ok(())
-                };
-                loop {
-                    match rrx.recv() {
-                        Ok(SeqEvent::Delta { tokens, .. }) => {
-                            let text = utf8.push(&tok.decode_bytes(&tokens));
-                            if let Some(chunk) = gate.push(&text) {
-                                write_delta(&mut writer, &chunk)?;
+            Ok(proto::ParsedRequest { req, client_id, truncated_max_new, stop_text }) => {
+                match gw.submit(req) {
+                    // Shed synchronously: every eligible worker queue full.
+                    Err(SubmitError::Overloaded { retry_after_ms }) => {
+                        proto::render_overloaded(client_id, retry_after_ms)
+                    }
+                    Ok((_id, rrx)) => {
+                        // Session loop: zero or more deltas, then the
+                        // summary. Token chunks are raw bytes: reassemble
+                        // UTF-8 across chunk boundaries, then gate on the
+                        // stop marker.
+                        let mut utf8 = proto::Utf8Assembler::new();
+                        let mut gate = proto::DeltaGate::new(&stop_text);
+                        let mut write_delta = |writer: &mut TcpStream, chunk: &str| -> Result<()> {
+                            let frame = proto::render_delta(client_id, chunk);
+                            writer.write_all(frame.to_string().as_bytes())?;
+                            writer.write_all(b"\n")?;
+                            writer.flush()?;
+                            Ok(())
+                        };
+                        loop {
+                            match rrx.recv() {
+                                Ok(GatewayReply::Event(SeqEvent::Delta { tokens, .. })) => {
+                                    let text = utf8.push(&tok.decode_bytes(&tokens));
+                                    if let Some(chunk) = gate.push(&text) {
+                                        write_delta(&mut writer, &chunk)?;
+                                    }
+                                }
+                                Ok(GatewayReply::Event(SeqEvent::Finished(out))) => {
+                                    // Flush: any bytes held mid-character,
+                                    // then any text the gate held back as a
+                                    // potential stop prefix — the stream
+                                    // ended without the marker, so both are
+                                    // real output.
+                                    let mut tail =
+                                        gate.push(&utf8.finish()).unwrap_or_default();
+                                    tail.push_str(&gate.finish().unwrap_or_default());
+                                    if !tail.is_empty() {
+                                        write_delta(&mut writer, &tail)?;
+                                    }
+                                    break proto::render_response(
+                                        &out,
+                                        client_id,
+                                        &tok,
+                                        truncated_max_new,
+                                        &stop_text,
+                                    );
+                                }
+                                // Shed mid-flight: a drain re-route found no
+                                // worker with room.
+                                Ok(GatewayReply::Overloaded { retry_after_ms }) => {
+                                    break proto::render_overloaded(client_id, retry_after_ms);
+                                }
+                                Ok(GatewayReply::Failed { error }) => {
+                                    break proto::render_error(client_id, &error);
+                                }
+                                Err(_) => {
+                                    break proto::render_error(client_id, "engine shut down")
+                                }
                             }
                         }
-                        Ok(SeqEvent::Finished(out)) => {
-                            // Flush: any bytes held mid-character, then any
-                            // text the gate held back as a potential stop
-                            // prefix — the stream ended without the marker,
-                            // so both are real output.
-                            let mut tail = gate.push(&utf8.finish()).unwrap_or_default();
-                            tail.push_str(&gate.finish().unwrap_or_default());
-                            if !tail.is_empty() {
-                                write_delta(&mut writer, &tail)?;
-                            }
-                            break proto::render_response(
-                                &out,
-                                parsed.client_id,
-                                &tok,
-                                parsed.truncated_max_new,
-                                &parsed.stop_text,
-                            );
-                        }
-                        Err(_) => break proto::render_error(parsed.client_id, "engine shut down"),
                     }
                 }
             }
@@ -300,69 +282,6 @@ fn handle_conn(
     Ok(())
 }
 
-/// Render the `{"op":"stats"}` observability frame: scheduler counters,
-/// engine occupancy, prefill-call count, speculation efficiency, the
-/// adaptive controller's current tree choices (when enabled), and the
-/// prefix cache's hit/miss/evict/byte counters (when enabled).
-fn render_stats(sched: &Scheduler, engine: &Engine) -> Json {
-    let st = &sched.stats;
-    let mut fields = vec![
-        ("event", Json::str("stats")),
-        ("queue_depth", Json::num(sched.queue_depth() as f64)),
-        ("active_slots", Json::num(engine.active_count() as f64)),
-        ("vacant_slots", Json::num(engine.vacancy_count() as f64)),
-        ("admitted", Json::num(st.admitted as f64)),
-        ("completed", Json::num(st.completed as f64)),
-        ("steps", Json::num(st.steps as f64)),
-        ("tokens", Json::num(st.tokens as f64)),
-        ("max_queue_depth", Json::num(st.max_queue_depth as f64)),
-        ("prefill_calls", Json::num(engine.phase.prefill_calls as f64)),
-        ("spec_tokens_verified", Json::num(engine.spec.nodes_verified as f64)),
-        ("spec_tokens_wasted", Json::num(engine.spec.wasted as f64)),
-        ("spec_efficiency", Json::num(engine.spec.efficiency())),
-    ];
-    if let Some(ad) = engine.adaptive_snapshot() {
-        // Current per-slot tree sizes (active slots only — vacant rows
-        // hold their last occupant's choice).
-        let sizes: Vec<Json> = engine
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.active && !s.done)
-            .map(|(i, _)| Json::num(ad.tree_nodes[i] as f64))
-            .collect();
-        fields.push((
-            "adaptive",
-            Json::obj(vec![
-                ("step_token_budget", Json::num(ad.step_token_budget as f64)),
-                ("ladder", Json::Arr(ad.ladder.iter().map(|&n| Json::num(n as f64)).collect())),
-                ("tree_nodes", Json::Arr(sizes)),
-                ("throttled", Json::num(ad.totals.throttled as f64)),
-            ]),
-        ));
-    }
-    if let Some(cs) = engine.prefix_cache_stats() {
-        fields.push((
-            "prefix_cache",
-            Json::obj(vec![
-                ("lookups", Json::num(cs.lookups as f64)),
-                ("full_hits", Json::num(cs.full_hits as f64)),
-                ("partial_hits", Json::num(cs.partial_hits as f64)),
-                ("misses", Json::num(cs.misses as f64)),
-                ("insertions", Json::num(cs.insertions as f64)),
-                ("evictions", Json::num(cs.evictions as f64)),
-                ("rejected_inserts", Json::num(cs.rejected_inserts as f64)),
-                ("tokens_reused", Json::num(cs.tokens_reused as f64)),
-                ("bytes_in_use", Json::num(cs.bytes_in_use as f64)),
-                ("byte_budget", Json::num(cs.byte_budget as f64)),
-                ("nodes", Json::num(cs.nodes as f64)),
-                ("pinned", Json::num(cs.pinned as f64)),
-            ]),
-        ));
-    }
-    Json::obj(fields)
-}
-
 /// Spawn a server on an OS-assigned port; returns (port, shutdown handle,
 /// join handle). Used by tests and examples.
 pub fn spawn_local(
@@ -382,7 +301,21 @@ pub fn spawn_local_opts(
     batch: usize,
     prefix_cache_mb: usize,
 ) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
-    // Bind first so the port is known before the engine warms up.
+    spawn_local_gateway(artifacts, size, variant, batch, 1, 0, prefix_cache_mb)
+}
+
+/// As `spawn_local_opts`, with an explicit gateway pool shape: `workers`
+/// engine workers and a per-worker submission-queue bound (`0` = auto).
+pub fn spawn_local_gateway(
+    artifacts: std::path::PathBuf,
+    size: String,
+    variant: String,
+    batch: usize,
+    workers: usize,
+    queue_depth: usize,
+    prefix_cache_mb: usize,
+) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+    // Bind first so the port is known before the engines warm up.
     let probe = TcpListener::bind("127.0.0.1:0")?;
     let port = probe.local_addr()?.port();
     drop(probe);
@@ -402,6 +335,8 @@ pub fn spawn_local_opts(
             prefix_cache_mb,
             adaptive: false,
             spec_budget: 0,
+            workers,
+            queue_depth,
         };
         if let Err(e) = serve(&rt, cfg, sd) {
             eprintln!("server error: {e}");
@@ -460,6 +395,20 @@ impl Client {
     /// Fetch the server's observability counters (`{"op":"stats"}`).
     pub fn stats(&mut self) -> Result<Json> {
         self.request(&Json::obj(vec![("op", Json::str("stats"))]))
+    }
+
+    /// Fetch per-worker liveness/occupancy (`{"op":"health"}`).
+    pub fn health(&mut self) -> Result<Json> {
+        self.request(&Json::obj(vec![("op", Json::str("health"))]))
+    }
+
+    /// Drain one gateway worker (`{"op":"drain","worker":k}`): blocks
+    /// until its queue is re-routed and its in-flight sequences retire.
+    pub fn drain(&mut self, worker: usize) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("op", Json::str("drain")),
+            ("worker", Json::num(worker as f64)),
+        ]))
     }
 
     /// Ask the generator for a typical-acceptance sample.

@@ -57,14 +57,16 @@ pub struct ParsedRequest {
     pub stop_text: String,
 }
 
-/// Operator request dispatch: a line carrying `"op"` is a control
-/// request (`{"op": "stats"}`), not a generation. Returns the op name.
-pub fn parse_op(line: &str) -> Option<String> {
-    Json::parse(line)
-        .ok()?
-        .get("op")?
-        .as_str()
-        .map(str::to_string)
+/// Operator request dispatch: a line whose JSON carries a string `"op"`
+/// is a control request (`{"op": "stats"}`, `{"op": "drain", "worker": 0}`,
+/// `{"op": "health"}`), not a generation. Returns the op name plus the
+/// parsed object so ops can carry arguments. A non-string `"op"` is not
+/// a control request (it falls through to request validation, which
+/// rejects it with a structured error).
+pub fn parse_op(line: &str) -> Option<(String, Json)> {
+    let v = Json::parse(line).ok()?;
+    let op = v.get("op")?.as_str()?.to_string();
+    Some((op, v))
 }
 
 /// Parse and validate one request line against the server policy.
@@ -234,6 +236,23 @@ pub fn render_error(client_id: u64, msg: &str) -> Json {
         ("id", Json::num(client_id as f64)),
         ("event", Json::str("error")),
         ("error", Json::str(msg)),
+    ])
+}
+
+/// Load-shed frame: the gateway found every eligible worker's bounded
+/// submission queue full (or every worker draining). Carries
+/// `"code": "overloaded"` so clients can distinguish backpressure from
+/// request errors, plus a backoff hint in milliseconds.
+pub fn render_overloaded(client_id: u64, retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(client_id as f64)),
+        ("event", Json::str("error")),
+        ("code", Json::str("overloaded")),
+        (
+            "error",
+            Json::str("overloaded: every worker queue is full; retry after the hinted backoff"),
+        ),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
     ])
 }
 
@@ -572,9 +591,36 @@ mod tests {
         assert!(p.req.params.prefix_cache, "prefix cache reuse is the default");
         let p = parse(r#"{"prompt": "x", "prefix_cache": false}"#).unwrap();
         assert!(!p.req.params.prefix_cache);
-        assert_eq!(parse_op(r#"{"op": "stats"}"#).as_deref(), Some("stats"));
-        assert_eq!(parse_op(r#"{"prompt": "x"}"#), None);
-        assert_eq!(parse_op("not json"), None);
+        let (op, _) = parse_op(r#"{"op": "stats"}"#).unwrap();
+        assert_eq!(op, "stats");
+        assert!(parse_op(r#"{"prompt": "x"}"#).is_none());
+        assert!(parse_op("not json").is_none());
+    }
+
+    #[test]
+    fn op_arguments_ride_along_and_bad_ops_fall_through() {
+        let (op, body) = parse_op(r#"{"op": "drain", "worker": 1}"#).unwrap();
+        assert_eq!(op, "drain");
+        assert_eq!(body.req("worker").as_usize(), Some(1));
+        let (op, body) = parse_op(r#"{"op": "drain"}"#).unwrap();
+        assert_eq!(op, "drain");
+        assert!(body.get("worker").is_none(), "missing args are the handler's error to report");
+        // A non-string "op" is not a control request: the line falls
+        // through to generation parsing, which rejects it structurally.
+        assert!(parse_op(r#"{"op": 42}"#).is_none());
+        assert!(parse(r#"{"op": 42}"#).is_err(), "no prompt -> request error, not a drop");
+    }
+
+    #[test]
+    fn overloaded_frame_shape() {
+        let f = render_overloaded(7, 120);
+        assert_eq!(f.req("event").as_str(), Some("error"));
+        assert_eq!(f.req("code").as_str(), Some("overloaded"));
+        assert_eq!(f.req("id").as_usize(), Some(7));
+        assert_eq!(f.req("retry_after_ms").as_usize(), Some(120));
+        assert!(f.req("error").as_str().unwrap().contains("overloaded"));
+        // Plain request errors carry no code field.
+        assert!(render_error(1, "boom").get("code").is_none());
     }
 
     #[test]

@@ -137,6 +137,95 @@ pub fn shared_prefix(
     reqs
 }
 
+/// One request of a multi-tenant trace ([`multi_tenant`]): which tenant
+/// issued it, when it arrives, and both the raw prompt text (for
+/// wire-level tests that re-submit over TCP) and the ready engine
+/// request.
+#[derive(Debug, Clone)]
+pub struct TenantRequest {
+    /// Tenant index in `[0, tenants)`.
+    pub tenant: usize,
+    /// Arrival offset from trace start, in seconds.
+    pub at_s: f64,
+    /// The raw (unwrapped) prompt text.
+    pub prompt: String,
+    /// The tokenized engine request (wire-format wrapped).
+    pub req: Request,
+}
+
+const TENANT_NAMES: &[&str] = &[
+    "alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi", "ivan", "judy", "mike",
+    "nina", "oscar", "peggy",
+];
+
+/// Multi-tenant serving trace: `tenants` tenants, each with its own long
+/// shared system preamble, issuing `bursts` bursts of `burst_len`
+/// back-to-back requests — the traffic shape the gateway's
+/// prefix-affinity routing and bounded-queue shedding are built for.
+///
+/// Every request of one tenant shares that tenant's preamble, which is
+/// long enough to cover the whole affinity-fingerprint span
+/// (`prefixcache::AFFINITY_PREFIX_MAX` tokens), so a tenant's traffic
+/// maps to one routing key while different tenants' keys diverge inside
+/// the first fingerprint block. Bursts alternate round-robin over
+/// tenants; arrivals within a burst are ~2 ms apart while consecutive
+/// bursts are separated by an idle gap of at least 250 ms (exponential
+/// tail), making the trace genuinely bursty rather than Poisson-smooth.
+/// Requests are returned in arrival order with ids contiguous from
+/// `id_base`; every request carries a copy of `params`.
+pub fn multi_tenant(
+    tok: &Tokenizer,
+    params: &SamplingParams,
+    tenants: usize,
+    bursts: usize,
+    burst_len: usize,
+    seed: u64,
+    id_base: u64,
+) -> Vec<TenantRequest> {
+    assert!(tenants > 0 && burst_len > 0, "degenerate multi-tenant trace");
+    const TURNS: &[&str] = &[
+        "tell me about NAME.",
+        "who is NAME?",
+        "where does NAME live?",
+        "compute 3 + 4.",
+        "summarize the last ticket.",
+    ];
+    let mut rng = Pcg32::new(seed);
+    let mut out = Vec::with_capacity(bursts * burst_len);
+    let mut t = 0.0f64;
+    let mut id = id_base;
+    for b in 0..bursts {
+        let tenant = b % tenants;
+        let name = TENANT_NAMES[tenant % TENANT_NAMES.len()];
+        // The preamble out-spans the affinity fingerprint (64 tokens on
+        // the raw byte tokenizer) so same-tenant requests share their
+        // whole hashed prefix, while staying well under the engine's
+        // seq_max/2 admission limit with the user turn appended.
+        let preamble = format!(
+            "[{name}] support desk for {name} and friends. answer briefly, stay in \
+             character, and cite the account notes when they matter. "
+        );
+        // Idle gap before each burst, tight spacing inside it.
+        t += 0.25 + rng.exp(2.0);
+        for i in 0..burst_len {
+            let turn = TURNS[rng.below(TURNS.len())].replace("NAME", name);
+            let prompt = format!("{preamble}q{b}.{i}: {turn}");
+            out.push(TenantRequest {
+                tenant,
+                at_s: t + i as f64 * 0.002,
+                req: Request {
+                    id,
+                    prompt_ids: tok.encode(&format_prompt(&prompt)),
+                    params: params.clone(),
+                },
+                prompt,
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
 /// Tokenized held-out corpus windows for the §4 tree-search simulation
 /// (the paper uses a 100-prompt Alpaca subset).
 pub fn load_corpus_windows(artifacts: &Path) -> Result<Vec<Vec<u32>>> {
@@ -198,6 +287,54 @@ mod tests {
         assert!(t2.len() > t1.len());
         // Different personas diverge after the system preamble.
         assert_ne!(reqs[0].prompt_ids, reqs[1].prompt_ids);
+    }
+
+    #[test]
+    fn multi_tenant_shape_affinity_keys_and_burstiness() {
+        use crate::prefixcache::prefix_fingerprint;
+        use std::collections::HashMap;
+
+        let tok = Tokenizer::new(vec![]);
+        let params = default_params(&tok, 8);
+        let trace = multi_tenant(&tok, &params, 3, 6, 4, 7, 50);
+        assert_eq!(trace.len(), 24);
+        // Contiguous ids in arrival order; arrivals non-decreasing.
+        let ids: Vec<u64> = trace.iter().map(|r| r.req.id).collect();
+        assert_eq!(ids, (50..74).collect::<Vec<u64>>());
+        for w in trace.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s, "arrivals must be ordered");
+        }
+        // Every tenant appears, and each tenant's requests share ONE
+        // affinity fingerprint (the gateway's routing key) while
+        // different tenants' keys differ.
+        let mut fp: HashMap<usize, u64> = HashMap::new();
+        for r in &trace {
+            let f = prefix_fingerprint(&r.req.prompt_ids);
+            match fp.get(&r.tenant) {
+                Some(&seen) => assert_eq!(seen, f, "tenant {} split its affinity key", r.tenant),
+                None => {
+                    fp.insert(r.tenant, f);
+                }
+            }
+            assert!(r.prompt.contains("support desk"), "raw prompt text rides along");
+            assert_eq!(r.req.params, params, "every request carries the params");
+        }
+        assert_eq!(fp.len(), 3, "all tenants present");
+        let keys: Vec<u64> = fp.values().copied().collect();
+        assert!(keys.iter().all(|&k| keys.iter().filter(|&&x| x == k).count() == 1),
+            "tenant affinity keys must be distinct: {keys:?}");
+        // Bursty, not smooth: the idle inter-burst gap dwarfs the median
+        // intra-burst spacing.
+        let mut gaps: Vec<f64> = trace.windows(2).map(|w| w[1].at_s - w[0].at_s).collect();
+        gaps.sort_by(f64::total_cmp);
+        let median = gaps[gaps.len() / 2];
+        let max = *gaps.last().unwrap();
+        assert!(max > 10.0 * median, "trace is not bursty: median {median} max {max}");
+        // Prompts are distinct (no accidental full-duplicate work).
+        let mut texts: Vec<&str> = trace.iter().map(|r| r.prompt.as_str()).collect();
+        texts.sort_unstable();
+        texts.dedup();
+        assert_eq!(texts.len(), trace.len());
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Gateway end-to-end: a multi-worker engine pool behind the TCP
+//! front-end. Covers the ISSUE acceptance criteria: N >= 2 workers serve
+//! the multi-tenant shared-prefix workload with byte-identical greedy
+//! output vs a single worker; bounded queues shed with structured
+//! `overloaded` frames instead of deadlocking; `{"op":"drain"}` on one
+//! worker re-routes its queued requests (not dropped) and completes its
+//! in-flight sequences while the rest keep serving; and the aggregated
+//! stats / health / malformed-op paths answer structurally.
+
+use std::sync::atomic::Ordering;
+
+use hydra_serve::server::{spawn_local_gateway, Client};
+use hydra_serve::tokenizer::Tokenizer;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+/// Multi-tenant prompt texts shared by the identity phases.
+fn trace_prompts(dir: &std::path::Path) -> Vec<String> {
+    let tok = Tokenizer::load(&dir.join("tokenizer.json")).expect("tokenizer");
+    let params = workload::default_params(&tok, 12);
+    workload::multi_tenant(&tok, &params, 2, 4, 2, 7, 0)
+        .into_iter()
+        .map(|t| t.prompt)
+        .collect()
+}
+
+#[test]
+fn pool_matches_single_worker_and_drains_live() {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let prompts = trace_prompts(&dir);
+
+    // Reference: single worker, prefix cache on.
+    let reference: Vec<String> = {
+        let (port, shutdown, handle) =
+            spawn_local_gateway(dir.clone(), "s".into(), "hydra".into(), 1, 1, 64, 16)
+                .expect("spawn single-worker server");
+        let mut c = Client::connect(&format!("127.0.0.1:{port}")).expect("connect");
+        let texts = prompts
+            .iter()
+            .map(|p| {
+                let r = c.generate(p, 12).expect("reference generate");
+                assert!(r.get("error").is_none(), "reference failed: {r}");
+                r.req("text").as_str().unwrap().to_string()
+            })
+            .collect();
+        shutdown.store(true, Ordering::Relaxed);
+        let _ = handle.join();
+        texts
+    };
+
+    // Pool: two workers, same workload issued concurrently.
+    let (port, shutdown, handle) =
+        spawn_local_gateway(dir, "s".into(), "hydra".into(), 1, 2, 64, 16)
+            .expect("spawn 2-worker server");
+    let addr = format!("127.0.0.1:{port}");
+
+    let joins: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .map(|p| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.generate(&p, 12).unwrap()
+            })
+        })
+        .collect();
+    let pooled: Vec<Json> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for (i, r) in pooled.iter().enumerate() {
+        assert!(r.get("error").is_none(), "pool request {i} failed: {r}");
+        assert_eq!(
+            r.req("text").as_str().unwrap(),
+            reference[i],
+            "greedy output must be byte-identical to the single-worker run (prompt {i})"
+        );
+    }
+
+    let mut c = Client::connect(&addr).expect("connect");
+
+    // Aggregated stats: merged totals at the top level, one block per
+    // worker underneath.
+    let stats = c.stats().expect("stats op");
+    assert_eq!(stats.req("event").as_str(), Some("stats"));
+    assert_eq!(stats.req("workers_total").as_usize(), Some(2));
+    assert_eq!(stats.req("workers_alive").as_usize(), Some(2));
+    assert_eq!(stats.req("completed").as_usize(), Some(prompts.len()));
+    let blocks = stats.req("workers").as_arr().expect("workers array");
+    assert_eq!(blocks.len(), 2);
+    for b in blocks {
+        assert!(b.get("completed").is_some(), "per-worker block shape: {b}");
+    }
+    assert!(
+        stats.req("prefix_cache").req("lookups").as_usize().unwrap() > 0,
+        "merged prefix-cache block: {stats}"
+    );
+
+    // Health: both workers alive, heartbeats fresh enough to be numbers.
+    let health = c.health().expect("health op");
+    assert_eq!(health.req("event").as_str(), Some("health"));
+    let hw = health.req("workers").as_arr().unwrap();
+    assert_eq!(hw.len(), 2);
+    assert!(hw.iter().all(|w| w.req("alive").as_bool() == Some(true)));
+
+    // Drain with a request in flight and one queued behind it on the
+    // same worker (identical prompt -> identical affinity key; batch=1
+    // keeps the second queued). The queued one must be re-routed to the
+    // sibling — completed, not dropped.
+    let busy_prompt = "the gateway drain drill needs one long-running request \
+                       with a distinctive prefix that no other test reuses."
+        .to_string();
+    let a_addr = addr.clone();
+    let a_prompt = busy_prompt.clone();
+    let a = std::thread::spawn(move || {
+        let mut c = Client::connect(&a_addr).unwrap();
+        c.generate(&a_prompt, 96).unwrap()
+    });
+    // Find which worker took it (health: the one with an active slot).
+    let busy_worker = {
+        let mut found = None;
+        for _ in 0..600 {
+            let h = c.health().unwrap();
+            let workers = h.req("workers").as_arr().unwrap().to_vec();
+            found = workers
+                .iter()
+                .position(|w| w.req("active_slots").as_usize().unwrap_or(0) > 0);
+            if found.is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        found.expect("request A never showed up in any worker's slots")
+    };
+    let b_addr = addr.clone();
+    let b_prompt = busy_prompt.clone();
+    let b = std::thread::spawn(move || {
+        let mut c = Client::connect(&b_addr).unwrap();
+        c.generate(&b_prompt, 24).unwrap()
+    });
+    // Let B reach the busy worker's queue before draining it.
+    std::thread::sleep(std::time::Duration::from_millis(700));
+
+    let drained = c.drain(busy_worker).expect("drain op");
+    assert_eq!(drained.req("event").as_str(), Some("drained"), "{drained}");
+    assert_eq!(drained.req("worker").as_usize(), Some(busy_worker));
+
+    let a = a.join().unwrap();
+    assert!(a.get("error").is_none(), "in-flight request must complete through drain: {a}");
+    let b = b.join().unwrap();
+    assert!(b.get("error").is_none(), "queued request must be re-routed, not dropped: {b}");
+    assert_eq!(b.req("tokens").as_usize(), Some(24));
+
+    // The drained worker reports its state; the sibling keeps serving.
+    let health = c.health().unwrap();
+    let hw = health.req("workers").as_arr().unwrap();
+    assert_eq!(hw[busy_worker].req("draining").as_bool(), Some(true));
+    assert_eq!(hw[busy_worker].req("active_slots").as_usize(), Some(0));
+    let after = c.generate("post-drain service check.", 8).expect("post-drain generate");
+    assert!(after.get("error").is_none(), "pool must keep serving after a drain: {after}");
+    assert_eq!(after.req("tokens").as_usize(), Some(8));
+
+    // Malformed control requests: structured errors, never drops.
+    let r = c.request(&Json::obj(vec![("op", Json::str("drain"))])).unwrap();
+    assert_eq!(r.req("event").as_str(), Some("error"));
+    assert!(r.req("error").as_str().unwrap().contains("worker"), "{r}");
+    let r = c.drain(99).unwrap();
+    assert_eq!(r.req("event").as_str(), Some("error"));
+    assert!(r.req("error").as_str().unwrap().contains("no worker"), "{r}");
+    let r = c.request(&Json::obj(vec![("op", Json::str("nope"))])).unwrap();
+    assert!(r.req("error").as_str().unwrap().contains("unknown op"), "{r}");
+    // Non-string "op" is not a control request: it fails request
+    // validation (no prompt) with a structured error.
+    let r = c.request(&Json::obj(vec![("op", Json::num(42.0))])).unwrap();
+    assert_eq!(r.req("event").as_str(), Some("error"));
+    assert!(r.req("error").as_str().unwrap().contains("bad request"), "{r}");
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = handle.join();
+}
+
+#[test]
+fn bounded_queue_sheds_with_overloaded_frames() {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    // One worker, queue bound of 1: a burst must shed, not block or drop
+    // connections.
+    let (port, shutdown, handle) =
+        spawn_local_gateway(dir, "s".into(), "hydra".into(), 1, 1, 1, 0)
+            .expect("spawn bounded server");
+    let addr = format!("127.0.0.1:{port}");
+
+    let joins: Vec<_> = (0..10)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.generate(&format!("burst request number {i}."), 24).unwrap()
+            })
+        })
+        .collect();
+    let frames: Vec<Json> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let done = frames
+        .iter()
+        .filter(|f| f.req("event").as_str() == Some("done"))
+        .count();
+    let shed: Vec<&Json> = frames
+        .iter()
+        .filter(|f| f.get("code").and_then(|c| c.as_str()) == Some("overloaded"))
+        .collect();
+    assert_eq!(done + shed.len(), frames.len(), "every request answered: {frames:?}");
+    assert!(done >= 1, "at least the first request must be served");
+    assert!(!shed.is_empty(), "a 10-deep burst into a 1-deep queue must shed");
+    for f in &shed {
+        assert_eq!(f.req("event").as_str(), Some("error"));
+        assert!(f.req("retry_after_ms").as_usize().unwrap() >= 1, "{f}");
+    }
+
+    // No deadlock: once the burst clears, the server still serves.
+    let mut c = Client::connect(&addr).expect("connect");
+    let r = c.generate("after the storm.", 8).expect("post-burst generate");
+    assert!(r.get("error").is_none(), "post-burst request failed: {r}");
+    assert_eq!(r.req("tokens").as_usize(), Some(8));
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = handle.join();
+}
