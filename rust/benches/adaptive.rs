@@ -15,7 +15,7 @@
 //!   throughput (a 5% floor absorbs wall-clock noise on shared CI
 //!   hardware) and strictly dominates on speculation efficiency.
 //!
-//! Results append to bench_results/adaptive.json (uploaded as a CI
+//! Results append to bench_results/BENCH_adaptive.json (uploaded as a CI
 //! artifact so the perf trajectory accumulates across PRs).
 
 use std::collections::BTreeMap;

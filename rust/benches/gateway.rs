@@ -14,7 +14,7 @@
 //!   jitter; in quick mode the wall-clock comparison is advisory, the
 //!   identity check is the hard gate).
 //!
-//! Results append to bench_results/gateway.json (uploaded as a CI
+//! Results append to bench_results/BENCH_gateway.json (uploaded as a CI
 //! artifact so the scaling trajectory accumulates across PRs).
 
 use std::collections::BTreeMap;

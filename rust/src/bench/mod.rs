@@ -238,11 +238,13 @@ impl Table {
     }
 }
 
-/// Append a result object to bench_results/<bench>.json (array file).
+/// Append a result object to bench_results/BENCH_<bench>.json (array
+/// file). The `BENCH_` prefix marks the committed quick-mode trajectory
+/// files (see bench_results/README.md) apart from ad-hoc local output.
 pub fn save_result(bench: &str, result: Json) -> Result<()> {
     let dir = PathBuf::from("bench_results");
     std::fs::create_dir_all(&dir)?;
-    let path = dir.join(format!("{bench}.json"));
+    let path = dir.join(format!("BENCH_{bench}.json"));
     let mut arr = if path.exists() {
         match Json::parse_file(&path) {
             Ok(Json::Arr(a)) => a,

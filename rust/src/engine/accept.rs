@@ -54,10 +54,12 @@ pub fn decide(
     debug_assert!(node_tokens.len() >= tree.len());
     let row = |n: usize| &logits[n * vocab..(n + 1) * vocab];
 
-    let mut accepted = vec![0usize];
+    // `cur` tracks the deepest accepted node — a cursor instead of
+    // `accepted.last()` so the walk never needs a panicking unwrap.
+    let mut cur = 0usize;
+    let mut accepted = vec![cur];
     let mut logprobs = vec![log_prob_of(root_logits, node_tokens[0] as usize, mode)];
     loop {
-        let cur = *accepted.last().unwrap();
         let cur_logits = row(cur);
         let next = match mode {
             AcceptMode::Greedy => {
@@ -76,9 +78,10 @@ pub fn decide(
                     .copied()
                     .filter(|&c| probs[node_tokens[c] as usize] > threshold)
                     .max_by(|&a, &b| {
+                        // total_cmp: NaN probabilities (corrupt logits)
+                        // order deterministically instead of panicking.
                         probs[node_tokens[a] as usize]
-                            .partial_cmp(&probs[node_tokens[b] as usize])
-                            .unwrap()
+                            .total_cmp(&probs[node_tokens[b] as usize])
                     })
             }
         };
@@ -86,13 +89,13 @@ pub fn decide(
             Some(c) => {
                 logprobs.push(log_prob_of(cur_logits, node_tokens[c] as usize, mode));
                 accepted.push(c);
+                cur = c;
             }
             None => break,
         }
     }
 
-    let last = *accepted.last().unwrap();
-    let next_root = sample_root(row(last), mode, top_k, rng);
+    let next_root = sample_root(row(cur), mode, top_k, rng);
     StepDecision { accepted, next_root, logprobs }
 }
 

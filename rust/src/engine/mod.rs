@@ -22,6 +22,8 @@
 //! budget), and this module threads the per-slot topologies through
 //! drafting, verification masks, acceptance and commit.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod accept;
 pub mod seq;
 
@@ -29,7 +31,7 @@ use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 pub use accept::{AcceptMode, StepDecision};
 pub use seq::{FinishReason, Request, SamplingParams, SeqEvent, SeqOutput, Slot};
@@ -49,6 +51,15 @@ use crate::util::stats::top_k_indices;
 /// through the chain-mode verify/commit path before falling back to a
 /// full prefill.
 pub const CHAIN_TAIL_MAX: usize = 32;
+
+/// Error constructor for an engine-state field the active draft variant
+/// guarantees at construction (`pkv` under Hydra++, `ekv` under EAGLE,
+/// `head_w` for every drafting arch). Serving code propagates with `?`
+/// instead of panicking so a corrupted engine surfaces as a structured
+/// error frame rather than a dead worker.
+fn missing_state(what: &'static str) -> impl FnOnce() -> anyhow::Error {
+    move || anyhow!("engine state `{what}` missing for the active draft variant")
+}
 
 /// Process-level engine configuration. Note what is NOT here: the
 /// acceptance mode, sampling temperature, and generation budget are
@@ -512,14 +523,20 @@ impl<'rt> Engine<'rt> {
                 Some(pc) if req.params.prefix_cache => pc.lookup(&req.prompt_ids, max_tail),
                 _ => None,
             };
+            // A full-prompt hit is only usable if it carries an end
+            // snapshot to replace prefill; degrade a malformed one to a
+            // miss HERE, before alloc/pin (see the leak note below),
+            // rather than panicking during restore.
+            let hit =
+                hit.filter(|h| h.matched < req.prompt_ids.len() || h.end.is_some());
             let init_len = hit.as_ref().map_or(req.prompt_ids.len(), |h| h.matched);
             // Cannot fail here: free_count and prompt lengths were
             // validated above, and init_len <= prompt_len < seq_max. Any
             // future fallible step inside this loop must unwind earlier
             // iterations' alloc/pin or it leaks pool rows and cache pins.
             let slot = self.pool.alloc(init_len)?;
-            if let Some(h) = &hit {
-                self.pcache.as_mut().unwrap().pin(h.node);
+            if let (Some(h), Some(pc)) = (&hit, self.pcache.as_mut()) {
+                pc.pin(h.node);
             }
             plans.push(Plan { slot, hit });
         }
@@ -590,7 +607,10 @@ impl<'rt> Engine<'rt> {
                 // Full-prompt hit: the snapshot replaces prefill outright.
                 // The root *token* is resampled with this request's own
                 // criterion and RNG — only the distribution is cached.
-                let end = h.end.as_ref().expect("full hit carries an end snapshot");
+                // End-less full hits were degraded to misses at plan time,
+                // so this branch always finds a snapshot; skip defensively
+                // (the slot then prefills cold) instead of panicking.
+                let Some(end) = h.end.as_ref() else { continue };
                 slot.root_logits = end.root_logits.clone();
                 slot.h_last = end.h_last.clone();
                 slot.h_star = end.h_star.clone();
@@ -654,10 +674,10 @@ impl<'rt> Engine<'rt> {
             match self.arch.clone() {
                 DraftArch::Hydra { ml, prefix: true } => {
                     let name = format!("prefix_prefill_{}_b{}_L{}", self.cfg.size, b, ml);
-                    let hw = self.head_w.clone().unwrap();
+                    let hw = self.head_w.clone().ok_or_else(missing_state("head_w"))?;
                     let out = self.rt.call(&name, &[hidden_seq, &lens], &[&hw])?;
                     let (enriched, pkv_new) = (&out[0], &out[1]);
-                    let pkv = self.pkv.as_mut().unwrap();
+                    let pkv = self.pkv.as_mut().ok_or_else(missing_state("pkv"))?;
                     let prow = pkv.stride(0);
                     for &(i, _) in &cold {
                         pkv.f32s_mut()[i * prow..(i + 1) * prow]
@@ -667,11 +687,11 @@ impl<'rt> Engine<'rt> {
                 }
                 DraftArch::Eagle => {
                     let name = format!("eagle_prefill_{}_b{}", self.cfg.size, b);
-                    let hw = self.head_w.clone().unwrap();
+                    let hw = self.head_w.clone().ok_or_else(missing_state("head_w"))?;
                     let out =
                         self.rt.call(&name, &[&tokens, hidden_seq, &lens], &[&self.base_w, &hw])?;
                     let (f_last, ekv_new) = (&out[0], &out[1]);
-                    let ekv = self.ekv.as_mut().unwrap();
+                    let ekv = self.ekv.as_mut().ok_or_else(missing_state("ekv"))?;
                     let erow = ekv.stride(0);
                     for &(i, _) in &cold {
                         ekv.f32s_mut()[i * erow..(i + 1) * erow]
@@ -790,12 +810,10 @@ impl<'rt> Engine<'rt> {
             // through with accept_len 0, as in step()).
             if let DraftArch::Hydra { ml, prefix: true } = self.arch.clone() {
                 let name = format!("prefix_step_{}_b{}_L{}", self.cfg.size, b, ml);
-                let hw = self.head_w.clone().unwrap();
-                let pout = self.rt.call(
-                    &name,
-                    &[&gathered, &accept_len, &cur_len, self.pkv.as_ref().unwrap()],
-                    &[&hw],
-                )?;
+                let hw = self.head_w.clone().ok_or_else(missing_state("head_w"))?;
+                let pkv = self.pkv.as_ref().ok_or_else(missing_state("pkv"))?;
+                let pout =
+                    self.rt.call(&name, &[&gathered, &accept_len, &cur_len, pkv], &[&hw])?;
                 let (enriched, pkv_new) = (&pout[0], &pout[1]);
                 self.pkv = Some(pkv_new.clone());
                 for (r, (i, tail)) in rows.iter().enumerate() {
@@ -854,8 +872,10 @@ impl<'rt> Engine<'rt> {
         // a snapshot at its exact end, skip the slab assembly outright —
         // the insert would only refresh an identical snapshot (same
         // engine, deterministic state).
-        if self.pcache.as_ref().unwrap().is_resident(&self.slots[i].tokens[..len]) {
-            return;
+        if let Some(pc) = self.pcache.as_ref() {
+            if pc.is_resident(&self.slots[i].tokens[..len]) {
+                return;
+            }
         }
         // Fused path: this row's share of the last step's KV commit may
         // still be pending — apply it host-side so the snapshot is whole.
@@ -889,7 +909,9 @@ impl<'rt> Engine<'rt> {
             root_logits: slot.root_logits.clone(),
         };
         let tokens = &slot.tokens[..len];
-        self.pcache.as_mut().unwrap().insert(tokens, &slab, extra.as_deref(), end);
+        if let Some(pc) = self.pcache.as_mut() {
+            pc.insert(tokens, &slab, extra.as_deref(), end);
+        }
     }
 
     /// Host-side application of slot `i`'s share of a pending fused
@@ -1108,7 +1130,8 @@ impl<'rt> Engine<'rt> {
             if dec.accepted.len() > budget {
                 dec.accepted.truncate(budget);
                 dec.logprobs.truncate(dec.accepted.len());
-                let last = *dec.accepted.last().unwrap();
+                let last =
+                    dec.accepted.last().copied().context("acceptance walk is never empty")?;
                 dec.next_root = accept::sample_root(
                     &slot_logits[last * v..(last + 1) * v],
                     mode,
@@ -1131,7 +1154,8 @@ impl<'rt> Engine<'rt> {
             // Tree-search probe bookkeeping (§4): would the next addable
             // child of the stopping node have matched the greedy token?
             if let Some(probe) = &mut self.probe {
-                let n_stop = *dec.accepted.last().unwrap();
+                let n_stop =
+                    dec.accepted.last().copied().context("acceptance walk is never empty")?;
                 probe.stops[n_stop] += 1;
                 probe.steps += 1;
                 if let Some(hl) = &probe.head_logits[i][n_stop] {
@@ -1215,7 +1239,8 @@ impl<'rt> Engine<'rt> {
             }
             // Base hidden / logits at the deepest accepted node become the
             // next step's draft inputs and root distribution.
-            let last_node = *dec.accepted.last().unwrap();
+            let last_node =
+                dec.accepted.last().copied().context("acceptance walk is never empty")?;
             slot.h_last =
                 hidden.f32s()[(i * tb + last_node) * d..(i * tb + last_node + 1) * d].to_vec();
             slot.root_logits =
@@ -1245,11 +1270,10 @@ impl<'rt> Engine<'rt> {
             DraftArch::Hydra { ml, prefix: true } => {
                 let t0 = Instant::now();
                 let name = format!("prefix_step_{}_b{}_L{}", self.cfg.size, b, ml);
-                let hw = self.head_w.clone().unwrap();
-                let out = self
-                    .rt
-                    .call(&name, &[&gathered, &accept_len, &cur_len, self.pkv.as_ref().unwrap()],
-                          &[&hw])?;
+                let hw = self.head_w.clone().ok_or_else(missing_state("head_w"))?;
+                let pkv = self.pkv.as_ref().ok_or_else(missing_state("pkv"))?;
+                let out =
+                    self.rt.call(&name, &[&gathered, &accept_len, &cur_len, pkv], &[&hw])?;
                 let (enriched, pkv_new) = (&out[0], &out[1]);
                 self.pkv = Some(pkv_new.clone());
                 for i in 0..b {
@@ -1262,7 +1286,7 @@ impl<'rt> Engine<'rt> {
             DraftArch::Eagle => {
                 let t0 = Instant::now();
                 let name = format!("eagle_extend_{}_b{}", self.cfg.size, b);
-                let hw = self.head_w.clone().unwrap();
+                let hw = self.head_w.clone().ok_or_else(missing_state("head_w"))?;
                 // tokens of the accepted path; parent hidden of accepted
                 // token j is the base hidden of the token before it.
                 let mut etoks = HostTensor::zeros_i32(&[b, a]);
@@ -1280,9 +1304,10 @@ impl<'rt> Engine<'rt> {
                             .copy_from_slice(src);
                     }
                 }
+                let ekv = self.ekv.as_ref().ok_or_else(missing_state("ekv"))?;
                 let out = self.rt.call(
                     &name,
-                    &[&etoks, &hpar, &accept_len, &cur_len, self.ekv.as_ref().unwrap()],
+                    &[&etoks, &hpar, &accept_len, &cur_len, ekv],
                     &[&self.base_w, &hw],
                 )?;
                 let (f_last, ekv_new) = (&out[0], &out[1]);
@@ -1449,7 +1474,8 @@ impl<'rt> Engine<'rt> {
         }
         let t0 = Instant::now();
         let name = format!("medusa_draft_{}", self.cfg.size);
-        let out = self.rt.call(&name, &[&h], &[self.head_w.as_deref().unwrap()])?;
+        let hw = self.head_w.as_deref().ok_or_else(missing_state("head_w"))?;
+        let out = self.rt.call(&name, &[&h], &[hw])?;
         let logits = &out[0]; // [8, K, V]
         for head in 1..=k {
             self.phase.draft_per_head[head] += t0.elapsed() / k as u32;
@@ -1476,7 +1502,7 @@ impl<'rt> Engine<'rt> {
             // Probe: children of a depth-d node come from head d (same
             // distribution for every node at that depth — sequential
             // independence).
-            if self.probe.is_some() {
+            if let Some(probe) = self.probe.as_mut() {
                 let rows: Vec<(usize, Vec<f32>)> = (0..tree.len())
                     .filter(|&n| tree.depth[n] <= k)
                     .map(|n| {
@@ -1484,7 +1510,6 @@ impl<'rt> Engine<'rt> {
                         (n, logits.f32s()[(i * k + head) * v..(i * k + head + 1) * v].to_vec())
                     })
                     .collect();
-                let probe = self.probe.as_mut().unwrap();
                 for (n, row) in rows {
                     probe.head_logits[i][n] = Some(row);
                 }
@@ -1551,11 +1576,8 @@ impl<'rt> Engine<'rt> {
             let t0 = Instant::now();
             let name =
                 format!("hydra_draft_{}_L{}_d{}_m{}", self.cfg.size, ml, head, mb);
-            let out = self.rt.call(
-                &name,
-                &[&h, &path],
-                &[&self.base_w, self.head_w.as_deref().unwrap()],
-            )?;
+            let hw = self.head_w.as_deref().ok_or_else(missing_state("head_w"))?;
+            let out = self.rt.call(&name, &[&h, &path], &[&self.base_w, hw])?;
             self.phase.draft_per_head[head] += t0.elapsed();
             let logits = &out[0]; // [Mb, V]
             for (r, &(i, p)) in row_of.iter().enumerate() {
@@ -1628,11 +1650,10 @@ impl<'rt> Engine<'rt> {
             let cl = HostTensor::from_i32(&[1], vec![cur_len as i32]);
             let t0 = Instant::now();
             let name = format!("eagle_step_{}_b1_n{}", self.cfg.size, nb);
-            let out = self.rt.call(
-                &name,
-                &[&toks, &hpar, &pos, &cl, self.ekv.as_ref().unwrap()],
-                &[&self.base_w, self.head_w.as_deref().unwrap()],
-            )?;
+            let ekv = self.ekv.as_ref().ok_or_else(missing_state("ekv"))?;
+            let hw = self.head_w.as_deref().ok_or_else(missing_state("head_w"))?;
+            let out =
+                self.rt.call(&name, &[&toks, &hpar, &pos, &cl, ekv], &[&self.base_w, hw])?;
             self.phase.draft_per_head[depth] += t0.elapsed();
             let (logits, h_out) = (&out[0], &out[1]); // [1,Nb,V], [1,Nb,D]
             for (r, &n) in nodes.iter().enumerate() {

@@ -25,19 +25,21 @@
 //! aggregates every worker's scheduler/engine/prefix-cache/speculation
 //! counters into one frame (per-worker blocks + merged totals).
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod router;
 mod worker;
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::engine::{Request, SeqEvent};
 use crate::prefixcache::prefix_fingerprint;
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use crate::sync::{lock_or_recover, Arc, Mutex};
 use crate::util::json::Json;
 use router::{Router, WorkerLoad};
 
@@ -100,6 +102,11 @@ pub enum GatewayReply {
     /// The serving worker failed before completing the request.
     /// Terminal for this request.
     Failed {
+        /// Machine-readable failure class, rendered as the `"code"`
+        /// field of the error frame (`"worker_failed"`: the worker
+        /// thread died — engine error or panic — with this request
+        /// pending).
+        code: &'static str,
         /// Human-readable failure description.
         error: String,
     },
@@ -234,11 +241,16 @@ impl GatewayInner {
         // "lost one race".
         let mut msg = WorkerMsg::Generate { req, reply };
         loop {
-            let choice = self.router.lock().expect("router lock").route(fp, &loads);
+            let choice = lock_or_recover(&self.router).route(fp, &loads);
             let Some(w) = choice else {
                 return Err(SubmitError::Overloaded { retry_after_ms: retry_hint(&loads) });
             };
-            let ep = &self.workers[w];
+            let Some(ep) = self.workers.get(w) else {
+                // Defensive: the router only returns indices into `loads`
+                // (same length as `workers`); shed rather than panic if
+                // that contract ever breaks.
+                return Err(SubmitError::Overloaded { retry_after_ms: retry_hint(&loads) });
+            };
             // Count the message toward the worker's backlog before sending
             // so concurrent routers see it; roll back if the channel is
             // full (the bound is enforced here — shed, never block).
@@ -247,10 +259,12 @@ impl GatewayInner {
                 Ok(()) => return Ok(w),
                 Err(e) => {
                     ep.shared.inflight.fetch_sub(1, Ordering::SeqCst);
-                    loads[w].full = true;
+                    if let Some(l) = loads.get_mut(w) {
+                        l.full = true;
+                    }
                     msg = match e {
-                        std::sync::mpsc::TrySendError::Full(m)
-                        | std::sync::mpsc::TrySendError::Disconnected(m) => m,
+                        crate::sync::mpsc::TrySendError::Full(m)
+                        | crate::sync::mpsc::TrySendError::Disconnected(m) => m,
                     };
                 }
             }
@@ -287,7 +301,7 @@ fn retry_hint(loads: &[WorkerLoad]) -> u64 {
 /// shutdown flag and joins every worker thread.
 pub struct Gateway {
     inner: Arc<GatewayInner>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<crate::sync::thread::JoinHandle<()>>,
 }
 
 impl Gateway {
@@ -315,17 +329,25 @@ impl Gateway {
             shutdown,
             epoch: Instant::now(),
         });
-        let handles = rxs
-            .into_iter()
-            .enumerate()
-            .map(|(i, rx)| {
-                let inner = Arc::clone(&inner);
-                std::thread::Builder::new()
-                    .name(format!("gw-worker-{i}"))
-                    .spawn(move || worker::run(i, inner, rx))
-                    .expect("spawn gateway worker")
-            })
-            .collect();
+        let mut handles = Vec::with_capacity(rxs.len());
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let worker_inner = Arc::clone(&inner);
+            let spawned = crate::sync::thread::Builder::new()
+                .name(format!("gw-worker-{i}"))
+                .spawn(move || worker::run(i, worker_inner, rx));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Stop the workers already spawned before bailing so
+                    // a partial pool never leaks detached threads.
+                    inner.shutdown.store(true, Ordering::SeqCst);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e).with_context(|| format!("spawn gateway worker {i}"));
+                }
+            }
+        }
         Ok(Gateway { inner, handles })
     }
 

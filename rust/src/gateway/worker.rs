@@ -13,11 +13,16 @@
 //! until the engine's in-flight sequences retire; only then is the drain
 //! reply sent. New `Generate` messages that race in while draining are
 //! re-routed the same way — never dropped.
+//!
+//! Failure containment: the whole serve loop runs under `catch_unwind`,
+//! and the pending-session map is shared with the guard, so a worker
+//! that panics mid-step (or returns an engine error) immediately fails
+//! every pending session with a structured `worker_failed` frame —
+//! submitters never wait out a timeout on a dead worker — and then
+//! parks in [`fail_loop`] answering new messages with the same failure.
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -26,6 +31,9 @@ use crate::adaptive::AdaptiveConfig;
 use crate::engine::{Engine, EngineConfig, SeqEvent};
 use crate::runtime::Runtime;
 use crate::scheduler::Scheduler;
+use crate::sync::atomic::Ordering;
+use crate::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use crate::sync::{lock_or_recover, Arc, Mutex};
 use crate::util::json::Json;
 
 use super::{GatewayInner, GatewayReply, WorkerMsg, WorkerShared};
@@ -34,17 +42,74 @@ use super::{GatewayInner, GatewayReply, WorkerMsg, WorkerShared};
 /// shutdown flag (also bounds drain/shutdown latency while idle).
 const PARK: Duration = Duration::from_millis(100);
 
-/// Worker thread entry point: build the engine, serve until shutdown;
-/// on a fatal engine error, stay alive answering messages with
-/// structured failures so no submitter ever hangs.
+/// Failure class carried by the `Failed` replies (and rendered as the
+/// frame's `"code"`) when the serving worker dies with requests pending.
+pub(crate) const WORKER_FAILED: &str = "worker_failed";
+
+/// req_id -> reply channel of the connection/session that owns it.
+/// Shared between the serve loop and its panic guard so a dying worker
+/// can fail every pending session immediately.
+type Pending = Arc<Mutex<HashMap<u64, Sender<GatewayReply>>>>;
+
+/// What `catch_unwind` hands back from the guarded serve loop.
+type Unwound = std::result::Result<Result<()>, Box<dyn std::any::Any + Send>>;
+
+/// Worker thread entry point: build the engine, serve until shutdown.
+/// The serve loop runs under `catch_unwind`; on an engine error *or a
+/// panic*, every pending session is failed immediately with a
+/// structured `worker_failed` reply, and the thread stays alive in
+/// [`fail_loop`] answering new messages with the same failure so no
+/// submitter ever hangs.
 pub(crate) fn run(idx: usize, inner: Arc<GatewayInner>, rx: Receiver<WorkerMsg>) {
-    let shared = Arc::clone(&inner.workers[idx].shared);
-    if let Err(e) = serve(idx, &inner, &rx, &shared) {
-        log::error!("gateway worker {idx} failed: {e:#}");
-        shared.alive.store(false, Ordering::SeqCst);
-        fail_loop(idx, &inner, &rx, &shared, &format!("{e:#}"));
-    }
+    let Some(shared) = inner.workers.get(idx).map(|w| Arc::clone(&w.shared)) else {
+        // Unreachable: Gateway::start spawns exactly one worker per
+        // endpoint; exit quietly rather than panic if that ever changes.
+        return;
+    };
+    let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
+    let guarded = Arc::clone(&pending);
+    let outcome: Unwound =
+        catch_unwind(AssertUnwindSafe(|| serve(idx, &inner, &rx, &shared, &guarded)));
     shared.alive.store(false, Ordering::SeqCst);
+    if let Some(error) = failure_text(idx, outcome) {
+        log::error!("gateway {error}");
+        fail_pending(&pending, &error);
+        fail_loop(idx, &inner, &rx, &shared, &error);
+    }
+}
+
+/// Classify the guarded serve loop's outcome: `None` = clean shutdown,
+/// `Some(text)` = the failure description for this worker's sessions.
+fn failure_text(idx: usize, outcome: Unwound) -> Option<String> {
+    match outcome {
+        Ok(Ok(())) => None,
+        Ok(Err(e)) => Some(format!("worker {idx} failed: {e:#}")),
+        Err(payload) => Some(format!("worker {idx} panicked: {}", panic_text(payload.as_ref()))),
+    }
+}
+
+/// Best-effort text for a panic payload (the standard `panic!` macros
+/// carry `&str` or `String`).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Fail every pending session with a structured `worker_failed` reply.
+/// Runs after a panic may have poisoned the map's mutex — recovery is
+/// safe (a HashMap is structurally valid after any bailed mutation).
+fn fail_pending(pending: &Pending, error: &str) {
+    for (_, reply) in lock_or_recover(pending).drain() {
+        let _ = reply.send(GatewayReply::Failed {
+            code: WORKER_FAILED,
+            error: error.to_string(),
+        });
+    }
 }
 
 fn serve(
@@ -52,6 +117,7 @@ fn serve(
     inner: &GatewayInner,
     rx: &Receiver<WorkerMsg>,
     shared: &WorkerShared,
+    pending: &Pending,
 ) -> Result<()> {
     let cfg = &inner.cfg;
     let rt = Runtime::new(cfg.artifacts.clone())?;
@@ -79,8 +145,6 @@ fn serve(
     log::info!("gateway worker {idx} serving {}/{} b{}", cfg.size, cfg.variant, cfg.batch);
 
     let mut sched = Scheduler::default();
-    // req_id -> reply channel of the connection/session that owns it.
-    let mut pending: HashMap<u64, Sender<GatewayReply>> = HashMap::new();
     // Every caller awaiting this worker's drain completion (drains are
     // idempotent; a repeated drain op must not starve the first caller).
     let mut drain_replies: Vec<Sender<Json>> = Vec::new();
@@ -115,7 +179,7 @@ fn serve(
                         rerouted += 1;
                         inner.reroute(req, reply, idx);
                     } else {
-                        pending.insert(req.id, reply);
+                        lock_or_recover(pending).insert(req.id, reply);
                         sched.submit(req);
                     }
                 }
@@ -127,7 +191,8 @@ fn serve(
                     shared.draining.store(true, Ordering::SeqCst);
                     sched.set_admission(false);
                     for req in sched.take_queue() {
-                        if let Some(r) = pending.remove(&req.id) {
+                        let owner = lock_or_recover(pending).remove(&req.id);
+                        if let Some(r) = owner {
                             rerouted += 1;
                             inner.reroute(req, r, idx);
                         }
@@ -150,12 +215,13 @@ fn serve(
             let step = sched.tick_events(&mut engine, |ev| match ev {
                 SeqEvent::Finished(out) => {
                     shared.completed.fetch_add(1, Ordering::Relaxed);
-                    if let Some(reply) = pending.remove(&out.req_id) {
+                    let owner = lock_or_recover(pending).remove(&out.req_id);
+                    if let Some(reply) = owner {
                         let _ = reply.send(GatewayReply::Event(SeqEvent::Finished(out)));
                     }
                 }
                 SeqEvent::Delta { req_id, tokens } => {
-                    if let Some(reply) = pending.get(&req_id) {
+                    if let Some(reply) = lock_or_recover(pending).get(&req_id) {
                         let _ = reply.send(GatewayReply::Event(SeqEvent::Delta {
                             req_id,
                             tokens,
@@ -176,15 +242,10 @@ fn serve(
                         .store((ema_nodes * 1000.0) as u64, Ordering::Relaxed);
                 }
                 Ok(_) => {}
-                Err(e) => {
-                    // Fail every outstanding session with a structured
-                    // reply before surfacing the error.
-                    let msg = format!("engine step failed: {e:#}");
-                    for (_, reply) in pending.drain() {
-                        let _ = reply.send(GatewayReply::Failed { error: msg.clone() });
-                    }
-                    return Err(e);
-                }
+                // Pending sessions are failed by the panic/error guard in
+                // `run` (shared map), which also covers panics this match
+                // can never see.
+                Err(e) => return Err(e.context("engine step failed")),
             }
         }
         // Shared gauges the router and the health op read.
@@ -210,9 +271,9 @@ fn serve(
     }
 }
 
-/// Answer messages after a fatal worker error (engine boot or step
-/// failure): generations get a structured `Failed` reply, control ops a
-/// stub — submitters never hang on a dead worker. Runs until shutdown.
+/// Answer messages after a fatal worker error (engine boot/step failure
+/// or a panic): generations get a structured `Failed` reply, control ops
+/// a stub — submitters never hang on a dead worker. Runs until shutdown.
 fn fail_loop(
     idx: usize,
     inner: &GatewayInner,
@@ -224,7 +285,10 @@ fn fail_loop(
         match rx.recv_timeout(PARK) {
             Ok(WorkerMsg::Generate { reply, .. }) => {
                 shared.inflight.fetch_sub(1, Ordering::SeqCst);
-                let _ = reply.send(GatewayReply::Failed { error: error.to_string() });
+                let _ = reply.send(GatewayReply::Failed {
+                    code: WORKER_FAILED,
+                    error: error.to_string(),
+                });
             }
             Ok(WorkerMsg::Stats { reply }) => {
                 let _ = reply.send(Json::obj(vec![
@@ -276,7 +340,8 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
             .iter()
             .enumerate()
             .filter(|(_, s)| s.active && !s.done)
-            .map(|(i, _)| Json::num(ad.tree_nodes[i] as f64))
+            .filter_map(|(i, _)| ad.tree_nodes.get(i))
+            .map(|&n| Json::num(n as f64))
             .collect();
         fields.push((
             "adaptive",
@@ -308,4 +373,84 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
         ));
     }
     Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::mpsc::channel;
+
+    fn pending_with(ids: &[u64]) -> (Pending, Vec<Receiver<GatewayReply>>) {
+        let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
+        let mut rxs = Vec::new();
+        for &id in ids {
+            let (tx, rx) = channel();
+            lock_or_recover(&pending).insert(id, tx);
+            rxs.push(rx);
+        }
+        (pending, rxs)
+    }
+
+    #[test]
+    fn fail_pending_sends_structured_worker_failed_to_every_session() {
+        let (pending, rxs) = pending_with(&[7, 8, 9]);
+        fail_pending(&pending, "worker 0 panicked: boom");
+        for rx in &rxs {
+            match rx.try_recv() {
+                Ok(GatewayReply::Failed { code, error }) => {
+                    assert_eq!(code, WORKER_FAILED);
+                    assert!(error.contains("boom"), "{error}");
+                }
+                other => panic!("expected Failed, got {other:?}"),
+            }
+        }
+        assert!(lock_or_recover(&pending).is_empty(), "map drained");
+        // Idempotent: a second sweep finds nothing and sends nothing.
+        fail_pending(&pending, "again");
+        assert!(rxs[0].try_recv().is_err());
+    }
+
+    #[test]
+    fn failure_text_classifies_outcomes() {
+        assert!(failure_text(0, Ok(Ok(()))).is_none(), "clean shutdown is not a failure");
+        let t = failure_text(1, Ok(Err(anyhow::anyhow!("engine exploded")))).unwrap();
+        assert!(t.contains("worker 1") && t.contains("engine exploded"), "{t}");
+        // &str and String panic payloads both surface their message.
+        let p = catch_unwind(|| panic!("plain payload")).unwrap_err();
+        let t = failure_text(2, Err(p)).unwrap();
+        assert!(t.contains("panicked") && t.contains("plain payload"), "{t}");
+        let p = catch_unwind(|| panic!("formatted {}", 42)).unwrap_err();
+        let t = failure_text(3, Err(p)).unwrap();
+        assert!(t.contains("formatted 42"), "{t}");
+        let p = catch_unwind(|| std::panic::panic_any(17usize)).unwrap_err();
+        let t = failure_text(4, Err(p)).unwrap();
+        assert!(t.contains("opaque"), "{t}");
+    }
+
+    /// Regression (satellite): a worker that panics mid-step — even while
+    /// holding the pending-map lock, poisoning it — must immediately fail
+    /// its pending sessions with `worker_failed`, exactly like `run`'s
+    /// guard does, instead of leaving submitters to time out.
+    #[test]
+    fn panic_mid_step_fails_pending_sessions_immediately() {
+        let (pending, rxs) = pending_with(&[1, 2]);
+        let guarded = Arc::clone(&pending);
+        let outcome: Unwound = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            // Panic while the serve loop is inside the map (lock held):
+            // the worst case for the guard, since the mutex poisons.
+            let _live_guard = guarded.lock();
+            panic!("step exploded");
+        }));
+        let error = failure_text(0, outcome).expect("a panic is a failure");
+        fail_pending(&pending, &error);
+        for rx in &rxs {
+            match rx.try_recv() {
+                Ok(GatewayReply::Failed { code, error }) => {
+                    assert_eq!(code, WORKER_FAILED);
+                    assert!(error.contains("step exploded"), "{error}");
+                }
+                other => panic!("session must fail immediately, got {other:?}"),
+            }
+        }
+    }
 }

@@ -78,6 +78,18 @@
 //! retire in-flight sequences), and `{"op":"stats"}` (per-worker blocks
 //! plus merged pool totals).
 //!
+//! ## Correctness tooling
+//!
+//! The serving path carries mechanically-enforced invariants
+//! (`docs/INVARIANTS.md`): no panics (typed errors rendering as
+//! structured `{"event":"error"}` frames; a worker that dies anyway
+//! fails its sessions with `"code":"worker_failed"` via a catch-unwind
+//! guard), all synchronization through the [`sync`] shim so the gateway
+//! coordination protocols are loom-model-checked, and a repository lint
+//! (`rust/tools/lint`, the `repo-lint` CI gate) that enforces both plus
+//! protocol/test coverage of every server op. Miri and ThreadSanitizer
+//! CI jobs sweep the pure subsystems and the threaded end-to-end tests.
+//!
 //! * **Layer 2 (python/compile)** — the base transformer + draft heads in
 //!   JAX, AOT-lowered to HLO text once at build time (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels)** — the Pallas tree-attention
@@ -96,6 +108,7 @@
 
 #![warn(missing_docs)]
 
+pub mod sync;
 pub mod util;
 pub mod tokenizer;
 pub mod model;

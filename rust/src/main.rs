@@ -25,10 +25,10 @@
 //! docs/ARCHITECTURE.md), and `--queue-depth` bounds each worker's
 //! submission backlog (overflow is shed with an `overloaded` frame).
 
-use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
-
 use anyhow::{bail, Result};
+
+use hydra_serve::sync::atomic::AtomicBool;
+use hydra_serve::sync::Arc;
 
 use hydra_serve::adaptive::AdaptiveConfig;
 use hydra_serve::engine::{

@@ -10,6 +10,8 @@
 //! (token deltas + terminal summaries) into a callback — the serving
 //! front-end's streaming-session hook.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::VecDeque;
 
 use anyhow::Result;

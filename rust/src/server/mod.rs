@@ -24,14 +24,17 @@
 //! the accept path. Idle workers park on their submission channels
 //! (`recv_timeout`), so an idle server burns no CPU.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod proto;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
 
 use anyhow::{Context, Result};
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{thread, Arc};
 
 use crate::engine::{AcceptMode, SeqEvent};
 use crate::gateway::{Gateway, GatewayConfig, GatewayReply, SubmitError};
@@ -88,7 +91,7 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
     // Declared before the gateway so the gateway drops (and joins its
     // workers, releasing any blocked sessions) before the pool joins the
     // connection handlers.
-    let pool = ThreadPool::new(cfg.conn_threads);
+    let pool = ThreadPool::new(cfg.conn_threads)?;
     let gateway = Arc::new(Gateway::start(
         GatewayConfig {
             artifacts: rt.manifest.dir.clone(),
@@ -136,7 +139,10 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
                 });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(2));
+                // repo-lint: allow(sleep-poll) — a nonblocking accept has
+                // no channel to park on; 2 ms bounds shutdown latency
+                // without a poll/epoll dependency.
+                thread::sleep(std::time::Duration::from_millis(2));
             }
             Err(e) => return Err(e.into()),
         }
@@ -253,8 +259,8 @@ fn handle_conn(
                                 Ok(GatewayReply::Overloaded { retry_after_ms }) => {
                                     break proto::render_overloaded(client_id, retry_after_ms);
                                 }
-                                Ok(GatewayReply::Failed { error }) => {
-                                    break proto::render_error(client_id, &error);
+                                Ok(GatewayReply::Failed { code, error }) => {
+                                    break proto::render_failed(client_id, code, &error);
                                 }
                                 Err(_) => {
                                     break proto::render_error(client_id, "engine shut down")
@@ -289,7 +295,7 @@ pub fn spawn_local(
     size: String,
     variant: String,
     batch: usize,
-) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+) -> Result<(u16, Arc<AtomicBool>, thread::JoinHandle<()>)> {
     spawn_local_opts(artifacts, size, variant, batch, 0)
 }
 
@@ -300,7 +306,7 @@ pub fn spawn_local_opts(
     variant: String,
     batch: usize,
     prefix_cache_mb: usize,
-) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+) -> Result<(u16, Arc<AtomicBool>, thread::JoinHandle<()>)> {
     spawn_local_gateway(artifacts, size, variant, batch, 1, 0, prefix_cache_mb)
 }
 
@@ -314,7 +320,7 @@ pub fn spawn_local_gateway(
     workers: usize,
     queue_depth: usize,
     prefix_cache_mb: usize,
-) -> Result<(u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
+) -> Result<(u16, Arc<AtomicBool>, thread::JoinHandle<()>)> {
     // Bind first so the port is known before the engines warm up.
     let probe = TcpListener::bind("127.0.0.1:0")?;
     let port = probe.local_addr()?.port();
@@ -322,8 +328,14 @@ pub fn spawn_local_gateway(
     let shutdown = Arc::new(AtomicBool::new(false));
     let sd = Arc::clone(&shutdown);
     let addr = format!("127.0.0.1:{port}");
-    let handle = std::thread::spawn(move || {
-        let rt = Runtime::new(artifacts).expect("runtime");
+    let handle = thread::spawn(move || {
+        let rt = match Runtime::new(artifacts) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("server error: runtime open failed: {e:#}");
+                return;
+            }
+        };
         let cfg = ServerConfig {
             addr,
             size,
@@ -360,7 +372,8 @@ impl Client {
                 Ok(s) => return Ok(Client { stream: s }),
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(std::time::Duration::from_millis(100));
+                    // repo-lint: allow(sleep-poll) — connect backoff against a remote socket; nothing to park on until the server accepts.
+                    thread::sleep(std::time::Duration::from_millis(100));
                 }
             }
         }

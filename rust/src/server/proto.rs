@@ -256,6 +256,20 @@ pub fn render_overloaded(client_id: u64, retry_after_ms: u64) -> Json {
     ])
 }
 
+/// Worker-failure frame: the session's serving worker died (engine
+/// error or panic) before completing the request. Carries the
+/// machine-readable `code` (`"worker_failed"`) so clients can
+/// distinguish an infrastructure failure — safe to retry elsewhere —
+/// from a request error.
+pub fn render_failed(client_id: u64, code: &str, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(client_id as f64)),
+        ("event", Json::str("error")),
+        ("code", Json::str(code)),
+        ("error", Json::str(msg)),
+    ])
+}
+
 /// Incremental UTF-8 reassembler for streaming deltas: token chunks are
 /// raw bytes (byte-level BPE), so a multi-byte character can be split
 /// across two decode steps. Feed each chunk's bytes; complete characters
@@ -285,7 +299,15 @@ impl Utf8Assembler {
                 }
                 Err(e) => {
                     let valid = e.valid_up_to();
-                    out.push_str(std::str::from_utf8(&self.buf[..valid]).unwrap());
+                    // The prefix up to `valid` is valid UTF-8 by the
+                    // error's contract; fall back to empty rather than
+                    // panic if that ever fails to hold.
+                    let done = self
+                        .buf
+                        .get(..valid)
+                        .and_then(|b| std::str::from_utf8(b).ok())
+                        .unwrap_or_default();
+                    out.push_str(done);
                     match e.error_len() {
                         // Genuinely invalid bytes mid-stream: replace just
                         // them and keep scanning — a trailing incomplete
@@ -344,13 +366,17 @@ impl DeltaGate {
         }
         if let Some(p) = self.held.find(&self.stop) {
             self.done = true;
-            let out = self.held[..p].to_string();
+            // `p` is a match position from `find`, so it is in range and
+            // on a char boundary; the fallback can't trigger.
+            let out = self.held.get(..p).unwrap_or_default().to_string();
             self.held.clear();
             return if out.is_empty() { None } else { Some(out) };
         }
         let keep = self.longest_marker_prefix_suffix();
         let cut = self.held.len() - keep;
-        let out = self.held[..cut].to_string();
+        // `keep` is at most `held.len()` and lands on a char boundary by
+        // construction (`longest_marker_prefix_suffix` checks).
+        let out = self.held.get(..cut).unwrap_or_default().to_string();
         self.held.drain(..cut);
         if out.is_empty() {
             None
@@ -379,9 +405,11 @@ impl DeltaGate {
     fn longest_marker_prefix_suffix(&self) -> usize {
         let s = self.held.as_bytes();
         let stop = self.stop.as_bytes();
-        let max = (self.stop.len() - 1).min(s.len());
+        let max = self.stop.len().saturating_sub(1).min(s.len());
         for k in (1..=max).rev() {
-            if self.held.is_char_boundary(self.held.len() - k) && stop[..k] == s[s.len() - k..] {
+            let suffix_eq =
+                stop.get(..k).zip(s.get(s.len() - k..)).is_some_and(|(a, b)| a == b);
+            if self.held.is_char_boundary(self.held.len() - k) && suffix_eq {
                 return k;
             }
         }
@@ -621,6 +649,15 @@ mod tests {
         assert!(f.req("error").as_str().unwrap().contains("overloaded"));
         // Plain request errors carry no code field.
         assert!(render_error(1, "boom").get("code").is_none());
+    }
+
+    #[test]
+    fn worker_failed_frame_shape() {
+        let f = render_failed(5, "worker_failed", "worker 0 panicked: boom");
+        assert_eq!(f.req("event").as_str(), Some("error"));
+        assert_eq!(f.req("code").as_str(), Some("worker_failed"));
+        assert_eq!(f.req("id").as_usize(), Some(5));
+        assert!(f.req("error").as_str().unwrap().contains("boom"));
     }
 
     #[test]

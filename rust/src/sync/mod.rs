@@ -1,0 +1,125 @@
+//! Concurrency-primitive shim: the single import point for
+//! synchronization primitives in the serving modules.
+//!
+//! Under normal builds this re-exports `std::sync` / `std::thread`
+//! verbatim, so it compiles to exactly the std types with zero cost.
+//! Under `RUSTFLAGS="--cfg loom"` it re-exports [`loom`]'s model-checked
+//! equivalents instead, which lets the loom suite exhaustively explore
+//! thread interleavings of the gateway's coordination protocols (see
+//! [`models`] and `docs/INVARIANTS.md`).
+//!
+//! The repo-lint `sync-shim` rule enforces that no serving module
+//! imports `std::sync`/`std::thread` directly — everything goes through
+//! this module, so swapping the primitives for loom's (or instrumented
+//! variants) is a one-line `--cfg` away and can never silently miss a
+//! call site.
+//!
+//! Two deliberate deviations from a pure re-export:
+//!
+//! * `mpsc` always comes from std. loom does not model std channels; the
+//!   gateway's bounded-channel protocol is model-checked through the
+//!   explicit replicas in [`models`] instead.
+//! * Under loom, `thread::sleep` is mapped to `yield_now` (loom models
+//!   schedules, not wall-clock time).
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+/// `std::sync::mpsc`, on every build: loom has no channel model, so the
+/// channel-coordination protocols are model-checked via the explicit
+/// replicas in [`models`] rather than by swapping the channel type.
+pub use std::sync::mpsc;
+
+#[cfg(not(loom))]
+pub use std::thread;
+
+/// Loom's model-checked `thread`, with `sleep` mapped to `yield_now`
+/// (loom explores schedules; wall-clock sleeps are meaningless there)
+/// and a `Builder` shim (loom spawns are unnamed — the name is accepted
+/// and dropped so `thread::Builder::new().name(..).spawn(..)` call sites
+/// compile unchanged).
+#[cfg(loom)]
+pub mod thread {
+    pub use loom::thread::*;
+
+    /// Under loom a sleep is just a scheduling point.
+    pub fn sleep(_d: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+
+    /// API-compatible stand-in for `std::thread::Builder` (explicit items
+    /// shadow the glob re-export above, so this wins even if loom grows
+    /// its own). Thread names don't exist in the model; spawning cannot
+    /// fail, so `spawn` always returns `Ok`.
+    #[derive(Debug, Default)]
+    pub struct Builder;
+
+    impl Builder {
+        /// Mirror of `std::thread::Builder::new`.
+        pub fn new() -> Builder {
+            Builder
+        }
+
+        /// Accepts and discards the thread name.
+        #[must_use]
+        pub fn name(self, _name: String) -> Builder {
+            self
+        }
+
+        /// Spawn through loom's scheduler; infallible under the model.
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T,
+            F: Send + 'static,
+            T: Send + 'static,
+        {
+            Ok(loom::thread::spawn(f))
+        }
+    }
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// The serving modules use this instead of `.lock().unwrap()`: every
+/// mutex on the request path guards state that stays structurally valid
+/// across a panic (the router's pin table, a pending-session map), so
+/// poison is recoverable — and the no-panic invariant (repo-lint
+/// `no-panic`, `clippy::unwrap_used`) forbids the unwrap anyway.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+pub mod models;
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_or_recover_passes_through_unpoisoned() {
+        let m = Mutex::new(7);
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn lock_or_recover_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(0));
+        let m2 = Arc::clone(&m);
+        let _ = std::panic::catch_unwind(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        });
+        // A plain .lock().unwrap() would now panic; recovery hands the
+        // guard back with the (structurally intact) value.
+        *lock_or_recover(&m) = 5;
+        assert_eq!(*lock_or_recover(&m), 5);
+    }
+}

@@ -1,10 +1,15 @@
 //! Fixed-size thread pool (no tokio offline). Used by the TCP front-end to
 //! handle client connections; the engine core itself is single-threaded
 //! (one CPU core in this environment — DESIGN.md §8).
+//!
+//! No panics on the serving path: construction returns `Result` (thread
+//! spawning can fail), a poisoned receiver lock is recovered (the queue
+//! stays structurally valid if a job panics mid-`recv`), and `execute`
+//! falls back to running the job inline if every worker is gone rather
+//! than panicking the accept loop.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
+use crate::sync::mpsc;
+use crate::sync::{thread, Arc, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -15,36 +20,57 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn a pool of `size` workers (must be > 0).
-    pub fn new(size: usize) -> ThreadPool {
-        assert!(size > 0);
+    /// Spawn a pool of `size` workers (a size of 0 is rounded up to 1).
+    /// Fails only if the OS refuses to spawn a thread.
+    pub fn new(size: usize) -> std::io::Result<ThreadPool> {
+        let size = size.max(1);
         let (sender, receiver) = mpsc::channel::<Job>();
         let receiver = Arc::new(Mutex::new(receiver));
-        let workers = (0..size)
-            .map(|i| {
-                let rx = Arc::clone(&receiver);
-                thread::Builder::new()
-                    .name(format!("pool-{i}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break,
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { sender: Some(sender), workers }
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&receiver);
+            let handle = thread::Builder::new().name(format!("pool-{i}")).spawn(move || loop {
+                // Recover a poisoned lock: the receiver is still valid
+                // after another worker panicked while holding it.
+                let job = { crate::sync::lock_or_recover(&rx).recv() };
+                match job {
+                    // A panicking job (e.g. a connection handler hitting
+                    // a bug) must not take the pool worker down with it.
+                    Ok(job) => {
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    }
+                    Err(_) => break,
+                }
+            });
+            match handle {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // Join the workers spawned so far (dropping `sender`
+                    // hangs up their channel) before reporting.
+                    drop(sender);
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ThreadPool { sender: Some(sender), workers })
     }
 
-    /// Queue a job for the next free worker.
+    /// Queue a job for the next free worker. If the pool is shut down or
+    /// every worker has hung up (only possible mid-teardown), the job
+    /// runs inline on the caller's thread instead of being dropped.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker hung up");
+        let job: Job = Box::new(f);
+        match &self.sender {
+            Some(tx) => {
+                if let Err(mpsc::SendError(job)) = tx.send(job) {
+                    job();
+                }
+            }
+            None => job(),
+        }
     }
 }
 
@@ -60,11 +86,11 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs() {
-        let pool = ThreadPool::new(4);
+        let pool = ThreadPool::new(4).unwrap();
         let counter = Arc::new(AtomicUsize::new(0));
         for _ in 0..64 {
             let c = Arc::clone(&counter);
@@ -78,7 +104,7 @@ mod tests {
 
     #[test]
     fn join_on_drop_waits() {
-        let pool = ThreadPool::new(2);
+        let pool = ThreadPool::new(2).unwrap();
         let counter = Arc::new(AtomicUsize::new(0));
         for _ in 0..8 {
             let c = Arc::clone(&counter);
@@ -89,5 +115,18 @@ mod tests {
         }
         drop(pool);
         assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn zero_size_rounds_up_and_survives_job_panics() {
+        let pool = ThreadPool::new(0).unwrap();
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.execute(|| panic!("job panic must not kill the pool"));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 1, "later jobs still run");
     }
 }

@@ -179,6 +179,85 @@ fn pool_matches_single_worker_and_drains_live() {
 }
 
 #[test]
+fn drain_during_shed_reroutes_or_sheds_every_queued_request() {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    // Two workers, 1-deep queues: an identical-prompt burst pins one
+    // worker via prefix affinity and drives its queue to capacity; a
+    // drain landing mid-burst must leave NO request unanswered — every
+    // frame is either `done` (served in place or re-routed to the
+    // sibling) or a structured `overloaded` shed. Nothing hangs, nothing
+    // is dropped.
+    let (port, shutdown, handle) =
+        spawn_local_gateway(dir, "s".into(), "hydra".into(), 1, 2, 1, 64)
+            .expect("spawn 2-worker bounded server");
+    let addr = format!("127.0.0.1:{port}");
+
+    let prompt = "drain during shed drill: a shared prefix that pins every \
+                  burst request onto the same worker queue.";
+    let joins: Vec<_> = (0..8)
+        .map(|_| {
+            let addr = addr.clone();
+            let prompt = prompt.to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                c.generate(&prompt, 48).unwrap()
+            })
+        })
+        .collect();
+
+    // Find the worker the burst pinned, then drain it while requests are
+    // still queued or in flight behind it.
+    let mut c = Client::connect(&addr).expect("connect");
+    let busy = {
+        let mut found = None;
+        for _ in 0..600 {
+            let h = c.health().unwrap();
+            let workers = h.req("workers").as_arr().unwrap().to_vec();
+            found = workers
+                .iter()
+                .position(|w| w.req("active_slots").as_usize().unwrap_or(0) > 0);
+            if found.is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        found.expect("burst never reached a worker")
+    };
+    let drained = c.drain(busy).expect("drain op");
+    assert_eq!(drained.req("event").as_str(), Some("drained"), "{drained}");
+
+    let frames: Vec<Json> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let done = frames.iter().filter(|f| f.req("event").as_str() == Some("done")).count();
+    let shed: Vec<&Json> = frames
+        .iter()
+        .filter(|f| f.get("code").and_then(|c| c.as_str()) == Some("overloaded"))
+        .collect();
+    assert_eq!(
+        done + shed.len(),
+        frames.len(),
+        "every burst request must resolve to done or overloaded: {frames:?}"
+    );
+    assert!(done >= 1, "the in-flight request must complete through the drain");
+    for f in &shed {
+        assert_eq!(f.req("event").as_str(), Some("error"));
+        assert!(f.req("retry_after_ms").as_usize().unwrap() >= 1, "{f}");
+    }
+
+    // The drained worker is parked; the sibling keeps the pool serving.
+    let h = c.health().unwrap();
+    let hw = h.req("workers").as_arr().unwrap();
+    assert_eq!(hw[busy].req("draining").as_bool(), Some(true), "{h}");
+    let after =
+        c.generate("post drain-during-shed service check.", 8).expect("post-drain generate");
+    assert!(after.get("error").is_none(), "pool must keep serving: {after}");
+    assert_eq!(after.req("tokens").as_usize(), Some(8));
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = handle.join();
+}
+
+#[test]
 fn bounded_queue_sheds_with_overloaded_frames() {
     let dir = hydra_serve::artifacts_dir();
     assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");

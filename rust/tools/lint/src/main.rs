@@ -1,0 +1,704 @@
+//! repo-lint — the repository's static-analysis gate.
+//!
+//! Enforces the serving-path invariants catalogued in
+//! `docs/INVARIANTS.md` with a zero-dependency token scanner (a
+//! comment/string-scrubbing lexer, not a full parser — `syn` would pull a
+//! dependency tree into the CI bootstrap phase, and every rule here is
+//! expressible over scrubbed tokens). Five rules:
+//!
+//! * **no-panic** — no `.unwrap(` / `.expect(` / `panic!` / `todo!` /
+//!   `unimplemented!` in the request-serving modules (`server`,
+//!   `gateway`, `scheduler`, `engine`, including `server/proto`) outside
+//!   `#[cfg(test)]` code. A panic on the serving path kills a gateway
+//!   worker; errors must propagate as typed `Result`s that render as
+//!   structured `{"event":"error"}` frames.
+//! * **no-index** — no `expr[...]` indexing/slicing (which can panic) in
+//!   `server`, `gateway`, `scheduler` outside tests; use `.get(..)`.
+//!   `engine` is exempt from THIS rule only: its tensor math indexes
+//!   fixed-shape buffers whose bounds are established by the AOT
+//!   manifest, and `.get()` chains there would bury the arithmetic.
+//! * **sync-shim** — no direct `std::sync` / `std::thread` outside
+//!   `rust/src/sync/` (the loom-swappable shim). Everything goes through
+//!   `crate::sync` so `--cfg loom` model checking can never silently
+//!   miss a call site.
+//! * **sleep-poll** — no `sleep(` loops on the serving path: waiting is
+//!   done by parking on channels/condvars. The rare legitimate sleep
+//!   (e.g. backoff against a *remote* socket) carries a waiver.
+//! * **op-coverage** — every `{"op": ...}` the server dispatches must be
+//!   specified in `docs/PROTOCOL.md` and exercised by a test.
+//!
+//! Waivers: a line (or the line directly above it) may carry
+//! `// repo-lint: allow(<rule>) — <reason>`; the reason is mandatory.
+//!
+//! Usage: `repo-lint [repo-root]` (the root is auto-detected by walking
+//! up from the CWD to the first directory containing `rust/src`). Exits
+//! 0 when clean, 1 with one line per violation otherwise.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = match find_root() {
+        Some(r) => r,
+        None => {
+            eprintln!("repo-lint: could not locate the repo root (no rust/src upward of cwd)");
+            return ExitCode::from(2);
+        }
+    };
+    let mut violations = Vec::new();
+    let mut scanned = 0usize;
+    for path in rs_files(&root.join("rust/src")) {
+        let rel = rel_path(&root, &path);
+        match fs::read_to_string(&path) {
+            Ok(text) => {
+                scanned += 1;
+                violations.extend(analyze(&rel, &text));
+            }
+            Err(e) => violations.push(format!("{rel}:0: [io] unreadable: {e}")),
+        }
+    }
+    violations.extend(op_coverage(&root));
+    if violations.is_empty() {
+        println!("repo-lint: clean ({scanned} files)");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("repo-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn find_root() -> Option<PathBuf> {
+    if let Some(arg) = std::env::args().nth(1) {
+        return Some(PathBuf::from(arg));
+    }
+    let mut d = std::env::current_dir().ok()?;
+    loop {
+        if d.join("rust/src").is_dir() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+fn rs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            out.extend(rs_files(&p));
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scrubbing lexer: blank comments, strings and char literals (newlines
+// kept) so rule scans never fire on prose or literal text.
+// ---------------------------------------------------------------------------
+
+fn scrub(text: &str) -> String {
+    let b = text.as_bytes();
+    let mut out = vec![b' '; b.len()];
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out[i] = b'\n';
+            i += 1;
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            // Line comment: blank to end of line.
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            // Block comment, nested.
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    out[i] = b'\n';
+                }
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if let Some(next) = raw_string_end(b, i) {
+            // r"..." / r#"..."# / br#"..."# — blank the whole literal.
+            for j in i..next {
+                if b[j] == b'\n' {
+                    out[j] = b'\n';
+                }
+            }
+            i = next;
+        } else if c == b'"' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'"') {
+            // Plain (or byte) string with escapes.
+            i += if c == b'b' { 2 } else { 1 };
+            while i < b.len() {
+                if b[i] == b'\n' {
+                    out[i] = b'\n';
+                }
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'\'' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'') {
+            let q = if c == b'b' { i + 1 } else { i };
+            if let Some(end) = char_literal_end(b, q) {
+                i = end; // blank it
+            } else {
+                // Lifetime / loop label: keep and move on.
+                out[i] = c;
+                i += 1;
+                if c == b'b' {
+                    out[i] = b'\'';
+                    i += 1;
+                }
+            }
+        } else {
+            out[i] = c;
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// If a raw (byte) string literal starts at `i`, return the index one
+/// past its closing delimiter.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None; // raw identifier (`r#type`) or a bare `r`
+    }
+    j += 1;
+    // Scan for `"` followed by `hashes` hash marks.
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// If a char literal starts at quote index `q`, return the index one past
+/// its closing quote; `None` for lifetimes/labels.
+fn char_literal_end(b: &[u8], q: usize) -> Option<usize> {
+    if q + 1 >= b.len() || b[q] != b'\'' {
+        return None;
+    }
+    if b[q + 1] == b'\\' {
+        // Escaped char: scan to the closing quote.
+        let mut j = q + 2;
+        while j < b.len() {
+            if b[j] == b'\\' {
+                j += 2;
+            } else if b[j] == b'\'' {
+                return Some(j + 1);
+            } else {
+                j += 1;
+            }
+        }
+        return Some(b.len());
+    }
+    // Unescaped: `'X'` where X is any single char (possibly multibyte).
+    let mut j = q + 1;
+    // Step over one UTF-8 scalar.
+    j += utf8_len(b[j]);
+    if j < b.len() && b[j] == b'\'' {
+        Some(j + 1)
+    } else {
+        None // `'a` lifetime, `'outer:` label
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        x if x < 0x80 => 1,
+        x if x >= 0xF0 => 4,
+        x if x >= 0xE0 => 3,
+        _ => 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// #[cfg(test)] masking: rules skip test code.
+// ---------------------------------------------------------------------------
+
+/// Per-line mask: `true` = the line is inside test-gated code.
+fn test_mask(scrubbed: &str) -> Vec<bool> {
+    let lines: Vec<&str> = scrubbed.lines().collect();
+    let n = lines.len();
+    // File-level `#![cfg(...)]` mentioning `test` gates the whole file
+    // (e.g. the loom model modules: `#![cfg(all(loom, test))]`).
+    if let Some(inner) = scrubbed.find("#![cfg(") {
+        let tail = &scrubbed[inner..];
+        if let Some(close) = tail.find(')') {
+            if tail[..close].contains("test") {
+                return vec![true; n];
+            }
+        }
+    }
+    let mut mask = vec![false; n];
+    let bytes = scrubbed.as_bytes();
+    // Byte offset of each line start.
+    let mut line_of = vec![0usize; bytes.len() + 1];
+    {
+        let mut line = 0usize;
+        for (i, &c) in bytes.iter().enumerate() {
+            line_of[i] = line;
+            if c == b'\n' {
+                line += 1;
+            }
+        }
+        line_of[bytes.len()] = line;
+    }
+    let mut search = 0usize;
+    while let Some(off) = scrubbed[search..].find("#[cfg(") {
+        let attr_at = search + off;
+        let args_at = attr_at + "#[cfg(".len();
+        let Some(close) = scrubbed[args_at..].find(')') else { break };
+        let is_test = scrubbed[args_at..args_at + close].contains("test");
+        search = args_at + close;
+        if !is_test {
+            continue;
+        }
+        // The attribute gates the next item: mask to the matching close
+        // brace of the first `{`, or to the first `;` if that comes first
+        // (brace-less items like `mod tests;` / `use` re-exports).
+        let mut j = search;
+        let mut depth = 0usize;
+        let mut end = bytes.len();
+        while j < bytes.len() {
+            match bytes[j] {
+                b';' if depth == 0 => {
+                    end = j;
+                    break;
+                }
+                b'{' => depth += 1,
+                b'}' => {
+                    // depth 0: a stray close brace (the attribute sat at
+                    // the end of an enclosing block) — stop conservatively.
+                    if depth <= 1 {
+                        end = j;
+                        break;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let (a, b) = (line_of[attr_at], line_of[end.min(bytes.len())]);
+        for m in mask.iter_mut().take(b + 1).skip(a) {
+            *m = true;
+        }
+        search = end.min(bytes.len());
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Waivers: `// repo-lint: allow(<rule>) — <reason>` (reason mandatory).
+// ---------------------------------------------------------------------------
+
+/// Waivers harvested from RAW text (they live in comments, which the
+/// scrubber blanks). Entry: (0-based line, rule). A waiver covers its own
+/// line and the next line.
+fn waivers(raw: &str) -> (Vec<(usize, String)>, Vec<String>) {
+    let mut ws = Vec::new();
+    let mut errs = Vec::new();
+    for (ln, line) in raw.lines().enumerate() {
+        let Some(at) = line.find("repo-lint: allow(") else { continue };
+        let rest = &line[at + "repo-lint: allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            errs.push(format!("{}: malformed waiver (missing `)`)", ln + 1));
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let reason = rest[close + 1..]
+            .trim_start_matches([' ', '\t', '-', '—', ':', '–'])
+            .trim();
+        if reason.len() < 8 {
+            errs.push(format!("{}: waiver for `{rule}` has no reason", ln + 1));
+            continue;
+        }
+        ws.push((ln, rule));
+    }
+    (ws, errs)
+}
+
+fn waived(ws: &[(usize, String)], line: usize, rule: &str) -> bool {
+    ws.iter().any(|(l, r)| r == rule && (*l == line || l + 1 == line))
+}
+
+// ---------------------------------------------------------------------------
+// Rules.
+// ---------------------------------------------------------------------------
+
+fn in_serving(rel: &str) -> bool {
+    ["rust/src/server", "rust/src/gateway", "rust/src/scheduler", "rust/src/engine"]
+        .iter()
+        .any(|p| rel.starts_with(p))
+}
+
+fn in_no_index_scope(rel: &str) -> bool {
+    // engine is exempt from the indexing rule only (see module docs).
+    ["rust/src/server", "rust/src/gateway", "rust/src/scheduler"]
+        .iter()
+        .any(|p| rel.starts_with(p))
+}
+
+fn in_sleep_scope(rel: &str) -> bool {
+    in_serving(rel) || rel.starts_with("rust/src/util/threadpool")
+}
+
+fn analyze(rel: &str, raw: &str) -> Vec<String> {
+    let scrubbed = scrub(raw);
+    let mask = test_mask(&scrubbed);
+    let (ws, werrs) = waivers(raw);
+    let mut out: Vec<String> =
+        werrs.into_iter().map(|e| format!("{rel}:{e}")).collect();
+    let sync_exempt = rel.starts_with("rust/src/sync");
+
+    for (ln, line) in scrubbed.lines().enumerate() {
+        if mask.get(ln).copied().unwrap_or(false) {
+            continue;
+        }
+        let report = |out: &mut Vec<String>, rule: &str, msg: &str| {
+            out.push(format!("{rel}:{}: [{rule}] {msg}", ln + 1));
+        };
+        if in_serving(rel) && !waived(&ws, ln, "no-panic") {
+            for pat in [".unwrap(", ".expect(", "panic!", "todo!", "unimplemented!"] {
+                if line.contains(pat) {
+                    report(
+                        &mut out,
+                        "no-panic",
+                        &format!("`{pat}` on the serving path (propagate a typed error)"),
+                    );
+                }
+            }
+        }
+        if in_no_index_scope(rel) && !waived(&ws, ln, "no-index") {
+            if let Some(col) = find_indexing(line) {
+                report(
+                    &mut out,
+                    "no-index",
+                    &format!("indexing at col {} can panic (use `.get(..)`)", col + 1),
+                );
+            }
+        }
+        if rel.starts_with("rust/src") && !sync_exempt && !waived(&ws, ln, "sync-shim") {
+            for pat in ["std::sync", "std::thread"] {
+                if line.contains(pat) {
+                    report(
+                        &mut out,
+                        "sync-shim",
+                        &format!("direct `{pat}` (import via `crate::sync` so loom can swap it)"),
+                    );
+                }
+            }
+        }
+        if in_sleep_scope(rel) && line.contains("sleep(") && !waived(&ws, ln, "sleep-poll") {
+            report(
+                &mut out,
+                "sleep-poll",
+                "sleep on the serving path (park on a channel/condvar instead)",
+            );
+        }
+    }
+    out
+}
+
+/// Column of the first panicking `expr[...]` on a scrubbed line, if any.
+/// A `[` counts when directly preceded by an identifier char, `)` or `]`
+/// — which excludes attributes (`#[`), macros (`vec![`), slice types
+/// (`[f32; 4]`) and slice literals (`&[..]`).
+fn find_indexing(line: &str) -> Option<usize> {
+    let b = line.as_bytes();
+    for i in 1..b.len() {
+        if b[i] == b'[' {
+            let p = b[i - 1];
+            if p.is_ascii_alphanumeric() || p == b'_' || p == b')' || p == b']' {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// op-coverage: dispatched ops must be documented and tested.
+// ---------------------------------------------------------------------------
+
+fn op_coverage(root: &Path) -> Vec<String> {
+    let server_path = root.join("rust/src/server/mod.rs");
+    let raw = match fs::read_to_string(&server_path) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("rust/src/server/mod.rs:0: [op-coverage] unreadable: {e}")],
+    };
+    let ops = extract_ops(&raw);
+    if ops.is_empty() {
+        return vec![
+            "rust/src/server/mod.rs:0: [op-coverage] no `match op.as_str()` dispatch found"
+                .to_string(),
+        ];
+    }
+    let protocol = fs::read_to_string(root.join("docs/PROTOCOL.md")).unwrap_or_default();
+    let mut tests_blob = String::new();
+    for p in rs_files(&root.join("rust/tests")) {
+        tests_blob.push_str(&fs::read_to_string(&p).unwrap_or_default());
+    }
+    // Test-gated regions of src files count as test coverage too.
+    for p in rs_files(&root.join("rust/src")) {
+        let Ok(text) = fs::read_to_string(&p) else { continue };
+        let scrubbed_mask = test_mask(&scrub(&text));
+        for (ln, line) in text.lines().enumerate() {
+            if scrubbed_mask.get(ln).copied().unwrap_or(false) {
+                tests_blob.push_str(line);
+                tests_blob.push('\n');
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for op in ops {
+        let documented = protocol.contains(&format!("\"op\": \"{op}\""))
+            || protocol.contains(&format!("\"op\":\"{op}\""));
+        if !documented {
+            out.push(format!(
+                "docs/PROTOCOL.md:0: [op-coverage] op \"{op}\" is dispatched but not specified"
+            ));
+        }
+        if !tests_blob.contains(&format!("\"{op}\"")) {
+            out.push(format!(
+                "rust/tests:0: [op-coverage] op \"{op}\" has no test exercising it"
+            ));
+        }
+    }
+    out
+}
+
+/// String literals used as arms of the server's `match op.as_str()`.
+fn extract_ops(raw: &str) -> Vec<String> {
+    let scrubbed = scrub(raw);
+    let Some(at) = scrubbed.find("match op.as_str()") else { return Vec::new() };
+    let bytes = scrubbed.as_bytes();
+    let Some(open_rel) = scrubbed[at..].find('{') else { return Vec::new() };
+    let open = at + open_rel;
+    let mut depth = 0usize;
+    let mut close = bytes.len();
+    for (j, &c) in bytes.iter().enumerate().skip(open) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = j;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    // Literals live in the RAW text (the scrubber blanks them).
+    let region = &raw[open..close.min(raw.len())];
+    let rb = region.as_bytes();
+    let mut ops = Vec::new();
+    let mut i = 0usize;
+    while i < rb.len() {
+        if rb[i] == b'"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < rb.len() && rb[j] != b'"' {
+                if rb[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let lit = String::from_utf8_lossy(&rb[start..j.min(rb.len())]).into_owned();
+            let mut k = j + 1;
+            while k < rb.len() && (rb[k] == b' ' || rb[k] == b'\n') {
+                k += 1;
+            }
+            if k + 1 < rb.len() && rb[k] == b'=' && rb[k + 1] == b'>' && !lit.is_empty() {
+                ops.push(lit);
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    ops.sort();
+    ops.dedup();
+    ops
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_strings_and_comments() {
+        let s = scrub("let x = \"panic!\"; // .unwrap()\nlet y = 1;");
+        assert!(!s.contains("panic!"));
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("let y = 1;"));
+        assert_eq!(s.lines().count(), 2, "newlines preserved");
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_chars_and_lifetimes() {
+        let s = scrub("let r = r#\"a \" panic! \"#; let c = '\\''; let l: &'static str;");
+        assert!(!s.contains("panic!"));
+        assert!(s.contains("&'static str"), "lifetime survives: {s}");
+        let s2 = scrub("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(s2.contains("fn f<'a>"));
+        assert!(!s2.contains("'x'"));
+    }
+
+    #[test]
+    fn scrub_handles_nested_block_comments() {
+        let s = scrub("/* outer /* inner .unwrap() */ still */ code()");
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("code()"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let mask = test_mask(&scrub(src));
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn inner_test_attr_masks_whole_file() {
+        let src = "#![cfg(all(loom, test))]\nfn anything() { x.unwrap(); }\n";
+        let mask = test_mask(&scrub(src));
+        assert!(mask.iter().all(|&m| m));
+    }
+
+    #[test]
+    fn no_panic_flags_unwrap_but_not_unwrap_or() {
+        let bad = analyze("rust/src/gateway/mod.rs", "fn f() { x.unwrap(); }\n");
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("no-panic"));
+        let ok = analyze("rust/src/gateway/mod.rs", "fn f() { x.unwrap_or_else(|| 0); }\n");
+        assert!(ok.is_empty(), "{ok:?}");
+        // Outside the serving modules the rule does not apply.
+        let elsewhere = analyze("rust/src/util/json.rs", "fn f() { x.unwrap(); }\n");
+        assert!(elsewhere.iter().all(|v| !v.contains("no-panic")), "{elsewhere:?}");
+    }
+
+    #[test]
+    fn no_index_flags_slicing_not_attributes_or_macros() {
+        let bad = analyze("rust/src/server/mod.rs", "fn f() { let y = xs[0]; }\n");
+        assert!(bad.iter().any(|v| v.contains("no-index")), "{bad:?}");
+        let ok = analyze(
+            "rust/src/server/mod.rs",
+            "#[derive(Debug)]\nfn f() { let v = vec![1]; let t: [u8; 2] = [0, 0]; }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // engine is exempt from no-index (tensor math), not from no-panic.
+        let engine = analyze("rust/src/engine/mod.rs", "fn f() { let y = xs[0]; }\n");
+        assert!(engine.is_empty(), "{engine:?}");
+    }
+
+    #[test]
+    fn sync_shim_flags_direct_std_sync_outside_shim() {
+        let bad = analyze("rust/src/gateway/mod.rs", "use std::sync::Arc;\n");
+        assert!(bad.iter().any(|v| v.contains("sync-shim")), "{bad:?}");
+        let shim = analyze("rust/src/sync/mod.rs", "pub use std::sync::Arc;\n");
+        assert!(shim.is_empty(), "{shim:?}");
+    }
+
+    #[test]
+    fn sleep_poll_respects_waiver_with_reason() {
+        let bad = analyze("rust/src/server/mod.rs", "fn f() { thread::sleep(d); }\n");
+        assert!(bad.iter().any(|v| v.contains("sleep-poll")), "{bad:?}");
+        let ok = analyze(
+            "rust/src/server/mod.rs",
+            "// repo-lint: allow(sleep-poll) — remote socket backoff, nothing to park on.\nfn f() { thread::sleep(d); }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn waiver_without_reason_is_itself_a_violation() {
+        let out = analyze(
+            "rust/src/server/mod.rs",
+            "// repo-lint: allow(sleep-poll)\nfn f() { thread::sleep(d); }\n",
+        );
+        assert!(out.iter().any(|v| v.contains("no reason")), "{out:?}");
+        assert!(out.iter().any(|v| v.contains("sleep-poll")), "{out:?}");
+    }
+
+    #[test]
+    fn extract_ops_reads_match_arms() {
+        let src = r#"
+            fn dispatch(op: String) {
+                let resp = match op.as_str() {
+                    "stats" => stats(),
+                    "drain" => match x { _ => y },
+                    _ => err(),
+                };
+            }
+        "#;
+        assert_eq!(extract_ops(src), vec!["drain".to_string(), "stats".to_string()]);
+    }
+
+    #[test]
+    fn test_gated_code_is_skipped_by_rules() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let out = analyze("rust/src/gateway/mod.rs", src);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}
