@@ -1,0 +1,298 @@
+//! Paged KV blocks — contiguous vs block-table A/B.
+//!
+//! Part 1 (ledger micro): replay one deterministic alloc / 4-token-commit
+//! extend / free lifecycle trace against the legacy contiguous
+//! `cache::SlotPool` and the paged `kvblocks::BlockPool`, asserting the
+//! two ledgers stay row-for-row identical, and report ops/s — the pure
+//! bookkeeping overhead of paging.
+//!
+//! Part 2 (serving): a `workload::long_context` trace (few very long
+//! shared-document prompts, each chased by short bursty requests) served
+//! twice through the scheduler: "roomy" (default budget = the whole page
+//! grid) vs "paged-tight" (budget barely above the largest request's
+//! worst case + 32-token chunked prefill), forcing continuous prefill
+//! interleaving and scheduler preemption. Greedy output must be
+//! token-identical between the passes (preemption and chunking change
+//! latency, never tokens) and both passes must finish with zero
+//! host-side restore copies (warm prefix hits adopt pages in place).
+//!
+//! Appends per-pass rows to `rust/bench_results/BENCH_kv_blocks.json`;
+//! CI runs it in quick mode (`HYDRA_BENCH_QUICK=1`).
+
+use std::collections::HashMap;
+
+use hydra_serve::bench::{fmt1, fmt2, save_result, BenchCtx, Table};
+use hydra_serve::cache::SlotPool;
+use hydra_serve::engine::{Engine, EngineConfig};
+use hydra_serve::kvblocks::{pages_for, BlockPool};
+use hydra_serve::scheduler::Scheduler;
+use hydra_serve::util::json::Json;
+use hydra_serve::workload;
+
+const POOL_ROWS: usize = 32;
+const POOL_SEQ_MAX: usize = 384;
+/// Live rows held concurrently by the micro trace (free-list churn).
+const WORKING_SET: usize = 8;
+
+/// One ledger lifecycle: allocate at `prompt` tokens, commit to `target`
+/// in 4-token steps, free the oldest row once the working set is full.
+struct Lifecycle {
+    prompt: usize,
+    target: usize,
+}
+
+fn micro_trace(n: usize) -> Vec<Lifecycle> {
+    let mut lcg: u64 = 0x9e37_79b9_7f4a_7c15;
+    (0..n)
+        .map(|_| {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let prompt = 17 + ((lcg >> 33) as usize % 150);
+            Lifecycle { prompt, target: (prompt + 64).min(POOL_SEQ_MAX) }
+        })
+        .collect()
+}
+
+/// Replay the trace against the contiguous pool; returns (ops, rows used).
+fn run_contig(trace: &[Lifecycle]) -> anyhow::Result<(u64, Vec<usize>)> {
+    let mut pool = SlotPool::new(POOL_ROWS, POOL_SEQ_MAX);
+    let mut live: Vec<usize> = Vec::new();
+    let mut rows = Vec::with_capacity(trace.len());
+    let mut ops = 0u64;
+    for lc in trace {
+        if live.len() == WORKING_SET {
+            pool.free(live.remove(0))?;
+            ops += 1;
+        }
+        let row = pool.alloc(lc.prompt)?;
+        ops += 1;
+        let mut len = lc.prompt;
+        while len < lc.target {
+            let n = 4.min(lc.target - len);
+            len = pool.extend(row, n)?;
+            ops += 1;
+        }
+        live.push(row);
+        rows.push(row);
+    }
+    for row in live {
+        pool.free(row)?;
+        ops += 1;
+    }
+    Ok((ops, rows))
+}
+
+/// Replay the same trace against the paged pool (cold path: least-claimed
+/// free row + `alloc_at`, zero adopted pages).
+fn run_paged(trace: &[Lifecycle]) -> anyhow::Result<(u64, Vec<usize>)> {
+    let mut pool = BlockPool::new(POOL_ROWS, POOL_SEQ_MAX);
+    let mut live: Vec<usize> = Vec::new();
+    let mut rows = Vec::with_capacity(trace.len());
+    let mut ops = 0u64;
+    for lc in trace {
+        if live.len() == WORKING_SET {
+            pool.free(live.remove(0))?;
+            ops += 1;
+        }
+        let row = pool
+            .free_row_least_claimed()
+            .ok_or_else(|| anyhow::anyhow!("paged pool out of rows"))?;
+        pool.alloc_at(row, lc.prompt, 0)?;
+        ops += 1;
+        let mut len = lc.prompt;
+        while len < lc.target {
+            let n = 4.min(lc.target - len);
+            len = pool.extend(row, n)?;
+            ops += 1;
+        }
+        live.push(row);
+        rows.push(row);
+    }
+    for row in live {
+        pool.free(row)?;
+        ops += 1;
+    }
+    Ok((ops, rows))
+}
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::open()?;
+    let mut results = Vec::new();
+
+    // -- Part 1: ledger micro A/B -------------------------------------------
+    let lifecycles = if ctx.quick { 5_000 } else { 50_000 };
+    let trace = micro_trace(lifecycles);
+    let mut micro = Table::new(
+        "KV ledger — contiguous vs paged bookkeeping",
+        &["pool", "lifecycles", "ops", "Mops/s"],
+    );
+    let mut rows_seen: Option<Vec<usize>> = None;
+    for (name, run) in [
+        ("contiguous", run_contig as fn(&[Lifecycle]) -> anyhow::Result<(u64, Vec<usize>)>),
+        ("paged", run_paged),
+    ] {
+        let t0 = std::time::Instant::now();
+        let (ops, rows) = run(&trace)?;
+        let dt = t0.elapsed().as_secs_f64();
+        // Row placement must agree: both pools scan for the first free
+        // row on this claim-free trace, so paging changes bookkeeping
+        // cost, never layout decisions.
+        match &rows_seen {
+            None => rows_seen = Some(rows),
+            Some(prev) => assert_eq!(prev, &rows, "pools diverged on row placement"),
+        }
+        let mops = ops as f64 / dt / 1e6;
+        micro.row(vec![
+            name.to_string(),
+            lifecycles.to_string(),
+            ops.to_string(),
+            fmt2(mops),
+        ]);
+        results.push(Json::obj(vec![
+            ("section", Json::str("ledger")),
+            ("pool", Json::str(name)),
+            ("lifecycles", Json::num(lifecycles as f64)),
+            ("ops", Json::num(ops as f64)),
+            ("mops_per_s", Json::num(mops)),
+        ]));
+    }
+    micro.print();
+
+    // -- Part 2: serving A/B over a long-context trace ----------------------
+    let size = "s".to_string();
+    let variant = ["hydra_pp", "hydra", "medusa"]
+        .into_iter()
+        .find(|v| ctx.has_variant(&size, v))
+        .unwrap_or("ar")
+        .to_string();
+    let batch = ctx.rt.manifest.batch_buckets[&size]
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(1);
+    let tree = if variant == "ar" {
+        hydra_serve::tree::TreeTopology::ar()
+    } else {
+        hydra_serve::draft::tuned_tree(&ctx.rt.manifest, &size, &variant, batch)?
+    };
+
+    let gen_short = 12;
+    let gen_long = 32;
+    let longs = ctx.scale(4);
+    let shorts = 3;
+    let limit = ctx.rt.manifest.seq_max / 2;
+    let params = workload::default_params(&ctx.tok, gen_short);
+    // Longest document that still fits the prompt limit.
+    let doc_repeats = (1..=6)
+        .rev()
+        .find(|&dr| {
+            workload::long_context(&ctx.tok, &params, longs, dr, shorts, 7, 0)
+                .iter()
+                .all(|r| r.prompt_ids.len() <= limit)
+        })
+        .unwrap_or(1);
+    let mut reqs = workload::long_context(&ctx.tok, &params, longs, doc_repeats, shorts, 7, 0);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        // The long prompts also generate long, so they stay in flight
+        // while their chasers churn — that overlap is what the tight
+        // pass's preemption feeds on.
+        if i % (1 + shorts) == 0 {
+            r.params.max_new = gen_long;
+        }
+    }
+    let n_reqs = reqs.len();
+    let worst = reqs
+        .iter()
+        .map(|r| pages_for(r.prompt_ids.len() + r.params.max_new))
+        .max()
+        .unwrap_or(1);
+    // Tight: the largest request fits alone (plus a sliver for chasers);
+    // two longs cannot coexist, so the head long forces a preemption.
+    let tight_budget = worst + 4;
+
+    let mut table = Table::new(
+        &format!(
+            "Paged KV serving — roomy vs tight budget ({size}/{variant} b{batch}, \
+             {longs} longs x{doc_repeats} doc reps, budget {tight_budget}p)"
+        ),
+        &["pass", "reqs", "tok/s", "preempt", "cow", "util%", "frag%"],
+    );
+    let mut outs: Vec<HashMap<u64, Vec<u32>>> = Vec::new();
+    for (pi, pass) in ["roomy", "tight"].iter().enumerate() {
+        let mut engine = Engine::new(
+            &ctx.rt,
+            EngineConfig {
+                size: size.clone(),
+                variant: variant.clone(),
+                tree: tree.clone(),
+                batch,
+                seed: 1234,
+            },
+        )?;
+        engine.enable_prefix_cache(64 << 20);
+        if pi == 1 {
+            engine.set_page_budget(tight_budget);
+            engine.set_prefill_chunk_tokens(32);
+        }
+        let mut sched = Scheduler::default();
+        sched.submit_all(reqs.clone());
+        let t0 = std::time::Instant::now();
+        let mut tokens = 0usize;
+        let mut outputs = Vec::new();
+        while sched.has_work(&engine) {
+            if let Some(st) = sched.tick(&mut engine)? {
+                tokens += st.tokens_committed;
+            }
+            outputs.extend(engine.take_outputs());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(outputs.len(), n_reqs, "{pass}: all requests must complete");
+
+        let kv = engine.kv_pool_stats();
+        assert_eq!(
+            kv.restore_copies, 0,
+            "{pass}: warm hits must adopt pages in place, never memcpy"
+        );
+        if pi == 1 && batch >= 2 {
+            assert!(
+                sched.stats.preemptions >= 1,
+                "tight pass must preempt at least once (budget {tight_budget}p, batch {batch})"
+            );
+        }
+        let tps = tokens as f64 / dt;
+        table.row(vec![
+            pass.to_string(),
+            n_reqs.to_string(),
+            fmt1(tps),
+            sched.stats.preemptions.to_string(),
+            kv.cow_shares.to_string(),
+            fmt1(kv.utilization * 100.0),
+            fmt1(kv.fragmentation_pct),
+        ]);
+        results.push(Json::obj(vec![
+            ("section", Json::str("serving")),
+            ("pass", Json::str(*pass)),
+            ("variant", Json::str(variant.clone())),
+            ("batch", Json::num(batch as f64)),
+            ("requests", Json::num(n_reqs as f64)),
+            ("page_budget", Json::num(kv.page_budget as f64)),
+            ("throughput", Json::num(tps)),
+            ("preemptions", Json::num(sched.stats.preemptions as f64)),
+            ("cow_shares", Json::num(kv.cow_shares as f64)),
+            ("restore_copies", Json::num(kv.restore_copies as f64)),
+            ("fragmentation_pct", Json::num(kv.fragmentation_pct)),
+            ("utilization", Json::num(kv.utilization)),
+        ]));
+        outs.push(outputs.into_iter().map(|o| (o.req_id, o.generated)).collect());
+    }
+    for (id, toks) in &outs[0] {
+        assert_eq!(
+            Some(toks),
+            outs[1].get(id),
+            "request {id}: tight-budget output must be token-identical to roomy"
+        );
+    }
+    println!("\ntoken identity: {n_reqs}/{n_reqs} requests identical across budgets");
+    table.print();
+    save_result("kv_blocks", Json::Arr(results))?;
+    Ok(())
+}

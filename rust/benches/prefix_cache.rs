@@ -4,8 +4,9 @@
 //! common system preamble (`workload::shared_prefix`), served through the
 //! continuous-batching scheduler. Pass 1 runs against a cold cache — every
 //! admission prefills, and completed prefixes are published. Pass 2
-//! resubmits the same workload warm: admissions hit the radix tree, KV
-//! rows restore by copy, and the `prefill_*` call count collapses.
+//! resubmits the same workload warm: admissions hit the radix tree, the
+//! cached pages are adopted in place (claim refcount bumps — zero
+//! host-side copies), and the `prefill_*` call count collapses.
 //!
 //! Reported per pass: decode throughput, prefill-call count, cache
 //! hit/miss/reuse counters. The warm pass must show strictly fewer

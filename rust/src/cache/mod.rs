@@ -1,12 +1,18 @@
-//! KV-cache slot manager.
+//! KV-cache slot manager (legacy contiguous layout).
 //!
 //! The AOT artifacts operate on a batched cache tensor [B, L, 2, S, KVD];
-//! a "slot" is one batch row. The engine owns a `SlotPool` as the single
-//! source of truth for slot occupancy and committed lengths (allocated at
-//! admission, extended at commit, freed at retirement — `engine::Slot`
-//! keeps no shadow length), and it enforces the invariants the engine
-//! relies on (a slot's rows beyond `len` are never attended to — verified
-//! at the kernel level by test_tree_attention_ignores_stale_cache_rows).
+//! a "slot" is one batch row. `SlotPool` is the original contiguous
+//! per-row ledger (allocated at admission, extended at commit, freed at
+//! retirement), and it enforces the invariants the engine relies on (a
+//! slot's rows beyond `len` are never attended to — verified at the
+//! kernel level by test_tree_attention_ignores_stale_cache_rows).
+//!
+//! **Superseded on the serving path** by [`crate::kvblocks::BlockPool`],
+//! which adds fixed-size paging, per-page prefix-cache claim refcounts, a
+//! page budget, and preemption counters on the same row-ledger semantics.
+//! `SlotPool` is kept as the contiguous baseline for A/B benches
+//! (`benches/kv_blocks.rs`) and as the minimal reference for the ledger
+//! invariants.
 
 use anyhow::{bail, Result};
 

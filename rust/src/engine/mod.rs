@@ -39,7 +39,7 @@ pub use seq::{FinishReason, Request, SamplingParams, SeqEvent, SeqOutput, Slot};
 pub use crate::adaptive::SpeculationMode;
 
 use crate::adaptive::{Adaptive, AdaptiveConfig, AdaptiveSnapshot, TreeLadder};
-use crate::cache::SlotPool;
+use crate::kvblocks::{pages_for, BlockPool, PoolStats, BLOCK_TOKENS};
 use crate::model::{Manifest, ModelDims};
 use crate::prefixcache::{CacheStats, EndSnapshot, PrefixCache, RestoredPrefix};
 use crate::runtime::{HostTensor, Runtime, WeightSet};
@@ -48,9 +48,18 @@ use crate::util::rng::Pcg32;
 use crate::util::stats::top_k_indices;
 
 /// Longest prompt tail (in tokens) a partial prefix-cache hit will extend
-/// through the chain-mode verify/commit path before falling back to a
-/// full prefill.
+/// through the chain-mode verify/commit path *at admission*; longer tails
+/// become pending prefill chunks drained across decode steps (continuous
+/// chunked prefill) instead of degrading the hit to a miss.
 pub const CHAIN_TAIL_MAX: usize = 32;
+
+/// Default per-step token budget for continuous chunked prefill: prompts
+/// (and long partial-hit tails) longer than this prefill in chunks of at
+/// most this many tokens, interleaved with decode steps, so one long
+/// prompt never monopolizes an engine step. `enable_adaptive` replaces it
+/// with the throttle's `step_token_budget`;
+/// [`Engine::set_prefill_chunk_tokens`] overrides it directly.
+pub const DEFAULT_PREFILL_CHUNK: usize = 256;
 
 /// Error constructor for an engine-state field the active draft variant
 /// guarantees at construction (`pkv` under Hydra++, `ekv` under EAGLE,
@@ -162,13 +171,17 @@ pub struct Engine<'rt> {
     head_w: Option<Rc<WeightSet>>,
     /// Per-sequence slot state, one entry per batch row.
     pub slots: Vec<Slot>,
-    /// Slot occupancy/length ledger — the single source of truth for how
-    /// many KV rows of each batch row are committed (`seq.rs::Slot` holds
-    /// no shadow length).
-    pool: SlotPool,
+    /// Paged KV allocator — the single source of truth for KV memory: row
+    /// occupancy, committed lengths, per-page prefix-cache claims and the
+    /// page budget (`seq.rs::Slot` holds no shadow length).
+    pool: BlockPool,
     /// Prefix-reuse KV cache (`enable_prefix_cache`): committed prefixes
-    /// published on prefill/retirement, restored by copy at admission.
+    /// published on prefill/retirement as in-place page claims, adopted
+    /// (zero-copy) by admission.
     pcache: Option<PrefixCache>,
+    /// Continuous-chunked-prefill token budget per step (see
+    /// [`DEFAULT_PREFILL_CHUNK`]).
+    chunk_budget: usize,
     kv: HostTensor,
     /// Prefix-attention layer cache (Hydra++) [B, 2, S, KVD].
     pkv: Option<HostTensor>,
@@ -309,8 +322,9 @@ impl<'rt> Engine<'rt> {
             base_w,
             head_w,
             slots: (0..b).map(|_| Slot::vacant()).collect(),
-            pool: SlotPool::new(b, s),
+            pool: BlockPool::new(b, s),
             pcache: None,
+            chunk_budget: DEFAULT_PREFILL_CHUNK,
             kv,
             pkv,
             ekv,
@@ -368,6 +382,10 @@ impl<'rt> Engine<'rt> {
         if cfg.step_token_budget == 0 {
             cfg.step_token_budget = self.default_spec_budget();
         }
+        // Continuous chunked prefill reuses the throttle's per-step token
+        // budget: one step's prompt chunks fit the same accounting as its
+        // verification load (a disabled throttle also disables chunking).
+        self.chunk_budget = cfg.step_token_budget;
         let ladder = TreeLadder::from_tree(&self.cfg.tree, &cfg.rung_sizes);
         // Ancestor masks per (rung, bucket): an adaptive step runs the
         // smallest AOT tree bucket that holds the largest selected tree,
@@ -458,10 +476,12 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Turn on the prefix-reuse KV cache with the given byte budget.
-    /// Committed prefixes are published after cold prefills and at
-    /// sequence retirement; admission performs longest-prefix lookup and
-    /// restores hits by copy (skipping `prefill_*` when every new row is
-    /// a full-prompt hit). Per-request opt-out: `SamplingParams::prefix_cache`.
+    /// Committed prefixes are published after cold prefills, at sequence
+    /// retirement, and on preemption — as in-place page claims on the KV
+    /// pool, never slab copies; admission performs longest-prefix lookup
+    /// and *adopts* hits zero-copy (skipping `prefill_*` when every new
+    /// row is a full-prompt hit). Per-request opt-out:
+    /// `SamplingParams::prefix_cache`.
     pub fn enable_prefix_cache(&mut self, byte_budget: usize) {
         let extra = self.pkv.is_some() || self.ekv.is_some();
         self.pcache = Some(PrefixCache::new(
@@ -475,6 +495,129 @@ impl<'rt> Engine<'rt> {
     /// Prefix-cache counters (None when the cache is off).
     pub fn prefix_cache_stats(&self) -> Option<CacheStats> {
         self.pcache.as_ref().map(|pc| pc.stats())
+    }
+
+    /// KV-pool health counters (page occupancy, claims, budget headroom,
+    /// CoW shares, fragmentation, preemptions, restore copies) — surfaced
+    /// through `{"op":"stats"}`.
+    pub fn kv_pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Cap the pool's page budget (admission-pressure testing/benching);
+    /// see [`crate::kvblocks::BlockPool::set_page_budget`].
+    pub fn set_page_budget(&mut self, pages: usize) {
+        self.pool.set_page_budget(pages);
+    }
+
+    /// Override the continuous-chunked-prefill per-step token budget
+    /// (defaults to [`DEFAULT_PREFILL_CHUNK`]; `enable_adaptive` replaces
+    /// it with the throttle's `step_token_budget`).
+    pub fn set_prefill_chunk_tokens(&mut self, tokens: usize) {
+        self.chunk_budget = tokens.max(1);
+    }
+
+    /// How many of the given queued requests (in order) the pool can admit
+    /// right now: one free row per request plus page-budget headroom for
+    /// each request's worst-case footprint (full prompt + its whole
+    /// `max_new` generation budget), after reserving the pages every
+    /// in-flight sequence may still grow into. Reserving the full worst
+    /// case is what makes a tight budget *safe* rather than merely
+    /// throttled: an admitted sequence can always fund its next page, so
+    /// decode never hits the `CacheFull` backstop and output stays
+    /// token-identical to an uncontended run. Conservative — an adopted
+    /// prefix's pages are counted as if cold, and a sequence that stops
+    /// early returns its unused reservation at retirement. The scheduler
+    /// preempts when this is 0 while vacancies and queued work both
+    /// exist.
+    pub fn admit_capacity(&self, reqs: &[Request]) -> usize {
+        let mut rows = self.pool.free_count();
+        // Pages the in-flight sequences may still claim: their pending
+        // prefill chunks plus their remaining generation budgets.
+        let reserved: usize = (0..self.slots.len())
+            .filter(|&i| self.slots[i].active && !self.slots[i].done)
+            .map(|i| {
+                let sl = &self.slots[i];
+                let cur = self.pool.slot_len(i).unwrap_or(sl.tokens.len());
+                let worst = cur
+                    + sl.pending_prefill.len()
+                    + sl.params.max_new.saturating_sub(sl.generated);
+                pages_for(worst).saturating_sub(pages_for(cur))
+            })
+            .sum();
+        let mut pages = self.pool.budget_headroom_pages().saturating_sub(reserved);
+        let mut n = 0;
+        for r in reqs {
+            let need = pages_for(r.prompt_ids.len() + r.params.max_new.max(1));
+            if rows == 0 || need > pages {
+                break;
+            }
+            rows -= 1;
+            pages -= need;
+            n += 1;
+        }
+        n
+    }
+
+    /// Could `req` ever be admitted, even on an idle pool? `false` means
+    /// its worst-case footprint (full prompt plus the whole `max_new`
+    /// generation budget) exceeds the page budget outright, so no amount
+    /// of waiting or preemption can fund it — the scheduler rejects it
+    /// with an error instead of stalling the queue forever.
+    pub fn can_ever_admit(&self, req: &Request) -> bool {
+        pages_for(req.prompt_ids.len() + req.params.max_new.max(1)) <= self.pool.page_budget()
+    }
+
+    /// Preempt one in-flight sequence to relieve KV-pool pressure: publish
+    /// its committed prefix into the prefix cache (in-place page claims —
+    /// the resume is a warm zero-copy adoption), drop its pin, free its
+    /// row, and return the reconstructed request for the scheduler to
+    /// requeue. The victim is the youngest non-streaming sequence
+    /// (streaming sessions only when nothing else qualifies — a preempted
+    /// stream re-emits its deltas from scratch on resume). Under greedy
+    /// acceptance the resumed output is token-identical to the
+    /// uninterrupted run. None when no slot is preemptible.
+    ///
+    /// The *last* active sequence is never preemptible: evicting it would
+    /// discard its progress (resume recomputes from the prompt) to admit
+    /// the queue head, which the next refill would then preempt right
+    /// back — an admission/preemption ping-pong with zero forward
+    /// progress. Leaving it running instead guarantees the pool drains:
+    /// the head admits when the survivor retires.
+    pub fn preempt_one(&mut self) -> Option<Request> {
+        if self.active_count() <= 1 {
+            return None;
+        }
+        let victim = (0..self.slots.len())
+            .filter(|&i| self.slots[i].active && !self.slots[i].done)
+            .min_by_key(|&i| {
+                let sl = &self.slots[i];
+                (sl.params.stream, std::cmp::Reverse(sl.enqueue_at))
+            })?;
+        // Publish first (the row's pages become cache claims), then
+        // release. The publish is a no-op for opted-out requests — their
+        // resume re-prefills cold, still correct.
+        self.publish_slot_prefix(victim);
+        if let Some(node) = self.slots[victim].prefix_node.take() {
+            if let Some(pc) = self.pcache.as_mut() {
+                pc.unpin(node);
+            }
+        }
+        // Drop the row's share of any deferred fused commit — the resumed
+        // run recomputes it (when the cache is on, the publish above
+        // already materialized this row's share).
+        if let Some(p) = &mut self.pending {
+            p.accept_len.i32s_mut()[victim] = 0;
+        }
+        self.pool.free(victim).ok()?;
+        self.pool.note_preemption();
+        let slot = std::mem::replace(&mut self.slots[victim], Slot::vacant());
+        // Reconstruct the original prompt: committed prompt tokens plus
+        // whatever was still pending chunked prefill.
+        let cut = slot.prompt_len.min(slot.tokens.len());
+        let mut prompt = slot.tokens[..cut].to_vec();
+        prompt.extend_from_slice(&slot.pending_prefill);
+        Some(Request { id: slot.req_id, prompt_ids: prompt, params: slot.params })
     }
 
     // ---------------------------------------------------------------------
@@ -506,44 +649,80 @@ impl<'rt> Engine<'rt> {
             }
         }
 
-        // Longest-prefix lookup per request (when the cache is on and the
-        // request didn't opt out), then slot allocation through the pool —
-        // the single source of truth for slot occupancy and lengths.
-        // EAGLE's per-step draft extension needs the parent hidden at the
-        // restore boundary, which only full-hit snapshots carry, so its
-        // partial hits are treated as misses (max_tail = 0).
-        let max_tail = if matches!(self.arch, DraftArch::Eagle) { 0 } else { CHAIN_TAIL_MAX };
+        // Longest-prefix adoption per request (when the cache is on and
+        // the request didn't opt out), then row allocation through the
+        // pool — the single source of truth for row occupancy and lengths.
+        // A hit ADOPTS the cached pages where they already sit (claim
+        // refcount bumps; zero host-side KV copies — the pool's
+        // `restore_copies` counter stays 0 by construction and the
+        // warm-hit e2e asserts it); `adopt` pins the boundary node and
+        // guarantees full textual matches carry an end snapshot (backing
+        // off one token otherwise). EAGLE's per-step draft extension needs
+        // the parent hidden at the restore boundary, which only full-hit
+        // snapshots carry, so its partial hits are treated as misses
+        // (max_tail = 0); other arches accept any tail length — long
+        // tails prefill in chunks instead of degrading to a miss.
+        let max_tail = if matches!(self.arch, DraftArch::Eagle) { 0 } else { usize::MAX };
+        // chain_extend cannot maintain the EAGLE draft-layer cache, so
+        // EAGLE prompts always prefill whole; everyone else prefills at
+        // most one chunk at admission and queues the rest.
+        let chunk_cap = if matches!(self.arch, DraftArch::Eagle) {
+            usize::MAX
+        } else {
+            self.chunk_budget.max(1)
+        };
         struct Plan {
             slot: usize,
             hit: Option<RestoredPrefix>,
+            /// Prompt tokens prefilled through the prefill artifact at
+            /// admission (cold rows only); the remainder drains as pending
+            /// chunks interleaved with decode steps.
+            cold_first: usize,
         }
         let mut plans: Vec<Plan> = Vec::with_capacity(reqs.len());
         for req in &reqs {
             let hit = match self.pcache.as_mut() {
-                Some(pc) if req.params.prefix_cache => pc.lookup(&req.prompt_ids, max_tail),
+                Some(pc) if req.params.prefix_cache => {
+                    pc.adopt(&mut self.pool, &req.prompt_ids, max_tail)
+                }
                 _ => None,
             };
-            // A full-prompt hit is only usable if it carries an end
-            // snapshot to replace prefill; degrade a malformed one to a
-            // miss HERE, before alloc/pin (see the leak note below),
-            // rather than panicking during restore.
-            let hit =
-                hit.filter(|h| h.matched < req.prompt_ids.len() || h.end.is_some());
-            let init_len = hit.as_ref().map_or(req.prompt_ids.len(), |h| h.matched);
-            // Cannot fail here: free_count and prompt lengths were
-            // validated above, and init_len <= prompt_len < seq_max. Any
-            // future fallible step inside this loop must unwind earlier
-            // iterations' alloc/pin or it leaks pool rows and cache pins.
-            let slot = self.pool.alloc(init_len)?;
-            if let (Some(h), Some(pc)) = (&hit, self.pcache.as_mut()) {
-                pc.pin(h.node);
-            }
-            plans.push(Plan { slot, hit });
+            let (slot, cold_first) = match &hit {
+                Some(h) => {
+                    // Occupy the adopted row with the matched prefix as its
+                    // committed length. Only the page budget can fail here;
+                    // unwind the adoption pin so the cache stays coherent.
+                    if let Err(e) = self.pool.alloc_at(h.row, h.matched, h.matched) {
+                        if let Some(pc) = self.pcache.as_mut() {
+                            pc.unpin(h.node);
+                        }
+                        return Err(e.context("admit: adopting a cached prefix"));
+                    }
+                    (h.row, 0)
+                }
+                None => {
+                    // Cold admission: prefer the free row carrying the
+                    // fewest live claims, then evict whatever cached chain
+                    // still claims it — this occupant is about to
+                    // overwrite the row's token history.
+                    let Some(row) = self.pool.free_row_least_claimed() else {
+                        bail!("admit: no free batch row");
+                    };
+                    if let Some(pc) = self.pcache.as_mut() {
+                        if !pc.release_row(&mut self.pool, row, 0) {
+                            bail!("admit: row {row} still carries pinned prefix claims");
+                        }
+                    }
+                    let first = req.prompt_ids.len().min(chunk_cap);
+                    self.pool.alloc_at(row, first, 0)?;
+                    (row, first)
+                }
+            };
+            plans.push(Plan { slot, hit, cold_first });
         }
 
-        // Per-slot state init + KV restore for cache hits.
-        let srow = self.kv.stride(0);
-        let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
+        // Per-slot state init. Cache hits adopted their KV pages in place,
+        // so there is no restore step — a hit's rows are already resident.
         for (plan, req) in plans.iter().zip(&reqs) {
             let i = plan.slot;
             // A recycled slot must not have the old occupant's pending
@@ -576,75 +755,75 @@ impl<'rt> Engine<'rt> {
             slot.active = true;
             slot.done = false;
             slot.req_id = req.id;
-            slot.tokens = req.prompt_ids.clone();
             slot.prompt_len = req.prompt_ids.len();
             slot.params = params;
             slot.rng = rng;
             slot.enqueue_at = Some(Instant::now());
-            let Some(h) = &plan.hit else { continue };
-            slot.cached_tokens = h.matched;
-            slot.prefix_node = Some(h.node);
-            // Restore the cached base KV rows (positions [0, matched)) by
-            // contiguous copy per (layer, k/v) pair.
-            let m = h.matched;
-            for li in 0..l {
-                for c in 0..2 {
-                    let src = ((li * 2 + c) * m) * kvd;
-                    let dst = i * srow + ((li * 2 + c) * s) * kvd;
-                    self.kv.f32s_mut()[dst..dst + m * kvd]
-                        .copy_from_slice(&h.kv[src..src + m * kvd]);
+            match &plan.hit {
+                Some(h) => {
+                    slot.tokens = req.prompt_ids.clone();
+                    slot.cached_tokens = h.matched;
+                    slot.prefix_node = Some(h.node);
+                    let tail = req.prompt_ids.len() - h.matched;
+                    if tail == 0 {
+                        // Full-prompt hit: the snapshot replaces prefill
+                        // outright. The root *token* is resampled with this
+                        // request's own criterion and RNG — only the
+                        // distribution is cached. `adopt` guarantees full
+                        // textual matches carry a snapshot; skip
+                        // defensively instead of panicking.
+                        let Some(end) = h.end.as_ref() else { continue };
+                        slot.root_logits = end.root_logits.clone();
+                        slot.h_last = end.h_last.clone();
+                        slot.h_star = end.h_star.clone();
+                        slot.root_token = accept::sample_root(
+                            &slot.root_logits,
+                            slot.params.mode,
+                            slot.params.top_k,
+                            &mut slot.rng,
+                        );
+                    } else if tail > CHAIN_TAIL_MAX {
+                        // Long unmatched tail: the hit stands, but the tail
+                        // prefills in chunks interleaved with decode steps
+                        // (`slot.tokens` mirrors committed rows only).
+                        slot.tokens = req.prompt_ids[..h.matched].to_vec();
+                        slot.pending_prefill = req.prompt_ids[h.matched..].to_vec();
+                    }
+                    // Short tails chain-extend below, within this admit.
                 }
-            }
-            // Draft-state rows ride along per variant (Hydra++ pkv / EAGLE ekv).
-            if let Some(extra) = &h.extra {
-                if let Some(t) = self.pkv.as_mut() {
-                    restore_extra_rows(t, i, s, kvd, m, extra);
-                } else if let Some(t) = self.ekv.as_mut() {
-                    restore_extra_rows(t, i, s, kvd, m, extra);
+                None => {
+                    slot.tokens = req.prompt_ids[..plan.cold_first].to_vec();
+                    if plan.cold_first < req.prompt_ids.len() {
+                        slot.pending_prefill = req.prompt_ids[plan.cold_first..].to_vec();
+                    }
                 }
-            }
-            if h.matched == req.prompt_ids.len() {
-                // Full-prompt hit: the snapshot replaces prefill outright.
-                // The root *token* is resampled with this request's own
-                // criterion and RNG — only the distribution is cached.
-                // End-less full hits were degraded to misses at plan time,
-                // so this branch always finds a snapshot; skip defensively
-                // (the slot then prefills cold) instead of panicking.
-                let Some(end) = h.end.as_ref() else { continue };
-                slot.root_logits = end.root_logits.clone();
-                slot.h_last = end.h_last.clone();
-                slot.h_star = end.h_star.clone();
-                slot.root_token = accept::sample_root(
-                    &slot.root_logits,
-                    slot.params.mode,
-                    slot.params.top_k,
-                    &mut slot.rng,
-                );
             }
         }
 
-        // Full-batch prefill for cold rows only. When EVERY new row was a
-        // cache hit, the admission batch skips the prefill call entirely —
-        // the prefix cache's headline saving. Rows without a cold prompt
-        // (occupied neighbours, cache hits) carry a dummy length-1 prompt
-        // whose outputs are discarded.
-        let cold: Vec<(usize, &Request)> = plans
+        // Full-batch prefill for cold rows only — covering each cold
+        // prompt's FIRST chunk (the whole prompt when it fits the chunk
+        // budget). When EVERY new row was a cache hit, the admission batch
+        // skips the prefill call entirely — the prefix cache's headline
+        // saving. Rows without a cold prompt (occupied neighbours, cache
+        // hits) carry a dummy length-1 prompt whose outputs are discarded.
+        let cold: Vec<(usize, &Request, usize)> = plans
             .iter()
             .zip(&reqs)
             .filter(|(p, _)| p.hit.is_none())
-            .map(|(p, r)| (p.slot, r))
+            .map(|(p, r)| (p.slot, r, p.cold_first))
             .collect();
         if !cold.is_empty() {
+            let srow = self.kv.stride(0);
             let mut tokens = HostTensor::zeros_i32(&[b, s]);
             let mut lens = HostTensor::zeros_i32(&[b]);
             for i in 0..b {
                 lens.i32s_mut()[i] = 1;
             }
-            for &(i, req) in &cold {
-                for (j, &tok) in req.prompt_ids.iter().enumerate() {
+            for &(i, req, n1) in &cold {
+                for (j, &tok) in req.prompt_ids[..n1].iter().enumerate() {
                     tokens.i32s_mut()[i * s + j] = tok as i32;
                 }
-                lens.i32s_mut()[i] = req.prompt_ids.len() as i32;
+                lens.i32s_mut()[i] = n1 as i32;
             }
 
             self.phase.prefill_calls += 1;
@@ -652,11 +831,11 @@ impl<'rt> Engine<'rt> {
             let out = self.rt.call(&name, &[&tokens, &lens], &[&self.base_w])?;
             let (last_h, last_logits, kv_new, hidden_seq) = (&out[0], &out[1], &out[2], &out[3]);
 
-            for &(i, _) in &cold {
+            for &(i, _, _) in &cold {
                 let src = &kv_new.f32s()[i * srow..(i + 1) * srow];
                 self.kv.f32s_mut()[i * srow..(i + 1) * srow].copy_from_slice(src);
             }
-            for &(i, _) in &cold {
+            for &(i, _, _) in &cold {
                 let logits = &last_logits.f32s()[i * v..(i + 1) * v];
                 let h = last_h.f32s()[i * d..(i + 1) * d].to_vec();
                 let slot = &mut self.slots[i];
@@ -679,7 +858,7 @@ impl<'rt> Engine<'rt> {
                     let (enriched, pkv_new) = (&out[0], &out[1]);
                     let pkv = self.pkv.as_mut().ok_or_else(missing_state("pkv"))?;
                     let prow = pkv.stride(0);
-                    for &(i, _) in &cold {
+                    for &(i, _, _) in &cold {
                         pkv.f32s_mut()[i * prow..(i + 1) * prow]
                             .copy_from_slice(&pkv_new.f32s()[i * prow..(i + 1) * prow]);
                         self.slots[i].h_star = enriched.f32s()[i * d..(i + 1) * d].to_vec();
@@ -693,7 +872,7 @@ impl<'rt> Engine<'rt> {
                     let (f_last, ekv_new) = (&out[0], &out[1]);
                     let ekv = self.ekv.as_mut().ok_or_else(missing_state("ekv"))?;
                     let erow = ekv.stride(0);
-                    for &(i, _) in &cold {
+                    for &(i, _, _) in &cold {
                         ekv.f32s_mut()[i * erow..(i + 1) * erow]
                             .copy_from_slice(&ekv_new.f32s()[i * erow..(i + 1) * erow]);
                         self.slots[i].h_star = f_last.f32s()[i * d..(i + 1) * d].to_vec();
@@ -703,15 +882,18 @@ impl<'rt> Engine<'rt> {
             }
         }
 
-        // Partial hits: extend the unmatched prompt tail through the
-        // chain-mode verify/commit path (falls back to full prefill above
-        // when the tail exceeds CHAIN_TAIL_MAX — the cache reports those
-        // as misses).
+        // Partial hits with short tails: extend the unmatched tail through
+        // the chain-mode verify/commit path within this admit (longer
+        // tails were queued as pending chunks above and drain across
+        // decode steps instead).
         let partial: Vec<(usize, Vec<u32>)> = plans
             .iter()
             .zip(&reqs)
             .filter_map(|(p, r)| match &p.hit {
-                Some(h) if h.matched < r.prompt_ids.len() => {
+                Some(h)
+                    if h.matched < r.prompt_ids.len()
+                        && r.prompt_ids.len() - h.matched <= CHAIN_TAIL_MAX =>
+                {
                     Some((p.slot, r.prompt_ids[h.matched..].to_vec()))
                 }
                 _ => None,
@@ -721,13 +903,15 @@ impl<'rt> Engine<'rt> {
             self.chain_extend(&partial)?;
         }
 
-        // Publish the admitted prompts (cold and extended rows; full hits
-        // are already resident) so future admissions can reuse them.
+        // Publish the fully-committed admitted prompts (cold and extended
+        // rows; full hits are already resident) so future admissions can
+        // adopt them. Rows still draining pending chunks publish when the
+        // drain completes.
         if self.pcache.is_some() {
             for (plan, req) in plans.iter().zip(&reqs) {
                 let full_hit =
                     plan.hit.as_ref().is_some_and(|h| h.matched == req.prompt_ids.len());
-                if !full_hit {
+                if !full_hit && self.slots[plan.slot].pending_prefill.is_empty() {
                     self.publish_slot_prefix(plan.slot);
                 }
             }
@@ -858,8 +1042,11 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Publish slot `i`'s committed prefix (the prompt at admission, the
-    /// whole committed sequence at retirement) into the prefix cache.
-    /// No-op when the cache is off or the request opted out.
+    /// whole committed sequence at retirement/preemption) into the prefix
+    /// cache — by CLAIMING its live pages in place (refcount bumps on the
+    /// pool, never a slab copy; the variant's draft-state rows ride along
+    /// in the same row). No-op when the cache is off or the request opted
+    /// out.
     fn publish_slot_prefix(&mut self, i: usize) {
         if self.pcache.is_none() || !self.slots[i].params.prefix_cache {
             return;
@@ -869,48 +1056,27 @@ impl<'rt> Engine<'rt> {
             return;
         }
         // Repeated traffic: when the whole prefix is already resident with
-        // a snapshot at its exact end, skip the slab assembly outright —
-        // the insert would only refresh an identical snapshot (same
-        // engine, deterministic state).
+        // a snapshot at its exact end, skip the claim walk outright — the
+        // insert would only refresh an identical snapshot (same engine,
+        // deterministic state).
         if let Some(pc) = self.pcache.as_ref() {
             if pc.is_resident(&self.slots[i].tokens[..len]) {
                 return;
             }
         }
         // Fused path: this row's share of the last step's KV commit may
-        // still be pending — apply it host-side so the snapshot is whole.
+        // still be pending — apply it host-side so the published (claimed)
+        // rows hold what the tokens say they hold.
         self.materialize_pending_row(i);
-        let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
-        let s = self.rt.manifest.seq_max;
-        let srow = self.kv.stride(0);
-        let mut slab = vec![0f32; l * 2 * len * kvd];
-        for li in 0..l {
-            for c in 0..2 {
-                let src = i * srow + ((li * 2 + c) * s) * kvd;
-                let dst = ((li * 2 + c) * len) * kvd;
-                slab[dst..dst + len * kvd]
-                    .copy_from_slice(&self.kv.f32s()[src..src + len * kvd]);
-            }
-        }
-        let extra = self.pkv.as_ref().or(self.ekv.as_ref()).map(|t| {
-            let prow = t.stride(0);
-            let mut e = vec![0f32; 2 * len * kvd];
-            for c in 0..2 {
-                let src = i * prow + (c * s) * kvd;
-                e[(c * len) * kvd..(c * len + len) * kvd]
-                    .copy_from_slice(&t.f32s()[src..src + len * kvd]);
-            }
-            e
-        });
         let slot = &self.slots[i];
         let end = EndSnapshot {
             h_last: slot.h_last.clone(),
             h_star: slot.h_star.clone(),
             root_logits: slot.root_logits.clone(),
         };
-        let tokens = &slot.tokens[..len];
+        let tokens = slot.tokens[..len].to_vec();
         if let Some(pc) = self.pcache.as_mut() {
-            pc.insert(tokens, &slab, extra.as_deref(), end);
+            pc.insert(&mut self.pool, &tokens, i, end);
         }
     }
 
@@ -945,6 +1111,43 @@ impl<'rt> Engine<'rt> {
         p.accept_len.i32s_mut()[i] = 0;
     }
 
+    /// Drain pending prompt chunks (continuous chunked prefill) through
+    /// the chain-mode verify/commit path, spending at most one chunk
+    /// budget across all slots per call. A slot whose pending tail empties
+    /// here becomes decodable this same step, and its prompt is published
+    /// to the prefix cache exactly as an admission-time prefill would be.
+    fn drain_pending_prefill(&mut self) -> Result<usize> {
+        let b = self.cfg.batch;
+        let mut left = self.chunk_budget.max(1);
+        let mut rows: Vec<(usize, Vec<u32>)> = Vec::new();
+        for i in 0..b {
+            if left == 0 {
+                break;
+            }
+            let sl = &mut self.slots[i];
+            if !sl.active || sl.done || sl.pending_prefill.is_empty() {
+                continue;
+            }
+            let c = left.min(sl.pending_prefill.len());
+            let chunk: Vec<u32> = sl.pending_prefill.drain(..c).collect();
+            left -= c;
+            rows.push((i, chunk));
+        }
+        if rows.is_empty() {
+            return Ok(0);
+        }
+        self.chain_extend(&rows)?;
+        let mut total = 0;
+        for (i, chunk) in rows {
+            total += chunk.len();
+            self.slots[i].tokens.extend_from_slice(&chunk);
+            if self.slots[i].pending_prefill.is_empty() {
+                self.publish_slot_prefix(i);
+            }
+        }
+        Ok(total)
+    }
+
     // ---------------------------------------------------------------------
     // One speculative decoding step over all active slots.
     // ---------------------------------------------------------------------
@@ -965,6 +1168,37 @@ impl<'rt> Engine<'rt> {
             bail!("step() with no active slots");
         }
 
+        // -- 0a. continuous chunked prefill --------------------------------
+        // Drain pending prompt chunks (long cold prompts / long partial-hit
+        // tails) through the chain path under the per-step chunk budget;
+        // slots still holding pending chunks sit out the decode phases
+        // below. Then retire any decodable slot whose next token would
+        // cross into a page the pool budget cannot supply — cache-full,
+        // not a permanent stall.
+        self.drain_pending_prefill()?;
+        for i in 0..b {
+            if !self.slots[i].decoding() {
+                continue;
+            }
+            let len_i = self.pool.slot_len(i).unwrap_or(0);
+            let crossing = pages_for(len_i + 1) - pages_for(len_i);
+            if crossing > self.pool.budget_headroom_pages() {
+                self.slots[i].done = true;
+                self.slots[i].finish = FinishReason::CacheFull;
+            }
+        }
+        if !(0..b).any(|i| self.slots[i].decoding()) {
+            // Prefill-only step: pending chunks advanced (or a slot was
+            // retired above); nothing to decode yet.
+            self.retire_finished()?;
+            return Ok(StepStats {
+                tokens_committed: 0,
+                active_slots: 0,
+                spec_tokens: 0,
+                wall: wall0.elapsed(),
+            });
+        }
+
         // -- 0. adaptive tree selection ------------------------------------
         // The controller re-picks each active slot's ladder rung from its
         // acceptance statistics, then the batch throttle shrinks the
@@ -973,7 +1207,7 @@ impl<'rt> Engine<'rt> {
             let modes: Vec<Option<SpeculationMode>> = self
                 .slots
                 .iter()
-                .map(|sl| (sl.active && !sl.done).then(|| sl.params.speculation))
+                .map(|sl| sl.decoding().then(|| sl.params.speculation))
                 .collect();
             ad.select(&modes);
         }
@@ -999,7 +1233,7 @@ impl<'rt> Engine<'rt> {
             None => self.t_bucket,
             Some(_) => {
                 let t_need = (0..b)
-                    .filter(|&i| self.slots[i].active && !self.slots[i].done)
+                    .filter(|&i| self.slots[i].decoding())
                     .map(|i| step_trees[i].len())
                     .max()
                     .unwrap_or(1);
@@ -1029,7 +1263,7 @@ impl<'rt> Engine<'rt> {
         let anc = self.step_anc_mask(b, tb);
         for i in 0..b {
             let slot = &self.slots[i];
-            if !slot.active || slot.done {
+            if !slot.decoding() {
                 continue;
             }
             let tree = &step_trees[i];
@@ -1095,7 +1329,7 @@ impl<'rt> Engine<'rt> {
         let mut rejected = 0usize;
         for i in 0..b {
             let slot = &mut self.slots[i];
-            if !slot.active || slot.done {
+            if !slot.decoding() {
                 continue;
             }
             let tree = &step_trees[i];
@@ -1122,10 +1356,16 @@ impl<'rt> Engine<'rt> {
             if let Some(ad) = &mut self.adaptive {
                 ad.observe(i, tree.max_depth(), walk_len);
             }
-            // Truncate to the generation budget and the cache capacity.
+            // Truncate to the generation budget, the row capacity, and the
+            // page budget: tokens that still fit the row's tail page plus
+            // whatever whole pages the pool budget can supply (the step-0a
+            // pre-check guarantees at least one token fits).
             let len_i = cur_len.i32s()[i] as usize;
+            let page_cap = pages_for(len_i) * BLOCK_TOKENS - len_i
+                + self.pool.budget_headroom_pages() * BLOCK_TOKENS;
             let budget = (slot.params.max_new - slot.generated)
                 .min(s.saturating_sub(len_i + 1))
+                .min(page_cap)
                 .max(1);
             if dec.accepted.len() > budget {
                 dec.accepted.truncate(budget);
@@ -1322,12 +1562,25 @@ impl<'rt> Engine<'rt> {
             _ => {}
         }
 
-        // Retire finished slots: publish the committed sequence into the
-        // prefix cache (multi-turn follow-ups reuse it), release the
-        // slot's pool row and cache pin, then surface the output — into
-        // the event stream when streaming is enabled (terminal `Finished`
-        // frame), else into `outputs`.
-        for i in 0..b {
+        // Retire finished slots.
+        self.retire_finished()?;
+
+        self.phase.steps += 1;
+        Ok(StepStats {
+            tokens_committed: committed,
+            active_slots: decisions.iter().filter(|d| d.is_some()).count(),
+            spec_tokens,
+            wall: wall0.elapsed(),
+        })
+    }
+
+    /// Retire finished slots: publish the committed sequence into the
+    /// prefix cache as in-place page claims (multi-turn follow-ups adopt
+    /// it), release the slot's pool row and cache pin, then surface the
+    /// output — into the event stream when streaming is enabled (terminal
+    /// `Finished` frame), else into `outputs`.
+    fn retire_finished(&mut self) -> Result<()> {
+        for i in 0..self.cfg.batch {
             if self.slots[i].active && self.slots[i].done {
                 self.publish_slot_prefix(i);
                 if let Some(node) = self.slots[i].prefix_node.take() {
@@ -1368,14 +1621,7 @@ impl<'rt> Engine<'rt> {
                 }
             }
         }
-
-        self.phase.steps += 1;
-        Ok(StepStats {
-            tokens_committed: committed,
-            active_slots: decisions.iter().filter(|d| d.is_some()).count(),
-            spec_tokens,
-            wall: wall0.elapsed(),
-        })
+        Ok(())
     }
 
     /// The `[B, tb, tb]` ancestor-mask tensor for this step: the static
@@ -1390,7 +1636,7 @@ impl<'rt> Engine<'rt> {
             Some(ad) => {
                 let mut m = Vec::with_capacity(b * tb * tb);
                 for i in 0..b {
-                    let active = self.slots[i].active && !self.slots[i].done;
+                    let active = self.slots[i].decoding();
                     let r = if active { ad.choice[i] } else { 0 };
                     // Present by construction: enable_adaptive caches every
                     // (rung, bucket) pair the rung fits in, and tb covers
@@ -1432,7 +1678,7 @@ impl<'rt> Engine<'rt> {
         let mut node_tokens = vec![vec![0u32; t_max]; b];
         let mut any_draft = false;
         for i in 0..b {
-            if self.slots[i].active && !self.slots[i].done {
+            if self.slots[i].decoding() {
                 node_tokens[i][0] = self.slots[i].root_token;
                 any_draft |= trees[i].len() > 1;
             }
@@ -1468,7 +1714,7 @@ impl<'rt> Engine<'rt> {
         let k = self.rt.manifest.num_heads;
         let mut h = HostTensor::zeros_f32(&[8, d]);
         for i in 0..b {
-            if self.slots[i].active && !self.slots[i].done {
+            if self.slots[i].decoding() {
                 h.f32s_mut()[i * d..(i + 1) * d].copy_from_slice(&self.slots[i].h_star);
             }
         }
@@ -1481,7 +1727,7 @@ impl<'rt> Engine<'rt> {
             self.phase.draft_per_head[head] += t0.elapsed() / k as u32;
         }
         for i in 0..b {
-            if !self.slots[i].active || self.slots[i].done {
+            if !self.slots[i].decoding() {
                 continue;
             }
             let tree = &trees[i];
@@ -1539,7 +1785,7 @@ impl<'rt> Engine<'rt> {
         let probing = self.probe.is_some();
 
         let active: Vec<usize> = (0..b)
-            .filter(|&i| self.slots[i].active && !self.slots[i].done)
+            .filter(|&i| self.slots[i].decoding())
             .collect();
         let deepest = active.iter().map(|&i| trees[i].max_depth()).max().unwrap_or(1);
         // With probing we also evaluate childless nodes (and one depth past
@@ -1606,7 +1852,7 @@ impl<'rt> Engine<'rt> {
         let d = self.dims.d_model;
         let v = self.rt.manifest.vocab;
         let slot = 0usize;
-        if !self.slots[slot].active || self.slots[slot].done {
+        if !self.slots[slot].decoding() {
             return Ok(());
         }
         let n_buckets = self.rt.manifest.eagle_n_buckets.clone();
@@ -1671,25 +1917,6 @@ impl<'rt> Engine<'rt> {
             }
         }
         Ok(())
-    }
-}
-
-/// Copy restored draft-state rows (`[2, m, KVD]`) into batch row `i` of a
-/// per-variant layer cache tensor (`[B, 2, S, KVD]` — Hydra++ pkv / EAGLE
-/// ekv), positions `[0, m)`.
-fn restore_extra_rows(
-    t: &mut HostTensor,
-    i: usize,
-    s: usize,
-    kvd: usize,
-    m: usize,
-    extra: &[f32],
-) {
-    let prow = t.stride(0); // 2 * S * KVD
-    for c in 0..2 {
-        let src = (c * m) * kvd;
-        let dst = i * prow + (c * s) * kvd;
-        t.f32s_mut()[dst..dst + m * kvd].copy_from_slice(&extra[src..src + m * kvd]);
     }
 }
 

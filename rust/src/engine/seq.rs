@@ -105,15 +105,16 @@ pub enum FinishReason {
     MaxTokens,
     /// The stop marker (`SamplingParams::stop_ids`) was emitted.
     Stop,
-    /// The slot's KV-cache rows ran out (sequence hit `seq_max`).
+    /// The slot's KV memory ran out: the sequence hit `seq_max`, or the
+    /// pool's page budget could not supply its next page.
     CacheFull,
     /// Still decoding (only observable on live slots, never on outputs).
     Running,
 }
 
 /// Per-sequence serving state: one batch row of the engine. Vacant slots
-/// are `!active`; the engine's `cache::SlotPool` is the source of truth
-/// for occupancy and committed lengths.
+/// are `!active`; the engine's `kvblocks::BlockPool` is the source of
+/// truth for occupancy and committed lengths.
 #[derive(Debug, Clone)]
 pub struct Slot {
     /// Whether this batch row currently hosts a sequence.
@@ -122,9 +123,15 @@ pub struct Slot {
     pub req_id: u64,
     /// Committed tokens (prompt + generated) — mirrors the KV cache rows.
     /// The committed *length* itself is not duplicated here: the engine's
-    /// `cache::SlotPool` is the single source of truth for slot
-    /// occupancy/lengths.
+    /// `kvblocks::BlockPool` is the single source of truth for slot
+    /// occupancy/lengths. While `pending_prefill` is non-empty this holds
+    /// only the already-committed prompt prefix.
     pub tokens: Vec<u32>,
+    /// Prompt tokens not yet prefilled (continuous chunked prefill): long
+    /// cold prompts and long partial-hit tails land here at admission and
+    /// drain through the chain path in budget-sized chunks interleaved
+    /// with decode steps. The slot is excluded from decoding until empty.
+    pub pending_prefill: Vec<u32>,
     /// Length of the prompt prefix of `tokens`.
     pub prompt_len: usize,
     /// Next root candidate (sampled from base logits at the last step).
@@ -174,6 +181,7 @@ impl Slot {
             active: false,
             req_id: 0,
             tokens: Vec::new(),
+            pending_prefill: Vec::new(),
             prompt_len: 0,
             root_token: 0,
             root_logits: Vec::new(),
@@ -193,6 +201,13 @@ impl Slot {
             prefix_node: None,
             cached_tokens: 0,
         }
+    }
+
+    /// Whether this slot participates in decode phases this step: it hosts
+    /// a live sequence AND has no pending prefill chunks (a mid-prefill
+    /// slot has no root distribution to draft from yet).
+    pub fn decoding(&self) -> bool {
+        self.active && !self.done && self.pending_prefill.is_empty()
     }
 
     /// The committed tokens after the prompt.

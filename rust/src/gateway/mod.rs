@@ -480,8 +480,10 @@ impl Drop for Gateway {
 
 /// Merge per-worker stats blocks into the aggregated frame: counters
 /// sum, high-water marks max, efficiency is recomputed from the summed
-/// verified/committed totals, prefix-cache blocks sum field-wise, and
-/// the raw per-worker blocks ride along under `"workers"`.
+/// verified/committed totals, prefix-cache blocks sum field-wise,
+/// KV-pool blocks sum field-wise with their ratios (utilization,
+/// fragmentation) recomputed from the summed raws, and the raw
+/// per-worker blocks ride along under `"workers"`.
 fn merge_stats(blocks: Vec<Json>) -> Json {
     let sum = |key: &str| -> f64 {
         blocks.iter().filter_map(|b| b.get(key).and_then(Json::as_f64)).sum()
@@ -522,6 +524,7 @@ fn merge_stats(blocks: Vec<Json>) -> Json {
         ("steps", Json::num(sum("steps"))),
         ("tokens", Json::num(sum("tokens"))),
         ("max_queue_depth", Json::num(maxv("max_queue_depth"))),
+        ("preemptions", Json::num(sum("preemptions"))),
         ("prefill_calls", Json::num(sum("prefill_calls"))),
         ("spec_tokens_verified", Json::num(verified)),
         ("spec_tokens_wasted", Json::num(sum("spec_tokens_wasted"))),
@@ -530,6 +533,40 @@ fn merge_stats(blocks: Vec<Json>) -> Json {
             Json::num(if verified > 0.0 { committed / verified } else { 0.0 }),
         ),
     ];
+    let kvs: Vec<&Json> = blocks.iter().filter_map(|b| b.get("kv_pool")).collect();
+    if !kvs.is_empty() {
+        let ksum = |key: &str| -> f64 {
+            kvs.iter().filter_map(|p| p.get(key).and_then(Json::as_f64)).sum::<f64>()
+        };
+        let used = ksum("blocks_used");
+        let budget = ksum("page_budget");
+        // The ratios recompute from the summed raws instead of averaging
+        // the per-worker ratios — a near-empty worker must not dilute a
+        // saturated one. Fragmentation weights each worker's percentage
+        // by its used pages (the quantity the percentage is over).
+        let frag: f64 = kvs
+            .iter()
+            .filter_map(|p| {
+                Some(p.get("blocks_used")?.as_f64()? * p.get("fragmentation_pct")?.as_f64()?)
+            })
+            .sum();
+        fields.push((
+            "kv_pool",
+            Json::obj(vec![
+                ("blocks_total", Json::num(ksum("blocks_total"))),
+                ("blocks_used", Json::num(used)),
+                ("blocks_pinned", Json::num(ksum("blocks_pinned"))),
+                ("blocks_free", Json::num(ksum("blocks_free"))),
+                ("page_budget", Json::num(budget)),
+                ("cow_shares", Json::num(ksum("cow_shares"))),
+                ("fragmentation_pct", Json::num(if used > 0.0 { frag / used } else { 0.0 })),
+                ("utilization", Json::num(if budget > 0.0 { used / budget } else { 0.0 })),
+                ("preemptions", Json::num(ksum("preemptions"))),
+                ("restore_copies", Json::num(ksum("restore_copies"))),
+                ("claim_evictions", Json::num(ksum("claim_evictions"))),
+            ]),
+        ));
+    }
     let pcs: Vec<&Json> = blocks.iter().filter_map(|b| b.get("prefix_cache")).collect();
     if !pcs.is_empty() {
         let psum = |key: &str| -> Json {
@@ -550,6 +587,7 @@ fn merge_stats(blocks: Vec<Json>) -> Json {
                 ("byte_budget", psum("byte_budget")),
                 ("nodes", psum("nodes")),
                 ("pinned", psum("pinned")),
+                ("row_conflicts", psum("row_conflicts")),
             ]),
         ));
     }
@@ -574,10 +612,27 @@ mod tests {
             ("steps", Json::num(10.0)),
             ("tokens", Json::num(30.0)),
             ("max_queue_depth", Json::num(3.0 + worker)),
+            ("preemptions", Json::num(worker)),
             ("prefill_calls", Json::num(4.0)),
             ("spec_tokens_verified", Json::num(verified)),
             ("spec_tokens_wasted", Json::num(verified / 2.0)),
             ("spec_efficiency", Json::num(eff)),
+            (
+                "kv_pool",
+                Json::obj(vec![
+                    ("blocks_total", Json::num(8.0)),
+                    ("blocks_used", Json::num(2.0 + 2.0 * worker)),
+                    ("blocks_pinned", Json::num(1.0)),
+                    ("blocks_free", Json::num(6.0 - 2.0 * worker)),
+                    ("page_budget", Json::num(8.0)),
+                    ("cow_shares", Json::num(worker)),
+                    ("fragmentation_pct", Json::num(10.0 + 20.0 * worker)),
+                    ("utilization", Json::num((2.0 + 2.0 * worker) / 8.0)),
+                    ("preemptions", Json::num(worker)),
+                    ("restore_copies", Json::num(0.0)),
+                    ("claim_evictions", Json::num(worker)),
+                ]),
+            ),
         ];
         if let Some(h) = pc_hits {
             fields.push((
@@ -611,6 +666,21 @@ mod tests {
         let pc = m.req("prefix_cache");
         assert_eq!(pc.req("full_hits").as_usize(), Some(7));
         assert_eq!(pc.req("lookups").as_usize(), Some(20));
+        // Scheduler preemptions sum (worker 0 had 0, worker 1 had 1).
+        assert_eq!(m.req("preemptions").as_usize(), Some(1));
+        // KV-pool block: counters sum, ratios recompute from summed raws.
+        let kv = m.req("kv_pool");
+        assert_eq!(kv.req("blocks_total").as_usize(), Some(16));
+        assert_eq!(kv.req("blocks_used").as_usize(), Some(6));
+        assert_eq!(kv.req("blocks_free").as_usize(), Some(10));
+        assert_eq!(kv.req("preemptions").as_usize(), Some(1));
+        assert_eq!(kv.req("claim_evictions").as_usize(), Some(1));
+        let util = kv.req("utilization").as_f64().unwrap();
+        assert!((util - 6.0 / 16.0).abs() < 1e-9, "pooled used/budget: {util}");
+        // frag = (2·10 + 4·30) / 6 — weighted by used pages, not a mean
+        // of the two percentages (which would be 20).
+        let frag = kv.req("fragmentation_pct").as_f64().unwrap();
+        assert!((frag - 140.0 / 6.0).abs() < 1e-9, "used-weighted fragmentation: {frag}");
         assert_eq!(m.req("workers").as_arr().unwrap().len(), 2);
     }
 
@@ -621,6 +691,8 @@ mod tests {
         assert_eq!(m.req("workers_alive").as_usize(), Some(1));
         assert_eq!(m.req("completed").as_usize(), Some(5));
         assert!(m.get("prefix_cache").is_none(), "no cache block without any worker cache");
+        let kv = m.req("kv_pool");
+        assert_eq!(kv.req("blocks_used").as_usize(), Some(2), "dead stub contributes nothing");
         // Zero verified work: efficiency reports 0, not NaN.
         let m = merge_stats(vec![block(0.0, 0.0, 0.0, 0.0, None)]);
         assert_eq!(m.req("spec_efficiency").as_f64(), Some(0.0));

@@ -309,8 +309,10 @@ fn fail_loop(
     }
 }
 
-/// One worker's `{"op":"stats"}` block: scheduler counters, engine
-/// occupancy, speculation counters, and — when enabled — the adaptive
+/// One worker's `{"op":"stats"}` block: scheduler counters (including
+/// preemptions), engine occupancy, speculation counters, the paged KV
+/// pool's health (`kv_pool`: block occupancy, CoW shares, fragmentation,
+/// preemption/copy counters), and — when enabled — the adaptive
 /// controller's current choices and the prefix cache's counters. The
 /// gateway merges these blocks into the aggregated stats frame.
 fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) -> Json {
@@ -327,6 +329,7 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
         ("steps", Json::num(st.steps as f64)),
         ("tokens", Json::num(st.tokens as f64)),
         ("max_queue_depth", Json::num(st.max_queue_depth as f64)),
+        ("preemptions", Json::num(st.preemptions as f64)),
         ("prefill_calls", Json::num(engine.phase.prefill_calls as f64)),
         ("spec_tokens_verified", Json::num(engine.spec.nodes_verified as f64)),
         ("spec_tokens_wasted", Json::num(engine.spec.wasted as f64)),
@@ -353,6 +356,23 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
             ]),
         ));
     }
+    let kv = engine.kv_pool_stats();
+    fields.push((
+        "kv_pool",
+        Json::obj(vec![
+            ("blocks_total", Json::num(kv.blocks_total as f64)),
+            ("blocks_used", Json::num(kv.blocks_used as f64)),
+            ("blocks_pinned", Json::num(kv.blocks_pinned as f64)),
+            ("blocks_free", Json::num(kv.blocks_free as f64)),
+            ("page_budget", Json::num(kv.page_budget as f64)),
+            ("cow_shares", Json::num(kv.cow_shares as f64)),
+            ("fragmentation_pct", Json::num(kv.fragmentation_pct)),
+            ("utilization", Json::num(kv.utilization)),
+            ("preemptions", Json::num(kv.preemptions as f64)),
+            ("restore_copies", Json::num(kv.restore_copies as f64)),
+            ("claim_evictions", Json::num(kv.claim_evictions as f64)),
+        ]),
+    ));
     if let Some(cs) = engine.prefix_cache_stats() {
         fields.push((
             "prefix_cache",
@@ -369,6 +389,7 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
                 ("byte_budget", Json::num(cs.byte_budget as f64)),
                 ("nodes", Json::num(cs.nodes as f64)),
                 ("pinned", Json::num(cs.pinned as f64)),
+                ("row_conflicts", Json::num(cs.row_conflicts as f64)),
             ]),
         ));
     }

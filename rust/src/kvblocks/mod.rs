@@ -1,0 +1,695 @@
+//! Block-table KV allocator: the engine's source of truth for KV memory.
+//!
+//! The AOT artifacts operate on a batched cache tensor `[B, L, 2, S, KVD]`
+//! whose attention kernels require each sequence's KV contiguous in its own
+//! batch row. Paging therefore lives **above** the tensor as a logical
+//! layer: the tensor is a grid of `B × ceil(S / BLOCK_TOKENS)` fixed-size
+//! **pages**, where page `(row, k)` covers token positions
+//! `[k·BLOCK_TOKENS, (k+1)·BLOCK_TOKENS)` of batch row `row`. The pool
+//! tracks three orthogonal facts per page:
+//!
+//! * **sequence reference** — the page is covered by the committed length
+//!   of the live sequence occupying its row (derived from the row ledger);
+//! * **claims** — a refcount held by [`crate::prefixcache`] radix nodes
+//!   whose cached prefixes live *in place* in this page (no slab copies:
+//!   a claim keeps the page's tensor bytes immortal until released);
+//! * **budget** — sequence-referenced pages count against a configurable
+//!   page budget, so pool exhaustion is a real, testable condition that
+//!   admission answers with preemption instead of refusal.
+//!
+//! Sharing is copy-on-write in the eviction sense: a radix hit *adopts*
+//! claimed pages by refcount (zero host-side copies — see
+//! [`PoolStats::restore_copies`], which the warm-hit e2e asserts stays 0),
+//! committed rows inside a claimed page are never mutated, and divergent
+//! continuations write past the claim boundary into fresh rows. The only
+//! "copy" ever needed is recompute: releasing a stale claim and
+//! re-prefilling, which is what preemption-resume does in the cold case.
+//!
+//! Invariants enforced here (see also docs/INVARIANTS.md §"Block
+//! lifetime"): no double free of a row, no claim-refcount underflow,
+//! claimed pages are never handed to a fresh allocation, and
+//! sequence-referenced pages never exceed the page budget.
+
+use anyhow::{bail, Result};
+
+/// Tokens per KV page. Matches the block quantization of
+/// [`crate::prefixcache::prefix_fingerprint`] (`AFFINITY_PREFIX_BLOCK`),
+/// so routing affinity and physical sharing agree on boundaries.
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Occupancy state of one batch row (the row ledger the engine trusts for
+/// committed lengths, as `cache::SlotPool` did for the contiguous layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RowState {
+    /// No sequence occupies the row. Pages may still carry claims.
+    Free,
+    /// A sequence with `len` committed KV rows occupies it.
+    Occupied { len: usize },
+}
+
+/// Point-in-time health of the pool plus its lifetime counters, surfaced
+/// through `{"op":"stats"}` as the `kv_pool` block (docs/PROTOCOL.md).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// Pages in the grid (`rows × pages_per_row`).
+    pub blocks_total: usize,
+    /// Pages referenced by live sequences (count against the budget).
+    pub blocks_used: usize,
+    /// Pages pinned in place by at least one prefix-cache claim.
+    pub blocks_pinned: usize,
+    /// Pages neither sequence-referenced nor claimed (fully reusable).
+    pub blocks_free: usize,
+    /// Page budget currently in force (≤ `blocks_total`).
+    pub page_budget: usize,
+    /// Cumulative pages adopted by admission while claimed (CoW shares:
+    /// a live sequence and the radix tree referencing the same page).
+    pub cow_shares: u64,
+    /// Internal fragmentation: committed-token rows wasted in partial
+    /// tail pages, as a percentage of all sequence-referenced rows.
+    pub fragmentation_pct: f64,
+    /// Used pages over the page budget, 0..=1.
+    pub utilization: f64,
+    /// Sequences preempted (freed + requeued) to relieve pool pressure.
+    pub preemptions: u64,
+    /// Host-side KV restore copies. Structurally zero since the paged
+    /// rewrite — the warm-hit e2e hard-asserts this stays 0.
+    pub restore_copies: u64,
+    /// Prefix-cache claims force-released to reclaim a row for admission.
+    pub claim_evictions: u64,
+}
+
+/// Page-grid allocator over the batched KV tensor. Owns the row ledger
+/// (who occupies each batch row, committed length), the per-page claim
+/// refcounts, and the page budget.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    rows: Vec<RowState>,
+    /// Claim refcount per page, indexed `row * pages_per_row + k`.
+    claims: Vec<u32>,
+    pages_per_row: usize,
+    /// Per-row KV capacity in tokens (the model's sequence limit).
+    pub seq_max: usize,
+    page_budget: usize,
+    /// Sequence-referenced pages (maintained incrementally).
+    used_pages: usize,
+    /// High-water mark of simultaneously occupied rows.
+    pub peak_occupancy: usize,
+    /// Total row allocations over the pool's lifetime.
+    pub total_allocs: u64,
+    cow_shares: u64,
+    preemptions: u64,
+    restore_copies: u64,
+    claim_evictions: u64,
+}
+
+/// Pages needed to cover `tokens` committed token rows.
+pub fn pages_for(tokens: usize) -> usize {
+    tokens.div_ceil(BLOCK_TOKENS)
+}
+
+impl BlockPool {
+    /// A pool of `n` rows with capacity `seq_max` tokens each; the page
+    /// budget defaults to the whole grid.
+    pub fn new(n: usize, seq_max: usize) -> BlockPool {
+        let pages_per_row = pages_for(seq_max.max(1));
+        BlockPool {
+            rows: vec![RowState::Free; n],
+            claims: vec![0; n * pages_per_row],
+            pages_per_row,
+            seq_max,
+            page_budget: n * pages_per_row,
+            used_pages: 0,
+            peak_occupancy: 0,
+            total_allocs: 0,
+            cow_shares: 0,
+            preemptions: 0,
+            restore_copies: 0,
+            claim_evictions: 0,
+        }
+    }
+
+    // -- row ledger (SlotPool-compatible surface) ---------------------------
+
+    /// Total number of rows (free + occupied).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the pool has zero rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Currently occupied rows.
+    pub fn occupancy(&self) -> usize {
+        self.rows.iter().filter(|s| !matches!(s, RowState::Free)).count()
+    }
+
+    /// Currently free rows.
+    pub fn free_count(&self) -> usize {
+        self.len() - self.occupancy()
+    }
+
+    /// Committed length of an occupied row (None when free/out of range).
+    pub fn slot_len(&self, row: usize) -> Option<usize> {
+        match self.rows.get(row) {
+            Some(RowState::Occupied { len }) => Some(*len),
+            _ => None,
+        }
+    }
+
+    /// Remaining room in a row (how many more tokens can be committed).
+    pub fn headroom(&self, row: usize) -> Option<usize> {
+        self.slot_len(row).map(|l| self.seq_max - l)
+    }
+
+    // -- page geometry ------------------------------------------------------
+
+    /// Pages per batch row.
+    pub fn pages_per_row(&self) -> usize {
+        self.pages_per_row
+    }
+
+    /// Global page id of page `k` in `row`.
+    pub fn page_id(&self, row: usize, k: usize) -> usize {
+        row * self.pages_per_row + k
+    }
+
+    /// The batch row a global page id belongs to.
+    pub fn row_of_page(&self, page: usize) -> usize {
+        page / self.pages_per_row
+    }
+
+    /// Current claim refcount of a page (0 when out of range).
+    pub fn page_claims(&self, page: usize) -> u32 {
+        self.claims.get(page).copied().unwrap_or(0)
+    }
+
+    /// Number of pages in `row` carrying at least one claim.
+    pub fn claimed_pages_in_row(&self, row: usize) -> usize {
+        let base = row * self.pages_per_row;
+        self.claims[base..base + self.pages_per_row].iter().filter(|&&c| c > 0).count()
+    }
+
+    // -- allocation ---------------------------------------------------------
+
+    /// The free row with the fewest claimed pages (cheapest to reclaim for
+    /// a cold allocation: evicting its claims destroys the least cached
+    /// prefix data). None when every row is occupied.
+    pub fn free_row_least_claimed(&self) -> Option<usize> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, RowState::Free))
+            .min_by_key(|&(i, _)| self.claimed_pages_in_row(i))
+            .map(|(i, _)| i)
+    }
+
+    /// Allocate `row` for a sequence with `initial_len` committed tokens,
+    /// of which the first `adopted` are adopted in place from prefix-cache
+    /// claims (0 for a cold allocation). Pages beyond the adopted span
+    /// must be claim-free — the caller releases stale claims first.
+    pub fn alloc_at(&mut self, row: usize, initial_len: usize, adopted: usize) -> Result<()> {
+        if row >= self.rows.len() {
+            bail!("row {row} out of range");
+        }
+        if !matches!(self.rows[row], RowState::Free) {
+            bail!("row {row} already occupied");
+        }
+        if initial_len >= self.seq_max {
+            bail!("prompt ({initial_len}) does not fit a row (S={})", self.seq_max);
+        }
+        if adopted > initial_len {
+            bail!("adopted span {adopted} exceeds initial length {initial_len}");
+        }
+        let needed = pages_for(initial_len);
+        if self.used_pages + needed > self.page_budget {
+            bail!(
+                "page budget exhausted: {} used + {needed} needed > {} budget",
+                self.used_pages,
+                self.page_budget
+            );
+        }
+        // Pages past the adopted span must not carry claims: the sequence
+        // will write those token rows, and a claim promises immortality.
+        // (The page straddling `adopted` is fine — its claimed rows are
+        // all below `adopted` and committed rows are never rewritten.)
+        let base = row * self.pages_per_row;
+        for k in pages_for(adopted)..needed {
+            if self.claims[base + k] > 0 {
+                bail!("row {row} page {k} still claimed; release before cold alloc");
+            }
+        }
+        if adopted > 0 {
+            self.cow_shares +=
+                (0..pages_for(adopted)).filter(|&k| self.claims[base + k] > 0).count() as u64;
+        }
+        self.rows[row] = RowState::Occupied { len: initial_len };
+        self.used_pages += needed;
+        self.total_allocs += 1;
+        self.peak_occupancy = self.peak_occupancy.max(self.occupancy());
+        Ok(())
+    }
+
+    /// Record `n` newly committed tokens in `row`; errors if the row would
+    /// overflow, a newly crossed page is claimed, or the budget is blown.
+    pub fn extend(&mut self, row: usize, n: usize) -> Result<usize> {
+        let len = match self.rows.get(row) {
+            Some(RowState::Occupied { len }) => *len,
+            _ => bail!("extend on non-occupied row {row}"),
+        };
+        if len + n > self.seq_max {
+            bail!("row {row} overflow: {len} + {n} > {}", self.seq_max);
+        }
+        let crossed = pages_for(len + n) - pages_for(len);
+        if crossed > 0 {
+            if self.used_pages + crossed > self.page_budget {
+                bail!(
+                    "page budget exhausted extending row {row}: {} used + {crossed} > {}",
+                    self.used_pages,
+                    self.page_budget
+                );
+            }
+            let base = row * self.pages_per_row;
+            for k in pages_for(len)..pages_for(len + n) {
+                if self.claims[base + k] > 0 {
+                    bail!("row {row} page {k} claimed; decode may not cross it");
+                }
+            }
+            self.used_pages += crossed;
+        }
+        self.rows[row] = RowState::Occupied { len: len + n };
+        Ok(len + n)
+    }
+
+    /// Release a row; double frees are errors. Claims on its pages
+    /// survive — they keep the retired sequence's prefix warm in place.
+    pub fn free(&mut self, row: usize) -> Result<()> {
+        match self.rows.get(row) {
+            Some(RowState::Occupied { len }) => {
+                self.used_pages -= pages_for(*len);
+                self.rows[row] = RowState::Free;
+                Ok(())
+            }
+            Some(RowState::Free) => bail!("double free of row {row}"),
+            None => bail!("row {row} out of range"),
+        }
+    }
+
+    // -- claims (prefix-cache surface) --------------------------------------
+
+    /// Claim every page covering token positions `[start, end)` of `row`,
+    /// returning their global page ids. Refcounts bump by one each.
+    pub fn claim_range(&mut self, row: usize, start: usize, end: usize) -> Result<Vec<usize>> {
+        if row >= self.rows.len() {
+            bail!("row {row} out of range");
+        }
+        if start >= end || end > self.seq_max {
+            bail!("bad claim range [{start}, {end}) for S={}", self.seq_max);
+        }
+        let base = row * self.pages_per_row;
+        let pages: Vec<usize> =
+            (start / BLOCK_TOKENS..pages_for(end)).map(|k| base + k).collect();
+        for &p in &pages {
+            self.claims[p] += 1;
+        }
+        Ok(pages)
+    }
+
+    /// Bump one page's claim refcount (page sharing at a radix split).
+    pub fn claim_page(&mut self, page: usize) -> Result<()> {
+        match self.claims.get_mut(page) {
+            Some(c) => {
+                *c += 1;
+                Ok(())
+            }
+            None => bail!("page {page} out of range"),
+        }
+    }
+
+    /// Drop one claim from a page; refcount underflow is an error (the
+    /// no-double-release half of the claim protocol).
+    pub fn release_page(&mut self, page: usize) -> Result<()> {
+        match self.claims.get_mut(page) {
+            Some(0) => bail!("claim underflow on page {page}"),
+            Some(c) => {
+                *c -= 1;
+                Ok(())
+            }
+            None => bail!("page {page} out of range"),
+        }
+    }
+
+    // -- budget / pressure --------------------------------------------------
+
+    /// Cap sequence-referenced pages at `pages` (clamped to ≥ 1 and ≤ the
+    /// grid). The default budget is the whole grid.
+    pub fn set_page_budget(&mut self, pages: usize) {
+        self.page_budget = pages.max(1).min(self.rows.len() * self.pages_per_row);
+    }
+
+    /// Pages the budget still has room for.
+    pub fn budget_headroom_pages(&self) -> usize {
+        self.page_budget - self.used_pages
+    }
+
+    /// The current page budget (total fundable sequence-referenced pages).
+    pub fn page_budget(&self) -> usize {
+        self.page_budget
+    }
+
+    /// Would a fresh sequence of `prompt_len` tokens (plus one page of
+    /// decode headroom) fit right now? A point-in-time probe; the engine's
+    /// `admit_capacity` makes the stronger worst-case reservation.
+    pub fn fits(&self, prompt_len: usize) -> bool {
+        self.free_count() > 0
+            && pages_for(prompt_len) + 1 <= self.budget_headroom_pages()
+            && prompt_len < self.seq_max
+    }
+
+    /// Count a preemption (engine calls this when it evicts a sequence).
+    pub fn note_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Count a host-side KV restore copy. The paged engine never performs
+    /// one; the counter exists so tests can assert exactly that.
+    pub fn note_restore_copy(&mut self) {
+        self.restore_copies += 1;
+    }
+
+    /// Count claims force-released to reclaim a row.
+    pub fn note_claim_eviction(&mut self, n: usize) {
+        self.claim_evictions += n as u64;
+    }
+
+    // -- stats --------------------------------------------------------------
+
+    /// Point-in-time pool health + lifetime counters.
+    pub fn stats(&self) -> PoolStats {
+        let total = self.rows.len() * self.pages_per_row;
+        let pinned = self.claims.iter().filter(|&&c| c > 0).count();
+        // Free = neither sequence-referenced nor claimed.
+        let mut free = 0usize;
+        let mut committed_rows = 0usize;
+        for (r, s) in self.rows.iter().enumerate() {
+            let used_here = match s {
+                RowState::Occupied { len } => {
+                    committed_rows += len;
+                    pages_for(*len)
+                }
+                RowState::Free => 0,
+            };
+            let base = r * self.pages_per_row;
+            free += (0..self.pages_per_row)
+                .filter(|&k| k >= used_here && self.claims[base + k] == 0)
+                .count();
+        }
+        let cap_rows = self.used_pages * BLOCK_TOKENS;
+        PoolStats {
+            blocks_total: total,
+            blocks_used: self.used_pages,
+            blocks_pinned: pinned,
+            blocks_free: free,
+            page_budget: self.page_budget,
+            cow_shares: self.cow_shares,
+            fragmentation_pct: if cap_rows == 0 {
+                0.0
+            } else {
+                100.0 * (cap_rows - committed_rows) as f64 / cap_rows as f64
+            },
+            utilization: if self.page_budget == 0 {
+                0.0
+            } else {
+                self.used_pages as f64 / self.page_budget as f64
+            },
+            preemptions: self.preemptions,
+            restore_copies: self.restore_copies,
+            claim_evictions: self.claim_evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn alloc_free_cycle_and_row_reuse() {
+        let mut p = BlockPool::new(2, 128);
+        p.alloc_at(0, 10, 0).unwrap();
+        p.alloc_at(1, 20, 0).unwrap();
+        assert!(p.alloc_at(0, 5, 0).is_err(), "occupied row rejects alloc");
+        assert_eq!(p.occupancy(), 2);
+        assert_eq!(p.slot_len(0), Some(10));
+        p.free(0).unwrap();
+        assert!(p.free(0).is_err(), "double free rejected");
+        p.alloc_at(0, 1, 0).unwrap();
+        assert_eq!(p.occupancy(), 2);
+        assert_eq!(p.peak_occupancy, 2);
+        assert_eq!(p.total_allocs, 3);
+    }
+
+    #[test]
+    fn extend_overflow_rejected() {
+        let mut p = BlockPool::new(1, 32);
+        p.alloc_at(0, 30, 0).unwrap();
+        assert_eq!(p.extend(0, 2).unwrap(), 32);
+        assert!(p.extend(0, 1).is_err());
+    }
+
+    #[test]
+    fn page_accounting_tracks_block_boundaries() {
+        let mut p = BlockPool::new(1, 64);
+        p.alloc_at(0, 17, 0).unwrap(); // 2 pages
+        assert_eq!(p.stats().blocks_used, 2);
+        p.extend(0, 14).unwrap(); // 31 tokens, still 2 pages
+        assert_eq!(p.stats().blocks_used, 2);
+        p.extend(0, 2).unwrap(); // 33 tokens -> 3rd page crossed
+        assert_eq!(p.stats().blocks_used, 3);
+        p.free(0).unwrap();
+        assert_eq!(p.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn budget_binds_alloc_and_extend() {
+        let mut p = BlockPool::new(2, 64);
+        p.set_page_budget(3);
+        p.alloc_at(0, 32, 0).unwrap(); // 2 pages
+        assert!(p.alloc_at(1, 32, 0).is_err(), "2 + 2 > 3 must fail");
+        p.alloc_at(1, 16, 0).unwrap(); // 3rd page
+        assert!(p.extend(1, 1).is_err(), "crossing a page over budget must fail");
+        assert_eq!(p.budget_headroom_pages(), 0);
+        assert!(!p.fits(1));
+        p.free(0).unwrap();
+        assert!(p.fits(1));
+    }
+
+    #[test]
+    fn claims_pin_pages_against_cold_alloc() {
+        let mut p = BlockPool::new(1, 64);
+        p.alloc_at(0, 40, 0).unwrap();
+        let pages = p.claim_range(0, 0, 40).unwrap();
+        assert_eq!(pages, vec![0, 1, 2]);
+        p.free(0).unwrap();
+        // Claims survive the free; a cold alloc over them is rejected.
+        assert!(p.alloc_at(0, 20, 0).is_err());
+        // Adopting the claimed span is exactly what IS allowed.
+        p.alloc_at(0, 40, 40).unwrap();
+        assert_eq!(p.stats().cow_shares, 3);
+        p.free(0).unwrap();
+        for pg in pages {
+            p.release_page(pg).unwrap();
+        }
+        p.alloc_at(0, 20, 0).unwrap();
+    }
+
+    #[test]
+    fn decode_may_not_cross_a_claimed_page() {
+        let mut p = BlockPool::new(1, 64);
+        p.alloc_at(0, 16, 0).unwrap();
+        // A stale claim on page 2 (positions 32..48) blocks the crossing.
+        p.claim_page(p.page_id(0, 2)).unwrap();
+        p.extend(0, 16).unwrap(); // 32 tokens, page 1 fine
+        assert!(p.extend(0, 1).is_err(), "crossing into a claimed page must fail");
+        p.release_page(p.page_id(0, 2)).unwrap();
+        p.extend(0, 1).unwrap();
+    }
+
+    #[test]
+    fn release_underflow_is_an_error() {
+        let mut p = BlockPool::new(1, 32);
+        p.claim_page(0).unwrap();
+        p.release_page(0).unwrap();
+        assert!(p.release_page(0).is_err(), "claim refcount underflow");
+    }
+
+    #[test]
+    fn straddling_page_may_stay_claimed_through_adoption() {
+        let mut p = BlockPool::new(1, 64);
+        p.alloc_at(0, 24, 0).unwrap();
+        // Cache claims [0, 24): pages 0 and 1 (page 1 straddles 16..24).
+        p.claim_range(0, 0, 24).unwrap();
+        p.free(0).unwrap();
+        // Adopting 24 tokens re-occupies both pages; writing rows 24.. of
+        // page 1 is legal because claimed rows are all below 24.
+        p.alloc_at(0, 24, 24).unwrap();
+        p.extend(0, 6).unwrap(); // 30 tokens, same page
+        assert!(p.extend(0, 40).is_ok());
+    }
+
+    #[test]
+    fn stats_report_fragmentation_and_pinned() {
+        let mut p = BlockPool::new(2, 64);
+        p.alloc_at(0, 17, 0).unwrap(); // 2 pages for 17 rows: 15 wasted
+        p.claim_range(0, 0, 16).unwrap();
+        let st = p.stats();
+        assert_eq!(st.blocks_total, 8);
+        assert_eq!(st.blocks_used, 2);
+        assert_eq!(st.blocks_pinned, 1);
+        assert_eq!(st.blocks_free, 6);
+        assert!((st.fragmentation_pct - 100.0 * 15.0 / 32.0).abs() < 1e-9);
+        assert!((st.utilization - 2.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_row_least_claimed_prefers_cheap_reclaims() {
+        let mut p = BlockPool::new(3, 64);
+        p.claim_range(0, 0, 48).unwrap(); // row 0: 3 claimed pages
+        p.claim_range(2, 0, 16).unwrap(); // row 2: 1 claimed page
+        assert_eq!(p.free_row_least_claimed(), Some(1));
+        p.alloc_at(1, 8, 0).unwrap();
+        assert_eq!(p.free_row_least_claimed(), Some(2));
+    }
+
+    #[test]
+    fn prop_ledger_and_budget_invariants() {
+        prop::check("kvblocks-pool", 200, |rng| {
+            let n = rng.range(1, 5);
+            let smax = rng.range(2, 9) * BLOCK_TOKENS;
+            let budget = rng.range(1, n * smax / BLOCK_TOKENS + 1);
+            let mut pool = BlockPool::new(n, smax);
+            pool.set_page_budget(budget);
+            let mut live: Vec<(usize, usize)> = Vec::new(); // (row, len)
+            for _ in 0..rng.range(1, 60) {
+                match rng.below(3) {
+                    0 => {
+                        let row = rng.below(n);
+                        let len = rng.range(1, smax);
+                        let occupied = live.iter().any(|&(r, _)| r == row);
+                        match pool.alloc_at(row, len, 0) {
+                            Ok(()) => {
+                                prop_assert!(!occupied, "row {row} double-allocated");
+                                live.push((row, len));
+                            }
+                            Err(_) => {
+                                prop_assert!(
+                                    occupied
+                                        || pool.budget_headroom_pages() < pages_for(len),
+                                    "alloc failed with room available"
+                                );
+                            }
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let (r, _) = live.swap_remove(i);
+                            pool.free(r).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let (r, len) = live[i];
+                            let add = rng.range(0, 24);
+                            let crossed = pages_for(len + add) - pages_for(len);
+                            if len + add <= smax
+                                && crossed <= pool.budget_headroom_pages()
+                            {
+                                pool.extend(r, add).map_err(|e| e.to_string())?;
+                                live[i].1 += add;
+                            } else {
+                                prop_assert!(pool.extend(r, add).is_err(), "overflow allowed");
+                            }
+                        }
+                    }
+                }
+                let used: usize = live.iter().map(|&(_, l)| pages_for(l)).sum();
+                prop_assert_eq!(pool.stats().blocks_used, used);
+                prop_assert!(used <= budget, "page budget exceeded");
+                prop_assert_eq!(pool.occupancy(), live.len());
+                for &(r, len) in &live {
+                    prop_assert_eq!(pool.slot_len(r), Some(len));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_claim_refcounts_reach_zero_exactly_at_release() {
+        prop::check("kvblocks-claims", 200, |rng| {
+            let mut pool = BlockPool::new(2, 4 * BLOCK_TOKENS);
+            let total = 8usize;
+            let mut model = vec![0u32; total];
+            for _ in 0..rng.range(1, 80) {
+                let pg = rng.below(total);
+                if rng.f64() < 0.55 {
+                    pool.claim_page(pg).map_err(|e| e.to_string())?;
+                    model[pg] += 1;
+                } else if model[pg] > 0 {
+                    pool.release_page(pg).map_err(|e| e.to_string())?;
+                    model[pg] -= 1;
+                } else {
+                    prop_assert!(
+                        pool.release_page(pg).is_err(),
+                        "release below zero must error"
+                    );
+                }
+                for (p, &c) in model.iter().enumerate() {
+                    prop_assert_eq!(pool.page_claims(p), c);
+                }
+            }
+            // Drain everything; each page must hit zero exactly once.
+            for (p, c) in model.iter_mut().enumerate() {
+                while *c > 0 {
+                    pool.release_page(p).map_err(|e| e.to_string())?;
+                    *c -= 1;
+                }
+                prop_assert_eq!(pool.page_claims(p), 0);
+                prop_assert!(pool.release_page(p).is_err(), "double release");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_claimed_pages_never_handed_to_fresh_allocs() {
+        prop::check("kvblocks-pinned", 150, |rng| {
+            let smax = 4 * BLOCK_TOKENS;
+            let mut pool = BlockPool::new(1, smax);
+            let len = rng.range(1, smax);
+            pool.alloc_at(0, len, 0).map_err(|e| e.to_string())?;
+            let end = rng.range(1, len + 1);
+            let pages = pool.claim_range(0, 0, end).map_err(|e| e.to_string())?;
+            pool.free(0).map_err(|e| e.to_string())?;
+            // Cold alloc over any claimed page must fail (page 0 is always
+            // claimed here); adopting the claimed span must succeed.
+            let cold_len = rng.range(1, smax);
+            prop_assert!(
+                pool.alloc_at(0, cold_len, 0).is_err(),
+                "cold alloc over claimed pages must fail"
+            );
+            pool.alloc_at(0, end, end).map_err(|e| e.to_string())?;
+            pool.free(0).map_err(|e| e.to_string())?;
+            for pg in pages {
+                pool.release_page(pg).map_err(|e| e.to_string())?;
+            }
+            pool.alloc_at(0, smax - 1, 0).map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+}

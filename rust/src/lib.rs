@@ -5,8 +5,9 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request router,
-//!   continuous batcher, KV-cache slot manager ([`cache::SlotPool`] — the
-//!   single source of truth for slot occupancy/lengths), the prefix-reuse
+//!   continuous batcher, paged KV block allocator ([`kvblocks::BlockPool`]
+//!   — the single source of truth for KV memory: row occupancy, committed
+//!   lengths, page claims and the page budget), the prefix-reuse
 //!   KV cache ([`prefixcache`]), speculative decoding engine (tree draft →
 //!   packed verification → acceptance → commit), the paper's §4
 //!   decoding-tree search, workload generators and the bench harness.
@@ -26,23 +27,33 @@
 //! `{"op":"stats"}` request returning scheduler/engine/prefix-cache
 //! counters as a JSON frame.
 //!
-//! ## Prefix-reuse KV cache
+//! ## Paged KV + zero-copy prefix reuse
 //!
-//! Shared-prompt traffic (system prompts, few-shot preambles, multi-turn
-//! histories) is dominated by recomputing the same prefix through
-//! `prefill_*`. With [`engine::Engine::enable_prefix_cache`] (CLI:
-//! `--prefix-cache` / `--prefix-cache-mb` on `serve` and `generate`), the
-//! engine publishes committed prefixes — after cold prefills and when
-//! sequences retire — into a radix tree over token ids whose nodes own
-//! ref-counted host KV segments plus an end snapshot (last hidden, draft
-//! input state, root logits; Hydra++ `pkv` / EAGLE `ekv` rows ride
-//! along). Admission does longest-prefix lookup: a full-prompt hit
-//! restores rows by copy and skips `prefill_*` entirely when every new
-//! row hits; a partial hit restores the shared prefix and extends the
-//! tail through the chain-mode verify/commit path (long tails fall back
-//! to prefill). Eviction is LRU-with-byte-budget; nodes pinned by active
-//! slots are never dropped. Under greedy acceptance, warm-hit output is
-//! token-for-token identical to the cold path.
+//! KV memory is paged: [`kvblocks::BlockPool`] treats the batched cache
+//! tensor as a grid of [`kvblocks::BLOCK_TOKENS`]-sized pages (page =
+//! 16 token rows of one batch row) with a row ledger, per-page claim
+//! refcounts, and a configurable page budget. Shared-prompt traffic
+//! (system prompts, few-shot preambles, multi-turn histories) is
+//! dominated by recomputing the same prefix through `prefill_*`. With
+//! [`engine::Engine::enable_prefix_cache`] (CLI: `--prefix-cache` /
+//! `--prefix-cache-mb` on `serve` and `generate`), the engine publishes
+//! committed prefixes — after cold prefills, at retirement, and on
+//! preemption — into a radix tree over token ids whose nodes **claim the
+//! pages in place** (refcount bump, no slab copies) plus an end snapshot
+//! (last hidden, draft input state, root logits; Hydra++ `pkv` / EAGLE
+//! `ekv` rows ride along). Admission does longest-prefix lookup: a hit
+//! *adopts* the claimed pages in the cached row — zero host-side KV
+//! copies, asserted by the warm-hit e2e via the pool's `restore_copies`
+//! counter — skipping `prefill_*` entirely on a full hit and extending a
+//! partial hit's tail through the chain-mode verify/commit path. Long
+//! prompts and long tails prefill in budget-sized chunks interleaved
+//! with decode steps (continuous chunked prefill), and when the page
+//! budget is exhausted the scheduler preempts the youngest sequence
+//! (publish → free → requeue; warm resume) instead of refusing admits.
+//! Eviction is LRU-with-byte-budget; nodes pinned by active slots are
+//! never dropped. Under greedy acceptance, warm-hit, chunked, and
+//! preempted-resumed output is token-for-token identical to the cold
+//! uncontended path.
 //! ## Adaptive speculation
 //!
 //! A static draft tree charges every slot the worst-case speculation
@@ -115,6 +126,7 @@ pub mod model;
 pub mod runtime;
 pub mod tree;
 pub mod cache;
+pub mod kvblocks;
 pub mod prefixcache;
 pub mod adaptive;
 pub mod draft;

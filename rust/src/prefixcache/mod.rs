@@ -1,38 +1,53 @@
 //! Prefix-reuse KV cache: a radix tree over committed token-id prefixes
-//! whose nodes own ref-counted, length-tagged host KV segments.
+//! whose nodes **claim KV pages in place** via [`crate::kvblocks`].
 //!
 //! Shared-prompt serving (system prompts, few-shot preambles, multi-turn
 //! histories) recomputes the same prefix KVs over and over through
 //! `prefill_*` — the single most expensive artifact call in the loop.
-//! Because the engine keeps all KV state in a host-side batched cache
-//! tensor (`[B, L, 2, S, KVD]`), a prefix cache can snapshot committed
-//! rows on publish and restore them by memcpy at admission, without
-//! touching the AOT kernels.
+//! The engine keeps all KV state in a host-side batched cache tensor
+//! (`[B, L, 2, S, KVD]`) whose AOT kernels require each sequence's KV
+//! contiguous in its own batch row, so this cache does not copy rows out
+//! into a private arena. Instead each radix node records *where the data
+//! already is* — a batch `row`, a `start` position, and the claimed
+//! [`crate::kvblocks::BLOCK_TOKENS`]-sized pages covering its edge — and
+//! bumps the pool's per-page claim refcounts so those tensor bytes
+//! survive the sequence's retirement. A hit is **adopted**: admission
+//! places the new sequence in the claim's row and inherits the pages by
+//! refcount, with zero host-side KV copies (the pool's `restore_copies`
+//! counter exists to prove it).
 //!
 //! Layout per node:
 //! * `edge` — the token-id span this node covers (compressed radix edge);
-//! * `kv` — the base-model KV rows for those positions, `[L, 2, n, KVD]`
-//!   (contiguous per (layer, k/v) so restore is one `copy_from_slice`
-//!   per (layer, k/v) pair);
-//! * `extra` — the per-variant draft-state rows for the same positions
-//!   (`pkv` for Hydra++ prefix attention, `ekv` for EAGLE), `[2, n, KVD]`;
+//! * `row`/`start`/`pages` — the batch row holding the span's KV rows at
+//!   absolute positions `[start, start + edge.len())`, plus the claimed
+//!   page ids (a page straddling a split boundary is claimed by both
+//!   sides — the pool refcounts pages, nodes slice token rows);
 //! * `end` — an optional [`EndSnapshot`] (last hidden, draft input state,
 //!   root logits) valid when a published prefix ends exactly at this
-//!   node's last token. Full-prompt hits need it to skip prefill; KV-only
-//!   restores (partial hits) do not.
+//!   node's last token. Full-prompt hits need it to skip prefill.
 //!
-//! Eviction is LRU over unpinned leaves under a byte budget: only leaf
-//! nodes with `refs == 0` are evictable (evicting a leaf may expose its
-//! parent as the next candidate), a node pinned by an active slot — and,
-//! structurally, its whole ancestor path — is never dropped, and the
-//! accounted byte total never exceeds the budget: an insertion that
-//! cannot make room is rejected, not squeezed in. Pins are per node *id*:
-//! if a later insert splits a pinned edge, the pin stays with the head
-//! (prefix) part and the split-off tail becomes independently evictable —
-//! safe, because restores are by copy, so eviction can never corrupt an
-//! active slot; a pin is a residency hint, not a data dependency.
+//! In-place claims carry one structural consequence: all claims inside a
+//! batch row describe a single token history (the row's current tensor
+//! content). Adoption therefore evicts same-row claims past the match
+//! point (the adopter will rewrite those rows), a cold admission releases
+//! the target row's claims outright, and a cached chain that crosses
+//! rows (possible after divergent publishes from different rows) is only
+//! adoptable up to the first row switch. Cache capacity is the claim
+//! space of the `B × pages_per_row` grid — at batch 1 the cache holds
+//! exactly one history chain, which is precisely the multi-turn /
+//! resubmission case the warm-hit e2e exercises.
+//!
+//! Eviction is LRU over unpinned leaves under a byte budget (accounted
+//! in KV-row bytes the claims keep immortal): only leaf nodes with
+//! `refs == 0` are evictable, a node pinned by an active slot — and,
+//! structurally, its whole ancestor path — is never dropped, and an
+//! insertion that cannot make room is rejected, not squeezed in. Unlike
+//! the old copy-out design, a pin here *is* a data dependency: the
+//! pinned chain's pages back a live sequence's KV in its own row.
 
 use std::collections::BTreeMap;
+
+use crate::kvblocks::BlockPool;
 
 /// Stable identifier of a radix-tree node (index; ids are recycled only
 /// after eviction).
@@ -46,20 +61,23 @@ pub struct CacheStats {
     pub lookups: u64,
     /// Lookup matched the whole prompt at a snapshot point (prefill skipped).
     pub full_hits: u64,
-    /// Lookup restored a proper prefix; the tail went through chain-mode
+    /// Lookup adopted a proper prefix; the tail went through chain-mode
     /// verify/commit extension.
     pub partial_hits: u64,
-    /// Lookups that restored nothing.
+    /// Lookups that adopted nothing.
     pub misses: u64,
-    /// Segments inserted (publishes that stored new data).
+    /// Segments inserted (publishes that stored new claims).
     pub insertions: u64,
-    /// Leaf segments evicted to make room.
+    /// Nodes evicted (LRU room-making, stale-claim releases, row reclaims).
     pub evictions: u64,
     /// Insertions refused because the byte budget could not be met.
     pub rejected_inserts: u64,
-    /// Total committed tokens restored by copy instead of prefill.
+    /// Total committed tokens adopted in place instead of prefilled.
     pub tokens_reused: u64,
-    /// Accounted bytes currently held.
+    /// Hits degraded to misses because the claim's batch row was occupied
+    /// (or a stale same-row claim was pinned and could not be released).
+    pub row_conflicts: u64,
+    /// Accounted bytes currently held (KV rows kept immortal by claims).
     pub bytes_in_use: usize,
     /// The configured byte budget.
     pub byte_budget: usize,
@@ -90,19 +108,20 @@ impl EndSnapshot {
     }
 }
 
-/// An assembled restore: KV (and draft-state) rows for `matched` leading
-/// tokens of the queried prompt, plus the end snapshot when the match
-/// lands exactly on a published prefix end.
+/// A completed adoption: the leading `matched` prompt tokens are already
+/// resident in batch row `row` (claims pinned, stale deeper claims
+/// evicted), plus the end snapshot when the match lands exactly on a
+/// published prefix end. The caller must allocate `row` with
+/// `BlockPool::alloc_at(row, len, matched)` and unpin `node` when the
+/// sequence retires.
 #[derive(Debug, Clone)]
 pub struct RestoredPrefix {
-    /// Deepest node used by the restore — pin it for the slot's lifetime.
+    /// Deepest node of the adopted chain — pinned; unpin at retirement.
     pub node: NodeId,
-    /// Number of leading prompt tokens restored.
+    /// Number of leading prompt tokens adopted in place.
     pub matched: usize,
-    /// `[L, 2, matched, KVD]`.
-    pub kv: Vec<f32>,
-    /// `[2, matched, KVD]` when the cache carries draft-state rows.
-    pub extra: Option<Vec<f32>>,
+    /// The batch row whose pages back the adopted prefix.
+    pub row: usize,
     /// End snapshot when the match lands exactly on a published end
     /// (required to skip prefill outright).
     pub end: Option<EndSnapshot>,
@@ -118,6 +137,8 @@ pub const AFFINITY_PREFIX_MAX: usize = 64;
 /// down to a multiple of this block size, so prompts that diverge only
 /// inside the last partial block still map to one fingerprint (e.g. a
 /// shared 16-token system preamble followed by different user turns).
+/// Matches [`crate::kvblocks::BLOCK_TOKENS`], so routing affinity and
+/// physical page sharing agree on boundaries.
 pub const AFFINITY_PREFIX_BLOCK: usize = 16;
 
 /// Stable 64-bit fingerprint of a prompt's leading tokens — the
@@ -148,35 +169,41 @@ pub fn prefix_fingerprint(tokens: &[u32]) -> u64 {
 #[derive(Debug)]
 struct Node {
     edge: Vec<u32>,
-    /// `[L, 2, n, KVD]`, n == edge.len(). Empty for the root.
-    kv: Vec<f32>,
-    /// `[2, n, KVD]`.
-    extra: Option<Vec<f32>>,
+    /// Batch row holding this span's KV rows (usize::MAX for the root).
+    row: usize,
+    /// Absolute token position where this span begins in `row`.
+    start: usize,
+    /// Claimed page ids covering `[start, start + edge.len())` of `row`.
+    pages: Vec<usize>,
     end: Option<EndSnapshot>,
     children: BTreeMap<u32, NodeId>,
     parent: NodeId,
-    /// Pin count — segments referenced by active slots are never evicted.
+    /// Pin count — claims referenced by active slots are never evicted.
     refs: usize,
     last_used: u64,
     live: bool,
 }
 
 impl Node {
-    fn bytes(&self) -> usize {
+    fn bytes(&self, token_bytes: usize) -> usize {
         self.edge.len() * 4
-            + self.kv.len() * 4
-            + self.extra.as_ref().map_or(0, |e| e.len() * 4)
+            + self.edge.len() * token_bytes
             + self.end.as_ref().map_or(0, |e| e.bytes())
+    }
+
+    /// Absolute token position one past this span's end.
+    fn span_end(&self) -> usize {
+        self.start + self.edge.len()
     }
 }
 
 /// The prefix-reuse KV cache: a radix tree over committed token-id
-/// prefixes whose nodes own ref-counted host KV segments (see the
-/// module docs for layout and eviction policy).
+/// prefixes whose nodes claim pool pages in place (see the module docs
+/// for layout, adoption, and eviction policy).
 pub struct PrefixCache {
     nodes: Vec<Node>,
     free: Vec<NodeId>,
-    /// KV geometry: layers, kv_dim, whether draft-state rows are carried.
+    /// KV geometry: layers, kv_dim, whether draft-state rows ride along.
     l: usize,
     kvd: usize,
     has_extra: bool,
@@ -190,13 +217,15 @@ const ROOT: NodeId = 0;
 
 impl PrefixCache {
     /// An empty cache with the given byte budget and KV geometry
-    /// (`has_extra`: carry per-variant draft-state rows alongside).
+    /// (`has_extra`: per-variant draft-state rows ride along in the pool,
+    /// so claimed tokens are accounted at the larger row cost).
     pub fn new(byte_budget: usize, n_layers: usize, kv_dim: usize, has_extra: bool) -> PrefixCache {
         PrefixCache {
             nodes: vec![Node {
                 edge: Vec::new(),
-                kv: Vec::new(),
-                extra: None,
+                row: usize::MAX,
+                start: 0,
+                pages: Vec::new(),
                 end: None,
                 children: BTreeMap::new(),
                 parent: ROOT,
@@ -213,6 +242,12 @@ impl PrefixCache {
             clock: 0,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Accounted bytes per claimed token row (base KV across layers plus
+    /// the variant's draft-state rows when carried).
+    fn token_bytes(&self) -> usize {
+        (self.l * 2 * self.kvd + if self.has_extra { 2 * self.kvd } else { 0 }) * 4
     }
 
     /// Counter snapshot (with current byte/node/pin gauges).
@@ -290,28 +325,56 @@ impl PrefixCache {
         (path, matched)
     }
 
-    /// Longest-prefix lookup for an admission prompt. `max_tail` bounds
-    /// how many unmatched tail tokens the caller is willing to extend
-    /// through chain-mode verify/commit (0 = full hits only). When the
-    /// whole prompt matches but no [`EndSnapshot`] exists at that exact
-    /// point, the match backs off one token so the caller has a non-empty
-    /// tail to recover the root distribution from.
-    pub fn lookup(&mut self, tokens: &[u32], max_tail: usize) -> Option<RestoredPrefix> {
+    /// Longest-prefix **adoption** for an admission prompt: find the
+    /// longest usable cached prefix, make its end a node boundary
+    /// (splitting the edge if needed), evict stale same-row claims past
+    /// the match point, pin the boundary node, and hand back the row the
+    /// caller must allocate with `alloc_at(row, len, matched)`. No KV
+    /// bytes move.
+    ///
+    /// `max_tail` bounds how many unmatched tail tokens the caller is
+    /// willing to extend through chain-mode verify/commit (0 = full hits
+    /// only). A match is truncated at the first row switch in the chain
+    /// (adoption needs one contiguous batch row), degrades to a miss when
+    /// that row is occupied, and — when the whole prompt matches without
+    /// an [`EndSnapshot`] at that exact point — backs off one token so
+    /// the caller has a non-empty tail to recover the root distribution
+    /// from.
+    pub fn adopt(
+        &mut self,
+        pool: &mut BlockPool,
+        tokens: &[u32],
+        max_tail: usize,
+    ) -> Option<RestoredPrefix> {
         self.stats.lookups += 1;
         let (path, mut matched) = self.walk(tokens);
-        let end_at = |cache: &PrefixCache, path: &[(NodeId, usize)], m: usize| -> Option<EndSnapshot> {
-            let &(node, taken) = path.last()?;
-            let n = &cache.nodes[node];
-            if m > 0 && taken == n.edge.len() {
-                n.end.clone()
-            } else {
-                None
+
+        // The adopted chain must live in one batch row: truncate the
+        // usable match at the first row switch.
+        let mut usable = 0usize;
+        let mut row: Option<usize> = None;
+        for &(node, taken) in &path {
+            let nrow = self.nodes[node].row;
+            match row {
+                None => row = Some(nrow),
+                Some(r) if r != nrow => break,
+                _ => {}
             }
+            usable += taken;
+        }
+        matched = matched.min(usable);
+
+        let end_at = |cache: &PrefixCache, m: usize| -> Option<EndSnapshot> {
+            let (p, got) = cache.walk(&tokens[..m]);
+            debug_assert_eq!(got, m);
+            let &(node, taken) = p.last()?;
+            let n = &cache.nodes[node];
+            (taken == n.edge.len()).then(|| n.end.clone()).flatten()
         };
-        let mut end = end_at(self, &path, matched);
-        if matched == tokens.len() && end.is_none() {
+        let mut end = if matched > 0 { end_at(self, matched) } else { None };
+        if matched == tokens.len() && end.is_none() && matched > 0 {
             // Full textual match without a snapshot (e.g. the prompt ends
-            // mid-edge of a longer published sequence): restore one token
+            // mid-edge of a longer published sequence): adopt one token
             // less and chain-verify the last prompt token as the tail.
             matched -= 1;
             end = None;
@@ -325,46 +388,67 @@ impl PrefixCache {
             self.stats.misses += 1;
             return None;
         }
-
-        // Assemble [L, 2, matched, KVD] (+ extra [2, matched, KVD]) from
-        // the path segments; trim the last segment to the matched span.
-        // The caller copies this transient slab into its batched tensor —
-        // one extra pass of memory traffic, accepted so the cache never
-        // hands out references into its arena (evictions stay trivially
-        // safe and the engine-side borrow story stays field-local).
-        let (l, kvd) = (self.l, self.kvd);
-        let mut kv = vec![0f32; l * 2 * matched * kvd];
-        let mut extra = self.has_extra.then(|| vec![0f32; 2 * matched * kvd]);
-        let mut start = 0usize;
-        let mut deepest = ROOT;
-        let now = self.tick();
-        for &(node, taken) in &path {
-            let take = taken.min(matched - start);
-            if take == 0 {
-                break;
-            }
-            let n = &self.nodes[node];
-            let nn = n.edge.len();
-            for li in 0..l {
-                for c in 0..2 {
-                    let src = ((li * 2 + c) * nn) * kvd;
-                    let dst = ((li * 2 + c) * matched + start) * kvd;
-                    kv[dst..dst + take * kvd].copy_from_slice(&n.kv[src..src + take * kvd]);
-                }
-            }
-            if let (Some(out), Some(src_extra)) = (extra.as_mut(), n.extra.as_ref()) {
-                for c in 0..2 {
-                    let src = (c * nn) * kvd;
-                    let dst = (c * matched + start) * kvd;
-                    out[dst..dst + take * kvd]
-                        .copy_from_slice(&src_extra[src..src + take * kvd]);
-                }
-            }
-            deepest = node;
-            start += take;
-            self.nodes[node].last_used = now;
+        let row = row.unwrap_or(usize::MAX);
+        if pool.slot_len(row).is_some() {
+            // The claim's row is serving another sequence right now.
+            self.stats.row_conflicts += 1;
+            self.stats.misses += 1;
+            return None;
         }
-        debug_assert_eq!(start, matched);
+
+        // Stale same-row claims past the match point must be releasable:
+        // the adopter will rewrite those token rows. A pinned one (should
+        // be impossible — pins come from live adopters, and this row is
+        // vacant) degrades the hit to a miss rather than corrupting it.
+        let stale: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, n)| i != ROOT && n.live && n.row == row && n.span_end() > matched)
+            .map(|(i, _)| i)
+            .collect();
+        if stale.iter().any(|&id| self.subtree_has_pins(id)) {
+            self.stats.row_conflicts += 1;
+            self.stats.misses += 1;
+            return None;
+        }
+
+        // Make the match boundary a node boundary so the adopted chain
+        // ends exactly at `matched` (byte-neutral split).
+        let (bpath, got) = self.walk(&tokens[..matched]);
+        debug_assert_eq!(got, matched);
+        let &(bnode, taken) = bpath.last()?;
+        let bnode = if taken < self.nodes[bnode].edge.len() {
+            self.split(pool, bnode, taken)
+        } else {
+            bnode
+        };
+
+        // Release the stale claims (the boundary split may have created a
+        // tail node that is itself stale now — rescan).
+        let mut released = 0usize;
+        let stale: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, n)| i != ROOT && n.live && n.row == row && n.span_end() > matched)
+            .map(|(i, _)| i)
+            .collect();
+        for id in stale {
+            if self.nodes[id].live {
+                released += self.evict_subtree(pool, id);
+            }
+        }
+        pool.note_claim_eviction(released);
+
+        // Touch the adopted chain for LRU and pin the boundary.
+        let now = self.tick();
+        for &(node, _) in &bpath {
+            if self.nodes[node].live {
+                self.nodes[node].last_used = now;
+            }
+        }
+        self.pin(bnode);
 
         if tail == 0 {
             self.stats.full_hits += 1;
@@ -372,34 +456,32 @@ impl PrefixCache {
             self.stats.partial_hits += 1;
         }
         self.stats.tokens_reused += matched as u64;
-        Some(RestoredPrefix { node: deepest, matched, kv, extra, end })
+        Some(RestoredPrefix { node: bnode, matched, row, end })
     }
 
-    /// Publish a committed prefix: `tokens` with its KV slab
-    /// `[L, 2, P, KVD]`, optional draft-state slab `[2, P, KVD]`, and the
-    /// end snapshot. Shared leading segments are deduplicated against the
-    /// existing tree; only the unseen suffix (plus the snapshot) costs
-    /// bytes. Returns false when the byte budget could not be met.
+    /// Publish a committed prefix: `tokens` whose KV rows live at
+    /// positions `[0, tokens.len())` of pool row `row`. Shared leading
+    /// segments are deduplicated against the existing tree; only the
+    /// unseen suffix claims pages (plus the snapshot bytes). Returns
+    /// false when the byte budget could not be met.
     pub fn insert(
         &mut self,
+        pool: &mut BlockPool,
         tokens: &[u32],
-        kv_slab: &[f32],
-        extra_slab: Option<&[f32]>,
+        row: usize,
         end: EndSnapshot,
     ) -> bool {
         let p = tokens.len();
         if p == 0 {
             return false;
         }
-        debug_assert_eq!(kv_slab.len(), self.l * 2 * p * self.kvd);
         let (path, matched) = self.walk(tokens);
 
-        // Cost of what this insert will add: the new suffix segment plus
+        // Cost of what this insert will add: the new suffix claim plus
         // the snapshot (an existing snapshot at the same point is
         // replaced, so its bytes come back).
         let suffix = p - matched;
-        let seg_bytes = suffix * 4 + (self.l * 2 * suffix * self.kvd) * 4
-            + extra_slab.map_or(0, |_| (2 * suffix * self.kvd) * 4);
+        let seg_bytes = suffix * 4 + suffix * self.token_bytes();
         let replaced_end = match path.last() {
             Some(&(node, taken)) if matched == p && taken == self.nodes[node].edge.len() => {
                 self.nodes[node].end.as_ref().map_or(0, |e| e.bytes())
@@ -413,7 +495,7 @@ impl PrefixCache {
         if let Some(a) = anchor {
             self.pin(a);
         }
-        let fits = self.make_room(added);
+        let fits = self.make_room(pool, added);
         if let Some(a) = anchor {
             self.unpin(a);
         }
@@ -429,7 +511,7 @@ impl PrefixCache {
             Some(&(node, taken)) => {
                 if taken < self.nodes[node].edge.len() {
                     // The match ends mid-edge: split so the boundary is a node.
-                    self.split(node, taken)
+                    self.split(pool, node, taken)
                 } else {
                     node
                 }
@@ -444,30 +526,17 @@ impl PrefixCache {
             self.nodes[attach].end = Some(end);
             self.nodes[attach].last_used = now;
         } else {
-            // Append one compressed node carrying the whole unseen suffix.
-            let (l, kvd) = (self.l, self.kvd);
-            let mut kv = vec![0f32; l * 2 * suffix * kvd];
-            for li in 0..l {
-                for c in 0..2 {
-                    let src = ((li * 2 + c) * p + matched) * kvd;
-                    let dst = ((li * 2 + c) * suffix) * kvd;
-                    kv[dst..dst + suffix * kvd]
-                        .copy_from_slice(&kv_slab[src..src + suffix * kvd]);
-                }
-            }
-            let extra = extra_slab.map(|es| {
-                let mut e = vec![0f32; 2 * suffix * kvd];
-                for c in 0..2 {
-                    let src = (c * p + matched) * kvd;
-                    let dst = (c * suffix) * kvd;
-                    e[dst..dst + suffix * kvd].copy_from_slice(&es[src..src + suffix * kvd]);
-                }
-                e
-            });
+            // Append one compressed node claiming the whole unseen suffix
+            // in place in `row`.
+            let Ok(pages) = pool.claim_range(row, matched, p) else {
+                self.stats.rejected_inserts += 1;
+                return false;
+            };
             let child = self.alloc_node(Node {
                 edge: tokens[matched..].to_vec(),
-                kv,
-                extra,
+                row,
+                start: matched,
+                pages,
                 end: Some(end),
                 children: BTreeMap::new(),
                 parent: attach,
@@ -475,13 +544,65 @@ impl PrefixCache {
                 last_used: now,
                 live: true,
             });
-            let child_bytes = self.nodes[child].bytes();
+            let child_bytes = self.nodes[child].bytes(self.token_bytes());
             self.bytes_in_use += child_bytes;
             self.nodes[attach].children.insert(tokens[matched], child);
         }
         self.stats.insertions += 1;
         debug_assert!(self.bytes_in_use <= self.byte_budget);
         true
+    }
+
+    /// Release every claim in `row` covering token positions at or past
+    /// `from` (0 reclaims the whole row for a cold allocation), evicting
+    /// the claiming nodes and their subtrees. Returns true when the span
+    /// is fully clear afterwards — false only if a pinned claim survived
+    /// (the caller must then pick another row).
+    pub fn release_row(&mut self, pool: &mut BlockPool, row: usize, from: usize) -> bool {
+        let stale: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(i, n)| i != ROOT && n.live && n.row == row && n.span_end() > from)
+            .map(|(i, _)| i)
+            .collect();
+        let mut clear = true;
+        let mut released = 0usize;
+        for id in stale {
+            if !self.nodes[id].live {
+                continue;
+            }
+            if self.subtree_has_pins(id) {
+                clear = false;
+                continue;
+            }
+            released += self.evict_subtree(pool, id);
+        }
+        pool.note_claim_eviction(released);
+        clear
+    }
+
+    fn subtree_has_pins(&self, id: NodeId) -> bool {
+        if self.nodes[id].refs > 0 {
+            return true;
+        }
+        self.nodes[id]
+            .children
+            .values()
+            .any(|&c| self.subtree_has_pins(c))
+    }
+
+    /// Evict `id` and every descendant (children first), releasing their
+    /// page claims. Returns the number of page claims released.
+    fn evict_subtree(&mut self, pool: &mut BlockPool, id: NodeId) -> usize {
+        let kids: Vec<NodeId> = self.nodes[id].children.values().copied().collect();
+        let mut released = 0usize;
+        for k in kids {
+            released += self.evict_subtree(pool, k);
+        }
+        released += self.nodes[id].pages.len();
+        self.evict(pool, id);
+        released
     }
 
     fn alloc_node(&mut self, node: Node) -> NodeId {
@@ -499,49 +620,37 @@ impl PrefixCache {
 
     /// Split `node`'s edge at `k` (0 < k < edge.len()): the node keeps the
     /// first `k` tokens (and any pins), a new child inherits the rest of
-    /// the edge, segment rows, snapshot, and children. Byte-neutral.
-    fn split(&mut self, node: NodeId, k: usize) -> NodeId {
-        let (l, kvd) = (self.l, self.kvd);
+    /// the edge, claims, snapshot, and children. A page straddling the
+    /// split boundary ends up claimed by both sides (refcount bump).
+    /// Byte-neutral.
+    fn split(&mut self, pool: &mut BlockPool, node: NodeId, k: usize) -> NodeId {
+        use crate::kvblocks::BLOCK_TOKENS;
         let n_len = self.nodes[node].edge.len();
         debug_assert!(k > 0 && k < n_len);
-        let tail_len = n_len - k;
+        let start = self.nodes[node].start;
+        let row = self.nodes[node].row;
         let tail_edge = self.nodes[node].edge.split_off(k);
-        let old_kv = std::mem::take(&mut self.nodes[node].kv);
-        let mut head_kv = vec![0f32; l * 2 * k * kvd];
-        let mut tail_kv = vec![0f32; l * 2 * tail_len * kvd];
-        for li in 0..l {
-            for c in 0..2 {
-                let src = ((li * 2 + c) * n_len) * kvd;
-                let hd = ((li * 2 + c) * k) * kvd;
-                let td = ((li * 2 + c) * tail_len) * kvd;
-                head_kv[hd..hd + k * kvd].copy_from_slice(&old_kv[src..src + k * kvd]);
-                tail_kv[td..td + tail_len * kvd]
-                    .copy_from_slice(&old_kv[src + k * kvd..src + n_len * kvd]);
-            }
+        let old_pages = std::mem::take(&mut self.nodes[node].pages);
+        // Head covers [start, start+k), tail covers [start+k, start+n).
+        let first_page = start / BLOCK_TOKENS;
+        let head_last = (start + k - 1) / BLOCK_TOKENS;
+        let tail_first = (start + k) / BLOCK_TOKENS;
+        let head_pages: Vec<usize> = old_pages[..head_last - first_page + 1].to_vec();
+        let tail_pages: Vec<usize> = old_pages[tail_first - first_page..].to_vec();
+        if tail_first == head_last {
+            // The boundary page backs both sides: each owns one release.
+            let r = pool.claim_page(old_pages[head_last - first_page]);
+            debug_assert!(r.is_ok());
         }
-        let (head_extra, tail_extra) = match self.nodes[node].extra.take() {
-            None => (None, None),
-            Some(old) => {
-                let mut he = vec![0f32; 2 * k * kvd];
-                let mut te = vec![0f32; 2 * tail_len * kvd];
-                for c in 0..2 {
-                    let src = (c * n_len) * kvd;
-                    he[(c * k) * kvd..(c * k + k) * kvd]
-                        .copy_from_slice(&old[src..src + k * kvd]);
-                    te[(c * tail_len) * kvd..(c * tail_len + tail_len) * kvd]
-                        .copy_from_slice(&old[src + k * kvd..src + n_len * kvd]);
-                }
-                (Some(he), Some(te))
-            }
-        };
         let end = self.nodes[node].end.take();
         let children = std::mem::take(&mut self.nodes[node].children);
         let last_used = self.nodes[node].last_used;
         let first = tail_edge[0];
         let child = self.alloc_node(Node {
             edge: tail_edge,
-            kv: tail_kv,
-            extra: tail_extra,
+            row,
+            start: start + k,
+            pages: tail_pages,
             end,
             children,
             parent: node,
@@ -552,8 +661,7 @@ impl PrefixCache {
         for (_, &grand) in self.nodes[child].children.clone().iter() {
             self.nodes[grand].parent = child;
         }
-        self.nodes[node].kv = head_kv;
-        self.nodes[node].extra = head_extra;
+        self.nodes[node].pages = head_pages;
         self.nodes[node].children.insert(first, child);
         node_split_debug_assert(&self.nodes[node], &self.nodes[child]);
         node
@@ -562,7 +670,7 @@ impl PrefixCache {
     /// Evict LRU unpinned leaves until `needed` more bytes fit under the
     /// budget. Returns false (leaving the cache unchanged beyond the
     /// evictions already performed) when the budget cannot be met.
-    fn make_room(&mut self, needed: usize) -> bool {
+    fn make_room(&mut self, pool: &mut BlockPool, needed: usize) -> bool {
         if needed > self.byte_budget {
             return false;
         }
@@ -577,23 +685,26 @@ impl PrefixCache {
                 .min_by_key(|&(_, n)| n.last_used)
                 .map(|(i, _)| i);
             let Some(v) = victim else { return false };
-            self.evict(v);
+            self.evict(pool, v);
         }
         true
     }
 
-    fn evict(&mut self, id: NodeId) {
+    fn evict(&mut self, pool: &mut BlockPool, id: NodeId) {
         debug_assert!(id != ROOT && self.nodes[id].live);
-        let bytes = self.nodes[id].bytes();
+        let bytes = self.nodes[id].bytes(self.token_bytes());
         let parent = self.nodes[id].parent;
         let first = self.nodes[id].edge[0];
         self.nodes[parent].children.remove(&first);
         self.bytes_in_use -= bytes;
+        let pages = std::mem::take(&mut self.nodes[id].pages);
+        for pg in pages {
+            let r = pool.release_page(pg);
+            debug_assert!(r.is_ok(), "claim release underflow on page {pg}");
+        }
         let n = &mut self.nodes[id];
         n.live = false;
         n.edge.clear();
-        n.kv.clear();
-        n.extra = None;
         n.end = None;
         n.children.clear();
         self.free.push(id);
@@ -612,8 +723,8 @@ impl PrefixCache {
 
     /// Whole prefix already resident with an end snapshot at its exact
     /// end — a publish of `tokens` would store nothing new beyond
-    /// refreshing the snapshot. Lets publishers skip slab assembly for
-    /// repeated traffic (the retirement hot path).
+    /// refreshing the snapshot. Lets publishers skip the walk-and-claim
+    /// for repeated traffic (the retirement hot path).
     pub fn is_resident(&self, tokens: &[u32]) -> bool {
         let (path, matched) = self.walk(tokens);
         if matched != tokens.len() || matched == 0 {
@@ -632,36 +743,20 @@ impl PrefixCache {
 #[inline]
 fn node_split_debug_assert(head: &Node, tail: &Node) {
     debug_assert!(!head.edge.is_empty() && !tail.edge.is_empty());
+    debug_assert_eq!(head.span_end(), tail.start);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvblocks::BLOCK_TOKENS;
     use crate::util::prop;
     use crate::util::rng::Pcg32;
     use crate::{prop_assert, prop_assert_eq};
 
     const L: usize = 2;
     const KVD: usize = 3;
-
-    /// Deterministic fake KV slab for a token sequence: position `p`
-    /// carrying token `t` gets value `t as f32 + p as f32 / 100.0` in
-    /// every (layer, k/v, kvd) cell — so restores are checkable.
-    fn slab(tokens: &[u32]) -> Vec<f32> {
-        let p = tokens.len();
-        let mut s = vec![0f32; L * 2 * p * KVD];
-        for li in 0..L {
-            for c in 0..2 {
-                for (pos, &t) in tokens.iter().enumerate() {
-                    for x in 0..KVD {
-                        s[(((li * 2 + c) * p) + pos) * KVD + x] =
-                            t as f32 + pos as f32 / 100.0 + li as f32 * 1000.0 + c as f32 * 500.0;
-                    }
-                }
-            }
-        }
-        s
-    }
+    const SMAX: usize = 8 * BLOCK_TOKENS;
 
     fn snap(tag: f32) -> EndSnapshot {
         EndSnapshot {
@@ -675,227 +770,333 @@ mod tests {
         PrefixCache::new(budget, L, KVD, false)
     }
 
+    fn pool(rows: usize) -> BlockPool {
+        BlockPool::new(rows, SMAX)
+    }
+
+    /// Publish `tokens` as a retired sequence of pool row `row` (alloc,
+    /// insert-in-place, free — what the engine's publish path does).
+    fn publish(pc: &mut PrefixCache, pool: &mut BlockPool, tokens: &[u32], row: usize) -> bool {
+        pc.insert(pool, tokens, row, snap(tokens.len() as f32))
+    }
+
+    /// Total claims currently held across the pool grid.
+    fn total_claims(pool: &BlockPool) -> u64 {
+        (0..pool.len() * pool.pages_per_row())
+            .map(|p| pool.page_claims(p) as u64)
+            .sum()
+    }
+
     #[test]
-    fn insert_then_full_hit_roundtrip() {
+    fn insert_then_full_hit_adopts_in_place() {
         let mut pc = cache(1 << 20);
+        let mut bp = pool(1);
         let toks = vec![5, 6, 7, 8];
-        assert!(pc.insert(&toks, &slab(&toks), None, snap(1.0)));
-        let r = pc.lookup(&toks, 8).expect("hit");
-        assert_eq!(r.matched, 4);
+        assert!(publish(&mut pc, &mut bp, &toks, 0));
+        assert_eq!(bp.page_claims(0), 1, "suffix claims page 0 in place");
+        let r = pc.adopt(&mut bp, &toks, 8).expect("hit");
+        assert_eq!((r.matched, r.row), (4, 0));
         assert!(r.end.is_some());
-        assert_eq!(r.kv, slab(&toks));
+        // The engine now allocates the row, adopting the claimed span.
+        bp.alloc_at(r.row, r.matched, r.matched).unwrap();
+        assert_eq!(bp.stats().cow_shares, 1);
+        assert_eq!(bp.stats().restore_copies, 0, "zero host-side copies");
         let st = pc.stats();
         assert_eq!(st.full_hits, 1);
         assert_eq!(st.tokens_reused, 4);
     }
 
     #[test]
-    fn partial_hit_restores_shared_prefix_only() {
+    fn partial_hit_splits_and_releases_the_stale_tail() {
         let mut pc = cache(1 << 20);
+        let mut bp = pool(1);
         let a = vec![1, 2, 3, 4];
-        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
-        // Query diverges after 2 tokens.
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        // Query diverges after 2 tokens: the edge splits at the boundary
+        // and the stale tail claim (positions 2..4 of row 0, which the
+        // adopter will rewrite) is evicted.
         let q = vec![1, 2, 9, 9, 9];
-        let r = pc.lookup(&q, 8).expect("partial hit");
-        assert_eq!(r.matched, 2);
+        let r = pc.adopt(&mut bp, &q, 8).expect("partial hit");
+        assert_eq!((r.matched, r.row), (2, 0));
         assert!(r.end.is_none());
-        assert_eq!(r.kv, {
-            let full = slab(&a);
-            // positions 0..2 of each (l, c) chunk
-            let mut out = vec![0f32; L * 2 * 2 * KVD];
-            for li in 0..L {
-                for c in 0..2 {
-                    let src = ((li * 2 + c) * 4) * KVD;
-                    let dst = ((li * 2 + c) * 2) * KVD;
-                    out[dst..dst + 2 * KVD].copy_from_slice(&full[src..src + 2 * KVD]);
-                }
-            }
-            out
-        });
+        assert_eq!(
+            bp.page_claims(0),
+            1,
+            "head claim survives; split-share and stale tail released"
+        );
         assert_eq!(pc.stats().partial_hits, 1);
+        assert!(pc.stats().evictions >= 1, "stale tail was evicted");
+        assert_eq!(pc.peek_match(&a), 2, "only the adopted head remains");
     }
 
     #[test]
     fn full_text_match_without_snapshot_backs_off_one_token() {
         let mut pc = cache(1 << 20);
+        let mut bp = pool(1);
         let long = vec![1, 2, 3, 4, 5, 6];
-        assert!(pc.insert(&long, &slab(&long), None, snap(1.0)));
+        assert!(publish(&mut pc, &mut bp, &long, 0));
         // Query is a strict prefix ending mid-edge: no snapshot there.
         let q = vec![1, 2, 3, 4];
         assert!(pc.is_resident(&long) && !pc.is_resident(&q));
-        let r = pc.lookup(&q, 8).expect("hit");
+        let r = pc.adopt(&mut bp, &q, 8).expect("hit");
         assert_eq!(r.matched, 3, "backed off one token for the tail root");
         assert!(r.end.is_none());
-        // Publishing the short prefix splits the edge and attaches an end.
-        assert!(pc.insert(&q, &slab(&q), None, snap(2.0)));
-        assert!(pc.is_resident(&q), "split point now carries a snapshot");
-        let r2 = pc.lookup(&q, 8).expect("hit");
+        // Adoption reclaimed positions 3.. for the new occupant; the
+        // sequence decodes, retires at the same tokens, and republishes
+        // with a snapshot at the split point.
+        bp.alloc_at(0, 3, 3).unwrap();
+        bp.extend(0, 1).unwrap();
+        assert!(publish(&mut pc, &mut bp, &q, 0));
+        bp.free(0).unwrap();
+        pc.unpin(r.node);
+        assert!(pc.is_resident(&q), "republish attached a snapshot");
+        let r2 = pc.adopt(&mut bp, &q, 8).expect("hit");
         assert_eq!(r2.matched, 4);
-        let e = r2.end.expect("snapshot at split point");
-        assert_eq!(e.h_last, vec![2.0; 4]);
-        // The longer entry still restores fully through the split.
-        let r3 = pc.lookup(&long, 8).expect("hit");
-        assert_eq!(r3.matched, 6);
-        assert_eq!(r3.kv, slab(&long));
+        let e = r2.end.expect("snapshot at prefix end");
+        assert_eq!(e.h_last, vec![4.0; 4]);
     }
 
     #[test]
-    fn divergent_insert_splits_edge_and_both_restore() {
+    fn cross_row_chains_truncate_at_the_row_switch() {
         let mut pc = cache(1 << 20);
+        let mut bp = pool(2);
         let a = vec![1, 2, 3, 4];
         let b = vec![1, 2, 8, 9];
-        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
-        assert!(pc.insert(&b, &slab(&b), None, snap(2.0)));
-        let ra = pc.lookup(&a, 8).unwrap();
-        assert_eq!((ra.matched, ra.kv), (4, slab(&a)));
-        let rb = pc.lookup(&b, 8).unwrap();
-        assert_eq!((rb.matched, rb.kv), (4, slab(&b)));
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        // b was served in row 1; its publish splits a's edge and attaches
+        // the divergent suffix as a row-1 claim.
+        assert!(publish(&mut pc, &mut bp, &b, 1));
+        // a adopts fully: its whole chain lives in row 0.
+        let ra = pc.adopt(&mut bp, &a, 8).expect("hit");
+        assert_eq!((ra.matched, ra.row), (4, 0));
+        pc.unpin(ra.node);
+        // b's chain is row 0 for [1,2] then row 1 for [8,9]: adoption
+        // truncates at the row switch and degrades to a partial hit.
+        let rb = pc.adopt(&mut bp, &b, 8).expect("partial hit");
+        assert_eq!((rb.matched, rb.row), (2, 0));
+        assert!(rb.end.is_none());
+        pc.unpin(rb.node);
     }
 
     #[test]
-    fn extra_rows_travel_with_segments() {
-        let mut pc = PrefixCache::new(1 << 20, L, KVD, true);
-        let toks = vec![3, 1, 4];
-        let extra: Vec<f32> = (0..2 * 3 * KVD).map(|x| x as f32).collect();
-        assert!(pc.insert(&toks, &slab(&toks), Some(&extra), snap(1.0)));
-        let r = pc.lookup(&toks, 8).unwrap();
-        assert_eq!(r.extra.as_deref(), Some(&extra[..]));
+    fn occupied_row_degrades_hit_to_miss() {
+        let mut pc = cache(1 << 20);
+        let mut bp = pool(2);
+        let a = vec![1, 2, 3, 4];
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        // Another sequence occupies row 0 (an adopter took it): the claim
+        // is unusable until the row frees up again.
+        bp.alloc_at(0, 4, 4).unwrap();
+        assert!(pc.adopt(&mut bp, &a, 8).is_none());
+        assert_eq!(pc.stats().row_conflicts, 1);
+        bp.free(0).unwrap();
+        assert!(pc.adopt(&mut bp, &a, 8).is_some(), "row free again -> hit");
     }
 
     #[test]
     fn max_tail_zero_means_full_hits_only() {
         let mut pc = cache(1 << 20);
+        let mut bp = pool(1);
         let a = vec![1, 2, 3, 4];
-        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
-        assert!(pc.lookup(&[1, 2, 3, 4, 5], 0).is_none(), "tail of 1 > max_tail 0");
-        assert!(pc.lookup(&[1, 2, 3, 4], 0).is_some(), "exact full hit allowed");
-        assert!(pc.lookup(&[1, 2, 3, 4, 5, 6], 1).is_none(), "tail of 2 > max_tail 1");
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        assert!(pc.adopt(&mut bp, &[1, 2, 3, 4, 5], 0).is_none(), "tail of 1 > max_tail 0");
+        let r = pc.adopt(&mut bp, &a, 0).expect("exact full hit allowed");
+        pc.unpin(r.node);
+        assert!(pc.adopt(&mut bp, &[1, 2, 3, 4, 5, 6], 1).is_none(), "tail of 2 > max_tail 1");
     }
 
     #[test]
-    fn eviction_respects_budget_and_lru_order() {
+    fn eviction_respects_budget_and_lru_order_and_releases_claims() {
         // Budget fits roughly two 4-token entries (plus snapshots).
         let one = {
-            let t = vec![0, 1, 2, 3];
             let mut pc = cache(usize::MAX / 2);
-            pc.insert(&t, &slab(&t), None, snap(0.0));
+            let mut bp = pool(1);
+            publish(&mut pc, &mut bp, &[0, 1, 2, 3], 0);
             pc.bytes_in_use()
         };
         let mut pc = cache(one * 2 + one / 2);
+        let mut bp = pool(3);
         let a = vec![10, 11, 12, 13];
         let b = vec![20, 21, 22, 23];
         let c = vec![30, 31, 32, 33];
-        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
-        assert!(pc.insert(&b, &slab(&b), None, snap(2.0)));
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        assert!(publish(&mut pc, &mut bp, &b, 1));
         // Touch `a` so `b` is LRU.
-        assert!(pc.lookup(&a, 8).is_some());
-        assert!(pc.insert(&c, &slab(&c), None, snap(3.0)));
+        let ra = pc.adopt(&mut bp, &a, 8).expect("hit");
+        pc.unpin(ra.node);
+        assert!(publish(&mut pc, &mut bp, &c, 2));
         assert!(pc.bytes_in_use() <= pc.byte_budget());
-        assert!(pc.lookup(&b, 8).is_none(), "LRU entry must be the one evicted");
-        assert!(pc.lookup(&a, 8).is_some());
-        assert!(pc.lookup(&c, 8).is_some());
+        assert!(pc.adopt(&mut bp, &b, 8).is_none(), "LRU entry must be the one evicted");
+        assert_eq!(bp.page_claims(bp.page_id(1, 0)), 0, "eviction released b's claim");
+        let ra = pc.adopt(&mut bp, &a, 8).expect("hit");
+        pc.unpin(ra.node);
+        let rc = pc.adopt(&mut bp, &c, 8).expect("hit");
+        pc.unpin(rc.node);
         assert!(pc.stats().evictions >= 1);
     }
 
     #[test]
-    fn pinned_segments_are_never_evicted() {
+    fn pinned_claims_are_never_evicted() {
         let one = {
-            let t = vec![0, 1, 2, 3];
             let mut pc = cache(usize::MAX / 2);
-            pc.insert(&t, &slab(&t), None, snap(0.0));
+            let mut bp = pool(1);
+            publish(&mut pc, &mut bp, &[0, 1, 2, 3], 0);
             pc.bytes_in_use()
         };
         let mut pc = cache(one + one / 2);
+        let mut bp = pool(2);
         let a = vec![10, 11, 12, 13];
-        assert!(pc.insert(&a, &slab(&a), None, snap(1.0)));
-        let ra = pc.lookup(&a, 8).unwrap();
-        pc.pin(ra.node);
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        let ra = pc.adopt(&mut bp, &a, 8).expect("hit"); // adoption pins
         // No room for b while a is pinned: insert must be REJECTED, not
-        // evict the pinned segment and not blow the budget.
+        // evict the pinned claim and not blow the budget.
         let b = vec![20, 21, 22, 23];
-        assert!(!pc.insert(&b, &slab(&b), None, snap(2.0)));
+        assert!(!publish(&mut pc, &mut bp, &b, 1));
         assert!(pc.contains_node(ra.node));
+        assert_eq!(bp.page_claims(0), 1, "pinned claim still held");
         assert!(pc.bytes_in_use() <= pc.byte_budget());
         assert_eq!(pc.stats().rejected_inserts, 1);
         // Unpinning frees it for eviction.
         pc.unpin(ra.node);
-        assert!(pc.insert(&b, &slab(&b), None, snap(2.0)));
-        assert!(pc.lookup(&b, 8).is_some());
+        assert!(publish(&mut pc, &mut bp, &b, 1));
+        assert_eq!(bp.page_claims(0), 0, "a's claim released to make room");
+        let rb = pc.adopt(&mut bp, &b, 8).expect("hit");
+        pc.unpin(rb.node);
+    }
+
+    #[test]
+    fn release_row_reclaims_claims_for_cold_admission() {
+        let mut pc = cache(1 << 20);
+        let mut bp = pool(1);
+        let a: Vec<u32> = (0..40).collect(); // 3 pages of claims
+        assert!(publish(&mut pc, &mut bp, &a, 0));
+        assert_eq!(total_claims(&bp), 3);
+        assert!(bp.alloc_at(0, 10, 0).is_err(), "claims block the cold alloc");
+        assert!(pc.release_row(&mut bp, 0, 0));
+        assert_eq!(total_claims(&bp), 0, "claims reach zero exactly at release");
+        assert_eq!(bp.stats().claim_evictions, 3);
+        bp.alloc_at(0, 10, 0).unwrap();
+        assert!(pc.adopt(&mut bp, &a, 8).is_none(), "nothing cached any more");
     }
 
     #[test]
     fn oversized_insert_is_rejected_outright() {
         let mut pc = cache(64); // tiny budget
+        let mut bp = pool(1);
         let t = vec![1, 2, 3, 4, 5, 6, 7, 8];
-        assert!(!pc.insert(&t, &slab(&t), None, snap(1.0)));
+        assert!(!publish(&mut pc, &mut bp, &t, 0));
         assert_eq!(pc.bytes_in_use(), 0);
+        assert_eq!(total_claims(&bp), 0, "rejected insert claims nothing");
     }
 
-    /// Satellite: property test — pinned segments are never evicted and
-    /// the byte budget is never exceeded, under random insert / lookup /
-    /// pin / unpin traffic with heavy prefix sharing.
     #[test]
-    fn prop_budget_and_pins_hold_under_random_traffic() {
-        prop::check("prefix-cache-budget", 150, |rng| {
+    fn accounting_charges_draft_state_rows_when_carried() {
+        let t = vec![1, 2, 3, 4];
+        let mut base = PrefixCache::new(1 << 20, L, KVD, false);
+        let mut extra = PrefixCache::new(1 << 20, L, KVD, true);
+        let mut bp0 = pool(1);
+        let mut bp1 = pool(1);
+        assert!(base.insert(&mut bp0, &t, 0, snap(1.0)));
+        assert!(extra.insert(&mut bp1, &t, 0, snap(1.0)));
+        assert_eq!(
+            extra.bytes_in_use() - base.bytes_in_use(),
+            t.len() * 2 * KVD * 4,
+            "extra rows cost 2·KVD floats per token"
+        );
+    }
+
+    /// Satellite: property test — the byte budget is never exceeded,
+    /// pinned claims are never evicted, pool claim refcounts always equal
+    /// the live nodes' page lists, and draining the cache returns every
+    /// refcount to zero exactly once. Emulates the engine's single-row
+    /// serve loop (adopt → alloc → decode → publish → free).
+    #[test]
+    fn prop_budget_pins_and_refcounts_hold_under_random_traffic() {
+        prop::check("prefix-cache-paged", 120, |rng| {
             let budget = rng.range(500, 8000);
             let mut pc = cache(budget);
-            let mut pinned: Vec<NodeId> = Vec::new();
+            let mut bp = pool(1);
             let gen_tokens = |rng: &mut Pcg32| -> Vec<u32> {
-                // Small alphabet + short lengths → lots of shared prefixes,
-                // splits, and re-inserts.
+                // Small alphabet + short lengths → lots of shared
+                // prefixes, splits, and re-inserts.
                 let len = rng.range(1, 10);
                 (0..len).map(|_| rng.below(4) as u32).collect()
             };
-            for _ in 0..rng.range(10, 80) {
-                match rng.below(4) {
-                    0 | 1 => {
-                        let t = gen_tokens(rng);
-                        pc.insert(&t, &slab(&t), None, snap(t.len() as f32));
+            for _ in 0..rng.range(10, 60) {
+                let t = gen_tokens(rng);
+                // Serve `t` on the single row: adopt or cold-admit…
+                let hit = pc.adopt(&mut bp, &t, 16);
+                let adopted = match &hit {
+                    Some(r) => {
+                        prop_assert!(
+                            r.matched >= 1 && r.matched <= t.len(),
+                            "matched {} out of range for len {}",
+                            r.matched,
+                            t.len()
+                        );
+                        prop_assert_eq!(r.row, 0);
+                        bp.alloc_at(0, r.matched.max(1), r.matched)
+                            .map_err(|e| e.to_string())?;
+                        r.matched
                     }
-                    2 => {
-                        let t = gen_tokens(rng);
-                        if let Some(r) = pc.lookup(&t, 16) {
-                            prop_assert!(
-                                r.matched >= 1 && r.matched <= t.len(),
-                                "matched {} of {}",
-                                r.matched,
-                                t.len()
-                            );
-                            if rng.f64() < 0.5 && pinned.len() < 4 {
-                                pc.pin(r.node);
-                                pinned.push(r.node);
-                            }
-                        }
+                    None => {
+                        prop_assert!(
+                            pc.release_row(&mut bp, 0, 0),
+                            "nothing pinned -> row must clear"
+                        );
+                        bp.alloc_at(0, t.len(), 0).map_err(|e| e.to_string())?;
+                        0
                     }
-                    _ => {
-                        if !pinned.is_empty() {
-                            let i = rng.below(pinned.len());
-                            let id = pinned.swap_remove(i);
-                            pc.unpin(id);
-                        }
-                    }
+                };
+                // …decode to the full prompt and sometimes publish.
+                if t.len() > adopted {
+                    bp.extend(0, t.len() - adopted).map_err(|e| e.to_string())?;
                 }
+                if rng.f64() < 0.8 {
+                    publish(&mut pc, &mut bp, &t, 0);
+                }
+                bp.free(0).map_err(|e| e.to_string())?;
+                if let Some(r) = hit {
+                    pc.unpin(r.node);
+                }
+
                 prop_assert!(
                     pc.bytes_in_use() <= pc.byte_budget(),
                     "budget exceeded: {} > {}",
                     pc.bytes_in_use(),
                     pc.byte_budget()
                 );
-                for &id in &pinned {
-                    prop_assert!(id != ROOT, "root handed out as a hit node");
-                    prop_assert!(!pc.free.contains(&id), "pinned node {id} was evicted");
-                    prop_assert!(pc.contains_node(id), "pinned node {id} not live");
+                // Pool refcounts must equal the live nodes' claim lists.
+                let mut model = vec![0u32; bp.len() * bp.pages_per_row()];
+                for n in pc.nodes.iter().filter(|n| n.live) {
+                    for &pg in &n.pages {
+                        model[pg] += 1;
+                    }
+                }
+                for (pg, &c) in model.iter().enumerate() {
+                    prop_assert!(
+                        bp.page_claims(pg) == c,
+                        "claim refcount drift on page {}: pool {} != model {}",
+                        pg,
+                        bp.page_claims(pg),
+                        c
+                    );
                 }
             }
             // Recount bytes from live nodes: accounting must be exact.
+            let tb = pc.token_bytes();
             let recount: usize = pc
                 .nodes
                 .iter()
                 .enumerate()
                 .filter(|&(i, n)| i != ROOT && n.live)
-                .map(|(_, n)| n.bytes())
+                .map(|(_, n)| n.bytes(tb))
                 .sum();
             prop_assert_eq!(recount, pc.bytes_in_use());
+            // Drain: releasing the whole row returns every refcount to
+            // zero exactly once (release_page underflow would error).
+            prop_assert!(pc.release_row(&mut bp, 0, 0));
+            prop_assert_eq!(total_claims(&bp), 0);
             Ok(())
         });
     }

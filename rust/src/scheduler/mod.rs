@@ -26,6 +26,26 @@ pub trait AdmitTarget {
     fn vacancy_count(&self) -> usize;
     /// Take ownership of `reqs` and begin serving them.
     fn admit(&mut self, reqs: Vec<Request>) -> Result<()>;
+    /// How many of `reqs` (a queue head, in order) fit the target's memory
+    /// right now. Defaults to "all of them" — targets without a KV-pool
+    /// budget only throttle on vacancies.
+    fn admit_capacity(&self, reqs: &[Request]) -> usize {
+        reqs.len()
+    }
+    /// Evict one in-flight sequence and hand back its reconstructed
+    /// request for requeueing, or None when the target does not support
+    /// preemption (the default) or nothing is preemptible.
+    fn preempt_one(&mut self) -> Option<Request> {
+        None
+    }
+    /// Could `req` ever be admitted, even on an idle target? `false`
+    /// means the request's worst-case footprint exceeds the target's
+    /// total budget outright — waiting or preempting can never help, so
+    /// the scheduler fails it loudly instead of stalling the queue
+    /// forever. Defaults to `true` for targets without a hard budget.
+    fn can_ever_admit(&self, _req: &Request) -> bool {
+        true
+    }
 }
 
 impl AdmitTarget for Engine<'_> {
@@ -34,6 +54,15 @@ impl AdmitTarget for Engine<'_> {
     }
     fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
         Engine::admit(self, reqs)
+    }
+    fn admit_capacity(&self, reqs: &[Request]) -> usize {
+        Engine::admit_capacity(self, reqs)
+    }
+    fn preempt_one(&mut self) -> Option<Request> {
+        Engine::preempt_one(self)
+    }
+    fn can_ever_admit(&self, req: &Request) -> bool {
+        Engine::can_ever_admit(self, req)
     }
 }
 
@@ -53,6 +82,9 @@ pub struct SchedulerStats {
     pub spec_tokens: usize,
     /// High-water mark of the admission queue depth.
     pub max_queue_depth: usize,
+    /// Sequences preempted (evicted mid-flight and requeued) because the
+    /// KV pool could not admit the queue head.
+    pub preemptions: usize,
 }
 
 /// FIFO continuous-batching scheduler over one engine.
@@ -130,17 +162,42 @@ impl Scheduler {
         !self.queue.is_empty() || engine.active_count() > 0
     }
 
-    /// Refill vacant slots from the queue (up to the per-step admit cap;
-    /// a no-op while the admission gate is closed).
+    /// Refill vacant slots from the queue, up to the per-step admit cap
+    /// and the target's memory capacity (a no-op while the admission gate
+    /// is closed). When vacancies and queued work both exist but the
+    /// target's KV pool cannot take even the queue head, one in-flight
+    /// sequence is preempted and requeued right behind that head — the
+    /// freed pages admit the head on a later refill instead of stalling
+    /// it forever. A head that could never fit even an idle pool
+    /// ([`AdmitTarget::can_ever_admit`]) is an error, not a stall.
     pub fn refill(&mut self, engine: &mut impl AdmitTarget) -> Result<usize> {
         if !self.admission_open {
             return Ok(0);
         }
-        let n = engine
+        let want = engine
             .vacancy_count()
             .min(self.queue.len())
             .min(self.max_admit_per_step);
+        if want == 0 {
+            return Ok(0);
+        }
+        let head = self.queue.make_contiguous();
+        let n = want.min(engine.admit_capacity(&head[..want]));
         if n == 0 {
+            if let Some(victim) = engine.preempt_one() {
+                self.stats.preemptions += 1;
+                let at = 1.min(self.queue.len());
+                self.queue.insert(at, victim);
+            } else if head.first().is_some_and(|r| !engine.can_ever_admit(r)) {
+                // Nothing preemptible and the head can never fit even an
+                // idle pool: refilling again would spin forever.
+                let id = head.first().map(|r| r.id).unwrap_or(0);
+                anyhow::bail!(
+                    "request {id} can never fit the KV page budget (worst-case \
+                     footprint exceeds the pool); rejecting instead of stalling \
+                     the queue"
+                );
+            }
             return Ok(0);
         }
         let batch: Vec<Request> = self.queue.drain(..n).collect();
@@ -333,6 +390,110 @@ mod tests {
         let r = s.queue.pop_front().unwrap();
         assert_eq!(r.params.max_new, 9);
         assert_eq!(r.params, SamplingParams::typical(0.2, 0.7, 9));
+    }
+
+    /// Admission sink with a memory budget on top of vacancies: each
+    /// admitted request costs one capacity unit; preemption refunds one
+    /// and returns the evicted in-flight request.
+    struct BudgetTarget {
+        vacancies: usize,
+        capacity: usize,
+        inflight: Vec<Request>,
+    }
+
+    impl AdmitTarget for BudgetTarget {
+        fn vacancy_count(&self) -> usize {
+            self.vacancies
+        }
+        fn admit(&mut self, reqs: Vec<Request>) -> Result<()> {
+            assert!(reqs.len() <= self.vacancies.min(self.capacity));
+            self.vacancies -= reqs.len();
+            self.capacity -= reqs.len();
+            self.inflight.extend(reqs);
+            Ok(())
+        }
+        fn admit_capacity(&self, reqs: &[Request]) -> usize {
+            reqs.len().min(self.capacity)
+        }
+        fn preempt_one(&mut self) -> Option<Request> {
+            let r = self.inflight.pop()?;
+            self.vacancies += 1;
+            self.capacity += 1;
+            Some(r)
+        }
+    }
+
+    #[test]
+    fn exhausted_pool_preempts_and_requeues_behind_the_head() {
+        let mut s = Scheduler::default();
+        let mut t = BudgetTarget { vacancies: 2, capacity: 2, inflight: Vec::new() };
+        s.submit_all(reqs(2));
+        assert_eq!(s.refill(&mut t).unwrap(), 2, "both fit the budget");
+        // Budget exhausted, one vacancy opens (a retirement without a
+        // capacity refund — the pool is still full of the other row's
+        // pages), and a new request arrives.
+        t.vacancies += 1;
+        s.submit(Request::new(9, vec![1], SamplingParams::greedy(4)));
+        assert_eq!(s.refill(&mut t).unwrap(), 0, "no capacity: preempt instead of admit");
+        assert_eq!(s.stats.preemptions, 1);
+        assert_eq!(
+            s.queue.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![9, 1],
+            "victim requeues right behind the stalled head"
+        );
+        // The refunded capacity admits the stalled head next refill; the
+        // requeued victim waits for more capacity.
+        assert_eq!(s.refill(&mut t).unwrap(), 1, "head admits on the refunded capacity");
+        assert_eq!(s.queue.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        // A retirement frees capacity; the victim resumes without another
+        // preemption.
+        t.capacity += 1;
+        assert_eq!(s.refill(&mut t).unwrap(), 1);
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.stats.preemptions, 1, "no further preemptions once work fits");
+    }
+
+    #[test]
+    fn impossible_head_request_errors_instead_of_stalling() {
+        /// A target whose budget can never hold any request.
+        struct NoRoom;
+        impl AdmitTarget for NoRoom {
+            fn vacancy_count(&self) -> usize {
+                1
+            }
+            fn admit(&mut self, _reqs: Vec<Request>) -> Result<()> {
+                anyhow::bail!("unreachable: capacity is always zero")
+            }
+            fn admit_capacity(&self, _reqs: &[Request]) -> usize {
+                0
+            }
+            fn can_ever_admit(&self, _req: &Request) -> bool {
+                false
+            }
+        }
+        let mut s = Scheduler::default();
+        let mut t = NoRoom;
+        s.submit(Request::new(7, vec![1], SamplingParams::greedy(4)));
+        let err = match s.refill(&mut t) {
+            Err(e) => e.to_string(),
+            Ok(n) => panic!("expected an error, admitted {n}"),
+        };
+        assert!(err.contains("request 7"), "error names the request: {err}");
+        assert_eq!(s.queue_depth(), 1, "the queue is left intact for the caller");
+        // A transiently-full target (can_ever_admit true) still just waits.
+        struct FullNow;
+        impl AdmitTarget for FullNow {
+            fn vacancy_count(&self) -> usize {
+                1
+            }
+            fn admit(&mut self, _reqs: Vec<Request>) -> Result<()> {
+                Ok(())
+            }
+            fn admit_capacity(&self, _reqs: &[Request]) -> usize {
+                0
+            }
+        }
+        assert_eq!(s.refill(&mut FullNow).unwrap(), 0, "transient fullness stalls, no error");
     }
 
     #[test]

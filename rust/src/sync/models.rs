@@ -1,5 +1,5 @@
 #![cfg(all(loom, test))]
-//! Loom models of the gateway's three riskiest coordination protocols.
+//! Loom models of the serving stack's riskiest coordination protocols.
 //!
 //! These are *protocol replicas*, not the production types: loom cannot
 //! model `std::sync::mpsc` channels or wall-clock timeouts, so each test
@@ -208,5 +208,97 @@ fn pin_route_vs_drain_flag_ordering() {
             1,
             "the request must be handled exactly once"
         );
+    });
+}
+
+/// Protocol 4 — paged-KV claim/release vs. adoption
+/// (`kvblocks::BlockPool` page refcounts: `claim_page`/`release_page`
+/// racing a warm adoption and retirement's `free`; the lifetime rules
+/// are `docs/INVARIANTS.md` §7).
+///
+/// Production serializes every pool mutation on the engine thread; the
+/// model drops that and runs retirement (dropping the page's sequence
+/// reference), cache eviction (releasing the radix node's claim), and a
+/// warm adoption (claim-if-live) fully concurrently over one page.
+/// Checked across all interleavings: the claim count never underflows,
+/// the page returns to the free list exactly once — and only after the
+/// sequence reference AND the last claim are both gone — and a claim
+/// chain that reached zero never resurrects (a late adopter sees a
+/// miss, never a freed page behind a live claim).
+#[test]
+fn kv_claim_release_vs_adopt() {
+    struct Page {
+        /// A live sequence's row ledger covers this page.
+        referenced: bool,
+        /// Radix-node claim refcount.
+        claims: usize,
+        /// Returned to the free list.
+        freed: bool,
+    }
+    /// The pool's free rule: no reference, no claims, free exactly once.
+    fn maybe_free(g: &mut Page, freed_count: &AtomicUsize) {
+        if !g.freed && !g.referenced && g.claims == 0 {
+            g.freed = true;
+            freed_count.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    loom::model(|| {
+        // One page: referenced by a live sequence, claimed by one node.
+        let page = Arc::new(Mutex::new(Page { referenced: true, claims: 1, freed: false }));
+        let freed_count = Arc::new(AtomicUsize::new(0));
+        let adopted = Arc::new(AtomicBool::new(false));
+
+        let retire = {
+            let page = Arc::clone(&page);
+            let freed_count = Arc::clone(&freed_count);
+            thread::spawn(move || {
+                let mut g = lock_or_recover(&page);
+                assert!(g.referenced, "double free of the sequence reference");
+                g.referenced = false;
+                maybe_free(&mut g, &freed_count);
+            })
+        };
+        let evict = {
+            let page = Arc::clone(&page);
+            let freed_count = Arc::clone(&freed_count);
+            thread::spawn(move || {
+                let mut g = lock_or_recover(&page);
+                assert!(g.claims > 0, "claim release underflow");
+                g.claims -= 1;
+                maybe_free(&mut g, &freed_count);
+            })
+        };
+        let adopter = {
+            let page = Arc::clone(&page);
+            let adopted = Arc::clone(&adopted);
+            thread::spawn(move || {
+                let mut g = lock_or_recover(&page);
+                // Adopt-if-live: the radix node (and hence the adoption
+                // path) exists only while its claim is held; a freed or
+                // fully released page is a cache miss, never a
+                // resurrection of a zeroed claim chain.
+                if !g.freed && g.claims > 0 {
+                    g.claims += 1;
+                    adopted.store(true, Ordering::SeqCst);
+                }
+            })
+        };
+        retire.join().ok();
+        evict.join().ok();
+        adopter.join().ok();
+
+        if adopted.load(Ordering::SeqCst) {
+            // The adopting sequence retires in turn; the page must have
+            // stayed alive under its claim the whole time.
+            let mut g = lock_or_recover(&page);
+            assert!(!g.freed, "page freed while an adopted claim was live");
+            assert!(g.claims > 0, "adopted claim vanished");
+            g.claims -= 1;
+            maybe_free(&mut g, &freed_count);
+        }
+        let g = lock_or_recover(&page);
+        assert!(g.freed && g.claims == 0 && !g.referenced, "page must end free");
+        assert_eq!(freed_count.load(Ordering::SeqCst), 1, "freed exactly once");
     });
 }

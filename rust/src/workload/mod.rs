@@ -226,6 +226,71 @@ pub fn multi_tenant(
     out
 }
 
+/// Long-context serving workload (paged-KV stress): `longs` very long
+/// document prompts — each a shared document preamble of `doc_repeats`
+/// sentences plus a unique trailing question — each followed by a burst
+/// of `shorts_per_long` short chasers. This is the traffic shape the
+/// paged allocator and continuous chunked prefill are built for: the
+/// long prompts dominate page usage and drain through multi-step
+/// chunked prefill while the short requests keep decoding in the gaps;
+/// the shared preamble makes every long prompt after the first a warm
+/// (zero-copy) adoption, and under a tight page budget the mix forces
+/// preemption. Requests are returned in submission order (each long
+/// prompt immediately before its chasers) with ids contiguous from
+/// `id_base`; every request carries a copy of `params`.
+pub fn long_context(
+    tok: &Tokenizer,
+    params: &SamplingParams,
+    longs: usize,
+    doc_repeats: usize,
+    shorts_per_long: usize,
+    seed: u64,
+    id_base: u64,
+) -> Vec<Request> {
+    assert!(longs > 0 && doc_repeats > 0, "degenerate long-context trace");
+    const SENTENCES: &[&str] = &[
+        "the quarterly report lists every incident with its root cause.",
+        "appendix b tabulates latency percentiles per region.",
+        "the postmortem recommends paging the owning team first.",
+        "capacity planning assumes peak traffic doubles yearly.",
+        "the oncall handbook maps alerts to dashboards and runbooks.",
+    ];
+    const SHORTS: &[&str] = &[
+        "compute 3 + 4.",
+        "who wrote the report?",
+        "summarize section N.",
+        "is the fleet healthy?",
+    ];
+    let mut rng = Pcg32::new(seed);
+    let mut doc = String::from("archive of operations documents. ");
+    for r in 0..doc_repeats {
+        doc.push_str(SENTENCES[r % SENTENCES.len()]);
+        doc.push(' ');
+    }
+    let mut out = Vec::with_capacity(longs * (1 + shorts_per_long));
+    let mut id = id_base;
+    for l in 0..longs {
+        let prompt = format!("{doc}q{l}: what changed in revision {l}?");
+        out.push(Request {
+            id,
+            prompt_ids: tok.encode(&format_prompt(&prompt)),
+            params: params.clone(),
+        });
+        id += 1;
+        for s in 0..shorts_per_long {
+            let turn = SHORTS[rng.below(SHORTS.len())].replace('N', &s.to_string());
+            let prompt = format!("b{l}.{s}: {turn}");
+            out.push(Request {
+                id,
+                prompt_ids: tok.encode(&format_prompt(&prompt)),
+                params: params.clone(),
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
 /// Tokenized held-out corpus windows for the §4 tree-search simulation
 /// (the paper uses a 100-prompt Alpaca subset).
 pub fn load_corpus_windows(artifacts: &Path) -> Result<Vec<Vec<u32>>> {
@@ -335,6 +400,45 @@ mod tests {
         texts.sort_unstable();
         texts.dedup();
         assert_eq!(texts.len(), trace.len());
+    }
+
+    #[test]
+    fn long_context_shape() {
+        use crate::kvblocks::pages_for;
+
+        let tok = Tokenizer::new(vec![]);
+        let params = default_params(&tok, 8);
+        let reqs = long_context(&tok, &params, 2, 12, 3, 9, 200);
+        assert_eq!(reqs.len(), 8, "each long prompt brings its chasers");
+        let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (200..208).collect::<Vec<u64>>());
+        // Each group opens with a long prompt that dwarfs its chasers.
+        let long0 = reqs[0].prompt_ids.len();
+        let long1 = reqs[4].prompt_ids.len();
+        for r in reqs[1..4].iter().chain(&reqs[5..8]) {
+            assert!(
+                r.prompt_ids.len() * 8 < long0,
+                "chaser ({}) must be short next to the long prompt ({long0})",
+                r.prompt_ids.len()
+            );
+            assert!(pages_for(r.prompt_ids.len()) <= 4, "chasers stay few-page");
+        }
+        // Long prompts span many KV pages (the chunked-prefill stressor).
+        assert!(pages_for(long0) >= 8, "long prompt covers {} pages", pages_for(long0));
+        assert!(pages_for(long1) >= 8);
+        // Long prompts share the document preamble — later ones are warm
+        // adoptions — and diverge only in the trailing question.
+        let common = reqs[0]
+            .prompt_ids
+            .iter()
+            .zip(&reqs[4].prompt_ids)
+            .take_while(|(a, b)| a == b)
+            .count();
+        assert!(common * 2 > long0, "shared preamble ({common}) must dominate ({long0})");
+        assert_ne!(reqs[0].prompt_ids, reqs[4].prompt_ids, "questions differ");
+        for r in &reqs {
+            assert_eq!(r.params, params, "every request carries the params");
+        }
     }
 
     #[test]

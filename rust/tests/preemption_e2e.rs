@@ -1,0 +1,131 @@
+//! Preemption end-to-end: fill the paged KV pool with a tight page
+//! budget, let the scheduler preempt to unstall the queue head, and
+//! assert the preempted sequences resume to **greedy token identity**
+//! with an uncontended run — preemption (publish → free → requeue →
+//! warm re-adoption) may change latency, never tokens.
+//!
+//! Requires `make artifacts` (as all engine e2e tests do).
+
+use std::collections::HashMap;
+
+use hydra_serve::draft;
+use hydra_serve::engine::{Engine, EngineConfig};
+use hydra_serve::kvblocks::pages_for;
+use hydra_serve::runtime::Runtime;
+use hydra_serve::scheduler::Scheduler;
+use hydra_serve::tokenizer::Tokenizer;
+use hydra_serve::workload;
+
+fn runtime() -> Runtime {
+    let dir = hydra_serve::artifacts_dir();
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    Runtime::new(dir).unwrap()
+}
+
+/// Drive a workload to completion on one engine configuration; returns
+/// per-request greedy outputs plus the scheduler's preemption count.
+fn serve(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    batch: usize,
+    budget: Option<usize>,
+    reqs: Vec<hydra_serve::engine::Request>,
+) -> (HashMap<u64, Vec<u32>>, usize) {
+    let tree = if variant == "ar" {
+        hydra_serve::tree::TreeTopology::ar()
+    } else {
+        draft::default_tree(variant, batch)
+    };
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig { size: size.into(), variant: variant.into(), tree, batch, seed: 77 },
+    )
+    .unwrap();
+    engine.enable_prefix_cache(64 << 20);
+    if let Some(pages) = budget {
+        engine.set_page_budget(pages);
+        engine.set_prefill_chunk_tokens(32);
+    }
+    let n = reqs.len();
+    let mut sched = Scheduler::default();
+    sched.submit_all(reqs);
+    let mut outputs = Vec::new();
+    while sched.has_work(&engine) {
+        sched.tick(&mut engine).unwrap();
+        outputs.extend(engine.take_outputs());
+    }
+    assert_eq!(outputs.len(), n, "every request must complete");
+    let kv = engine.kv_pool_stats();
+    assert_eq!(kv.restore_copies, 0, "resume must adopt pages, never memcpy");
+    assert_eq!(kv.blocks_used, 0, "all rows must be freed after the pool drains");
+    assert_eq!(
+        kv.preemptions as usize, sched.stats.preemptions,
+        "engine and scheduler must agree on the preemption count"
+    );
+    (
+        outputs.into_iter().map(|o| (o.req_id, o.generated)).collect(),
+        sched.stats.preemptions,
+    )
+}
+
+#[test]
+fn preempted_sequences_resume_token_identical() {
+    let rt = runtime();
+    let t = Tokenizer::load(&rt.manifest.dir.join("tokenizer.json")).unwrap();
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let variant = ["hydra_pp", "hydra", "medusa"]
+        .into_iter()
+        .find(|v| draft::available(&rt.manifest, &size, v))
+        .unwrap_or("ar");
+    let batch = rt.manifest.batch_buckets[&size].iter().copied().max().unwrap_or(1);
+
+    // Long shared-document prompts with short chasers; the longs also
+    // generate long so they overlap their chasers in flight.
+    let limit = rt.manifest.seq_max / 2;
+    let params = workload::default_params(&t, 10);
+    let doc_repeats = (1..=6)
+        .rev()
+        .find(|&dr| {
+            workload::long_context(&t, &params, 2, dr, 2, 5, 0)
+                .iter()
+                .all(|r| r.prompt_ids.len() <= limit)
+        })
+        .unwrap_or(1);
+    let mut reqs = workload::long_context(&t, &params, 2, doc_repeats, 2, 5, 0);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            r.params.max_new = 24;
+        }
+    }
+    // Tight: the largest request fits alone with a sliver to spare, so
+    // the second long prompt reaching the queue head while the first is
+    // still decoding must evict a chaser.
+    let worst = reqs
+        .iter()
+        .map(|r| pages_for(r.prompt_ids.len() + r.params.max_new))
+        .max()
+        .unwrap_or(1);
+    let budget = worst + 4;
+
+    let (uncontended, p0) =
+        serve(&rt, &size, variant, batch, None, reqs.clone());
+    assert_eq!(p0, 0, "a roomy pool must never preempt");
+
+    let (tight, preemptions) =
+        serve(&rt, &size, variant, batch, Some(budget), reqs.clone());
+    if batch >= 2 {
+        assert!(
+            preemptions >= 1,
+            "tight budget ({budget} pages) with batch {batch} must preempt"
+        );
+    }
+    for r in &reqs {
+        assert_eq!(
+            uncontended.get(&r.id),
+            tight.get(&r.id),
+            "request {}: preempted run diverged from uncontended run",
+            r.id
+        );
+    }
+}

@@ -1,7 +1,10 @@
 //! Prefix-cache end-to-end tests: warm-hit admissions must be
 //! token-for-token identical to cold decoding (greedy acceptance changes
 //! cost, never content), across draft-head variants, and the cache
-//! counters must show the prefill-call savings.
+//! counters must show the prefill-call savings. Since the paged-KV
+//! rewrite a warm hit adopts the cached pages in place (claim refcount
+//! bumps) — the `restore_copies` counter hard-asserts that no host-side
+//! KV copy ever happens.
 //!
 //! Requires `make artifacts` (as all engine e2e tests do).
 
@@ -86,6 +89,12 @@ fn warm_full_hit_is_token_identical_to_cold() {
         let stats = eng.prefix_cache_stats().unwrap();
         assert!(stats.full_hits >= 1, "{variant}: {stats:?}");
         assert!(stats.tokens_reused as usize >= prompt.len());
+        let kv = eng.kv_pool_stats();
+        assert_eq!(
+            kv.restore_copies, 0,
+            "{variant}: warm hit must adopt pages in place, never memcpy"
+        );
+        assert!(kv.cow_shares >= 1, "{variant}: adoption must register CoW shares: {kv:?}");
         println!(
             "{variant}: full hit reused {} tokens, {} prefill call(s)",
             warm.cached_tokens, eng.phase.prefill_calls
@@ -126,6 +135,11 @@ fn warm_partial_hit_extends_tail_and_matches_cold() {
         );
         let stats = eng.prefix_cache_stats().unwrap();
         assert!(stats.partial_hits >= 1, "{variant}: {stats:?}");
+        assert_eq!(
+            eng.kv_pool_stats().restore_copies,
+            0,
+            "{variant}: partial hit must adopt the shared prefix in place"
+        );
         println!("{variant}: partial hit reused {} of {} tokens", warm.cached_tokens, p2.len());
     }
 }
