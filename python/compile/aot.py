@@ -110,6 +110,21 @@ class Builder:
         }
         print(f"  lowered {name} ({len(text) // 1024} KiB, {time.time() - t0:.1f}s)", flush=True)
 
+    def alias(self, name: str, target: str):
+        """Record `name` as an alias of an already-emitted executable.
+
+        The manifest entry is copied verbatim (same .hlo.txt file, same
+        args/outputs), so the Rust side sees a fully specified executable
+        under the alias at zero extra lowering cost. Used for the
+        `*_masked_*` capability aliases: because the ancestor mask is a
+        runtime input tensor, a verify/commit executable serves ANY tree
+        topology up to its node capacity (padding rows are self-only and
+        inert), and the alias advertises that contract under a
+        bucket-free name that `model::Manifest::masked_tree_cap` probes.
+        """
+        self.manifest_exes[name] = dict(self.manifest_exes[target])
+        print(f"  alias   {name} -> {target}", flush=True)
+
 
 def base_weight_args(cfg: ModelConfig, base_params):
     names = sorted(base_params.keys())
@@ -250,6 +265,14 @@ def main():
                      ("accept_idx", (B, A), "i32"),
                      ("accept_len", (B,), "i32"), ("cur_len", (B,), "i32")],
                     [], [])
+            # Masked-capability aliases: the widest tree bucket, with the
+            # ancestor mask as a runtime input, runs any topology of up to
+            # max(tree_buckets) nodes in one call — no t{N} ladder. The
+            # Rust engine probes these names to certify mask-parameterized
+            # verification and then pins a single bucket per engine.
+            TM = max(tree_buckets)
+            b.alias(f"verify_masked_{z}_b{B}", f"verify_{z}_b{B}_t{TM}")
+            b.alias(f"commit_masked_{z}_b{B}", f"commit_{z}_b{B}_t{TM}")
 
         # -- draft executables (head weights are runtime args, so one
         #    executable serves every variant with the same architecture) --

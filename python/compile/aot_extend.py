@@ -79,6 +79,11 @@ def main():
                      ("accept_len", (B,), "i32"), ("commit_base", (B,), "i32")],
                     w_args,
                     w_structs)
+            # Masked-capability alias for the fused step (see aot.py):
+            # certifies that the widest fused bucket serves any topology
+            # via its runtime anc_mask input.
+            TM = max(tree_buckets)
+            b.alias(f"verify_commit_masked_{z}_b{B}", f"verify_commit_{z}_b{B}_t{TM}")
 
     manifest["executables"].update(b.manifest_exes)
     with open(manifest_path, "w") as f:

@@ -15,8 +15,18 @@
 //!   throughput (a 5% floor absorbs wall-clock noise on shared CI
 //!   hardware) and strictly dominates on speculation efficiency.
 //!
-//! Results append to bench_results/BENCH_adaptive.json (uploaded as a CI
-//! artifact so the perf trajectory accumulates across PRs).
+//! A second A/B pits the mask-parameterized verify path (one pinned tree
+//! bucket, topology carried by the ancestor-mask input) against the
+//! legacy per-step bucket ladder (`Engine::force_bucket_ladder`) at the
+//! largest batch: token identity is a hard assert, and mean step latency
+//! of the masked path must not exceed the ladder's by more than the 0.95
+//! noise floor — asserted in quick mode too, since both passes verify
+//! identical topologies and the masked path strictly removes rebucketing
+//! work.
+//!
+//! Results append to bench_results/BENCH_adaptive.json and
+//! bench_results/BENCH_fused_verify.json (uploaded as CI artifacts so
+//! the perf trajectory accumulates across PRs).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -35,6 +45,10 @@ struct PassResult {
     m: RunMetrics,
     /// req_id -> generated token ids (greedy identity check).
     outputs: BTreeMap<u64, Vec<u32>>,
+    /// Whether the engine actually ran mask-parameterized (pinned-bucket)
+    /// verification — false when forced onto the ladder or when the
+    /// artifacts lack the masked capability aliases.
+    masked: bool,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -44,6 +58,7 @@ fn run_pass(
     variant: &str,
     batch: usize,
     adaptive: bool,
+    force_ladder: bool,
     prompts: &[&EvalPrompt],
     gen_tokens: usize,
 ) -> anyhow::Result<PassResult> {
@@ -62,6 +77,10 @@ fn run_pass(
         // Budget 0 = the engine's batch-aware default throttle.
         engine.enable_adaptive(AdaptiveConfig::default())?;
     }
+    if force_ladder {
+        engine.force_bucket_ladder();
+    }
+    let masked = engine.masked_verify();
     let params = workload::default_params(&ctx.tok, gen_tokens);
     let reqs = workload::to_requests(prompts, &ctx.tok, &params, 0);
     let n_reqs = reqs.len();
@@ -87,7 +106,12 @@ fn run_pass(
     m.decode_wall = t0.elapsed();
     m.wall = m.decode_wall;
     assert_eq!(outputs.len(), n_reqs, "all requests must complete");
-    Ok(PassResult { m, outputs })
+    Ok(PassResult { m, outputs, masked })
+}
+
+/// Mean decode-step wall time in milliseconds.
+fn step_ms(m: &RunMetrics) -> f64 {
+    m.decode_wall.as_secs_f64() * 1e3 / m.steps.max(1) as f64
 }
 
 fn main() -> anyhow::Result<()> {
@@ -124,11 +148,11 @@ fn main() -> anyhow::Result<()> {
         // this batch, including the smaller draft m-buckets the throttled
         // adaptive trees hit); results discarded.
         let warm: Vec<&EvalPrompt> = all.iter().copied().cycle().take(batch.max(1)).collect();
-        run_pass(&ctx, &size, &variant, batch, false, &warm, 8)?;
-        run_pass(&ctx, &size, &variant, batch, true, &warm, 16)?;
+        run_pass(&ctx, &size, &variant, batch, false, false, &warm, 8)?;
+        run_pass(&ctx, &size, &variant, batch, true, false, &warm, 16)?;
 
-        let stat = run_pass(&ctx, &size, &variant, batch, false, &sel, gen_tokens)?;
-        let adap = run_pass(&ctx, &size, &variant, batch, true, &sel, gen_tokens)?;
+        let stat = run_pass(&ctx, &size, &variant, batch, false, false, &sel, gen_tokens)?;
+        let adap = run_pass(&ctx, &size, &variant, batch, true, false, &sel, gen_tokens)?;
 
         // Greedy identity: adaptive tree selection must never change the
         // token stream, only the speed (paper §2 greedy acceptance).
@@ -200,6 +224,67 @@ fn main() -> anyhow::Result<()> {
         }
     } else {
         println!("\n(no batch bucket >= 8 in these artifacts; high-batch assertion skipped)");
+    }
+
+    // Mask-parameterized verify vs the legacy bucket ladder, adaptive on
+    // both sides at the largest batch. Both passes select identical
+    // per-slot topologies (the controller is deterministic under greedy
+    // identity), so this isolates the executable strategy: one pinned
+    // bucket with the mask as input vs per-step rebucketing with
+    // host-side rematerialization of pending fused commits.
+    if let Some(&ab_batch) = batches.last() {
+        let mut all = workload::mt_bench(&ctx.prompts);
+        if all.is_empty() {
+            all = ctx.prompts.iter().collect();
+        }
+        let sel: Vec<&EvalPrompt> = all.iter().copied().cycle().take((2 * ab_batch).max(2)).collect();
+        let warm: Vec<&EvalPrompt> = all.iter().copied().cycle().take(ab_batch.max(1)).collect();
+        run_pass(&ctx, &size, &variant, ab_batch, true, true, &warm, 16)?;
+        run_pass(&ctx, &size, &variant, ab_batch, true, false, &warm, 16)?;
+
+        let ladder = run_pass(&ctx, &size, &variant, ab_batch, true, true, &sel, gen_tokens)?;
+        let masked = run_pass(&ctx, &size, &variant, ab_batch, true, false, &sel, gen_tokens)?;
+        assert!(!ladder.masked, "force_bucket_ladder must disable masked verification");
+
+        // Token identity between the executable strategies is the hard
+        // correctness gate — always asserted.
+        assert_eq!(
+            masked.outputs, ladder.outputs,
+            "batch {ab_batch}: masked greedy output diverged from the bucket ladder"
+        );
+
+        let (l_ms, m_ms) = (step_ms(&ladder.m), step_ms(&masked.m));
+        println!(
+            "\nmasked-vs-ladder (batch {ab_batch}): ladder {:.1} tok/s ({l_ms:.2} ms/step) vs \
+             masked {:.1} tok/s ({m_ms:.2} ms/step){}",
+            ladder.m.throughput(),
+            masked.m.throughput(),
+            if masked.masked { "" } else { " [masked aliases absent — passes identical]" }
+        );
+        // Step-latency gate: at equal topology the masked path only
+        // removes work (no rebucketing, no pending-commit flushes), so it
+        // must hold inside a 0.95 noise floor even in quick mode.
+        if masked.masked {
+            assert!(
+                m_ms <= l_ms / 0.95,
+                "batch {ab_batch}: masked step latency regressed past the noise floor \
+                 ({m_ms:.2} ms > {l_ms:.2} ms / 0.95)"
+            );
+        }
+        save_result(
+            "fused_verify",
+            Json::Arr(vec![Json::obj(vec![
+                ("variant", Json::str(variant.clone())),
+                ("batch", Json::num(ab_batch as f64)),
+                ("requests", Json::num(sel.len() as f64)),
+                ("gen_tokens", Json::num(gen_tokens as f64)),
+                ("masked_active", Json::Bool(masked.masked)),
+                ("ladder_tps", Json::num(ladder.m.throughput())),
+                ("masked_tps", Json::num(masked.m.throughput())),
+                ("ladder_step_ms", Json::num(l_ms)),
+                ("masked_step_ms", Json::num(m_ms)),
+            ])]),
+        )?;
     }
     Ok(())
 }

@@ -366,7 +366,12 @@ impl Adaptive {
         }
         // Batch-aware throttle: shrink the largest auto tree (ties:
         // lowest slot index) until the batch fits the budget. Fixed
-        // slots count toward the total but are never demoted.
+        // slots count toward the total but are never demoted. Cost is
+        // counted in REAL selected nodes (`ladder.nodes_of`), never in
+        // AOT bucket padding — under the engine's mask-parameterized
+        // verification every step runs a pinned wide bucket whose
+        // padding rows are inert, so bucket size says nothing about
+        // speculation spend.
         let budget = self.cfg.step_token_budget;
         if budget == 0 {
             return;

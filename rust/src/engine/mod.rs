@@ -21,6 +21,17 @@
 //! by per-slot acceptance statistics and a batch-wide verification
 //! budget), and this module threads the per-slot topologies through
 //! drafting, verification masks, acceptance and commit.
+//!
+//! When the artifacts carry the `*_masked_*` capability aliases, adaptive
+//! engines run **mask-parameterized verification**: the padded ancestor
+//! mask (already a runtime input tensor) alone encodes each slot's
+//! topology against ONE pinned tree bucket, so every step runs the same
+//! fused executable regardless of which shapes the controller picked —
+//! no per-step bucket ladder, no host-side materialization of pending
+//! fused commits across bucket switches. Under greedy acceptance the two
+//! paths are token-identical (tree shape only changes speed, never
+//! output); `HYDRA_NO_MASKED=1` or [`Engine::force_bucket_ladder`]
+//! restores the ladder for A/B comparison.
 
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
@@ -203,8 +214,25 @@ pub struct Engine<'rt> {
     /// Padded ancestor masks cached per (ladder rung, tree bucket) —
     /// adaptive steps pick the smallest AOT bucket that fits the largest
     /// selected tree, so the verify call itself shrinks with the batch
-    /// throttle (cached for every bucket a rung fits in).
+    /// throttle (cached for every bucket a rung fits in). Under masked
+    /// verification the bucket is pinned, so only (rung, t_bucket) pairs
+    /// exist.
     rung_masks: HashMap<(usize, usize), Vec<i32>>,
+    /// Mask-parameterized ("masked") verification: the `*_masked_*`
+    /// manifest aliases certify that the ancestor mask is a runtime input
+    /// to the verify/commit executables, so the engine pins its static
+    /// tree bucket and serves EVERY topology the adaptive controller
+    /// selects through the mask alone — no per-step bucket ladder, and no
+    /// host-side materialization of pending fused commits when
+    /// consecutive steps pick different shapes. Disable with
+    /// `HYDRA_NO_MASKED=1` or [`Engine::force_bucket_ladder`].
+    masked: bool,
+    /// Pending fused commits applied host-side because a step switched
+    /// tree buckets (the bucket-ladder cost masked verification
+    /// eliminates — pinned-bucket runs keep this at 0). Materializations
+    /// at publish/preemption/retirement are inherent to those operations
+    /// and not counted. Surfaced through `{"op":"stats"}`.
+    pub host_materializations: u64,
     /// Retired sequence summaries (non-event mode; see `take_outputs`).
     pub outputs: Vec<SeqOutput>,
     /// Incremental per-sequence events (`enable_events`): token deltas per
@@ -315,6 +343,13 @@ impl<'rt> Engine<'rt> {
         let anc_mask = padded_anc_mask(&cfg.tree, t_bucket);
         let use_fused = m.has_exe(&format!("verify_commit_{}_b{}_t{}", cfg.size, b, t_bucket))
             && std::env::var("HYDRA_NO_FUSE").as_deref() != Ok("1");
+        // Masked verification needs the capability aliases wide enough for
+        // the configured tree — and, on fused engines, the fused alias too
+        // (one certificate per executable family the step path calls).
+        let masked = std::env::var("HYDRA_NO_MASKED").as_deref() != Ok("1")
+            && m.masked_tree_cap(&cfg.size, b).is_some_and(|cap| cap >= cfg.tree.len())
+            && (!use_fused
+                || m.masked_fused_cap(&cfg.size, b).is_some_and(|cap| cap >= cfg.tree.len()));
         Ok(Engine {
             rt,
             arch,
@@ -335,6 +370,8 @@ impl<'rt> Engine<'rt> {
             static_tree: Rc::new(cfg.tree.clone()),
             adaptive: None,
             rung_masks: HashMap::new(),
+            masked,
+            host_materializations: 0,
             outputs: Vec::new(),
             events: Vec::new(),
             emit_events: false,
@@ -387,27 +424,62 @@ impl<'rt> Engine<'rt> {
         // verification load (a disabled throttle also disables chunking).
         self.chunk_budget = cfg.step_token_budget;
         let ladder = TreeLadder::from_tree(&self.cfg.tree, &cfg.rung_sizes);
-        // Ancestor masks per (rung, bucket): an adaptive step runs the
-        // smallest AOT tree bucket that holds the largest selected tree,
-        // so every rung needs a mask padded to every bucket it fits in.
-        let buckets: Vec<usize> = self
-            .rt
-            .manifest
-            .tree_buckets
-            .iter()
-            .copied()
-            .filter(|&x| x <= self.t_bucket)
-            .collect();
-        self.rung_masks = HashMap::new();
-        for (r, rung) in ladder.rungs.iter().enumerate() {
+        self.adaptive = Some(Adaptive::new(ladder, cfg, self.cfg.batch));
+        self.rebuild_rung_masks();
+        Ok(())
+    }
+
+    /// Whether mask-parameterized verification is active: the engine pins
+    /// its static tree bucket and serves every selected topology through
+    /// the runtime ancestor-mask input alone (no per-step bucket ladder).
+    pub fn masked_verify(&self) -> bool {
+        self.masked
+    }
+
+    /// Drop back to the per-step bucket ladder (the A/B baseline for
+    /// masked verification; no-op when it is already off). The
+    /// `HYDRA_NO_MASKED=1` switch is process-global and races under
+    /// parallel tests — in-process comparisons flip this per engine
+    /// instead.
+    pub fn force_bucket_ladder(&mut self) {
+        if !self.masked {
+            return;
+        }
+        self.masked = false;
+        self.rebuild_rung_masks();
+    }
+
+    /// (Re)build the per-(rung, bucket) ancestor-mask cache for the
+    /// adaptive ladder. Masked engines pin the static bucket, so only
+    /// (rung, t_bucket) pairs exist; ladder engines cache every AOT
+    /// bucket a rung fits in, because each of their steps runs the
+    /// smallest bucket holding its largest selected tree. No-op on
+    /// static engines (they use the precomputed `anc_mask`).
+    fn rebuild_rung_masks(&mut self) {
+        let rungs: Vec<Rc<TreeTopology>> = match &self.adaptive {
+            Some(ad) => ad.ladder.rungs.clone(),
+            None => return,
+        };
+        let buckets: Vec<usize> = if self.masked {
+            vec![self.t_bucket]
+        } else {
+            self.rt
+                .manifest
+                .tree_buckets
+                .iter()
+                .copied()
+                .filter(|&x| x <= self.t_bucket)
+                .collect()
+        };
+        let mut masks = HashMap::new();
+        for (r, rung) in rungs.iter().enumerate() {
             for &tbx in &buckets {
                 if rung.len() <= tbx {
-                    self.rung_masks.insert((r, tbx), padded_anc_mask(rung, tbx));
+                    masks.insert((r, tbx), padded_anc_mask(rung, tbx));
                 }
             }
         }
-        self.adaptive = Some(Adaptive::new(ladder, cfg, self.cfg.batch));
-        Ok(())
+        self.rung_masks = masks;
     }
 
     /// Whether the adaptive speculation controller is running.
@@ -421,12 +493,15 @@ impl<'rt> Engine<'rt> {
     }
 
     /// The batch-aware default for the adaptive verification budget: two
-    /// tree buckets' worth of nodes, or two nodes per slot, whichever is
-    /// larger. At batch 1 this admits the full tree; as the batch fills
-    /// it forces the per-slot average down — the §6.2 compute-saturation
-    /// trade the throttle encodes.
+    /// full trees' worth of REAL nodes, or two nodes per slot, whichever
+    /// is larger. Counted on the configured tree's true size, not its AOT
+    /// bucket — masked engines pin a wide bucket whose padding rows are
+    /// inert, and a budget derived from padding would loosen the throttle
+    /// without any extra useful speculation. At batch 1 this admits the
+    /// full tree; as the batch fills it forces the per-slot average down —
+    /// the §6.2 compute-saturation trade the throttle encodes.
     pub fn default_spec_budget(&self) -> usize {
-        (2 * self.t_bucket).max(2 * self.cfg.batch)
+        (2 * self.cfg.tree.len()).max(2 * self.cfg.batch)
     }
 
     /// Enable incremental event emission (streaming sessions): every step
@@ -1083,18 +1158,20 @@ impl<'rt> Engine<'rt> {
     /// Host-side application of slot `i`'s share of a pending fused
     /// commit: scatters the accepted tree rows into the batched KV cache
     /// exactly as the deferred `verify_commit_*` call would, then zeroes
-    /// the row so the device-side scatter becomes a no-op.
-    fn materialize_pending_row(&mut self, i: usize) {
+    /// the row so the device-side scatter becomes a no-op. Returns whether
+    /// the row had pending work (callers counting bucket-switch
+    /// materializations ignore empty rows).
+    fn materialize_pending_row(&mut self, i: usize) -> bool {
         let (l, kvd) = (self.dims.n_layers, self.dims.kv_dim);
         let s = self.rt.manifest.seq_max;
         let a = self.rt.manifest.accept_max;
-        let Some(p) = self.pending.as_mut() else { return };
+        let Some(p) = self.pending.as_mut() else { return false };
         // Index the tree rows with the bucket the pending tensors were
-        // shaped for (adaptive steps vary the bucket).
+        // shaped for (bucket-ladder steps vary the bucket).
         let tb = p.bucket;
         let n = p.accept_len.i32s()[i] as usize;
         if n == 0 {
-            return;
+            return false;
         }
         let base = p.commit_base.i32s()[i] as usize;
         for j in 0..n {
@@ -1109,6 +1186,7 @@ impl<'rt> Engine<'rt> {
             }
         }
         p.accept_len.i32s_mut()[i] = 0;
+        true
     }
 
     /// Drain pending prompt chunks (continuous chunked prefill) through
@@ -1231,6 +1309,12 @@ impl<'rt> Engine<'rt> {
         // validated at engine init.
         let tb = match &self.adaptive {
             None => self.t_bucket,
+            // Masked verification: the ancestor mask is a runtime input,
+            // so the pinned static bucket serves every selected topology
+            // (unused rows are inert self-attention padding) — no
+            // rebucketing, and hence no bucket-switch materialization of
+            // pending fused commits below.
+            Some(_) if self.masked => self.t_bucket,
             Some(_) => {
                 let t_need = (0..b)
                     .filter(|&i| self.slots[i].decoding())
@@ -1284,7 +1368,9 @@ impl<'rt> Engine<'rt> {
             self.pending.as_ref().is_some_and(|p| !fused_step || p.bucket != tb);
         if stale_pending {
             for i in 0..b {
-                self.materialize_pending_row(i);
+                if self.materialize_pending_row(i) {
+                    self.host_materializations += 1;
+                }
             }
             self.pending = None;
         }
@@ -1944,6 +2030,8 @@ fn tile(mask: &[i32], b: usize) -> Vec<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
+    use crate::{prop_assert, prop_assert_eq};
 
     #[test]
     fn padded_mask_has_self_rows() {
@@ -1960,5 +2048,127 @@ mod tests {
     #[test]
     fn tile_repeats() {
         assert_eq!(tile(&[1, 2], 3), vec![1, 2, 1, 2, 1, 2]);
+    }
+
+    /// Seeded random valid topology (same construction as `tree::tests`):
+    /// grow canonical choice paths by extending a random existing node —
+    /// or the root — with its next contiguous child rank.
+    fn random_tree(rng: &mut Pcg32, max_nodes: usize) -> TreeTopology {
+        let mut paths: Vec<Vec<usize>> = Vec::new();
+        let n = rng.range(0, max_nodes);
+        for _ in 0..n {
+            let base = if paths.is_empty() || rng.f64() < 0.3 {
+                vec![]
+            } else {
+                paths[rng.below(paths.len())].clone()
+            };
+            if base.len() >= 4 {
+                continue;
+            }
+            let next_rank = paths
+                .iter()
+                .filter(|p| p.len() == base.len() + 1 && p[..base.len()] == base[..])
+                .count();
+            let mut p = base;
+            p.push(next_rank);
+            paths.push(p);
+        }
+        TreeTopology::from_paths(paths).unwrap()
+    }
+
+    #[test]
+    fn prop_padded_mask_rows_are_exactly_root_paths() {
+        // Row n of the padded mask is {ancestors-or-self of n} and nothing
+        // else — the contract the mask-parameterized verify executables
+        // rely on for correctness at any topology.
+        prop::check("padded-mask-root-paths", 100, |rng| {
+            let tree = random_tree(rng, 24);
+            let t = tree.len();
+            let tb = t + rng.range(0, 9); // 0..8 rows of padding
+            let m = padded_anc_mask(&tree, tb);
+            for n in 0..t {
+                let on_path: Vec<usize> = tree.path_to(n);
+                for j in 0..tb {
+                    let want = i32::from(on_path.contains(&j));
+                    prop_assert!(
+                        m[n * tb + j] == want,
+                        "node {n} col {j}: got {} want {want} (tree {:?})",
+                        m[n * tb + j],
+                        tree.paths
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_padded_mask_padding_is_inert() {
+        // Padding rows are self-only (no NaN softmax) and no REAL node
+        // attends a padding column — padded rows can never leak into a
+        // real node's attention, whatever topology the mask encodes.
+        prop::check("padded-mask-inert-padding", 100, |rng| {
+            let tree = random_tree(rng, 24);
+            let t = tree.len();
+            let tb = t + rng.range(1, 9);
+            let m = padded_anc_mask(&tree, tb);
+            for i in t..tb {
+                for j in 0..tb {
+                    let want = i32::from(i == j);
+                    prop_assert!(
+                        m[i * tb + j] == want,
+                        "padding row {i} col {j}: got {}",
+                        m[i * tb + j]
+                    );
+                }
+            }
+            for i in 0..t {
+                for j in t..tb {
+                    prop_assert!(m[i * tb + j] == 0, "real row {i} attends padding col {j}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_padded_mask_at_exact_size_is_unpadded() {
+        prop::check("padded-mask-exact", 100, |rng| {
+            let tree = random_tree(rng, 32);
+            prop_assert_eq!(padded_anc_mask(&tree, tree.len()), tree.anc_mask());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ladder_rung_masks_are_prefix_submatrices() {
+        // A prefix-truncated rung's mask is the top-left submatrix of the
+        // full tree's mask: truncation never rewires ancestry among the
+        // surviving nodes, so a rung padded up to the pinned bucket runs
+        // bit-identically to the full tree restricted to its nodes.
+        prop::check("rung-mask-prefix-submatrix", 100, |rng| {
+            let tree = random_tree(rng, 32);
+            let t = tree.len();
+            let full = tree.anc_mask();
+            let ladder = TreeLadder::from_tree(&tree, &[1, 2, 4, 6, 8, 12, 16, 24, 32]);
+            for rung in &ladder.rungs {
+                let tr = rung.len();
+                let sub = rung.anc_mask();
+                for i in 0..tr {
+                    for j in 0..tr {
+                        prop_assert!(
+                            sub[i * tr + j] == full[i * t + j],
+                            "rung {tr} differs from full tree at ({i},{j})"
+                        );
+                    }
+                }
+                // And the padded form embeds that submatrix unchanged.
+                let padded = padded_anc_mask(rung, t);
+                for i in 0..tr {
+                    prop_assert_eq!(padded[i * t..i * t + tr], sub[i * tr..(i + 1) * tr]);
+                }
+            }
+            Ok(())
+        });
     }
 }

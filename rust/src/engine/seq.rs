@@ -43,7 +43,11 @@ pub struct SamplingParams {
     /// pins it to at most `k` tree nodes (`Fixed(1)` = pure
     /// autoregressive). Only consulted when the engine runs with
     /// `Engine::enable_adaptive`; a static-tree engine verifies its
-    /// configured tree for every slot.
+    /// configured tree for every slot. Under greedy acceptance the
+    /// policy never changes output, only speed — and under the engine's
+    /// mask-parameterized verification every selected shape runs through
+    /// the same pinned executable, the runtime ancestor mask alone
+    /// encoding this slot's topology.
     pub speculation: SpeculationMode,
 }
 

@@ -532,6 +532,7 @@ fn merge_stats(blocks: Vec<Json>) -> Json {
             "spec_efficiency",
             Json::num(if verified > 0.0 { committed / verified } else { 0.0 }),
         ),
+        ("host_materializations", Json::num(sum("host_materializations"))),
     ];
     let kvs: Vec<&Json> = blocks.iter().filter_map(|b| b.get("kv_pool")).collect();
     if !kvs.is_empty() {
@@ -617,6 +618,7 @@ mod tests {
             ("spec_tokens_verified", Json::num(verified)),
             ("spec_tokens_wasted", Json::num(verified / 2.0)),
             ("spec_efficiency", Json::num(eff)),
+            ("host_materializations", Json::num(2.0 * worker)),
             (
                 "kv_pool",
                 Json::obj(vec![
@@ -668,6 +670,8 @@ mod tests {
         assert_eq!(pc.req("lookups").as_usize(), Some(20));
         // Scheduler preemptions sum (worker 0 had 0, worker 1 had 1).
         assert_eq!(m.req("preemptions").as_usize(), Some(1));
+        // Bucket-switch materializations sum (0 + 2).
+        assert_eq!(m.req("host_materializations").as_usize(), Some(2));
         // KV-pool block: counters sum, ratios recompute from summed raws.
         let kv = m.req("kv_pool");
         assert_eq!(kv.req("blocks_total").as_usize(), Some(16));

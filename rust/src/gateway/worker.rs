@@ -334,6 +334,7 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
         ("spec_tokens_verified", Json::num(engine.spec.nodes_verified as f64)),
         ("spec_tokens_wasted", Json::num(engine.spec.wasted as f64)),
         ("spec_efficiency", Json::num(engine.spec.efficiency())),
+        ("host_materializations", Json::num(engine.host_materializations as f64)),
     ];
     if let Some(ad) = engine.adaptive_snapshot() {
         // Current per-slot tree sizes (active slots only — vacant rows

@@ -70,6 +70,17 @@
 //! policy; under greedy acceptance adaptive output is token-identical to
 //! static. `benches/adaptive.rs` runs the static-vs-adaptive A/B.
 //!
+//! Verification is **mask-parameterized**: the padded ancestor mask is a
+//! runtime input tensor to every verify/commit executable, and when the
+//! artifacts carry the `*_masked_*` capability aliases, adaptive engines
+//! pin ONE tree bucket and serve every selected topology through the
+//! mask alone — no per-step bucket ladder, no host-side materialization
+//! of deferred fused commits across bucket switches (counted by the
+//! engine's `host_materializations`, surfaced in `{"op":"stats"}`).
+//! `tests/fused_verify_e2e.rs` holds the cross-topology conformance
+//! suite (masked vs bucket ladder vs pure AR, byte-identical greedy
+//! output); `benches/adaptive.rs` also runs the ladder-vs-masked A/B.
+//!
 //! ## Replica gateway
 //!
 //! One engine is deliberately single-threaded (one PJRT client, one

@@ -254,6 +254,62 @@ impl Manifest {
     pub fn has_exe(&self, name: &str) -> bool {
         self.executables.contains_key(name)
     }
+
+    /// Node capacity certified by the `*_masked_*` verify/commit aliases
+    /// for `(size, batch)`, or `None` when the artifacts predate them.
+    ///
+    /// The aliases (emitted by `python/compile/aot.py`) point at the
+    /// widest tree bucket and certify that the ancestor mask is a runtime
+    /// *input* to verification — any topology of up to the returned node
+    /// count runs in one call with padding rows inert, so the engine can
+    /// pin a single bucket instead of climbing the `_t{N}` ladder. The
+    /// capacity is read off the alias's own arg contract (`tokens`
+    /// shape `[B, cap]`) and cross-checked against the commit alias's
+    /// `tree_kv` shape `[B, L, 2, cap, KVD]`; any mismatch or missing
+    /// alias disables masked mode (bucket-ladder fallback).
+    pub fn masked_tree_cap(&self, size: &str, batch: usize) -> Option<usize> {
+        let verify = self.executables.get(&format!("verify_masked_{size}_b{batch}"))?;
+        let commit = self.executables.get(&format!("commit_masked_{size}_b{batch}"))?;
+        let cap = verify
+            .args
+            .iter()
+            .find(|a| a.kind == "dyn" && a.name == "tokens")
+            .and_then(|a| a.shape.get(1).copied())?;
+        let commit_cap = commit
+            .args
+            .iter()
+            .find(|a| a.kind == "dyn" && a.name == "tree_kv")
+            .and_then(|a| a.shape.get(3).copied())?;
+        if cap == commit_cap && cap > 0 {
+            Some(cap)
+        } else {
+            None
+        }
+    }
+
+    /// As [`masked_tree_cap`](Self::masked_tree_cap), for the fused
+    /// `verify_commit_masked_*` alias (capacity read from `tokens`,
+    /// cross-checked against `prev_tree_kv`). The fused alias is emitted
+    /// by `aot_extend.py` and may be absent even when the unfused masked
+    /// aliases exist.
+    pub fn masked_fused_cap(&self, size: &str, batch: usize) -> Option<usize> {
+        let fused = self.executables.get(&format!("verify_commit_masked_{size}_b{batch}"))?;
+        let cap = fused
+            .args
+            .iter()
+            .find(|a| a.kind == "dyn" && a.name == "tokens")
+            .and_then(|a| a.shape.get(1).copied())?;
+        let prev_cap = fused
+            .args
+            .iter()
+            .find(|a| a.kind == "dyn" && a.name == "prev_tree_kv")
+            .and_then(|a| a.shape.get(3).copied())?;
+        if cap == prev_cap && cap > 0 {
+            Some(cap)
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -268,5 +324,78 @@ mod tests {
         assert_eq!(Manifest::bucket(&buckets, 16).unwrap(), 16);
         assert_eq!(Manifest::bucket(&buckets, 33).unwrap(), 64);
         assert!(Manifest::bucket(&buckets, 65).is_err());
+    }
+
+    fn exe(args: &[(&str, &[usize])]) -> ExeSpec {
+        ExeSpec {
+            file: "x.hlo.txt".into(),
+            args: args
+                .iter()
+                .map(|(n, s)| ArgSpec {
+                    kind: "dyn".into(),
+                    name: n.to_string(),
+                    shape: s.to_vec(),
+                    dtype: "i32".into(),
+                })
+                .collect(),
+            outputs: Vec::new(),
+        }
+    }
+
+    fn manifest_with(exes: Vec<(&str, ExeSpec)>) -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            vocab: 0,
+            seq_max: 0,
+            accept_max: 0,
+            num_heads: 0,
+            tree_buckets: vec![1, 8, 16],
+            batch_buckets: BTreeMap::new(),
+            hydra_m_buckets: BTreeMap::new(),
+            eagle_n_buckets: Vec::new(),
+            sizes: BTreeMap::new(),
+            head_variants: BTreeMap::new(),
+            weight_files: BTreeMap::new(),
+            executables: exes.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn masked_cap_from_aliases() {
+        let m = manifest_with(vec![
+            ("verify_masked_s_b1", exe(&[("tokens", &[1, 16]), ("anc_mask", &[1, 16, 16])])),
+            ("commit_masked_s_b1", exe(&[("kv", &[1, 2, 2, 64, 8]), ("tree_kv", &[1, 2, 2, 16, 8])])),
+        ]);
+        assert_eq!(m.masked_tree_cap("s", 1), Some(16));
+        // Missing batch bucket / size → no capability.
+        assert_eq!(m.masked_tree_cap("s", 2), None);
+        assert_eq!(m.masked_tree_cap("m", 1), None);
+        // No fused alias in this manifest.
+        assert_eq!(m.masked_fused_cap("s", 1), None);
+    }
+
+    #[test]
+    fn masked_cap_rejects_inconsistent_aliases() {
+        // Verify and commit aliases certifying different capacities is a
+        // broken artifact set — masked mode must stay off.
+        let m = manifest_with(vec![
+            ("verify_masked_s_b1", exe(&[("tokens", &[1, 16])])),
+            ("commit_masked_s_b1", exe(&[("tree_kv", &[1, 2, 2, 8, 8])])),
+        ]);
+        assert_eq!(m.masked_tree_cap("s", 1), None);
+    }
+
+    #[test]
+    fn masked_fused_cap_cross_checks_prev_tree_kv() {
+        let m = manifest_with(vec![(
+            "verify_commit_masked_s_b1",
+            exe(&[("tokens", &[1, 16]), ("prev_tree_kv", &[1, 2, 2, 16, 8])]),
+        )]);
+        assert_eq!(m.masked_fused_cap("s", 1), Some(16));
+        let bad = manifest_with(vec![(
+            "verify_commit_masked_s_b1",
+            exe(&[("tokens", &[1, 16]), ("prev_tree_kv", &[1, 2, 2, 8, 8])]),
+        )]);
+        assert_eq!(bad.masked_fused_cap("s", 1), None);
     }
 }

@@ -56,6 +56,43 @@ pub struct Runtime {
     pub upload_time: RefCell<std::time::Duration>,
     /// Cumulative device→host output download time.
     pub download_time: RefCell<std::time::Duration>,
+    /// Content-addressed device cache for ancestor-mask uploads: the mask
+    /// is a pure function of the step's (per-slot) tree topologies, and an
+    /// engine cycles through a small set of them (one static mask, or one
+    /// per ladder-rung combination under adaptive speculation) — so the
+    /// same `[B,T,T]` payload would otherwise be re-uploaded every step.
+    /// Keyed by FNV-1a over shape + i32 payload; bounded by
+    /// [`MASK_CACHE_MAX`] (cleared wholesale when full). Safe to reuse
+    /// across executions for the same reason weight buffers are: this
+    /// crate's PJRT execute path never donates input buffers.
+    mask_cache: RefCell<HashMap<u64, xla::PjRtBuffer>>,
+    /// Ancestor-mask uploads avoided via `mask_cache` (profiling hook,
+    /// reset by [`Runtime::reset_counters`]).
+    pub mask_cache_hits: RefCell<u64>,
+}
+
+/// Capacity bound (distinct mask contents) of the ancestor-mask upload
+/// cache. Adaptive engines produce at most one entry per observed
+/// per-slot rung combination at each bucket; the bound is a backstop for
+/// pathological churn, not a steady-state limit.
+const MASK_CACHE_MAX: usize = 256;
+
+/// FNV-1a over a tensor's shape and i32 payload — the content address of
+/// an ancestor mask in the upload cache.
+fn mask_key(shape: &[usize], data: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |h: u64, b: u8| (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    for &d in shape {
+        for b in (d as u64).to_le_bytes() {
+            h = eat(h, b);
+        }
+    }
+    for &x in data {
+        for b in x.to_le_bytes() {
+            h = eat(h, b);
+        }
+    }
+    h
 }
 
 impl Runtime {
@@ -75,6 +112,8 @@ impl Runtime {
             exec_calls: RefCell::new(0),
             upload_time: RefCell::new(Default::default()),
             download_time: RefCell::new(Default::default()),
+            mask_cache: RefCell::new(HashMap::new()),
+            mask_cache_hits: RefCell::new(0),
         })
     }
 
@@ -161,6 +200,35 @@ impl Runtime {
             bail!("{name}: expected {n_dyn} dyn args, got {}", dyn_args.len());
         }
 
+        // Content address of each dyn arg that routes through the mask
+        // cache (`None` for everything else), in dyn-arg order.
+        let mask_keys: Vec<Option<u64>> = spec
+            .args
+            .iter()
+            .filter(|a| a.kind == "dyn")
+            .zip(dyn_args)
+            .map(|(a, t)| match (a.name.as_str(), &t.data) {
+                ("anc_mask", Data::I32(v)) => Some(mask_key(&t.shape, v)),
+                _ => None,
+            })
+            .collect();
+        // Warm the mask cache before building argument refs, so the ref
+        // pass below can hold one shared borrow across the execution.
+        for (key, t) in mask_keys.iter().zip(dyn_args) {
+            let Some(k) = key else { continue };
+            let mut cache = self.mask_cache.borrow_mut();
+            if cache.contains_key(k) {
+                *self.mask_cache_hits.borrow_mut() += 1;
+            } else {
+                if cache.len() >= MASK_CACHE_MAX {
+                    cache.clear();
+                }
+                let buf = self.upload(t)?;
+                cache.insert(*k, buf);
+            }
+        }
+        let mask_cache = self.mask_cache.borrow();
+
         let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
         let mut di = 0;
         // Collect argument buffers in manifest order. We stash uploads in a
@@ -169,11 +237,13 @@ impl Runtime {
         enum Slot<'a> {
             Uploaded(usize),
             Weight(&'a xla::PjRtBuffer),
+            Mask(u64),
         }
         let mut slots: Vec<Slot> = Vec::with_capacity(spec.args.len());
         for a in &spec.args {
             if a.kind == "dyn" {
                 let t = dyn_args[di];
+                let key = mask_keys[di];
                 di += 1;
                 if t.shape != a.shape {
                     bail!("{name}: arg `{}` shape {:?} != expected {:?}", a.name, t.shape, a.shape);
@@ -183,8 +253,12 @@ impl Runtime {
                 if want_f32 != is_f32 {
                     bail!("{name}: arg `{}` dtype mismatch", a.name);
                 }
-                uploaded.push(self.upload(t)?);
-                slots.push(Slot::Uploaded(uploaded.len() - 1));
+                if let Some(k) = key {
+                    slots.push(Slot::Mask(k));
+                } else {
+                    uploaded.push(self.upload(t)?);
+                    slots.push(Slot::Uploaded(uploaded.len() - 1));
+                }
             } else {
                 let buf = weight_sets
                     .iter()
@@ -195,13 +269,16 @@ impl Runtime {
                 slots.push(Slot::Weight(buf));
             }
         }
-        let refs: Vec<&xla::PjRtBuffer> = slots
-            .iter()
-            .map(|s| match s {
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(slots.len());
+        for s in &slots {
+            refs.push(match s {
                 Slot::Uploaded(i) => &uploaded[*i],
                 Slot::Weight(b) => *b,
-            })
-            .collect();
+                Slot::Mask(k) => {
+                    mask_cache.get(k).context("mask cache entry missing after warm pass")?
+                }
+            });
+        }
 
         let t0 = Instant::now();
         let mut out = exe
@@ -239,11 +316,28 @@ impl Runtime {
         Ok(tensors)
     }
 
-    /// Zero the profiling counters (exec/upload/download times).
+    /// Zero the profiling counters (exec/upload/download times). Leaves
+    /// the mask cache itself populated — its buffers stay valid — but
+    /// zeroes the hit counter.
     pub fn reset_counters(&self) {
         *self.exec_time.borrow_mut() = Default::default();
         *self.upload_time.borrow_mut() = Default::default();
         *self.download_time.borrow_mut() = Default::default();
         *self.exec_calls.borrow_mut() = 0;
+        *self.mask_cache_hits.borrow_mut() = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mask_key;
+
+    #[test]
+    fn mask_key_is_deterministic_and_content_sensitive() {
+        let a = mask_key(&[1, 2, 2], &[1, 0, 1, 1]);
+        assert_eq!(a, mask_key(&[1, 2, 2], &[1, 0, 1, 1]));
+        assert_ne!(a, mask_key(&[1, 2, 2], &[1, 0, 0, 1]));
+        // Same payload under a different shape is a different mask.
+        assert_ne!(a, mask_key(&[2, 1, 2], &[1, 0, 1, 1]));
     }
 }

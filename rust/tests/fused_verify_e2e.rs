@@ -1,0 +1,321 @@
+//! Cross-topology conformance suite for mask-parameterized verification.
+//!
+//! The tentpole contract: with the ancestor mask as a runtime input, ONE
+//! pinned tree bucket serves ANY topology the adaptive controller
+//! selects, and under greedy acceptance the masked path, the per-step
+//! bucket ladder, and pure autoregressive decoding all produce
+//! byte-identical output — topology and executable choice change speed,
+//! never tokens. The suite drives randomized valid topologies through
+//! all three paths across the head variants, checks the speculation
+//! counters agree between masked and ladder runs, and regression-tests
+//! the bucket-switch class of bugs: a ladder step that changes tree
+//! buckets with a pending fused commit must materialize it host-side
+//! (counted), while the masked path must report ZERO such
+//! materializations.
+
+use hydra_serve::adaptive::AdaptiveConfig;
+use hydra_serve::draft;
+use hydra_serve::engine::{
+    Engine, EngineConfig, Request, SamplingParams, SpecTotals, SpeculationMode,
+};
+use hydra_serve::runtime::Runtime;
+use hydra_serve::tokenizer::{format_prompt, Tokenizer};
+use hydra_serve::tree::TreeTopology;
+use hydra_serve::util::rng::Pcg32;
+
+/// None (with a printed note) when the AOT artifacts are absent — the
+/// seed environment ships without `make artifacts`; these tests cover
+/// engine behavior, not artifact generation.
+fn runtime() -> Option<Runtime> {
+    let dir = hydra_serve::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts` first)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).unwrap())
+}
+
+fn tok(rt: &Runtime) -> Tokenizer {
+    Tokenizer::load(&rt.manifest.dir.join("tokenizer.json")).unwrap()
+}
+
+/// Seeded random valid topology in canonical order: grow choice paths by
+/// extending a random existing node (or the root) with its next
+/// contiguous child rank, bounded by node count and head depth.
+fn random_tree(rng: &mut Pcg32, max_nodes: usize, max_path: usize) -> TreeTopology {
+    let mut paths: Vec<Vec<usize>> = Vec::new();
+    let n = rng.range(0, max_nodes.max(2));
+    for _ in 0..n {
+        let base = if paths.is_empty() || rng.f64() < 0.3 {
+            vec![]
+        } else {
+            paths[rng.below(paths.len())].clone()
+        };
+        if base.len() >= max_path {
+            continue;
+        }
+        let next_rank = paths
+            .iter()
+            .filter(|p| p.len() == base.len() + 1 && p[..base.len()] == base[..])
+            .count();
+        let mut p = base;
+        p.push(next_rank);
+        paths.push(p);
+    }
+    TreeTopology::from_paths(paths).unwrap()
+}
+
+/// Which verification path an adaptive engine should run.
+#[derive(Clone, Copy, PartialEq)]
+enum Path {
+    Masked,
+    Ladder,
+}
+
+/// One greedy batch-1 adaptive decode; returns the token stream, the
+/// engine's lifetime speculation counters, and its bucket-switch
+/// materialization count.
+fn run_adaptive(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    tree: &TreeTopology,
+    path: Path,
+    prompt: &[u32],
+    max_new: usize,
+) -> (Vec<u32>, SpecTotals, u64) {
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            size: size.into(),
+            variant: variant.into(),
+            tree: tree.clone(),
+            batch: 1,
+            seed: 11,
+        },
+    )
+    .unwrap();
+    engine.enable_adaptive(AdaptiveConfig::default()).unwrap();
+    if path == Path::Ladder {
+        engine.force_bucket_ladder();
+        assert!(!engine.masked_verify());
+    }
+    engine.admit(vec![Request::new(0, prompt.to_vec(), SamplingParams::greedy(max_new))]).unwrap();
+    engine.run_to_completion().unwrap();
+    let out = engine.take_outputs().pop().unwrap();
+    (out.generated, engine.spec, engine.host_materializations)
+}
+
+fn ar_baseline(rt: &Runtime, size: &str, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig {
+            size: size.into(),
+            variant: "ar".into(),
+            tree: TreeTopology::ar(),
+            batch: 1,
+            seed: 11,
+        },
+    )
+    .unwrap();
+    engine.admit(vec![Request::new(0, prompt.to_vec(), SamplingParams::greedy(max_new))]).unwrap();
+    engine.run_to_completion().unwrap();
+    engine.take_outputs().pop().unwrap().generated
+}
+
+#[test]
+fn random_topologies_masked_ladder_and_ar_are_token_identical() {
+    let Some(rt) = runtime() else { return };
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let masked_available = rt.manifest.masked_tree_cap(&size, 1).is_some();
+    let max_bucket = rt.manifest.tree_buckets.iter().copied().max().unwrap_or(1);
+    let max_nodes = max_bucket.min(24);
+    let max_path = rt.manifest.num_heads.min(4);
+    let prompts = ["tell me about alice.", "who is bob?", "compute 3 + 4."];
+    let max_new = 24;
+
+    for variant in ["medusa", "hydra", "hydra_pp"] {
+        if !draft::available(&rt.manifest, &size, variant) {
+            continue;
+        }
+        let mut rng = Pcg32::new(0xF05E + variant.len() as u64);
+        for (case, prompt) in prompts.iter().enumerate() {
+            let tree = random_tree(&mut rng, max_nodes, max_path);
+            let ids = t.encode(&format_prompt(prompt));
+            let ar = ar_baseline(&rt, &size, &ids, max_new);
+            let (masked, m_spec, m_mat) =
+                run_adaptive(&rt, &size, variant, &tree, Path::Masked, &ids, max_new);
+            let (ladder, l_spec, _) =
+                run_adaptive(&rt, &size, variant, &tree, Path::Ladder, &ids, max_new);
+            assert_eq!(
+                masked, ladder,
+                "{variant} case {case}: masked vs ladder output differs (tree {:?})",
+                tree.paths
+            );
+            assert_eq!(
+                masked, ar,
+                "{variant} case {case}: speculative output differs from AR greedy (tree {:?})",
+                tree.paths
+            );
+            // Identical topology selection on both paths ⇒ the speculation
+            // accounting (verified nodes, committed tokens, wasted draft)
+            // must agree exactly — the executable changed, not the work.
+            assert_eq!(m_spec.nodes_verified, l_spec.nodes_verified, "{variant} case {case}");
+            assert_eq!(m_spec.tokens_committed, l_spec.tokens_committed, "{variant} case {case}");
+            assert_eq!(m_spec.wasted, l_spec.wasted, "{variant} case {case}");
+            // The masked path never rebuckets, so it can never be forced
+            // into a bucket-switch materialization.
+            if masked_available {
+                assert_eq!(m_mat, 0, "{variant} case {case}: masked path materialized host-side");
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_capability_is_detected_and_pins_the_bucket() {
+    let Some(rt) = runtime() else { return };
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
+    let tree =
+        if variant == "ar" { TreeTopology::ar() } else { draft::default_tree(variant, 1) };
+    let mut engine = Engine::new(
+        &rt,
+        EngineConfig { size: size.clone(), variant: variant.into(), tree, batch: 1, seed: 1 },
+    )
+    .unwrap();
+    let cap = rt.manifest.masked_tree_cap(&size, 1);
+    match cap {
+        Some(c) => {
+            assert!(c >= engine.cfg.tree.len(), "alias capacity below the configured tree");
+            assert!(engine.masked_verify(), "capability present but not detected");
+            engine.force_bucket_ladder();
+            assert!(!engine.masked_verify(), "force_bucket_ladder must stick");
+        }
+        None => assert!(
+            !engine.masked_verify(),
+            "masked mode active without the capability aliases"
+        ),
+    }
+}
+
+#[test]
+fn bucket_switch_rematerialization_is_counted_and_masked_path_reports_zero() {
+    // The regression this PR's tentpole exists to kill: on the bucket
+    // ladder, consecutive steps that pick different tree buckets while a
+    // fused commit is pending force a host-side materialization; the
+    // masked path pins one bucket and must never take it. Construction:
+    // batch 2, one long Fixed(k_small) slot + one short Fixed(k_large)
+    // slot — while the short slot lives, steps run the larger bucket;
+    // when it retires, the next step drops to the smaller bucket with
+    // the long slot's fused commit still pending.
+    let Some(rt) = runtime() else { return };
+    let t = tok(&rt);
+    let size = rt.manifest.sizes.keys().next().unwrap().clone();
+    let variant = if draft::available(&rt.manifest, &size, "hydra") {
+        "hydra"
+    } else if draft::available(&rt.manifest, &size, "medusa") {
+        "medusa"
+    } else {
+        eprintln!("skipping: no drafting head variant in these artifacts");
+        return;
+    };
+    let buckets = rt.manifest.batch_buckets[&size].clone();
+    let Some(b) = buckets.iter().copied().filter(|&b| b >= 2).min() else {
+        eprintln!("skipping: no batched buckets in these artifacts");
+        return;
+    };
+    let tree = draft::default_tree(variant, b);
+    // Two tree buckets the ladder can actually alternate between: both
+    // must hold a ladder rung, and the rung sizes must land in different
+    // buckets. Without such a pair (degenerate bucket set), the ladder
+    // cannot switch and the regression cannot be exercised.
+    let mut tbs: Vec<usize> = rt.manifest.tree_buckets.iter().copied().collect();
+    tbs.sort_unstable();
+    let rungs = &AdaptiveConfig::default().rung_sizes;
+    let pair = tbs
+        .windows(2)
+        .filter_map(|w| {
+            let (lo, hi) = (w[0], w[1]);
+            let k_small = rungs.iter().copied().filter(|&r| r <= lo.min(tree.len())).max()?;
+            let k_large = rungs
+                .iter()
+                .copied()
+                .filter(|&r| r > lo && r <= hi.min(tree.len()))
+                .max()?;
+            Some((k_small, k_large))
+        })
+        .next();
+    let Some((k_small, k_large)) = pair else {
+        eprintln!("skipping: tree buckets {tbs:?} admit no ladder bucket switch");
+        return;
+    };
+    let fused_available = rt
+        .manifest
+        .tree_buckets
+        .iter()
+        .any(|&tb| rt.manifest.has_exe(&format!("verify_commit_{size}_b{b}_t{tb}")));
+    let masked_available = rt.manifest.masked_tree_cap(&size, b).is_some();
+
+    let p_long = t.encode(&format_prompt("tell me about alice."));
+    let p_short = t.encode(&format_prompt("who is bob?"));
+    let run = |path: Path| -> (Vec<u32>, u64) {
+        let mut engine = Engine::new(
+            &rt,
+            EngineConfig {
+                size: size.clone(),
+                variant: variant.into(),
+                tree: tree.clone(),
+                batch: b,
+                seed: 13,
+            },
+        )
+        .unwrap();
+        engine.enable_adaptive(AdaptiveConfig::default()).unwrap();
+        if path == Path::Ladder {
+            engine.force_bucket_ladder();
+        }
+        engine
+            .admit(vec![
+                Request::new(
+                    0,
+                    p_long.clone(),
+                    SamplingParams {
+                        speculation: SpeculationMode::Fixed(k_small),
+                        ..SamplingParams::greedy(40)
+                    },
+                ),
+                Request::new(
+                    1,
+                    p_short.clone(),
+                    SamplingParams {
+                        speculation: SpeculationMode::Fixed(k_large),
+                        ..SamplingParams::greedy(6)
+                    },
+                ),
+            ])
+            .unwrap();
+        engine.run_to_completion().unwrap();
+        let outs = engine.take_outputs();
+        let long = outs.iter().find(|o| o.req_id == 0).unwrap().generated.clone();
+        (long, engine.host_materializations)
+    };
+
+    let (ladder_out, ladder_mat) = run(Path::Ladder);
+    let (masked_out, masked_mat) = run(Path::Masked);
+    assert_eq!(
+        masked_out, ladder_out,
+        "bucket-switch workload: masked vs ladder output differs"
+    );
+    if fused_available {
+        assert!(
+            ladder_mat > 0,
+            "ladder run crossed a bucket boundary with a pending fused commit \
+             but counted no host materializations (k_small={k_small}, k_large={k_large})"
+        );
+    }
+    if masked_available {
+        assert_eq!(masked_mat, 0, "masked path must never materialize on a bucket switch");
+    }
+}

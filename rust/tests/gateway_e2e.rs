@@ -14,6 +14,18 @@ use hydra_serve::tokenizer::Tokenizer;
 use hydra_serve::util::json::Json;
 use hydra_serve::workload;
 
+/// None (with a printed note) when the AOT artifacts are absent — CI
+/// environments without `make artifacts` skip the e2e layer instead of
+/// failing it.
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = hydra_serve::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts` first)", dir.display());
+        return None;
+    }
+    Some(dir)
+}
+
 /// Multi-tenant prompt texts shared by the identity phases.
 fn trace_prompts(dir: &std::path::Path) -> Vec<String> {
     let tok = Tokenizer::load(&dir.join("tokenizer.json")).expect("tokenizer");
@@ -26,8 +38,7 @@ fn trace_prompts(dir: &std::path::Path) -> Vec<String> {
 
 #[test]
 fn pool_matches_single_worker_and_drains_live() {
-    let dir = hydra_serve::artifacts_dir();
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let Some(dir) = artifacts() else { return };
     let prompts = trace_prompts(&dir);
 
     // Reference: single worker, prefix cache on.
@@ -180,8 +191,7 @@ fn pool_matches_single_worker_and_drains_live() {
 
 #[test]
 fn drain_during_shed_reroutes_or_sheds_every_queued_request() {
-    let dir = hydra_serve::artifacts_dir();
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let Some(dir) = artifacts() else { return };
     // Two workers, 1-deep queues: an identical-prompt burst pins one
     // worker via prefix affinity and drives its queue to capacity; a
     // drain landing mid-burst must leave NO request unanswered — every
@@ -259,8 +269,7 @@ fn drain_during_shed_reroutes_or_sheds_every_queued_request() {
 
 #[test]
 fn bounded_queue_sheds_with_overloaded_frames() {
-    let dir = hydra_serve::artifacts_dir();
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let Some(dir) = artifacts() else { return };
     // One worker, queue bound of 1: a burst must shed, not block or drop
     // connections.
     let (port, shutdown, handle) =

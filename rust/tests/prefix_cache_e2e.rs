@@ -13,10 +13,16 @@ use hydra_serve::engine::{Engine, EngineConfig, Request, SamplingParams, SeqOutp
 use hydra_serve::runtime::Runtime;
 use hydra_serve::tokenizer::{format_prompt, Tokenizer};
 
-fn runtime() -> Runtime {
+/// None (with a printed note) when the AOT artifacts are absent — CI
+/// environments without `make artifacts` skip the e2e layer instead of
+/// failing it.
+fn runtime() -> Option<Runtime> {
     let dir = hydra_serve::artifacts_dir();
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    Runtime::new(dir).unwrap()
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts` first)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).unwrap())
 }
 
 fn tok(rt: &Runtime) -> Tokenizer {
@@ -52,7 +58,7 @@ fn run_one(engine: &mut Engine, id: u64, prompt_ids: Vec<u32>, max_new: usize) -
 
 #[test]
 fn warm_full_hit_is_token_identical_to_cold() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let t = tok(&rt);
     let size = rt.manifest.sizes.keys().next().unwrap().clone();
     let prompt = t.encode(&format_prompt("tell me about alice."));
@@ -104,7 +110,7 @@ fn warm_full_hit_is_token_identical_to_cold() {
 
 #[test]
 fn warm_partial_hit_extends_tail_and_matches_cold() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let t = tok(&rt);
     let size = rt.manifest.sizes.keys().next().unwrap().clone();
     let p1 = t.encode(&format_prompt("tell me about alice."));
@@ -150,7 +156,7 @@ fn resubmitting_a_completed_prompt_hits_via_retirement_publish() {
     // prefix (prompt + answer) is published; a follow-up prompt that
     // extends the *conversation* reuses it, and an exact resubmission is
     // a full hit even on a fresh radix path (split at the prompt end).
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let t = tok(&rt);
     let size = rt.manifest.sizes.keys().next().unwrap().clone();
     let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };
@@ -179,7 +185,7 @@ fn resubmitting_a_completed_prompt_hits_via_retirement_publish() {
 
 #[test]
 fn per_request_opt_out_bypasses_cache() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let t = tok(&rt);
     let size = rt.manifest.sizes.keys().next().unwrap().clone();
     let variant = if draft::available(&rt.manifest, &size, "hydra") { "hydra" } else { "ar" };

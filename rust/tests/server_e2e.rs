@@ -9,10 +9,21 @@ use hydra_serve::model::Manifest;
 use hydra_serve::server::{spawn_local, spawn_local_opts, Client};
 use hydra_serve::util::json::Json;
 
+/// None (with a printed note) when the AOT artifacts are absent — CI
+/// environments without `make artifacts` skip the e2e layer instead of
+/// failing it.
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = hydra_serve::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts` first)", dir.display());
+        return None;
+    }
+    Some(dir)
+}
+
 #[test]
 fn serve_and_respond_over_tcp() {
-    let dir = hydra_serve::artifacts_dir();
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let Some(dir) = artifacts() else { return };
 
     // Prefer a batched bucket so concurrent requests genuinely share one
     // engine batch (per-slot SamplingParams); fall back to bs=1.
@@ -138,8 +149,7 @@ fn serve_and_respond_over_tcp() {
 
 #[test]
 fn stats_op_and_prefix_cache_over_tcp() {
-    let dir = hydra_serve::artifacts_dir();
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let Some(dir) = artifacts() else { return };
     // Prefix cache on (16 MiB): the repeated prompt below must be served
     // from cache, and {"op":"stats"} must surface the hit counters.
     let (port, shutdown, handle) =

@@ -1,0 +1,455 @@
+//! benchgate — the bench-regression CI gate.
+//!
+//! The repository commits its quick-mode benchmark trajectory as
+//! `rust/bench_results/BENCH_*.json` files: one JSON array per bench,
+//! one entry per CI run, appended by `hydra_serve::bench::save_result`
+//! and never rewritten (see `bench_results/README.md`). This tool turns
+//! that trajectory into a gate: for every throughput metric (any
+//! numeric field ending in `_tps`), the NEWEST entry is compared
+//! against the **median of all prior entries** carrying the same
+//! metric, and the gate fails when the newest value drops below 90% of
+//! that baseline. The median makes the baseline robust to the odd slow
+//! CI runner in the history; the 10% band absorbs run-to-run noise on
+//! shared hardware.
+//!
+//! Entry shapes: a trajectory entry is either a single summary object
+//! or an array of per-row objects (e.g. one row per batch bucket). Rows
+//! are matched positionally across entries, so a metric's identity is
+//! `field@row`. Entries whose shape changed (a metric present in the
+//! history but absent from the newest entry, or vice versa) are not
+//! comparable and are skipped rather than failed — benches may grow
+//! rows as artifacts grow buckets.
+//!
+//! Files with fewer than 2 entries pass trivially (no baseline yet:
+//! trajectory files start as `[]` until CI hardware appends the first
+//! real run). Unparseable files FAIL — a corrupt committed trajectory
+//! must not silently disable the gate.
+//!
+//! Usage: `benchgate [bench_results_dir]` (auto-detected by walking up
+//! from the CWD to the first directory containing `rust/bench_results`
+//! or `bench_results`). Exits 0 when clean, 1 with one line per
+//! regression otherwise, 2 when the directory cannot be located.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let dir = match find_results_dir() {
+        Some(d) => d,
+        None => {
+            eprintln!("benchgate: could not locate a bench_results directory upward of cwd");
+            return ExitCode::from(2);
+        }
+    };
+    let mut files: Vec<PathBuf> = match fs::read_dir(&dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect(),
+        Err(e) => {
+            eprintln!("benchgate: cannot read {}: {e}", dir.display());
+            return ExitCode::from(2);
+        }
+    };
+    files.sort();
+    let mut violations = Vec::new();
+    let mut checked = 0usize;
+    for path in &files {
+        let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                violations.push(format!("{name}: unreadable: {e}"));
+                continue;
+            }
+        };
+        match check_trajectory(&name, &text) {
+            Ok(report) => {
+                checked += 1;
+                println!("{report}");
+            }
+            Err(mut v) => violations.append(&mut v),
+        }
+    }
+    if violations.is_empty() {
+        println!("benchgate: clean ({checked} trajectory file(s) in {})", dir.display());
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("benchgate: {} regression(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn find_results_dir() -> Option<PathBuf> {
+    if let Some(arg) = std::env::args().nth(1) {
+        return Some(PathBuf::from(arg));
+    }
+    let mut d = std::env::current_dir().ok()?;
+    loop {
+        for cand in ["rust/bench_results", "bench_results"] {
+            if d.join(cand).is_dir() {
+                return Some(d.join(cand));
+            }
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
+/// Throughput metrics regress when they DROP; the gate fails below
+/// baseline × THRESHOLD.
+const THRESHOLD: f64 = 0.9;
+
+/// Check one trajectory file; Ok(summary line) when it passes, Err(one
+/// line per regression) otherwise.
+fn check_trajectory(name: &str, text: &str) -> Result<String, Vec<String>> {
+    let entries = match parse(text) {
+        Ok(Value::Arr(a)) => a,
+        Ok(_) => return Err(vec![format!("{name}: trajectory is not a JSON array")]),
+        Err(e) => return Err(vec![format!("{name}: parse error: {e}")]),
+    };
+    if entries.len() < 2 {
+        return Ok(format!(
+            "{name}: pass ({} entr{}, no baseline yet)",
+            entries.len(),
+            if entries.len() == 1 { "y" } else { "ies" }
+        ));
+    }
+    let runs: Vec<Vec<(String, f64)>> = entries.iter().map(metrics_of).collect();
+    let (history, newest) = runs.split_at(runs.len() - 1);
+    let newest = &newest[0];
+    let mut violations = Vec::new();
+    let mut compared = 0usize;
+    for (metric, current) in newest {
+        let prior: Vec<f64> = history
+            .iter()
+            .filter_map(|run| run.iter().find(|(m, _)| m == metric).map(|&(_, v)| v))
+            .collect();
+        if prior.is_empty() {
+            continue; // new metric: nothing to compare against yet
+        }
+        let baseline = median(&prior);
+        if baseline <= 0.0 {
+            continue; // degenerate history (zero-throughput stub rows)
+        }
+        compared += 1;
+        if *current < baseline * THRESHOLD {
+            violations.push(format!(
+                "{name}: {metric} regressed to {current:.2} \
+                 (baseline median {baseline:.2} over {} run(s), floor {:.2})",
+                prior.len(),
+                baseline * THRESHOLD
+            ));
+        }
+    }
+    if violations.is_empty() {
+        Ok(format!("{name}: pass ({} entries, {compared} metric(s) compared)", entries.len()))
+    } else {
+        Err(violations)
+    }
+}
+
+/// Flatten one trajectory entry (object, or array of row objects) into
+/// positionally-keyed throughput metrics: `field@row`.
+fn metrics_of(entry: &Value) -> Vec<(String, f64)> {
+    let rows: Vec<&Value> = match entry {
+        Value::Arr(a) => a.iter().collect(),
+        v => vec![v],
+    };
+    let mut out = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        if let Value::Obj(fields) = row {
+            for (k, v) in fields {
+                if let (true, Value::Num(n)) = (k.ends_with("_tps"), v) {
+                    out.push((format!("{k}@{i}"), *n));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        (s[n / 2 - 1] + s[n / 2]) / 2.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON value + recursive-descent parser (zero-dependency; the
+// main crate's util::json is not reachable from this bootstrap tool).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+fn parse(text: &str) -> Result<Value, String> {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    let v = value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing garbage at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn value(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Value::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let k = match value(b, pos)? {
+                    Value::Str(s) => s,
+                    _ => return Err(format!("non-string object key at byte {pos}")),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}"));
+                }
+                *pos += 1;
+                fields.push((k, value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Value::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                items.push(value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Value::Str(s));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'/') => s.push('/'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'r') => s.push('\r'),
+                            Some(b'b') => s.push('\u{8}'),
+                            Some(b'f') => s.push('\u{c}'),
+                            Some(b'u') => {
+                                let hex = b
+                                    .get(*pos + 1..*pos + 5)
+                                    .ok_or("truncated \\u escape")?;
+                                let code = u32::from_str_radix(
+                                    std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                    16,
+                                )
+                                .map_err(|e| e.to_string())?;
+                                s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                *pos += 4;
+                            }
+                            other => return Err(format!("bad escape {other:?}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(&c) => {
+                        // Multi-byte UTF-8 sequences pass through verbatim.
+                        let ch_len = match c {
+                            0x00..=0x7f => 1,
+                            0xc0..=0xdf => 2,
+                            0xe0..=0xef => 3,
+                            _ => 4,
+                        };
+                        let chunk =
+                            b.get(*pos..*pos + ch_len).ok_or("truncated utf-8 sequence")?;
+                        s.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                        *pos += ch_len;
+                    }
+                }
+            }
+        }
+        Some(b't') => lit(b, pos, "true", Value::Bool(true)),
+        Some(b'f') => lit(b, pos, "false", Value::Bool(false)),
+        Some(b'n') => lit(b, pos, "null", Value::Null),
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+            {
+                *pos += 1;
+            }
+            std::str::from_utf8(&b[start..*pos])
+                .map_err(|e| e.to_string())?
+                .parse::<f64>()
+                .map(Value::Num)
+                .map_err(|e| format!("bad number at byte {start}: {e}"))
+        }
+        None => Err("unexpected end of input".into()),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Value) -> Result<Value, String> {
+    if b.get(*pos..*pos + word.len()) == Some(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_roundtrips_the_save_result_shape() {
+        let v = parse(
+            r#"[[{"batch": 8, "static_tps": 120.5, "adaptive_tps": 131.0, "variant": "hydra"}],
+                [{"batch": 8, "static_tps": 119.0, "adaptive_tps": 129.5, "variant": "hydra"}]]"#,
+        )
+        .unwrap();
+        let Value::Arr(runs) = v else { panic!("not an array") };
+        assert_eq!(runs.len(), 2);
+        let m = metrics_of(&runs[0]);
+        assert_eq!(
+            m,
+            vec![("static_tps@0".to_string(), 120.5), ("adaptive_tps@0".to_string(), 131.0)]
+        );
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_nesting() {
+        let v = parse(r#"{"a": "x\n\"yA", "b": [true, false, null, -1.5e2]}"#).unwrap();
+        let Value::Obj(f) = v else { panic!() };
+        assert_eq!(f[0].1, Value::Str("x\n\"yA".into()));
+        assert_eq!(
+            f[1].1,
+            Value::Arr(vec![
+                Value::Bool(true),
+                Value::Bool(false),
+                Value::Null,
+                Value::Num(-150.0)
+            ])
+        );
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("[] []").is_err());
+    }
+
+    #[test]
+    fn median_is_robust_to_order_and_parity() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn short_trajectories_pass_trivially() {
+        assert!(check_trajectory("BENCH_x.json", "[]").is_ok());
+        assert!(check_trajectory("BENCH_x.json", r#"[{"a_tps": 1.0}]"#).is_ok());
+    }
+
+    #[test]
+    fn corrupt_trajectories_fail() {
+        assert!(check_trajectory("BENCH_x.json", "{nope").is_err());
+        assert!(check_trajectory("BENCH_x.json", r#"{"a_tps": 1.0}"#).is_err());
+    }
+
+    #[test]
+    fn within_band_passes_and_regression_fails() {
+        // Baseline median of [100, 104, 96] = 100; floor = 90.
+        let ok = r#"[{"x_tps": 100.0}, {"x_tps": 104.0}, {"x_tps": 96.0}, {"x_tps": 91.0}]"#;
+        assert!(check_trajectory("BENCH_x.json", ok).is_ok());
+        let bad = r#"[{"x_tps": 100.0}, {"x_tps": 104.0}, {"x_tps": 96.0}, {"x_tps": 89.0}]"#;
+        let v = check_trajectory("BENCH_x.json", bad).unwrap_err();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("x_tps@0"), "{v:?}");
+        assert!(v[0].contains("89.00"), "{v:?}");
+    }
+
+    #[test]
+    fn rows_match_positionally_across_entries() {
+        // Two rows per run (e.g. batch 1 and batch 8): only row 1 regresses.
+        let t = r#"[
+            [{"batch": 1, "x_tps": 50.0}, {"batch": 8, "x_tps": 200.0}],
+            [{"batch": 1, "x_tps": 51.0}, {"batch": 8, "x_tps": 170.0}]
+        ]"#;
+        let v = check_trajectory("BENCH_x.json", t).unwrap_err();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("x_tps@1"), "{v:?}");
+    }
+
+    #[test]
+    fn shape_changes_and_non_tps_fields_are_ignored() {
+        // Newest entry grew a row and a metric; history lacks both — no
+        // comparison, no failure. Non-_tps numerics never participate.
+        let t = r#"[
+            [{"x_tps": 100.0, "efficiency": 2.0}],
+            [{"x_tps": 99.0, "efficiency": 0.1}, {"y_tps": 5.0}]
+        ]"#;
+        assert!(check_trajectory("BENCH_x.json", t).is_ok());
+        // Degenerate zero baseline is skipped, not divided by.
+        let z = r#"[{"x_tps": 0.0}, {"x_tps": 0.0}]"#;
+        assert!(check_trajectory("BENCH_x.json", z).is_ok());
+    }
+}
