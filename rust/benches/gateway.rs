@@ -14,6 +14,14 @@
 //!   jitter; in quick mode the wall-clock comparison is advisory, the
 //!   identity check is the hard gate).
 //!
+//! A third phase re-runs the pool with the observability layer (flight
+//! recorder + latency histograms) disabled and asserts the obs-on run
+//! keeps token identity and costs at most 2% throughput (hard in full
+//! mode, advisory under HYDRA_BENCH_QUICK); the overhead numbers append
+//! to bench_results/BENCH_obs.json and the obs-on run's `{"op":
+//! "metrics"}` frame is dumped to bench_results/metrics_snapshot.json
+//! for the CI artifact upload.
+//!
 //! Results append to bench_results/BENCH_gateway.json (uploaded as a CI
 //! artifact so the scaling trajectory accumulates across PRs).
 
@@ -36,6 +44,9 @@ struct PoolResult {
     outputs: BTreeMap<usize, Vec<u32>>,
     /// Merged `stats` frame after the run (prefill calls, cache hits).
     stats: Json,
+    /// The `{"op":"metrics"}` frame after the run (histograms only
+    /// populated when the run had the recorder on).
+    metrics: Json,
 }
 
 fn run_pool(
@@ -44,6 +55,7 @@ fn run_pool(
     variant: &str,
     batch: usize,
     workers: usize,
+    obs: bool,
     trace: &[TenantRequest],
 ) -> anyhow::Result<PoolResult> {
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -61,6 +73,9 @@ fn run_pool(
             adaptive: false,
             spec_budget: 0,
             seed: 1234,
+            obs,
+            page_budget: 0,
+            prefill_chunk: 0,
         },
         shutdown,
     )?;
@@ -126,6 +141,7 @@ fn run_pool(
     // Fold the per-worker engine counters into the pool metrics through
     // the aggregated stats frame (prefill calls, speculation cost).
     let stats = gw.stats();
+    let metrics = gw.metrics();
     let mut counters = RunMetrics::new("workers");
     counters.prefill_calls = stats.req("prefill_calls").as_f64().unwrap_or(0.0) as u64;
     counters.spec_tokens_verified =
@@ -133,7 +149,7 @@ fn run_pool(
     m.absorb(&counters);
 
     assert_eq!(outputs.len(), trace.len(), "all trace requests must complete");
-    Ok(PoolResult { m, outputs, stats })
+    Ok(PoolResult { m, outputs, stats, metrics })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -164,8 +180,8 @@ fn main() -> anyhow::Result<()> {
         trace.len()
     );
 
-    let solo = run_pool(&ctx, &size, &variant, batch, 1, &trace)?;
-    let pool = run_pool(&ctx, &size, &variant, batch, workers_n, &trace)?;
+    let solo = run_pool(&ctx, &size, &variant, batch, 1, true, &trace)?;
+    let pool = run_pool(&ctx, &size, &variant, batch, workers_n, true, &trace)?;
 
     // Greedy identity: replication and affinity routing must never
     // change the token stream, only the placement.
@@ -238,5 +254,53 @@ fn main() -> anyhow::Result<()> {
              one worker ({pool_tps:.1} < 0.95 * {solo_tps:.1} tok/s)"
         );
     }
+
+    // Observability A/B: the same pool with the flight recorder and
+    // latency histograms switched off. Tokens must not move (hard, both
+    // modes); the recorder may cost at most 2% throughput (hard in full
+    // mode, advisory in quick mode where wall clocks are noise).
+    let off = run_pool(&ctx, &size, &variant, batch, workers_n, false, &trace)?;
+    assert_eq!(
+        pool.outputs, off.outputs,
+        "observability must be invisible in tokens (obs-on vs obs-off)"
+    );
+    let (on_tps, off_tps) = (pool_tps, off.m.throughput());
+    let overhead_pct = (off_tps - on_tps) / off_tps.max(1e-9) * 100.0;
+    println!(
+        "obs A/B at {workers_n} workers: on {on_tps:.1} vs off {off_tps:.1} tok/s \
+         ({overhead_pct:+.2}% overhead)"
+    );
+    if ctx.quick {
+        if on_tps < off_tps * 0.98 {
+            println!(
+                "WARNING: obs overhead above the 2% budget \
+                 ({on_tps:.1} vs {off_tps:.1} tok/s) — quick mode, not failing"
+            );
+        }
+    } else {
+        assert!(
+            on_tps >= off_tps * 0.98,
+            "the observability layer must cost at most 2% throughput \
+             ({on_tps:.1} < 0.98 * {off_tps:.1} tok/s)"
+        );
+    }
+    save_result(
+        "obs",
+        Json::Arr(vec![Json::obj(vec![
+            ("variant", Json::str(variant.clone())),
+            ("batch", Json::num(batch as f64)),
+            ("requests", Json::num(trace.len() as f64)),
+            ("workers", Json::num(workers_n as f64)),
+            ("obs_off_tps", Json::num(off_tps)),
+            ("obs_on_tps", Json::num(on_tps)),
+            ("overhead_pct", Json::num(overhead_pct)),
+        ])]),
+    )?;
+
+    // Dump the obs-on run's metrics frame for the CI artifact upload
+    // (not BENCH_-prefixed: a point-in-time snapshot, not a trajectory).
+    std::fs::create_dir_all("bench_results")?;
+    std::fs::write("bench_results/metrics_snapshot.json", pool.metrics.to_string())?;
+    println!("metrics snapshot -> bench_results/metrics_snapshot.json");
     Ok(())
 }

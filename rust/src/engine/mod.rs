@@ -38,7 +38,7 @@
 pub mod accept;
 pub mod seq;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
@@ -52,6 +52,7 @@ pub use crate::adaptive::SpeculationMode;
 use crate::adaptive::{Adaptive, AdaptiveConfig, AdaptiveSnapshot, TreeLadder};
 use crate::kvblocks::{pages_for, BlockPool, PoolStats, BLOCK_TOKENS};
 use crate::model::{Manifest, ModelDims};
+use crate::obs::{EventKind, HistKind, ObsHandle};
 use crate::prefixcache::{CacheStats, EndSnapshot, PrefixCache, RestoredPrefix};
 use crate::runtime::{HostTensor, Runtime, WeightSet};
 use crate::tree::TreeTopology;
@@ -247,6 +248,15 @@ pub struct Engine<'rt> {
     /// two). `pending` holds the not-yet-committed acceptance.
     use_fused: bool,
     pending: Option<PendingCommit>,
+    /// Flight-recorder handle (`set_obs`): the engine emits typed
+    /// timeline events (admit/prefix-hit/prefill-chunk/verify/commit/
+    /// preempt/resume/done) and latency histogram samples through it.
+    /// `None` = observability off; every hook is a single branch.
+    obs: Option<ObsHandle>,
+    /// Request ids preempted out of this engine and not yet re-admitted —
+    /// distinguishes a `Resume` from a fresh `Admit` in the flight
+    /// recorder's timeline.
+    preempted: HashSet<u64>,
     /// Tree-search probe (§4): when enabled, the engine records, for every
     /// decode step, which node the acceptance walk stopped at and whether
     /// the *next* addable child of that node would have matched the base
@@ -378,6 +388,8 @@ impl<'rt> Engine<'rt> {
             probe: None,
             use_fused,
             pending: None,
+            obs: None,
+            preempted: HashSet::new(),
             cfg,
         })
     }
@@ -515,6 +527,21 @@ impl<'rt> Engine<'rt> {
     /// Drain the pending per-sequence events (event mode only).
     pub fn take_events(&mut self) -> Vec<SeqEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    /// Attach a flight-recorder handle: the engine starts emitting typed
+    /// timeline events and latency histogram samples (docs/ARCHITECTURE.md
+    /// §Observability). Without one, every observability hook is a single
+    /// `None` branch — the obs-off arm of the gateway bench's A/B.
+    pub fn set_obs(&mut self, obs: ObsHandle) {
+        self.obs = Some(obs);
+    }
+
+    /// Ancestor-mask device uploads avoided by the runtime's mask upload
+    /// cache (mask-parameterized verification re-sends the same padded
+    /// mask bytes most steps) — surfaced through `{"op":"stats"}`.
+    pub fn mask_cache_hits(&self) -> u64 {
+        *self.rt.mask_cache_hits.borrow()
     }
 
     /// The PJRT runtime this engine executes on.
@@ -692,6 +719,10 @@ impl<'rt> Engine<'rt> {
         let cut = slot.prompt_len.min(slot.tokens.len());
         let mut prompt = slot.tokens[..cut].to_vec();
         prompt.extend_from_slice(&slot.pending_prefill);
+        if let Some(obs) = &self.obs {
+            obs.event(EventKind::Preempt, slot.req_id, slot.tokens.len() as u64, 0, 0);
+        }
+        self.preempted.insert(slot.req_id);
         Some(Request { id: slot.req_id, prompt_ids: prompt, params: slot.params })
     }
 
@@ -834,6 +865,24 @@ impl<'rt> Engine<'rt> {
             slot.params = params;
             slot.rng = rng;
             slot.enqueue_at = Some(Instant::now());
+            // Flight recorder: a re-admission of a preempted request is a
+            // `resume` (its timeline continues), anything else an `admit`;
+            // cache adoptions additionally record the hit itself.
+            let resumed = self.preempted.remove(&req.id);
+            if let Some(obs) = &self.obs {
+                let cached = plan.hit.as_ref().map_or(0, |h| h.matched) as u64;
+                let kind = if resumed { EventKind::Resume } else { EventKind::Admit };
+                obs.event(kind, req.id, req.prompt_ids.len() as u64, cached, 0);
+                if let Some(h) = &plan.hit {
+                    obs.event(
+                        EventKind::PrefixHit,
+                        req.id,
+                        h.matched as u64,
+                        req.prompt_ids.len() as u64,
+                        0,
+                    );
+                }
+            }
             match &plan.hit {
                 Some(h) => {
                     slot.tokens = req.prompt_ids.clone();
@@ -888,6 +937,7 @@ impl<'rt> Engine<'rt> {
             .map(|(p, r)| (p.slot, r, p.cold_first))
             .collect();
         if !cold.is_empty() {
+            let t_prefill = Instant::now();
             let srow = self.kv.stride(0);
             let mut tokens = HostTensor::zeros_i32(&[b, s]);
             let mut lens = HostTensor::zeros_i32(&[b]);
@@ -955,6 +1005,21 @@ impl<'rt> Engine<'rt> {
                 }
                 _ => {}
             }
+            // Flight recorder: one prefill-chunk span per cold row (the
+            // duration is the batched call's — cold first chunks share it).
+            if let Some(obs) = &self.obs {
+                let dur = t_prefill.elapsed();
+                for &(i, _, n1) in &cold {
+                    obs.event(
+                        EventKind::PrefillChunk,
+                        self.slots[i].req_id,
+                        n1 as u64,
+                        dur.as_nanos() as u64,
+                        0,
+                    );
+                    obs.hist(HistKind::PrefillChunk, dur);
+                }
+            }
         }
 
         // Partial hits with short tails: extend the unmatched tail through
@@ -975,6 +1040,17 @@ impl<'rt> Engine<'rt> {
             })
             .collect();
         if !partial.is_empty() {
+            if let Some(obs) = &self.obs {
+                for (i, tail) in &partial {
+                    obs.event(
+                        EventKind::ChainExtend,
+                        self.slots[*i].req_id,
+                        tail.len() as u64,
+                        0,
+                        0,
+                    );
+                }
+            }
             self.chain_extend(&partial)?;
         }
 
@@ -1214,10 +1290,22 @@ impl<'rt> Engine<'rt> {
         if rows.is_empty() {
             return Ok(0);
         }
+        let t_chunk = Instant::now();
         self.chain_extend(&rows)?;
+        let chunk_dur = t_chunk.elapsed();
         let mut total = 0;
         for (i, chunk) in rows {
             total += chunk.len();
+            if let Some(obs) = &self.obs {
+                obs.event(
+                    EventKind::PrefillChunk,
+                    self.slots[i].req_id,
+                    chunk.len() as u64,
+                    chunk_dur.as_nanos() as u64,
+                    0,
+                );
+                obs.hist(HistKind::PrefillChunk, chunk_dur);
+            }
             self.slots[i].tokens.extend_from_slice(&chunk);
             if self.slots[i].pending_prefill.is_empty() {
                 self.publish_slot_prefix(i);
@@ -1269,12 +1357,11 @@ impl<'rt> Engine<'rt> {
             // Prefill-only step: pending chunks advanced (or a slot was
             // retired above); nothing to decode yet.
             self.retire_finished()?;
-            return Ok(StepStats {
-                tokens_committed: 0,
-                active_slots: 0,
-                spec_tokens: 0,
-                wall: wall0.elapsed(),
-            });
+            let wall = wall0.elapsed();
+            if let Some(obs) = &self.obs {
+                obs.hist(HistKind::StepLatency, wall);
+            }
+            return Ok(StepStats { tokens_committed: 0, active_slots: 0, spec_tokens: 0, wall });
         }
 
         // -- 0. adaptive tree selection ------------------------------------
@@ -1546,6 +1633,16 @@ impl<'rt> Engine<'rt> {
             let Some(dec) = &decisions[i] else { continue };
             let slot = &mut self.slots[i];
             let n_acc = dec.accepted.len();
+            if let Some(obs) = &self.obs {
+                obs.event(
+                    EventKind::VerifyStep,
+                    slot.req_id,
+                    step_trees[i].len() as u64,
+                    n_acc as u64,
+                    self.masked as u64,
+                );
+                obs.event(EventKind::Commit, slot.req_id, n_acc as u64, 0, 0);
+            }
             for (j, &n) in dec.accepted.iter().enumerate() {
                 slot.tokens.push(node_tokens[i][n]);
                 slot.sum_logprob += dec.logprobs[j] as f64;
@@ -1554,7 +1651,13 @@ impl<'rt> Engine<'rt> {
             slot.generated += n_acc;
             slot.accept_hist.push(n_acc);
             if slot.first_token_at.is_none() {
-                slot.first_token_at = Some(Instant::now());
+                let now = Instant::now();
+                slot.first_token_at = Some(now);
+                if let Some(obs) = &self.obs {
+                    if let Some(e) = slot.enqueue_at {
+                        obs.hist(HistKind::Ttft, now.duration_since(e));
+                    }
+                }
             }
             // Streaming sessions: surface this step's newly committed ids
             // (only for sequences that asked to stream — no delta
@@ -1652,11 +1755,15 @@ impl<'rt> Engine<'rt> {
         self.retire_finished()?;
 
         self.phase.steps += 1;
+        let wall = wall0.elapsed();
+        if let Some(obs) = &self.obs {
+            obs.hist(HistKind::StepLatency, wall);
+        }
         Ok(StepStats {
             tokens_committed: committed,
             active_slots: decisions.iter().filter(|d| d.is_some()).count(),
             spec_tokens,
-            wall: wall0.elapsed(),
+            wall,
         })
     }
 
@@ -1699,6 +1806,23 @@ impl<'rt> Engine<'rt> {
                     mean_tree_nodes: slot.mean_tree_nodes(),
                     wasted_draft_tokens: slot.wasted_draft,
                 };
+                if let Some(obs) = &self.obs {
+                    obs.event(
+                        EventKind::Done,
+                        slot.req_id,
+                        slot.generated as u64,
+                        slot.accept_hist.len() as u64,
+                        0,
+                    );
+                    if slot.generated > 0 {
+                        if let Some(e) = slot.enqueue_at {
+                            obs.hist(
+                                HistKind::PerToken,
+                                now.duration_since(e) / slot.generated as u32,
+                            );
+                        }
+                    }
+                }
                 slot.active = false;
                 if self.emit_events {
                     self.events.push(SeqEvent::Finished(out));

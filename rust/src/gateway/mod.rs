@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::engine::{Request, SeqEvent};
+use crate::obs::{EventKind, Recorder};
 use crate::prefixcache::prefix_fingerprint;
 use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
@@ -71,6 +72,16 @@ pub struct GatewayConfig {
     /// Engine seed, same for every worker (greedy output is
     /// seed-invariant; explicit per-request seeds override anyway).
     pub seed: u64,
+    /// Run the observability layer (flight recorder + histograms +
+    /// `metrics`/`trace` ops). Off = the obs-off arm of the overhead
+    /// A/B: every record site is a `None` branch.
+    pub obs: bool,
+    /// Per-worker KV page budget override (0 = the pool's full
+    /// capacity). Tight budgets force preemptions — used by the obs
+    /// e2e to exercise preempt/resume events.
+    pub page_budget: usize,
+    /// Per-worker chunked-prefill budget in tokens (0 = engine default).
+    pub prefill_chunk: usize,
 }
 
 impl GatewayConfig {
@@ -215,6 +226,10 @@ pub(crate) struct GatewayInner {
     pub shutdown: Arc<AtomicBool>,
     /// Heartbeat time base.
     pub epoch: Instant,
+    /// The flight recorder (`None` with `cfg.obs == false`). Workers
+    /// write through per-ring handles; the front writes sheds/drains to
+    /// the extra front ring; `metrics`/`trace` ops read everything.
+    pub rec: Option<Arc<Recorder>>,
 }
 
 impl GatewayInner {
@@ -227,6 +242,7 @@ impl GatewayInner {
         exclude: Option<usize>,
     ) -> Result<usize, SubmitError> {
         let fp = prefix_fingerprint(&req.prompt_ids);
+        let req_id = req.id;
         let mut loads: Vec<WorkerLoad> =
             self.workers.iter().map(|w| w.shared.load(self.qd)).collect();
         if let Some(x) = exclude {
@@ -243,13 +259,13 @@ impl GatewayInner {
         loop {
             let choice = lock_or_recover(&self.router).route(fp, &loads);
             let Some(w) = choice else {
-                return Err(SubmitError::Overloaded { retry_after_ms: retry_hint(&loads) });
+                return Err(self.shed(req_id, retry_hint(&loads)));
             };
             let Some(ep) = self.workers.get(w) else {
                 // Defensive: the router only returns indices into `loads`
                 // (same length as `workers`); shed rather than panic if
                 // that contract ever breaks.
-                return Err(SubmitError::Overloaded { retry_after_ms: retry_hint(&loads) });
+                return Err(self.shed(req_id, retry_hint(&loads)));
             };
             // Count the message toward the worker's backlog before sending
             // so concurrent routers see it; roll back if the channel is
@@ -269,6 +285,15 @@ impl GatewayInner {
                 }
             }
         }
+    }
+
+    /// Record the shed in the front ring (connection threads share it
+    /// wait-free) and build the rejection.
+    fn shed(&self, req_id: u64, retry_after_ms: u64) -> SubmitError {
+        if let Some(rec) = &self.rec {
+            rec.event(rec.front_ring(), EventKind::Shed, req_id, retry_after_ms, 0, 0);
+        }
+        SubmitError::Overloaded { retry_after_ms }
     }
 
     /// Re-route a request away from `from` (drain path). A shed here is
@@ -320,6 +345,7 @@ impl Gateway {
             rxs.push(rx);
             workers.push(WorkerEndpoint { tx, shared: Arc::new(WorkerShared::new()) });
         }
+        let rec = if cfg.obs { Some(Recorder::new(cfg.workers)) } else { None };
         let inner = Arc::new(GatewayInner {
             cfg,
             qd,
@@ -328,6 +354,7 @@ impl Gateway {
             next_id: AtomicU64::new(1),
             shutdown,
             epoch: Instant::now(),
+            rec,
         });
         let mut handles = Vec::with_capacity(rxs.len());
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -460,12 +487,41 @@ impl Gateway {
         // Flip the flag before messaging so the router stops placing new
         // work here even while the drain message waits in the channel.
         ep.shared.draining.store(true, Ordering::SeqCst);
+        if let Some(rec) = &self.inner.rec {
+            rec.event(rec.front_ring(), EventKind::Drain, 0, worker as u64, 0, 0);
+        }
         let (tx, rx) = channel();
         ep.tx
             .send(WorkerMsg::Drain { reply: tx })
             .map_err(|_| anyhow::anyhow!("worker {worker} is gone"))?;
         rx.recv()
             .map_err(|_| anyhow::anyhow!("worker {worker} exited mid-drain"))
+    }
+
+    /// The `{"op":"metrics"}` frame: every worker's latency histograms
+    /// (merged + per-worker quantiles, when obs is on) unified with the
+    /// aggregated counter registry of [`Gateway::stats`].
+    pub fn metrics(&self) -> Json {
+        let mut fields = vec![("event", Json::str("metrics"))];
+        if let Some(rec) = &self.inner.rec {
+            fields.push(("histograms", rec.hists_json()));
+        }
+        fields.push(("counters", self.stats()));
+        Json::obj(fields)
+    }
+
+    /// The `{"op":"trace","req_id":…}` frame: one request's full
+    /// timeline across gateway → scheduler → engine, oldest first.
+    pub fn trace_req(&self, req_id: u64) -> Result<Json> {
+        let rec = self.inner.rec.as_ref().context("observability is disabled on this gateway")?;
+        Ok(rec.trace_req(req_id))
+    }
+
+    /// The `{"op":"trace","last":N}` frame: the newest `n` flight-recorder
+    /// records across all rings, oldest first.
+    pub fn trace_last(&self, n: usize) -> Result<Json> {
+        let rec = self.inner.rec.as_ref().context("observability is disabled on this gateway")?;
+        Ok(rec.trace_last(n))
     }
 }
 
@@ -533,6 +589,7 @@ fn merge_stats(blocks: Vec<Json>) -> Json {
             Json::num(if verified > 0.0 { committed / verified } else { 0.0 }),
         ),
         ("host_materializations", Json::num(sum("host_materializations"))),
+        ("mask_cache_hits", Json::num(sum("mask_cache_hits"))),
     ];
     let kvs: Vec<&Json> = blocks.iter().filter_map(|b| b.get("kv_pool")).collect();
     if !kvs.is_empty() {
@@ -619,6 +676,7 @@ mod tests {
             ("spec_tokens_wasted", Json::num(verified / 2.0)),
             ("spec_efficiency", Json::num(eff)),
             ("host_materializations", Json::num(2.0 * worker)),
+            ("mask_cache_hits", Json::num(3.0 * worker)),
             (
                 "kv_pool",
                 Json::obj(vec![
@@ -672,6 +730,8 @@ mod tests {
         assert_eq!(m.req("preemptions").as_usize(), Some(1));
         // Bucket-switch materializations sum (0 + 2).
         assert_eq!(m.req("host_materializations").as_usize(), Some(2));
+        // Runtime mask-cache hits sum (0 + 3).
+        assert_eq!(m.req("mask_cache_hits").as_usize(), Some(3));
         // KV-pool block: counters sum, ratios recompute from summed raws.
         let kv = m.req("kv_pool");
         assert_eq!(kv.req("blocks_total").as_usize(), Some(16));
@@ -715,6 +775,9 @@ mod tests {
             adaptive: false,
             spec_budget: 0,
             seed: 1,
+            obs: false,
+            page_budget: 0,
+            prefill_chunk: 0,
         };
         assert_eq!(cfg.resolved_queue_depth(), 16);
         cfg.batch = 1;

@@ -142,9 +142,21 @@ fn serve(
             ..AdaptiveConfig::default()
         })?;
     }
+    if cfg.page_budget > 0 {
+        engine.set_page_budget(cfg.page_budget);
+    }
+    if cfg.prefill_chunk > 0 {
+        engine.set_prefill_chunk_tokens(cfg.prefill_chunk);
+    }
     log::info!("gateway worker {idx} serving {}/{} b{}", cfg.size, cfg.variant, cfg.batch);
 
     let mut sched = Scheduler::default();
+    if let Some(rec) = &inner.rec {
+        // Engine and scheduler share this worker's ring: both record
+        // into one per-worker timeline/histogram set.
+        engine.set_obs(rec.handle(idx));
+        sched.set_obs(rec.handle(idx));
+    }
     // Every caller awaiting this worker's drain completion (drains are
     // idempotent; a repeated drain op must not starve the first caller).
     let mut drain_replies: Vec<Sender<Json>> = Vec::new();
@@ -335,6 +347,7 @@ fn render_stats(idx: usize, sched: &Scheduler, engine: &Engine, draining: bool) 
         ("spec_tokens_wasted", Json::num(engine.spec.wasted as f64)),
         ("spec_efficiency", Json::num(engine.spec.efficiency())),
         ("host_materializations", Json::num(engine.host_materializations as f64)),
+        ("mask_cache_hits", Json::num(engine.mask_cache_hits() as f64)),
     ];
     if let Some(ad) = engine.adaptive_snapshot() {
         // Current per-slot tree sizes (active slots only — vacant rows

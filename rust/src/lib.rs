@@ -100,6 +100,19 @@
 //! retire in-flight sequences), and `{"op":"stats"}` (per-worker blocks
 //! plus merged pool totals).
 //!
+//! ## Observability
+//!
+//! The [`obs`] layer is the zero-dependency telemetry substrate: a
+//! per-worker lock-free flight recorder (typed event records, merged
+//! into per-request timelines), log-bucketed latency histograms (step
+//! latency, TTFT, per-token, queue wait, prefill chunk), and a
+//! JSON-lines stderr logger behind the `log` facade (level-gated by
+//! `--log-level` / `HYDRA_LOG`). It surfaces on the wire as
+//! `{"op":"metrics"}` (histogram quantiles + counters) and
+//! `{"op":"trace","req_id":n}` / `{"op":"trace","last":n}` (event
+//! timelines); the gateway bench A/Bs obs-on vs obs-off under a ≤2%
+//! throughput budget.
+//!
 //! ## Correctness tooling
 //!
 //! The serving path carries mechanically-enforced invariants
@@ -146,6 +159,7 @@ pub mod scheduler;
 pub mod gateway;
 pub mod server;
 pub mod metrics;
+pub mod obs;
 pub mod treesearch;
 pub mod workload;
 pub mod bench;

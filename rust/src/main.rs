@@ -11,6 +11,7 @@
 //!               --top-k K --seed N --prefix-cache --prefix-cache-mb 64
 //!               --adaptive --spec-budget N --speculation auto|K
 //!               --workers N --queue-depth N
+//!               --log-level {off,error,warn,info,debug,trace}
 //!
 //! `generate` flags map onto the per-request `SamplingParams`; `serve`'s
 //! --mode only sets the default for requests that don't pick their own.
@@ -24,6 +25,9 @@
 //! (prefix-affinity routing + bounded per-worker queues; see
 //! docs/ARCHITECTURE.md), and `--queue-depth` bounds each worker's
 //! submission backlog (overflow is shed with an `overloaded` frame).
+//! Logs are structured JSON on stderr (`--log-level` / `HYDRA_LOG`);
+//! `serve` runs the observability layer — per-request flight recorder
+//! and latency histograms behind `{"op":"metrics"}` / `{"op":"trace"}`.
 
 use anyhow::{bail, Result};
 
@@ -42,8 +46,8 @@ use hydra_serve::util::cli::Args;
 use hydra_serve::{artifacts_dir, draft, workload};
 
 fn main() {
-    init_logging();
     let args = Args::from_env(&["help", "quick", "prefix-cache", "adaptive"]);
+    hydra_serve::obs::init_logging(args.get("log-level"));
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "info" => cmd_info(),
@@ -61,29 +65,6 @@ fn main() {
     }
 }
 
-fn init_logging() {
-    struct StderrLog;
-    impl log::Log for StderrLog {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= log::max_level()
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: StderrLog = StderrLog;
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(match std::env::var("HYDRA_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("warn") => log::LevelFilter::Warn,
-        _ => log::LevelFilter::Info,
-    });
-}
-
 fn print_help() {
     println!(
         "hydra-serve — Hydra speculative-decoding serving system\n\
@@ -99,6 +80,8 @@ fn print_help() {
                    [--prefix-cache] [--prefix-cache-mb 64]\n\
                    [--adaptive] [--spec-budget N]\n\
                    [--workers N] [--queue-depth N]\n\
+                   [--page-budget N] [--prefill-chunk N]\n\
+                   [--log-level off|error|warn|info|debug|trace]\n\
          treesearch [--size s] [--variants medusa,hydra,hydra_pp] [--batches 1]\n\
                    [--max-nodes 48]\n\
          \n\
@@ -114,7 +97,11 @@ fn print_help() {
          with bounded per-worker queues; --queue-depth bounds each\n\
          worker's backlog (0 = max(8, 4 x batch); overflow is shed with\n\
          an `overloaded` frame). Operate the pool with {\"op\":\"stats\"},\n\
-         {\"op\":\"health\"}, and {\"op\":\"drain\",\"worker\":k}.\n\
+         {\"op\":\"health\"}, {\"op\":\"drain\",\"worker\":k},\n\
+         {\"op\":\"metrics\"} (latency histograms + counters), and\n\
+         {\"op\":\"trace\",\"req_id\":n | \"last\":N} (flight-recorder\n\
+         timelines). Logs are structured JSON on stderr, level-gated by\n\
+         --log-level / HYDRA_LOG.\n\
          See docs/ARCHITECTURE.md and docs/PROTOCOL.md.\n"
     );
 }
@@ -265,6 +252,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         spec_budget: args.usize_or("spec-budget", 0),
         workers: args.usize_or("workers", 1).max(1),
         queue_depth: args.usize_or("queue-depth", 0),
+        obs: true,
+        page_budget: args.usize_or("page-budget", 0),
+        prefill_chunk: args.usize_or("prefill-chunk", 0),
     };
     serve(&rt, cfg, Arc::new(AtomicBool::new(false)))
 }

@@ -1,4 +1,11 @@
-//! Serving metrics: throughput, latency, acceptance-length histograms.
+//! Bench-side metrics: throughput, latency, acceptance-length
+//! histograms — computed offline over a finished run.
+//!
+//! The *live* telemetry of a serving process — the per-request flight
+//! recorder and the lock-free log-bucketed latency histograms behind
+//! `{"op":"metrics"}` / `{"op":"trace"}` — lives in [`crate::obs`];
+//! this module stays allocation-friendly plain code for the bench
+//! harness, which runs with no concurrency constraints.
 
 use std::time::{Duration, Instant};
 

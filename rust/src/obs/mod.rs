@@ -1,0 +1,839 @@
+//! Zero-dependency tracing + telemetry: the per-request flight recorder,
+//! log-bucketed latency histograms, and the structured JSON stderr
+//! logger behind `{"op":"metrics"}` / `{"op":"trace"}`.
+//!
+//! Design (docs/ARCHITECTURE.md §Observability):
+//!
+//! - One [`Recorder`] per gateway, holding `workers + 1` lock-free ring
+//!   buffers: ring `i` belongs to worker `i`'s engine/scheduler thread,
+//!   and the extra *front* ring collects gateway-side events (queue
+//!   sheds, drains) written by connection threads. Every record is
+//!   stamped with the request id and monotonic nanoseconds from a shared
+//!   epoch, so one request's timeline is reconstructable across
+//!   gateway → scheduler → engine by merging rings on the timestamp.
+//! - Rings are fixed-capacity (power of two, [`RING_CAP`] records) and
+//!   overwrite oldest-first. Cells are seqlock-style groups of atomics
+//!   (through the [`crate::sync`] shim): the writer invalidates the
+//!   cell's sequence word, stores the payload, then publishes the new
+//!   sequence with `Release`; readers double-check the sequence around
+//!   the payload copy and discard torn records. Writers never block and
+//!   never allocate — the serving path's overhead per event is a handful
+//!   of relaxed atomic stores (the gateway bench's obs-on/off A/B holds
+//!   the total cost under 2% throughput).
+//! - Histograms are log2-bucketed by duration bit-length (64 buckets
+//!   cover 1 ns..2^63 ns): recording is two `fetch_add`s plus a
+//!   compare-exchange max; quantiles (p50/p90/p99) walk the cumulative
+//!   counts and report the bucket midpoint, so they are exact to within
+//!   a factor of ~1.5 — plenty for SLO dashboards, at no per-sample
+//!   allocation. Per-worker histograms merge by bucket summation in the
+//!   gateway, like `merge_stats` does for counters.
+//!
+//! The structured logger ([`init_logging`]) replaces ad-hoc `eprintln!`
+//! in the serving path (repo-lint's `bare-print` rule): one JSON object
+//! per stderr line, level-gated via `--log-level` / `HYDRA_LOG`.
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::Arc;
+use crate::util::json::Json;
+
+/// Records kept per ring buffer (power of two; oldest overwritten).
+/// 4096 records ≈ a few hundred requests' worth of step events on a
+/// quick-mode trace — sized so an operator querying `{"op":"trace"}`
+/// right after an incident still sees the full offending request.
+pub const RING_CAP: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Event records
+// ---------------------------------------------------------------------------
+
+/// What happened — the typed span/event vocabulary of the flight
+/// recorder. Payload fields `a`/`b`/`c` of a [`Record`] are
+/// kind-specific (see [`Record::to_json`] for the wire names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request admitted into an engine slot (a = prompt tokens,
+    /// b = tokens adopted from the prefix cache).
+    Admit = 1,
+    /// Prefix-cache hit at admission (a = matched tokens, b = prompt
+    /// tokens).
+    PrefixHit = 2,
+    /// One chunk of continuous chunked prefill committed (a = tokens,
+    /// b = chunk duration in ns).
+    PrefillChunk = 3,
+    /// Partial-hit tail extended through the chain verify/commit path
+    /// (a = tail tokens).
+    ChainExtend = 4,
+    /// One tree-verification step for a slot (a = tree nodes verified,
+    /// b = accepted length, c = 1 under mask-parameterized
+    /// verification, 0 on the bucket ladder).
+    VerifyStep = 5,
+    /// Accepted tokens committed to the KV cache (a = tokens).
+    Commit = 6,
+    /// Sequence preempted from its slot (a = committed prefix length
+    /// published to the prefix cache).
+    Preempt = 7,
+    /// Previously preempted request re-admitted (a = prompt tokens,
+    /// b = tokens adopted from the prefix cache on resume).
+    Resume = 8,
+    /// Request shed by the gateway front (a = suggested retry-after ms).
+    Shed = 9,
+    /// Worker drain initiated (a = worker index).
+    Drain = 10,
+    /// Sequence retired (a = generated tokens, b = decode steps).
+    Done = 11,
+}
+
+impl EventKind {
+    fn from_u64(v: u64) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match v {
+            1 => Admit,
+            2 => PrefixHit,
+            3 => PrefillChunk,
+            4 => ChainExtend,
+            5 => VerifyStep,
+            6 => Commit,
+            7 => Preempt,
+            8 => Resume,
+            9 => Shed,
+            10 => Drain,
+            11 => Done,
+            _ => return None,
+        })
+    }
+
+    /// Wire name of the kind (the `"kind"` field of trace frames).
+    pub fn name(self) -> &'static str {
+        use EventKind::*;
+        match self {
+            Admit => "admit",
+            PrefixHit => "prefix_hit",
+            PrefillChunk => "prefill_chunk",
+            ChainExtend => "chain_extend",
+            VerifyStep => "verify_step",
+            Commit => "commit",
+            Preempt => "preempt",
+            Resume => "resume",
+            Shed => "shed",
+            Drain => "drain",
+            Done => "done",
+        }
+    }
+}
+
+/// One decoded flight-recorder record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record {
+    /// What happened.
+    pub kind: EventKind,
+    /// The request this event belongs to (0 for request-less events
+    /// like worker drains).
+    pub req_id: u64,
+    /// Monotonic nanoseconds since the recorder's epoch.
+    pub t_ns: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub a: u64,
+    /// Kind-specific payload.
+    pub b: u64,
+    /// Kind-specific payload.
+    pub c: u64,
+}
+
+impl Record {
+    /// Render as a trace-frame event object with kind-specific field
+    /// names. `ring` is the worker index the record came from
+    /// (`workers` = the gateway front ring, rendered as `"front"`).
+    pub fn to_json(&self, ring: usize, workers: usize) -> Json {
+        use EventKind::*;
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("t_ns", Json::num(self.t_ns as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("req_id", Json::num(self.req_id as f64)),
+            (
+                "worker",
+                if ring >= workers { Json::str("front") } else { Json::num(ring as f64) },
+            ),
+        ];
+        let (a, b, c) = (self.a as f64, self.b as f64, self.c);
+        match self.kind {
+            Admit | Resume => {
+                fields.push(("prompt_len", Json::num(a)));
+                fields.push(("cached_tokens", Json::num(b)));
+            }
+            PrefixHit => {
+                fields.push(("matched", Json::num(a)));
+                fields.push(("prompt_len", Json::num(b)));
+            }
+            PrefillChunk => {
+                fields.push(("tokens", Json::num(a)));
+                fields.push(("dur_us", Json::num(b / 1e3)));
+            }
+            ChainExtend => fields.push(("tokens", Json::num(a))),
+            VerifyStep => {
+                fields.push(("tree_nodes", Json::num(a)));
+                fields.push(("accepted", Json::num(b)));
+                fields.push(("masked", Json::Bool(c == 1)));
+            }
+            Commit => fields.push(("tokens", Json::num(a))),
+            Preempt => fields.push(("committed", Json::num(a))),
+            Shed => fields.push(("retry_after_ms", Json::num(a))),
+            Drain => fields.push(("drained_worker", Json::num(a))),
+            Done => {
+                fields.push(("tokens", Json::num(a)));
+                fields.push(("steps", Json::num(b)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free ring buffer (seqlock cells)
+// ---------------------------------------------------------------------------
+
+/// One seqlock cell: `seq` brackets the payload. A cell holds logical
+/// record `idx` when `seq == idx + 1` (0 = invalid/in-flight).
+struct Cell {
+    seq: AtomicU64,
+    kind: AtomicU64,
+    req_id: AtomicU64,
+    t_ns: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    c: AtomicU64,
+}
+
+impl Cell {
+    fn new() -> Cell {
+        Cell {
+            seq: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            req_id: AtomicU64::new(0),
+            t_ns: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+            c: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity single-writer / any-reader event ring. The writer
+/// (one engine/scheduler thread per ring; connection threads share the
+/// front ring through the same wait-free path) claims a slot with a
+/// relaxed `fetch_add` and republishes the cell under its new sequence
+/// number; readers discard records whose sequence word changed under
+/// them. Readers never block writers and vice versa.
+pub struct Ring {
+    cells: Vec<Cell>,
+    cursor: AtomicUsize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        debug_assert!(cap.is_power_of_two());
+        Ring { cells: (0..cap).map(|_| Cell::new()).collect(), cursor: AtomicUsize::new(0) }
+    }
+
+    /// Append one record (wait-free; overwrites the oldest when full).
+    pub fn push(&self, kind: EventKind, req_id: u64, t_ns: u64, a: u64, b: u64, c: u64) {
+        let idx = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let mask = self.cells.len() - 1;
+        let cell = &self.cells[idx & mask];
+        // Invalidate, store payload, publish. A reader that races sees
+        // seq == 0 (skips) or a mismatched sequence (skips); the Release
+        // on the final store keeps the payload from sinking below it.
+        cell.seq.store(0, Ordering::Release);
+        cell.kind.store(kind as u64, Ordering::Relaxed);
+        cell.req_id.store(req_id, Ordering::Relaxed);
+        cell.t_ns.store(t_ns, Ordering::Relaxed);
+        cell.a.store(a, Ordering::Relaxed);
+        cell.b.store(b, Ordering::Relaxed);
+        cell.c.store(c, Ordering::Relaxed);
+        cell.seq.store(idx as u64 + 1, Ordering::Release);
+    }
+
+    /// Copy out the resident records, oldest first. Torn records (a
+    /// writer lapped the reader mid-copy) are silently dropped —
+    /// telemetry favors availability over completeness.
+    pub fn snapshot(&self) -> Vec<Record> {
+        let end = self.cursor.load(Ordering::Acquire);
+        let start = end.saturating_sub(self.cells.len());
+        let mask = self.cells.len() - 1;
+        let mut out = Vec::with_capacity(end - start);
+        for idx in start..end {
+            let cell = &self.cells[idx & mask];
+            let want = idx as u64 + 1;
+            if cell.seq.load(Ordering::Acquire) != want {
+                continue;
+            }
+            let rec = Record {
+                kind: match EventKind::from_u64(cell.kind.load(Ordering::Relaxed)) {
+                    Some(k) => k,
+                    None => continue,
+                },
+                req_id: cell.req_id.load(Ordering::Relaxed),
+                t_ns: cell.t_ns.load(Ordering::Relaxed),
+                a: cell.a.load(Ordering::Relaxed),
+                b: cell.b.load(Ordering::Relaxed),
+                c: cell.c.load(Ordering::Relaxed),
+            };
+            if cell.seq.load(Ordering::Acquire) != want {
+                continue;
+            }
+            out.push(rec);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucketed histograms
+// ---------------------------------------------------------------------------
+
+/// The latency distributions each worker maintains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistKind {
+    /// Wall time of one engine decode step.
+    StepLatency = 0,
+    /// Admission-to-first-committed-token latency.
+    Ttft = 1,
+    /// Mean per-token latency of a retired sequence.
+    PerToken = 2,
+    /// Scheduler-queue wait (submit to admission).
+    QueueWait = 3,
+    /// Duration of one continuous-chunked-prefill chunk.
+    PrefillChunk = 4,
+}
+
+/// Number of [`HistKind`] variants (histograms per worker).
+pub const HIST_KINDS: usize = 5;
+
+/// Wire/JSON names of the per-worker histograms, indexed by
+/// [`HistKind`] discriminant.
+pub const HIST_NAMES: [&str; HIST_KINDS] =
+    ["step_latency", "ttft", "per_token", "queue_wait", "prefill_chunk"];
+
+/// Lock-free log2-bucketed duration histogram: bucket k holds samples
+/// whose nanosecond value has bit-length k (i.e. `[2^(k-1), 2^k)`).
+/// Recording is wait-free; quantiles are computed by readers from a
+/// bucket snapshot.
+pub struct Histo {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histo {
+    fn new() -> Histo {
+        Histo {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration sample.
+    pub fn record(&self, d: Duration) {
+        let v = d.as_nanos().min(u64::MAX as u128) as u64;
+        let k = (64 - v.leading_zeros() as usize).min(63);
+        self.buckets[k].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        // Relaxed CAS max (fetch_max is not in the loom-compatible
+        // subset the sync shim guarantees).
+        let mut cur = self.max.load(Ordering::Relaxed);
+        while v > cur {
+            match self.max.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Copy out a point-in-time snapshot for quantile math / merging.
+    pub fn snapshot(&self) -> HistSnap {
+        let mut buckets = [0u64; 64];
+        for (k, b) in self.buckets.iter().enumerate() {
+            buckets[k] = b.load(Ordering::Relaxed);
+        }
+        HistSnap {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Non-atomic histogram snapshot: quantile math and cross-worker
+/// merging happen here, in plain code.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnap {
+    /// Per-bit-length sample counts.
+    pub buckets: [u64; 64],
+    /// Total samples.
+    pub count: u64,
+    /// Σ sample nanoseconds.
+    pub sum: u64,
+    /// Largest sample in nanoseconds.
+    pub max: u64,
+}
+
+impl HistSnap {
+    /// The all-zero snapshot (merge identity).
+    pub fn zero() -> HistSnap {
+        HistSnap { buckets: [0; 64], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Accumulate another worker's snapshot (bucket summation, like
+    /// `merge_stats` does for counters).
+    pub fn merge(&mut self, other: &HistSnap) {
+        for k in 0..64 {
+            self.buckets[k] += other.buckets[k];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile estimate in nanoseconds: the midpoint of the first
+    /// bucket whose cumulative count reaches `q * count` (0 when
+    /// empty). Log2 buckets bound the error to ~1.5x.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (k, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                // Bucket k holds [2^(k-1), 2^k); report its midpoint.
+                return if k == 0 { 0 } else { (1u64 << (k - 1)) + (1u64 << (k - 1)) / 2 };
+            }
+        }
+        self.max
+    }
+
+    /// Render quantiles + count as a JSON object (milliseconds).
+    pub fn to_json(&self) -> Json {
+        let ms = |ns: u64| Json::num(ns as f64 / 1e6);
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("p50_ms", ms(self.quantile_ns(0.50))),
+            ("p90_ms", ms(self.quantile_ns(0.90))),
+            ("p99_ms", ms(self.quantile_ns(0.99))),
+            ("max_ms", ms(self.max)),
+            (
+                "mean_ms",
+                Json::num(if self.count == 0 {
+                    0.0
+                } else {
+                    self.sum as f64 / self.count as f64 / 1e6
+                }),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+/// One worker's observability state: its event ring plus the five
+/// latency histograms.
+struct WorkerObs {
+    ring: Ring,
+    hists: Vec<Histo>,
+}
+
+impl WorkerObs {
+    fn new() -> WorkerObs {
+        WorkerObs { ring: Ring::new(RING_CAP), hists: (0..HIST_KINDS).map(|_| Histo::new()).collect() }
+    }
+}
+
+/// The gateway-owned flight recorder: `workers + 1` rings (one per
+/// engine worker, plus the *front* ring for gateway-side events) and
+/// per-worker latency histograms, all stamped against one monotonic
+/// epoch. Cheap handles ([`ObsHandle`]) are cloned into the engine and
+/// scheduler of each worker; the gateway front reads everything
+/// directly to serve `{"op":"metrics"}` and `{"op":"trace"}`.
+pub struct Recorder {
+    epoch: Instant,
+    workers: Vec<WorkerObs>,
+    /// Engine-worker count (ring index `n_workers` is the front ring).
+    n_workers: usize,
+}
+
+impl Recorder {
+    /// A recorder for `n_workers` engine workers (plus the front ring).
+    pub fn new(n_workers: usize) -> Arc<Recorder> {
+        Arc::new(Recorder {
+            epoch: Instant::now(),
+            workers: (0..n_workers + 1).map(|_| WorkerObs::new()).collect(),
+            n_workers,
+        })
+    }
+
+    /// Monotonic nanoseconds since the recorder's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// The ring index gateway-front events are written to.
+    pub fn front_ring(&self) -> usize {
+        self.n_workers
+    }
+
+    /// A writer handle bound to `ring` (worker index, or
+    /// [`Recorder::front_ring`]).
+    pub fn handle(self: &Arc<Recorder>, ring: usize) -> ObsHandle {
+        ObsHandle { rec: Arc::clone(self), ring }
+    }
+
+    /// Append one event to `ring`, stamped now.
+    pub fn event(&self, ring: usize, kind: EventKind, req_id: u64, a: u64, b: u64, c: u64) {
+        let t = self.now_ns();
+        if let Some(w) = self.workers.get(ring) {
+            w.ring.push(kind, req_id, t, a, b, c);
+        }
+    }
+
+    /// Record a duration sample into `ring`'s `kind` histogram.
+    pub fn record(&self, ring: usize, kind: HistKind, d: Duration) {
+        if let Some(w) = self.workers.get(ring) {
+            w.hists[kind as usize].record(d);
+        }
+    }
+
+    /// All resident records across rings, merged oldest-first on the
+    /// shared monotonic timestamp; each record carries its ring index.
+    pub fn merged_events(&self) -> Vec<(usize, Record)> {
+        let mut all: Vec<(usize, Record)> = Vec::new();
+        for (ring, w) in self.workers.iter().enumerate() {
+            all.extend(w.ring.snapshot().into_iter().map(|r| (ring, r)));
+        }
+        all.sort_by_key(|(_, r)| r.t_ns);
+        all
+    }
+
+    /// The `{"op":"trace","req_id":…}` payload: the request's full
+    /// timeline, oldest first.
+    pub fn trace_req(&self, req_id: u64) -> Json {
+        let events: Vec<Json> = self
+            .merged_events()
+            .into_iter()
+            .filter(|(_, r)| r.req_id == req_id)
+            .map(|(ring, r)| r.to_json(ring, self.n_workers))
+            .collect();
+        Json::obj(vec![
+            ("event", Json::str("trace")),
+            ("req_id", Json::num(req_id as f64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// The `{"op":"trace","last":N}` payload: the newest `n` records
+    /// across all rings, oldest first.
+    pub fn trace_last(&self, n: usize) -> Json {
+        let all = self.merged_events();
+        let skip = all.len().saturating_sub(n);
+        let events: Vec<Json> =
+            all.into_iter().skip(skip).map(|(ring, r)| r.to_json(ring, self.n_workers)).collect();
+        Json::obj(vec![("event", Json::str("trace")), ("events", Json::Arr(events))])
+    }
+
+    /// The histogram block of `{"op":"metrics"}`: merged quantiles per
+    /// [`HistKind`], plus the per-worker breakdown.
+    pub fn hists_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        let mut per_worker: Vec<Json> = Vec::new();
+        let mut merged = [HistSnap::zero(); HIST_KINDS];
+        for (ring, w) in self.workers.iter().enumerate().take(self.n_workers) {
+            let mut wf: Vec<(&str, Json)> = vec![("worker", Json::num(ring as f64))];
+            for k in 0..HIST_KINDS {
+                let snap = w.hists[k].snapshot();
+                merged[k].merge(&snap);
+                wf.push((HIST_NAMES[k], snap.to_json()));
+            }
+            per_worker.push(Json::obj(wf));
+        }
+        for k in 0..HIST_KINDS {
+            fields.push((HIST_NAMES[k], merged[k].to_json()));
+        }
+        fields.push(("workers", Json::Arr(per_worker)));
+        Json::obj(fields)
+    }
+}
+
+/// A cheap, cloneable writer handle: the recorder plus the ring index
+/// its owner writes to. Engines and schedulers hold an
+/// `Option<ObsHandle>` — `None` compiles the whole observability path
+/// down to a branch (the obs-off arm of the gateway bench's A/B).
+#[derive(Clone)]
+pub struct ObsHandle {
+    rec: Arc<Recorder>,
+    ring: usize,
+}
+
+impl ObsHandle {
+    /// Append one event to this handle's ring, stamped now.
+    pub fn event(&self, kind: EventKind, req_id: u64, a: u64, b: u64, c: u64) {
+        self.rec.event(self.ring, kind, req_id, a, b, c);
+    }
+
+    /// Record a duration sample into this handle's `kind` histogram.
+    pub fn hist(&self, kind: HistKind, d: Duration) {
+        self.rec.record(self.ring, kind, d);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured JSON stderr logger
+// ---------------------------------------------------------------------------
+
+/// `log::Log` implementation emitting one JSON object per stderr line:
+/// `{"ts_ms":…,"level":"INFO","target":"…","msg":"…"}`. Serialization
+/// goes through [`Json`], so messages are always well-formed JSON
+/// strings (quotes/control characters escaped).
+struct JsonLog;
+
+impl log::Log for JsonLog {
+    fn enabled(&self, m: &log::Metadata) -> bool {
+        m.level() <= log::max_level()
+    }
+
+    fn log(&self, r: &log::Record) {
+        if !self.enabled(r.metadata()) {
+            return;
+        }
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let line = Json::obj(vec![
+            ("ts_ms", Json::num(ts_ms)),
+            ("level", Json::str(r.level().as_str())),
+            ("target", Json::str(r.target())),
+            ("msg", Json::str(r.args().to_string())),
+        ]);
+        eprintln!("{line}");
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a `--log-level` / `HYDRA_LOG` value (`off`, `error`, `warn`,
+/// `info`, `debug`, `trace`; anything else = `info`).
+pub fn parse_level(s: Option<&str>) -> log::LevelFilter {
+    match s {
+        Some("off") => log::LevelFilter::Off,
+        Some("error") => log::LevelFilter::Error,
+        Some("warn") => log::LevelFilter::Warn,
+        Some("debug") => log::LevelFilter::Debug,
+        Some("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    }
+}
+
+/// Install the structured JSON stderr logger. The level comes from the
+/// explicit `--log-level` value when given, else `HYDRA_LOG`, else
+/// `info`. Safe to call more than once (later calls only adjust the
+/// level).
+pub fn init_logging(level_flag: Option<&str>) {
+    static LOGGER: JsonLog = JsonLog;
+    let _ = log::set_logger(&LOGGER);
+    let env = std::env::var("HYDRA_LOG").ok();
+    log::set_max_level(parse_level(level_flag.or(env.as_deref())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_roundtrips_in_order() {
+        let r = Ring::new(8);
+        for i in 0..5u64 {
+            r.push(EventKind::Commit, i, i * 10, i, 0, 0);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 5);
+        for (i, rec) in snap.iter().enumerate() {
+            assert_eq!(rec.kind, EventKind::Commit);
+            assert_eq!(rec.req_id, i as u64);
+            assert_eq!(rec.t_ns, i as u64 * 10);
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let r = Ring::new(4);
+        for i in 0..10u64 {
+            r.push(EventKind::Admit, i, i, 0, 0, 0);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<u64> = snap.iter().map(|r| r.req_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn event_kind_codes_roundtrip() {
+        for k in [
+            EventKind::Admit,
+            EventKind::PrefixHit,
+            EventKind::PrefillChunk,
+            EventKind::ChainExtend,
+            EventKind::VerifyStep,
+            EventKind::Commit,
+            EventKind::Preempt,
+            EventKind::Resume,
+            EventKind::Shed,
+            EventKind::Drain,
+            EventKind::Done,
+        ] {
+            assert_eq!(EventKind::from_u64(k as u64), Some(k));
+        }
+        assert_eq!(EventKind::from_u64(0), None);
+        assert_eq!(EventKind::from_u64(99), None);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = Histo::new();
+        // 100 samples: 1µs..100µs.
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max, 100_000);
+        let p50 = s.quantile_ns(0.50);
+        // True p50 = 50µs; log2 buckets bound the estimate to its
+        // bucket [32768, 65536) ns.
+        assert!(p50 >= 32_768 && p50 < 65_536, "p50 {p50}");
+        let p99 = s.quantile_ns(0.99);
+        assert!(p99 >= 65_536 && p99 <= s.max.max(131_072), "p99 {p99}");
+        assert!(s.quantile_ns(1.0) >= p99);
+    }
+
+    #[test]
+    fn histogram_merge_sums_buckets_and_maxes_max() {
+        let a = Histo::new();
+        let b = Histo::new();
+        a.record(Duration::from_micros(10));
+        a.record(Duration::from_micros(20));
+        b.record(Duration::from_micros(500));
+        let mut m = HistSnap::zero();
+        m.merge(&a.snapshot());
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.max, 500_000);
+        assert_eq!(m.sum, 530_000);
+        // p99 lands in the 500µs bucket, not the 10µs one.
+        assert!(m.quantile_ns(0.99) > 100_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let s = Histo::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile_ns(0.5), 0);
+        let j = s.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(j.get("p99_ms").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn recorder_merges_rings_by_timestamp_and_filters_by_request() {
+        let rec = Recorder::new(2);
+        let w0 = rec.handle(0);
+        let w1 = rec.handle(1);
+        let front = rec.handle(rec.front_ring());
+        w0.event(EventKind::Admit, 7, 100, 0, 0);
+        w1.event(EventKind::Admit, 8, 120, 0, 0);
+        w0.event(EventKind::Done, 7, 12, 3, 0);
+        front.event(EventKind::Shed, 9, 50, 0, 0);
+        let all = rec.merged_events();
+        assert_eq!(all.len(), 4);
+        for pair in all.windows(2) {
+            assert!(pair[0].1.t_ns <= pair[1].1.t_ns, "merged events must be time-ordered");
+        }
+        let tr = rec.trace_req(7);
+        let evs = tr.get("events").and_then(|e| e.as_arr()).unwrap().to_vec();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("kind").and_then(|k| k.as_str()), Some("admit"));
+        assert_eq!(evs[1].get("kind").and_then(|k| k.as_str()), Some("done"));
+        // The front ring renders as "front", workers as their index.
+        let last = rec.trace_last(10);
+        let evs = last.get("events").and_then(|e| e.as_arr()).unwrap();
+        assert!(evs.iter().any(|e| e.get("worker").and_then(|w| w.as_str()) == Some("front")));
+        assert!(evs.iter().any(|e| e.get("worker").and_then(|w| w.as_f64()) == Some(1.0)));
+    }
+
+    #[test]
+    fn trace_last_caps_and_keeps_newest() {
+        let rec = Recorder::new(1);
+        let h = rec.handle(0);
+        for i in 0..20u64 {
+            h.event(EventKind::Commit, i, i, 0, 0);
+        }
+        let tr = rec.trace_last(5);
+        let evs = tr.get("events").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].get("req_id").and_then(|v| v.as_usize()), Some(15));
+        assert_eq!(evs[4].get("req_id").and_then(|v| v.as_usize()), Some(19));
+    }
+
+    #[test]
+    fn hists_json_merges_workers() {
+        let rec = Recorder::new(2);
+        rec.handle(0).hist(HistKind::StepLatency, Duration::from_micros(100));
+        rec.handle(1).hist(HistKind::StepLatency, Duration::from_micros(300));
+        rec.handle(1).hist(HistKind::Ttft, Duration::from_millis(2));
+        let j = rec.hists_json();
+        let step = j.get("step_latency").unwrap();
+        assert_eq!(step.get("count").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("ttft").and_then(|t| t.get("count")).and_then(|v| v.as_usize()), Some(1));
+        let workers = j.get("workers").and_then(|w| w.as_arr()).unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(
+            workers[0]
+                .get("step_latency")
+                .and_then(|s| s.get("count"))
+                .and_then(|v| v.as_usize()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn level_parsing_defaults_to_info() {
+        assert_eq!(parse_level(Some("off")), log::LevelFilter::Off);
+        assert_eq!(parse_level(Some("error")), log::LevelFilter::Error);
+        assert_eq!(parse_level(Some("warn")), log::LevelFilter::Warn);
+        assert_eq!(parse_level(Some("debug")), log::LevelFilter::Debug);
+        assert_eq!(parse_level(Some("trace")), log::LevelFilter::Trace);
+        assert_eq!(parse_level(Some("bogus")), log::LevelFilter::Info);
+        assert_eq!(parse_level(None), log::LevelFilter::Info);
+    }
+
+    #[test]
+    fn record_json_field_names_follow_kind() {
+        let r = Record { kind: EventKind::VerifyStep, req_id: 3, t_ns: 9, a: 16, b: 4, c: 1 };
+        let j = r.to_json(0, 2);
+        assert_eq!(j.get("kind").and_then(|k| k.as_str()), Some("verify_step"));
+        assert_eq!(j.get("tree_nodes").and_then(|v| v.as_usize()), Some(16));
+        assert_eq!(j.get("accepted").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(j.get("masked").and_then(|v| v.as_bool()), Some(true));
+        let r = Record { kind: EventKind::Shed, req_id: 1, t_ns: 1, a: 40, b: 0, c: 0 };
+        let j = r.to_json(2, 2);
+        assert_eq!(j.get("worker").and_then(|w| w.as_str()), Some("front"));
+        assert_eq!(j.get("retry_after_ms").and_then(|v| v.as_usize()), Some(40));
+    }
+}

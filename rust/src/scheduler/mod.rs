@@ -12,11 +12,13 @@
 
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::engine::{Engine, Request, SeqEvent, SeqOutput, StepStats};
+use crate::obs::{HistKind, ObsHandle};
 
 /// Anything the scheduler can admit requests into: the engine in
 /// production, lightweight stubs in unit tests (admission throttling is
@@ -99,6 +101,12 @@ pub struct Scheduler {
     /// active sequences are otherwise untouched). The gateway closes it
     /// to drain a worker race-free before extracting the queue.
     admission_open: bool,
+    /// Flight-recorder handle (`set_obs`): queue-wait latency samples
+    /// (submit → admission, preemption requeues restarting the clock).
+    obs: Option<ObsHandle>,
+    /// When each queued request entered the queue (for the queue-wait
+    /// histogram; only populated while an obs handle is attached).
+    queued_at: HashMap<u64, Instant>,
 }
 
 impl Default for Scheduler {
@@ -108,6 +116,8 @@ impl Default for Scheduler {
             stats: SchedulerStats::default(),
             max_admit_per_step: usize::MAX,
             admission_open: true,
+            obs: None,
+            queued_at: HashMap::new(),
         }
     }
 }
@@ -118,8 +128,18 @@ impl Scheduler {
         Scheduler::default()
     }
 
+    /// Attach a flight-recorder handle: the scheduler starts recording
+    /// queue-wait latency samples (submit → admission) into its worker's
+    /// histogram set.
+    pub fn set_obs(&mut self, obs: ObsHandle) {
+        self.obs = Some(obs);
+    }
+
     /// Enqueue one request (FIFO).
     pub fn submit(&mut self, req: Request) {
+        if self.obs.is_some() {
+            self.queued_at.insert(req.id, Instant::now());
+        }
         self.queue.push_back(req);
         self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
     }
@@ -186,6 +206,11 @@ impl Scheduler {
         if n == 0 {
             if let Some(victim) = engine.preempt_one() {
                 self.stats.preemptions += 1;
+                // A preemption requeue restarts the victim's queue-wait
+                // clock — its second wait is real queueing, not serving.
+                if self.obs.is_some() {
+                    self.queued_at.insert(victim.id, Instant::now());
+                }
                 let at = 1.min(self.queue.len());
                 self.queue.insert(at, victim);
             } else if head.first().is_some_and(|r| !engine.can_ever_admit(r)) {
@@ -202,6 +227,14 @@ impl Scheduler {
         }
         let batch: Vec<Request> = self.queue.drain(..n).collect();
         self.stats.admitted += batch.len();
+        if let Some(obs) = &self.obs {
+            let now = Instant::now();
+            for r in &batch {
+                if let Some(t0) = self.queued_at.remove(&r.id) {
+                    obs.hist(HistKind::QueueWait, now.duration_since(t0));
+                }
+            }
+        }
         engine.admit(batch)?;
         Ok(n)
     }

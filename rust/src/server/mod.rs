@@ -3,8 +3,9 @@
 //!
 //! **The complete wire protocol — request fields, `delta`/`done`/`error`
 //! frames, the `overloaded` shed frame, and the `{"op":"stats"}` /
-//! `{"op":"health"}` / `{"op":"drain"}` control requests — is specified
-//! in `docs/PROTOCOL.md` at the repository root.** In one line: clients
+//! `{"op":"health"}` / `{"op":"drain"}` / `{"op":"metrics"}` /
+//! `{"op":"trace"}` control requests — is specified in
+//! `docs/PROTOCOL.md` at the repository root.** In one line: clients
 //! send one JSON object per line (only `"prompt"` is required; every
 //! other field maps onto that request's own `SamplingParams`, including
 //! the `"speculation"` knob for adaptive draft-tree sizing and the
@@ -73,6 +74,13 @@ pub struct ServerConfig {
     /// Bound on each worker's submission backlog; overflow is shed with
     /// an `overloaded` frame. 0 = auto (`max(8, 4 × batch)`).
     pub queue_depth: usize,
+    /// Run the observability layer (flight recorder + latency
+    /// histograms behind `{"op":"metrics"}` / `{"op":"trace"}`).
+    pub obs: bool,
+    /// Per-worker KV page budget override (0 = full pool capacity).
+    pub page_budget: usize,
+    /// Per-worker chunked-prefill budget in tokens (0 = engine default).
+    pub prefill_chunk: usize,
 }
 
 /// Run the server until `shutdown` flips. Returns when the listener
@@ -104,6 +112,9 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
             adaptive: cfg.adaptive,
             spec_budget: cfg.spec_budget,
             seed: 42,
+            obs: cfg.obs,
+            page_budget: cfg.page_budget,
+            prefill_chunk: cfg.prefill_chunk,
         },
         Arc::clone(&shutdown),
     )?);
@@ -189,6 +200,21 @@ fn handle_conn(
             let resp = match op.as_str() {
                 "stats" => gw.stats(),
                 "health" => gw.health(),
+                "metrics" => gw.metrics(),
+                "trace" => {
+                    if let Some(id) = body.get("req_id").and_then(|v| v.as_usize()) {
+                        gw.trace_req(id as u64)
+                            .unwrap_or_else(|e| proto::render_error(0, &format!("trace: {e:#}")))
+                    } else if let Some(n) = body.get("last").and_then(|v| v.as_usize()) {
+                        gw.trace_last(n)
+                            .unwrap_or_else(|e| proto::render_error(0, &format!("trace: {e:#}")))
+                    } else {
+                        proto::render_error(
+                            0,
+                            "trace requires \"req_id\" (one request's timeline) or \"last\":N",
+                        )
+                    }
+                }
                 "drain" => match body.get("worker").and_then(|w| w.as_usize()) {
                     Some(w) => gw
                         .drain(w)
@@ -312,6 +338,8 @@ pub fn spawn_local_opts(
 
 /// As `spawn_local_opts`, with an explicit gateway pool shape: `workers`
 /// engine workers and a per-worker submission-queue bound (`0` = auto).
+/// Observability is on (it is on in production `serve` too; the off arm
+/// exists for the bench A/B).
 pub fn spawn_local_gateway(
     artifacts: std::path::PathBuf,
     size: String,
@@ -321,6 +349,34 @@ pub fn spawn_local_gateway(
     queue_depth: usize,
     prefix_cache_mb: usize,
 ) -> Result<(u16, Arc<AtomicBool>, thread::JoinHandle<()>)> {
+    spawn_local_gateway_opts(
+        artifacts,
+        size,
+        variant,
+        batch,
+        workers,
+        queue_depth,
+        prefix_cache_mb,
+        0,
+        0,
+    )
+}
+
+/// As `spawn_local_gateway`, plus per-worker KV page-budget and
+/// prefill-chunk overrides (0 = defaults) — the obs e2e uses a tight
+/// budget + small chunks to force preemptions and chunked prefill.
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_local_gateway_opts(
+    artifacts: std::path::PathBuf,
+    size: String,
+    variant: String,
+    batch: usize,
+    workers: usize,
+    queue_depth: usize,
+    prefix_cache_mb: usize,
+    page_budget: usize,
+    prefill_chunk: usize,
+) -> Result<(u16, Arc<AtomicBool>, thread::JoinHandle<()>)> {
     // Bind first so the port is known before the engines warm up.
     let probe = TcpListener::bind("127.0.0.1:0")?;
     let port = probe.local_addr()?.port();
@@ -329,10 +385,14 @@ pub fn spawn_local_gateway(
     let sd = Arc::clone(&shutdown);
     let addr = format!("127.0.0.1:{port}");
     let handle = thread::spawn(move || {
+        // Test servers log through the structured JSON logger too
+        // (level from HYDRA_LOG; the call is a no-op if a logger is
+        // already installed).
+        crate::obs::init_logging(None);
         let rt = match Runtime::new(artifacts) {
             Ok(rt) => rt,
             Err(e) => {
-                eprintln!("server error: runtime open failed: {e:#}");
+                log::error!("server error: runtime open failed: {e:#}");
                 return;
             }
         };
@@ -349,9 +409,12 @@ pub fn spawn_local_gateway(
             spec_budget: 0,
             workers,
             queue_depth,
+            obs: true,
+            page_budget,
+            prefill_chunk,
         };
         if let Err(e) = serve(&rt, cfg, sd) {
-            eprintln!("server error: {e}");
+            log::error!("server error: {e}");
         }
     });
     Ok((port, shutdown, handle))
@@ -413,6 +476,30 @@ impl Client {
     /// Fetch per-worker liveness/occupancy (`{"op":"health"}`).
     pub fn health(&mut self) -> Result<Json> {
         self.request(&Json::obj(vec![("op", Json::str("health"))]))
+    }
+
+    /// Fetch the unified telemetry frame (`{"op":"metrics"}`): latency
+    /// histogram quantiles (merged + per-worker) and the counter registry.
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.request(&Json::obj(vec![("op", Json::str("metrics"))]))
+    }
+
+    /// Fetch one request's flight-recorder timeline
+    /// (`{"op":"trace","req_id":n}`).
+    pub fn trace_req(&mut self, req_id: u64) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("op", Json::str("trace")),
+            ("req_id", Json::num(req_id as f64)),
+        ]))
+    }
+
+    /// Fetch the newest `n` flight-recorder records across all rings
+    /// (`{"op":"trace","last":n}`).
+    pub fn trace_last(&mut self, n: usize) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("op", Json::str("trace")),
+            ("last", Json::num(n as f64)),
+        ]))
     }
 
     /// Drain one gateway worker (`{"op":"drain","worker":k}`): blocks

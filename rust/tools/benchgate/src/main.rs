@@ -4,13 +4,16 @@
 //! `rust/bench_results/BENCH_*.json` files: one JSON array per bench,
 //! one entry per CI run, appended by `hydra_serve::bench::save_result`
 //! and never rewritten (see `bench_results/README.md`). This tool turns
-//! that trajectory into a gate: for every throughput metric (any
-//! numeric field ending in `_tps`), the NEWEST entry is compared
-//! against the **median of all prior entries** carrying the same
-//! metric, and the gate fails when the newest value drops below 90% of
-//! that baseline. The median makes the baseline robust to the odd slow
-//! CI runner in the history; the 10% band absorbs run-to-run noise on
-//! shared hardware.
+//! that trajectory into a gate: for every gated metric, the NEWEST
+//! entry is compared against the **median of all prior entries**
+//! carrying the same metric. Gated metrics have a direction encoded in
+//! their field suffix: throughput fields (`*_tps`) are
+//! higher-is-better and fail when the newest value drops below 90% of
+//! the baseline; latency fields (`*_ms`, `*_p99`) are lower-is-better
+//! and fail when the newest value rises above 110% of the baseline.
+//! The median makes the baseline robust to the odd slow CI runner in
+//! the history; the 10% band absorbs run-to-run noise on shared
+//! hardware.
 //!
 //! Entry shapes: a trajectory entry is either a single summary object
 //! or an array of per-row objects (e.g. one row per batch bucket). Rows
@@ -109,6 +112,31 @@ fn find_results_dir() -> Option<PathBuf> {
 /// baseline × THRESHOLD.
 const THRESHOLD: f64 = 0.9;
 
+/// Latency metrics (`*_ms` / `*_p99`) regress when they RISE; the gate
+/// fails above baseline × LATENCY_CEIL.
+const LATENCY_CEIL: f64 = 1.1;
+
+/// Which way a gated metric is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Direction {
+    /// `*_tps`: fail when the value drops below the baseline floor.
+    HigherIsBetter,
+    /// `*_ms` / `*_p99`: fail when the value rises above the ceiling.
+    LowerIsBetter,
+}
+
+/// The gating direction of a field name, `None` for ungated fields
+/// (plain config/count numerics never participate).
+fn direction_of(field: &str) -> Option<Direction> {
+    if field.ends_with("_tps") {
+        Some(Direction::HigherIsBetter)
+    } else if field.ends_with("_ms") || field.ends_with("_p99") {
+        Some(Direction::LowerIsBetter)
+    } else {
+        None
+    }
+}
+
 /// Check one trajectory file; Ok(summary line) when it passes, Err(one
 /// line per regression) otherwise.
 fn check_trajectory(name: &str, text: &str) -> Result<String, Vec<String>> {
@@ -142,13 +170,31 @@ fn check_trajectory(name: &str, text: &str) -> Result<String, Vec<String>> {
             continue; // degenerate history (zero-throughput stub rows)
         }
         compared += 1;
-        if *current < baseline * THRESHOLD {
-            violations.push(format!(
-                "{name}: {metric} regressed to {current:.2} \
-                 (baseline median {baseline:.2} over {} run(s), floor {:.2})",
-                prior.len(),
-                baseline * THRESHOLD
-            ));
+        // The metric key is `field@row`; the direction lives in the field.
+        let field = metric.rsplit_once('@').map_or(metric.as_str(), |(f, _)| f);
+        match direction_of(field) {
+            Some(Direction::LowerIsBetter) => {
+                if *current > baseline * LATENCY_CEIL {
+                    violations.push(format!(
+                        "{name}: {metric} regressed to {current:.2} \
+                         (baseline median {baseline:.2} over {} run(s), ceiling {:.2})",
+                        prior.len(),
+                        baseline * LATENCY_CEIL
+                    ));
+                }
+            }
+            // metrics_of only emits gated fields, so `None` cannot
+            // reach here; treat it like throughput if it ever does.
+            _ => {
+                if *current < baseline * THRESHOLD {
+                    violations.push(format!(
+                        "{name}: {metric} regressed to {current:.2} \
+                         (baseline median {baseline:.2} over {} run(s), floor {:.2})",
+                        prior.len(),
+                        baseline * THRESHOLD
+                    ));
+                }
+            }
         }
     }
     if violations.is_empty() {
@@ -159,7 +205,8 @@ fn check_trajectory(name: &str, text: &str) -> Result<String, Vec<String>> {
 }
 
 /// Flatten one trajectory entry (object, or array of row objects) into
-/// positionally-keyed throughput metrics: `field@row`.
+/// positionally-keyed gated metrics: `field@row`. Only fields with a
+/// gating direction (`*_tps`, `*_ms`, `*_p99`) are collected.
 fn metrics_of(entry: &Value) -> Vec<(String, f64)> {
     let rows: Vec<&Value> = match entry {
         Value::Arr(a) => a.iter().collect(),
@@ -169,7 +216,7 @@ fn metrics_of(entry: &Value) -> Vec<(String, f64)> {
     for (i, row) in rows.iter().enumerate() {
         if let Value::Obj(fields) = row {
             for (k, v) in fields {
-                if let (true, Value::Num(n)) = (k.ends_with("_tps"), v) {
+                if let (true, Value::Num(n)) = (direction_of(k).is_some(), v) {
                     out.push((format!("{k}@{i}"), *n));
                 }
             }
@@ -437,6 +484,47 @@ mod tests {
         let v = check_trajectory("BENCH_x.json", t).unwrap_err();
         assert_eq!(v.len(), 1, "{v:?}");
         assert!(v[0].contains("x_tps@1"), "{v:?}");
+    }
+
+    #[test]
+    fn latency_metrics_gate_lower_is_better() {
+        // Baseline median of [10, 9, 11] = 10; ceiling = 11.
+        let ok = r#"[{"step_ms": 10.0}, {"step_ms": 9.0}, {"step_ms": 11.0}, {"step_ms": 10.9}]"#;
+        assert!(check_trajectory("BENCH_x.json", ok).is_ok());
+        let bad = r#"[{"step_ms": 10.0}, {"step_ms": 9.0}, {"step_ms": 11.0}, {"step_ms": 11.2}]"#;
+        let v = check_trajectory("BENCH_x.json", bad).unwrap_err();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("step_ms@0"), "{v:?}");
+        assert!(v[0].contains("ceiling 11.00"), "{v:?}");
+        // A latency DROP is an improvement, never a violation — even a
+        // huge one (the throughput direction would have failed this).
+        let faster = r#"[{"step_ms": 10.0}, {"step_ms": 10.0}, {"step_ms": 1.0}]"#;
+        assert!(check_trajectory("BENCH_x.json", faster).is_ok());
+        // And a throughput RISE stays fine under the _tps direction.
+        let more = r#"[{"x_tps": 100.0}, {"x_tps": 100.0}, {"x_tps": 500.0}]"#;
+        assert!(check_trajectory("BENCH_x.json", more).is_ok());
+    }
+
+    #[test]
+    fn p99_suffix_gates_lower_is_better_too() {
+        let bad = r#"[{"ttft_p99": 50.0}, {"ttft_p99": 50.0}, {"ttft_p99": 56.0}]"#;
+        let v = check_trajectory("BENCH_x.json", bad).unwrap_err();
+        assert!(v[0].contains("ttft_p99@0"), "{v:?}");
+        let ok = r#"[{"ttft_p99": 50.0}, {"ttft_p99": 50.0}, {"ttft_p99": 54.9}]"#;
+        assert!(check_trajectory("BENCH_x.json", ok).is_ok());
+    }
+
+    #[test]
+    fn direction_of_classifies_suffixes() {
+        assert_eq!(direction_of("decode_tps"), Some(Direction::HigherIsBetter));
+        assert_eq!(direction_of("step_ms"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction_of("ttft_p99"), Some(Direction::LowerIsBetter));
+        assert_eq!(direction_of("efficiency"), None);
+        assert_eq!(direction_of("overhead_pct"), None);
+        // metrics_of picks up every gated direction and nothing else.
+        let entry = parse(r#"{"a_tps": 1.0, "b_ms": 2.0, "c_p99": 3.0, "d": 4.0}"#).unwrap();
+        let keys: Vec<String> = metrics_of(&entry).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a_tps@0", "b_ms@0", "c_p99@0"]);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! `docs/INVARIANTS.md` with a zero-dependency token scanner (a
 //! comment/string-scrubbing lexer, not a full parser — `syn` would pull a
 //! dependency tree into the CI bootstrap phase, and every rule here is
-//! expressible over scrubbed tokens). Five rules:
+//! expressible over scrubbed tokens). Six rules:
 //!
 //! * **no-panic** — no `.unwrap(` / `.expect(` / `panic!` / `todo!` /
 //!   `unimplemented!` in the request-serving modules (`server`,
@@ -24,6 +24,11 @@
 //! * **sleep-poll** — no `sleep(` loops on the serving path: waiting is
 //!   done by parking on channels/condvars. The rare legitimate sleep
 //!   (e.g. backoff against a *remote* socket) carries a waiver.
+//! * **bare-print** — no `eprintln!` / `println!` in the serving modules
+//!   (`server`, `gateway`, `scheduler`, `engine`) outside tests: ad-hoc
+//!   prints bypass the structured JSON logger (`crate::obs`), breaking
+//!   machine-parseable stderr and ignoring the `--log-level` gate. Use
+//!   `log::info!`/`warn!`/`error!` instead.
 //! * **op-coverage** — every `{"op": ...}` the server dispatches must be
 //!   specified in `docs/PROTOCOL.md` and exercised by a test.
 //!
@@ -446,6 +451,23 @@ fn analyze(rel: &str, raw: &str) -> Vec<String> {
                 }
             }
         }
+        if in_serving(rel) && !waived(&ws, ln, "bare-print") {
+            // `eprintln!` first: an eprintln line also contains the
+            // `println!` substring, and one report per line is enough.
+            for pat in ["eprintln!", "println!"] {
+                if line.contains(pat) {
+                    report(
+                        &mut out,
+                        "bare-print",
+                        &format!(
+                            "`{pat}` on the serving path (use the structured logger: \
+                             log::info!/warn!/error!)"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
         if in_sleep_scope(rel) && line.contains("sleep(") && !waived(&ws, ln, "sleep-poll") {
             report(
                 &mut out,
@@ -679,6 +701,37 @@ mod tests {
         );
         assert!(out.iter().any(|v| v.contains("no reason")), "{out:?}");
         assert!(out.iter().any(|v| v.contains("sleep-poll")), "{out:?}");
+    }
+
+    #[test]
+    fn bare_print_flags_serving_modules_once_per_line() {
+        let bad = analyze("rust/src/server/mod.rs", "fn f() { eprintln!(\"boom\"); }\n");
+        assert_eq!(bad.len(), 1, "one report, not eprintln+println double: {bad:?}");
+        assert!(bad[0].contains("bare-print"), "{bad:?}");
+        let bad = analyze("rust/src/scheduler/mod.rs", "fn f() { println!(\"x\"); }\n");
+        assert!(bad.iter().any(|v| v.contains("bare-print")), "{bad:?}");
+        // The structured logger itself (obs) is not a serving module —
+        // its eprintln is the one legitimate sink.
+        let obs = analyze("rust/src/obs/mod.rs", "fn log() { eprintln!(\"{line}\"); }\n");
+        assert!(obs.is_empty(), "{obs:?}");
+        // log macros never trip the rule.
+        let ok = analyze("rust/src/gateway/mod.rs", "fn f() { log::error!(\"gateway {e}\"); }\n");
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn bare_print_respects_waivers_and_test_gating() {
+        let ok = analyze(
+            "rust/src/server/mod.rs",
+            "// repo-lint: allow(bare-print) — startup failure before any logger exists.\n\
+             fn f() { eprintln!(\"x\"); }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let t = analyze(
+            "rust/src/server/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { println!(\"dbg\"); }\n}\n",
+        );
+        assert!(t.is_empty(), "{t:?}");
     }
 
     #[test]
