@@ -707,6 +707,96 @@ mod tests {
         Json::obj(fields)
     }
 
+    /// Like `block` but with every optional surface a live worker renders:
+    /// the merge-exempt `adaptive` gauges and the full prefix-cache
+    /// counter set.
+    fn full_block(worker: f64) -> Json {
+        let base = block(worker, 4.0, 80.0, 0.5, None);
+        let mut fields: Vec<(String, Json)> = match base {
+            Json::Obj(m) => m.into_iter().collect(),
+            _ => unreachable!("block() builds an object"),
+        };
+        fields.push((
+            "adaptive".into(),
+            Json::obj(vec![
+                ("step_token_budget", Json::num(48.0)),
+                ("ladder", Json::str("4,8,16")),
+                ("tree_nodes", Json::num(16.0)),
+                ("throttled", Json::Bool(worker > 0.0)),
+            ]),
+        ));
+        fields.push((
+            "prefix_cache".into(),
+            Json::obj(vec![
+                ("lookups", Json::num(10.0)),
+                ("full_hits", Json::num(2.0)),
+                ("partial_hits", Json::num(3.0)),
+                ("misses", Json::num(5.0)),
+                ("insertions", Json::num(4.0)),
+                ("evictions", Json::num(1.0)),
+                ("rejected_inserts", Json::num(worker)),
+                ("tokens_reused", Json::num(64.0)),
+                ("bytes_in_use", Json::num(100.0)),
+                ("byte_budget", Json::num(1000.0)),
+                ("nodes", Json::num(7.0)),
+                ("pinned", Json::num(1.0)),
+                ("row_conflicts", Json::num(worker)),
+            ]),
+        ));
+        let obj: std::collections::BTreeMap<String, Json> = fields.into_iter().collect();
+        Json::Obj(obj)
+    }
+
+    #[test]
+    fn merge_three_workers_one_missing_kv_and_adaptive() {
+        // Worker 2 runs with paging and the adaptive controller disabled:
+        // its block has no `kv_pool`, no `adaptive`, and no `prefix_cache`.
+        // The merge sums whatever exists and never invents zeros for the
+        // absent worker.
+        let mut bare = match block(2.0, 3.0, 40.0, 0.25, None) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bare.remove("kv_pool");
+        let m = merge_stats(vec![full_block(0.0), full_block(1.0), Json::Obj(bare)]);
+        assert_eq!(m.req("workers_total").as_usize(), Some(3));
+        assert_eq!(m.req("workers_alive").as_usize(), Some(3));
+        // Top-level counters sum across all three blocks.
+        assert_eq!(m.req("completed").as_usize(), Some(4 + 4 + 3));
+        assert_eq!(m.req("spec_tokens_verified").as_usize(), Some(80 + 80 + 40));
+        // kv_pool pools over the two carrying workers only.
+        let kv = m.req("kv_pool");
+        assert_eq!(kv.req("blocks_total").as_usize(), Some(16));
+        assert_eq!(kv.req("blocks_used").as_usize(), Some(2 + 4));
+        // `adaptive` is merge-exempt: the gauges are per-worker knob
+        // positions, so they survive only inside the `workers` array.
+        assert!(m.get("adaptive").is_none(), "adaptive gauges must not be pooled");
+        let workers = m.req("workers").as_arr().unwrap();
+        assert_eq!(workers.len(), 3);
+        let a0 = workers[0].req("adaptive");
+        assert_eq!(a0.req("step_token_budget").as_usize(), Some(48));
+        assert_eq!(a0.req("ladder").as_str(), Some("4,8,16"));
+        assert_eq!(a0.req("tree_nodes").as_usize(), Some(16));
+        assert_eq!(a0.req("throttled").as_bool(), Some(false));
+        assert!(workers[2].get("adaptive").is_none());
+        assert!(workers[2].get("kv_pool").is_none());
+        // Every prefix-cache counter sums across the two carrying workers.
+        let pc = m.req("prefix_cache");
+        assert_eq!(pc.req("lookups").as_usize(), Some(20));
+        assert_eq!(pc.req("full_hits").as_usize(), Some(4));
+        assert_eq!(pc.req("partial_hits").as_usize(), Some(6));
+        assert_eq!(pc.req("misses").as_usize(), Some(10));
+        assert_eq!(pc.req("insertions").as_usize(), Some(8));
+        assert_eq!(pc.req("evictions").as_usize(), Some(2));
+        assert_eq!(pc.req("rejected_inserts").as_usize(), Some(1));
+        assert_eq!(pc.req("tokens_reused").as_usize(), Some(128));
+        assert_eq!(pc.req("bytes_in_use").as_usize(), Some(200));
+        assert_eq!(pc.req("byte_budget").as_usize(), Some(2000));
+        assert_eq!(pc.req("nodes").as_usize(), Some(14));
+        assert_eq!(pc.req("pinned").as_usize(), Some(2));
+        assert_eq!(pc.req("row_conflicts").as_usize(), Some(1));
+    }
+
     #[test]
     fn merge_sums_counters_and_recomputes_efficiency() {
         let m = merge_stats(vec![

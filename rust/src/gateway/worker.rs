@@ -104,7 +104,10 @@ fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
 /// Runs after a panic may have poisoned the map's mutex — recovery is
 /// safe (a HashMap is structurally valid after any bailed mutation).
 fn fail_pending(pending: &Pending, error: &str) {
-    for (_, reply) in lock_or_recover(pending).drain() {
+    // Drain under the lock, send outside it: a `for` over the guard's
+    // iterator would hold the mutex across every `send`.
+    let drained: Vec<_> = lock_or_recover(pending).drain().collect();
+    for (_, reply) in drained {
         let _ = reply.send(GatewayReply::Failed {
             code: WORKER_FAILED,
             error: error.to_string(),
@@ -233,7 +236,11 @@ fn serve(
                     }
                 }
                 SeqEvent::Delta { req_id, tokens } => {
-                    if let Some(reply) = lock_or_recover(pending).get(&req_id) {
+                    // Clone the sender out so the `pending` guard dies at
+                    // the `;` — an if-let scrutinee guard would stay live
+                    // across the send (Rust 2021 temporary scopes).
+                    let reply = lock_or_recover(pending).get(&req_id).cloned();
+                    if let Some(reply) = reply {
                         let _ = reply.send(GatewayReply::Event(SeqEvent::Delta {
                             req_id,
                             tokens,

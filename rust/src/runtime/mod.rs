@@ -62,10 +62,11 @@ pub struct Runtime {
     /// per ladder-rung combination under adaptive speculation) — so the
     /// same `[B,T,T]` payload would otherwise be re-uploaded every step.
     /// Keyed by FNV-1a over shape + i32 payload; bounded by
-    /// [`MASK_CACHE_MAX`] (cleared wholesale when full). Safe to reuse
-    /// across executions for the same reason weight buffers are: this
-    /// crate's PJRT execute path never donates input buffers.
-    mask_cache: RefCell<HashMap<u64, xla::PjRtBuffer>>,
+    /// [`MASK_CACHE_MAX`] (the oldest half is evicted when full — see
+    /// [`BoundedCache`]). Safe to reuse across executions for the same
+    /// reason weight buffers are: this crate's PJRT execute path never
+    /// donates input buffers.
+    mask_cache: RefCell<BoundedCache<xla::PjRtBuffer>>,
     /// Ancestor-mask uploads avoided via `mask_cache` (profiling hook,
     /// reset by [`Runtime::reset_counters`]).
     pub mask_cache_hits: RefCell<u64>,
@@ -76,6 +77,51 @@ pub struct Runtime {
 /// per-slot rung combination at each bucket; the bound is a backstop for
 /// pathological churn, not a steady-state limit.
 const MASK_CACHE_MAX: usize = 256;
+
+/// Insertion-ordered bounded map behind the ancestor-mask upload cache
+/// (generic over the value so the eviction policy is testable without a
+/// live PJRT device buffer). At capacity it evicts the OLDEST HALF of
+/// its entries instead of clearing wholesale: the younger half — the
+/// masks the engine is cycling through right now — keeps hitting across
+/// the eviction, so an overflow costs half a re-warm rather than a full
+/// one (and `mask_cache_hits` keeps climbing instead of stalling for
+/// `MASK_CACHE_MAX` steps).
+struct BoundedCache<V> {
+    map: HashMap<u64, V>,
+    /// Keys, oldest first. No duplicates: `insert` pushes a key only
+    /// when it was absent from `map`.
+    order: std::collections::VecDeque<u64>,
+    cap: usize,
+}
+
+impl<V> BoundedCache<V> {
+    fn new(cap: usize) -> Self {
+        BoundedCache { map: HashMap::new(), order: std::collections::VecDeque::new(), cap }
+    }
+    fn contains_key(&self, k: &u64) -> bool {
+        self.map.contains_key(k)
+    }
+    fn get(&self, k: &u64) -> Option<&V> {
+        self.map.get(k)
+    }
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+    fn insert(&mut self, k: u64, v: V) {
+        if !self.map.contains_key(&k) && self.map.len() >= self.cap {
+            // Evict the oldest half (at least one entry at tiny caps).
+            for _ in 0..(self.cap / 2).max(1) {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+        if self.map.insert(k, v).is_none() {
+            self.order.push_back(k);
+        }
+    }
+}
 
 /// FNV-1a over a tensor's shape and i32 payload — the content address of
 /// an ancestor mask in the upload cache.
@@ -112,7 +158,7 @@ impl Runtime {
             exec_calls: RefCell::new(0),
             upload_time: RefCell::new(Default::default()),
             download_time: RefCell::new(Default::default()),
-            mask_cache: RefCell::new(HashMap::new()),
+            mask_cache: RefCell::new(BoundedCache::new(MASK_CACHE_MAX)),
             mask_cache_hits: RefCell::new(0),
         })
     }
@@ -130,6 +176,7 @@ impl Runtime {
         let spec = self.manifest.exe(name)?;
         let path = self.dir.join(&spec.file);
         let t0 = Instant::now();
+        // repo-analyze: allow(hot-path-purity) — one-time lazy artifact load per executable, cached in `exes` for every later step
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -220,9 +267,7 @@ impl Runtime {
             if cache.contains_key(k) {
                 *self.mask_cache_hits.borrow_mut() += 1;
             } else {
-                if cache.len() >= MASK_CACHE_MAX {
-                    cache.clear();
-                }
+                // At capacity `insert` evicts the oldest half itself.
                 let buf = self.upload(t)?;
                 cache.insert(*k, buf);
             }
@@ -330,7 +375,7 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    use super::mask_key;
+    use super::{mask_key, BoundedCache};
 
     #[test]
     fn mask_key_is_deterministic_and_content_sensitive() {
@@ -339,5 +384,77 @@ mod tests {
         assert_ne!(a, mask_key(&[1, 2, 2], &[1, 0, 0, 1]));
         // Same payload under a different shape is a different mask.
         assert_ne!(a, mask_key(&[2, 1, 2], &[1, 0, 1, 1]));
+    }
+
+    #[test]
+    fn bounded_cache_evicts_oldest_half_at_capacity() {
+        let mut c: BoundedCache<u32> = BoundedCache::new(8);
+        for k in 0..8u64 {
+            c.insert(k, k as u32);
+        }
+        assert_eq!(c.len(), 8);
+        // The 9th distinct key evicts keys 0..4 and lands alongside 4..8.
+        c.insert(8, 8);
+        assert_eq!(c.len(), 5);
+        for k in 0..4u64 {
+            assert!(!c.contains_key(&k), "oldest half evicted: {k}");
+        }
+        for k in 4..9u64 {
+            assert!(c.contains_key(&k), "younger half survives: {k}");
+        }
+        // Re-inserting a present key neither grows nor evicts.
+        c.insert(8, 80);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.get(&8), Some(&80));
+        // A capacity of 1 still makes room (evicts at least one).
+        let mut tiny: BoundedCache<u32> = BoundedCache::new(1);
+        tiny.insert(1, 1);
+        tiny.insert(2, 2);
+        assert_eq!(tiny.len(), 1);
+        assert!(tiny.contains_key(&2));
+    }
+
+    #[test]
+    fn mask_cache_hits_survive_overflow() {
+        // Mirror the execute() warm-pass: hit when present, insert when
+        // absent. An engine cycling through 4 hot masks while churn
+        // overflows the cache must keep hitting AFTER the eviction —
+        // under the old clear-on-full policy the hot set was wiped too
+        // and hits stalled for a full re-warm.
+        fn touch(c: &mut BoundedCache<u32>, hits: &mut u64, k: u64) {
+            if c.contains_key(&k) {
+                *hits += 1;
+            } else {
+                c.insert(k, 0);
+            }
+        }
+        let mut c: BoundedCache<u32> = BoundedCache::new(8);
+        let mut hits = 0u64;
+        let hot = [100u64, 101, 102, 103];
+        for &k in &hot {
+            touch(&mut c, &mut hits, k); // misses: cache now holds the hot set
+        }
+        for &k in &hot {
+            touch(&mut c, &mut hits, k);
+        }
+        assert_eq!(hits, 4);
+        // Churn keys overflow the cache (4 hot + 5 cold > capacity 8);
+        // the eviction drops the oldest half — the hot set is the OLD
+        // half here, worst case for the policy.
+        for k in 0..5u64 {
+            touch(&mut c, &mut hits, k);
+        }
+        // The last cold insert evicted the hot set, but the counter
+        // kept its value and the very next hot pass re-warms once and
+        // then hits again — it does not reset or stall.
+        let before = hits;
+        for &k in &hot {
+            touch(&mut c, &mut hits, k);
+        }
+        for &k in &hot {
+            touch(&mut c, &mut hits, k);
+        }
+        assert!(hits >= before + 4, "hot set hits again after overflow: {hits} vs {before}");
+        assert_eq!(hits, 8, "4 warm hits + 4 post-overflow hits");
     }
 }

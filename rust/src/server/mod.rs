@@ -150,9 +150,9 @@ pub fn serve(rt: &Runtime, cfg: ServerConfig, shutdown: Arc<AtomicBool>) -> Resu
                 });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // repo-lint: allow(sleep-poll) — a nonblocking accept has
-                // no channel to park on; 2 ms bounds shutdown latency
-                // without a poll/epoll dependency.
+                // A nonblocking accept has no channel to park on; 2 ms
+                // bounds shutdown latency without a poll/epoll dependency.
+                // repo-lint: allow(sleep-poll) — nonblocking accept loop, bounded 2 ms shutdown-latency backoff
                 thread::sleep(std::time::Duration::from_millis(2));
             }
             Err(e) => return Err(e.into()),

@@ -32,6 +32,7 @@ impl ThreadPool {
             let handle = thread::Builder::new().name(format!("pool-{i}")).spawn(move || loop {
                 // Recover a poisoned lock: the receiver is still valid
                 // after another worker panicked while holding it.
+                // repo-analyze: allow(lock-order) — single shared receiver: parking in recv() under the lock IS the queue handoff
                 let job = { crate::sync::lock_or_recover(&rx).recv() };
                 match job {
                     // A panicking job (e.g. a connection handler hitting

@@ -1,0 +1,26 @@
+// Seeded violation plus its fix, side by side: `reply_bad` sends on a
+// channel while the `pending` guard from the if-let scrutinee is still
+// live (Rust 2021 temporary-scope rules keep it alive through the arm);
+// `reply_good` clones the sender out first, so the guard dies at the
+// `;` and the send happens unlocked.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Hub {
+    pending: Mutex<HashMap<u64, Sender<u32>>>,
+}
+
+impl Hub {
+    pub fn reply_bad(&self, req: u64) {
+        if let Some(tx) = lock_or_recover(&self.pending).get(&req) {
+            let _ = tx.send(1);
+        }
+    }
+
+    pub fn reply_good(&self, req: u64) {
+        let tx = lock_or_recover(&self.pending).get(&req).cloned();
+        if let Some(tx) = tx {
+            let _ = tx.send(1);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+// Clean twin: every function takes a_m before b_m, including through a
+// helper call — consistent order, acyclic graph, no findings.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn first(a_m: &Mutex<u32>, b_m: &Mutex<u32>) -> u32 {
+    let ga = lock_or_recover(a_m);
+    let gb = lock_or_recover(b_m);
+    *ga + *gb
+}
+
+pub fn second(a_m: &Mutex<u32>, b_m: &Mutex<u32>) -> u32 {
+    let ga = lock_or_recover(a_m);
+    helper_locks_b(b_m) + *ga
+}
+
+fn helper_locks_b(b_m: &Mutex<u32>) -> u32 {
+    let gb = lock_or_recover(b_m);
+    *gb
+}

@@ -1,0 +1,17 @@
+// Seeded violation: two functions take the same pair of locks in
+// opposite orders, so the acquisition graph gets a_m → b_m and
+// b_m → a_m — a classic ABBA deadlock the cycle pass must report.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn forward(a_m: &Mutex<u32>, b_m: &Mutex<u32>) -> u32 {
+    let ga = lock_or_recover(a_m);
+    let gb = lock_or_recover(b_m);
+    *ga + *gb
+}
+
+pub fn backward(a_m: &Mutex<u32>, b_m: &Mutex<u32>) -> u32 {
+    let gb = lock_or_recover(b_m);
+    let ga = lock_or_recover(a_m);
+    *gb - *ga
+}

@@ -1,0 +1,23 @@
+// Seeded violation: the a_m → b_m edge only exists through a call —
+// `takes_a_then_calls` holds the `a_m` guard while calling a helper
+// that locks `b_m`. One level of call inlining must surface the edge,
+// which then closes a cycle against `takes_b_then_a`.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn takes_a_then_calls(a_m: &Mutex<u32>, b_m: &Mutex<u32>) -> u32 {
+    let ga = lock_or_recover(a_m);
+    helper_locks_b(b_m);
+    *ga
+}
+
+fn helper_locks_b(b_m: &Mutex<u32>) -> u32 {
+    let gb = lock_or_recover(b_m);
+    *gb
+}
+
+pub fn takes_b_then_a(a_m: &Mutex<u32>, b_m: &Mutex<u32>) -> u32 {
+    let gb = lock_or_recover(b_m);
+    let ga = lock_or_recover(a_m);
+    *gb + *ga
+}

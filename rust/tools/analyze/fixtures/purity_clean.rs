@@ -1,0 +1,19 @@
+// Clean twin: `Engine::step` and everything it reaches is pure integer
+// work — no locks, no blocking, no I/O, no findings.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Engine {
+    n: u32,
+}
+
+impl Engine {
+    pub fn step(&mut self) -> u32 {
+        self.tick()
+    }
+
+    fn tick(&mut self) -> u32 {
+        self.n = self.n.wrapping_add(1);
+        self.n
+    }
+}

@@ -1,0 +1,23 @@
+// Seeded violations: one lock, one blocking call and one file read in a
+// helper reachable from `Engine::step`, each of which hot-path-purity
+// must report with the full call chain.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Engine {
+    m: Mutex<u32>,
+    n: u32,
+}
+
+impl Engine {
+    pub fn step(&mut self) -> u32 {
+        self.helper()
+    }
+
+    fn helper(&self) -> u32 {
+        std::thread::sleep(core::time::Duration::from_millis(1));
+        let _guard = lock_or_recover(&self.m);
+        let text = std::fs::read_to_string("weights.txt").unwrap_or_default();
+        text.len() as u32 + self.n
+    }
+}

@@ -1,0 +1,26 @@
+// The same three hot-path violations as purity_hot.rs, each carrying a
+// reasoned waiver — the pass must stay quiet and record all three
+// waivers as used.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Engine {
+    m: Mutex<u32>,
+    n: u32,
+}
+
+impl Engine {
+    pub fn step(&mut self) -> u32 {
+        self.helper()
+    }
+
+    fn helper(&self) -> u32 {
+        // repo-analyze: allow(hot-path-purity) — bounded one-millisecond warmup spin, startup only
+        std::thread::sleep(core::time::Duration::from_millis(1));
+        // repo-analyze: allow(hot-path-purity) — counter lock is uncontended until workers attach
+        let _guard = lock_or_recover(&self.m);
+        // repo-analyze: allow(hot-path-purity) — one-time weight load, cached for every later step
+        let text = std::fs::read_to_string("weights.txt").unwrap_or_default();
+        text.len() as u32 + self.n
+    }
+}

@@ -1,0 +1,18 @@
+// Seeded violation: the obs writer path must be allocation-free, but
+// this `push` formats a String before touching the ring.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Ring {
+    tail: AtomicU64,
+}
+
+impl Ring {
+    pub fn push(&self, v: u64) {
+        let s = format!("{v}");
+        self.note(&s);
+        self.tail.fetch_add(1, Ordering::Release);
+    }
+
+    fn note(&self, _s: &str) {}
+}

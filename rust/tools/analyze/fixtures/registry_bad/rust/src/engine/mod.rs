@@ -1,0 +1,8 @@
+// Emits Admit and StepLatency — but not Ghost.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn tick(obs: &ObsHandle) {
+    obs.event(EventKind::Admit, 1);
+    obs.hist(HistKind::StepLatency, 2);
+}

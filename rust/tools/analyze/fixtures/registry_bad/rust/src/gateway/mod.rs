@@ -1,0 +1,12 @@
+// Merges `steps` only — `zeta` is deliberately absent.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+fn merge_stats(workers: &[Json]) -> Json {
+    let steps = ksum(workers, "steps");
+    Json::num(steps)
+}
+
+fn ksum(_workers: &[Json], _key: &str) -> f64 {
+    0.0
+}

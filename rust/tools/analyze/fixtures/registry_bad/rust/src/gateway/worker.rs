@@ -1,0 +1,18 @@
+// Seeded violations: `zeta` is rendered but never merged, documented,
+// or named in a test.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Worker {
+    steps: u64,
+}
+
+impl Worker {
+    fn render_stats(&self) -> Json {
+        let fields = vec![
+            ("steps", Json::num(self.steps as f64)),
+            ("zeta", Json::num(0.0)),
+        ];
+        Json::obj(fields)
+    }
+}

@@ -1,0 +1,24 @@
+// Seeded violation: `Ghost` is defined and named but never emitted
+// anywhere, and its wire name appears in no doc and no test.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub enum EventKind {
+    Admit,
+    Ghost,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Ghost => "ghost",
+        }
+    }
+}
+
+pub enum HistKind {
+    StepLatency,
+}
+
+pub const HIST_NAMES: [&str; 1] = ["step_latency"];

@@ -1,0 +1,12 @@
+// Names `steps`, `admit` and `step_latency` — but not `zeta` or
+// `ghost`.
+//
+// Fixture file: read as test evidence by repo-analyze's tests.
+
+#[test]
+fn registry_names_are_stable() {
+    let rendered = ["steps"];
+    let wire_events = ["admit"];
+    let hists = ["step_latency"];
+    assert_eq!(rendered.len() + wire_events.len() + hists.len(), 3);
+}

@@ -1,0 +1,8 @@
+// Emits every defined event kind and histogram.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn tick(obs: &ObsHandle) {
+    obs.event(EventKind::Admit, 1);
+    obs.hist(HistKind::StepLatency, 2);
+}

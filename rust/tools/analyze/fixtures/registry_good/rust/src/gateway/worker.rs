@@ -1,0 +1,16 @@
+// Clean twin: every rendered key is merged, documented and tested.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub struct Worker {
+    steps: u64,
+}
+
+impl Worker {
+    fn render_stats(&self) -> Json {
+        let fields = vec![
+            ("steps", Json::num(self.steps as f64)),
+        ];
+        Json::obj(fields)
+    }
+}

@@ -1,0 +1,21 @@
+// Clean twin: every variant is emitted, documented and tested.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub enum EventKind {
+    Admit,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+        }
+    }
+}
+
+pub enum HistKind {
+    StepLatency,
+}
+
+pub const HIST_NAMES: [&str; 1] = ["step_latency"];

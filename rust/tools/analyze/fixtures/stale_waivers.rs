@@ -1,0 +1,15 @@
+// Seeded violations for the stale-waiver pass: both waivers below sit
+// on code that no longer triggers anything — one repo-analyze waiver
+// suppressing nothing, one repo-lint waiver whose pattern is gone.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+// repo-analyze: allow(hot-path-purity) — the blocking call that lived here was removed
+pub fn quiet() -> u32 {
+    7
+}
+
+// repo-lint: allow(sleep-poll) — the poll loop moved to the worker thread
+pub fn also_quiet() -> u32 {
+    8
+}

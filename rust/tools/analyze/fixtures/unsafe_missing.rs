@@ -1,0 +1,8 @@
+// Seeded violation: an `unsafe` block with no adjacent safety argument
+// comment — the audit must demand one.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn peek(p: *const u32) -> u32 {
+    unsafe { *p }
+}

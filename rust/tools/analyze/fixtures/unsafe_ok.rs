@@ -1,0 +1,9 @@
+// Clean twin: the `unsafe` block carries its SAFETY argument, so the
+// audit generates an inventory entry instead of a finding.
+//
+// Fixture file: parsed by repo-analyze's tests, never compiled.
+
+pub fn peek(p: *const u32) -> u32 {
+    // SAFETY: caller guarantees `p` is a live, aligned, readable u32.
+    unsafe { *p }
+}

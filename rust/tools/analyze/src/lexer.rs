@@ -1,0 +1,378 @@
+//! Scrubbing lexer shared by every analyzer pass.
+//!
+//! `scrub` blanks comments, strings and char literals byte-for-byte
+//! (newlines kept), so downstream scans never fire on prose or literal
+//! text — and, because the output length equals the input length, byte
+//! offsets computed on the scrubbed text index the raw text too (the
+//! registry pass uses this to read string literals back out of a
+//! function body located on the scrubbed side). Unlike `repo-lint`'s
+//! scrubber, this one also *captures* the comments it blanks: the
+//! unsafe-audit rule needs `// SAFETY:` comments and the waiver passes
+//! need `// repo-analyze: allow(..)` / `// repo-lint: allow(..)` lines.
+
+/// One comment harvested from the raw text.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 0-based line of the comment's first character.
+    pub line: usize,
+    /// Raw comment text including the `//` / `/*` introducer.
+    pub text: String,
+}
+
+/// Scrub result: blanked text plus the comments that were removed.
+pub struct Scrubbed {
+    pub text: String,
+    pub comments: Vec<Comment>,
+}
+
+pub fn scrub(text: &str) -> Scrubbed {
+    let b = text.as_bytes();
+    let mut out = vec![b' '; b.len()];
+    let mut comments = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out[i] = b'\n';
+            line += 1;
+            i += 1;
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            // Line comment: capture, then blank to end of line.
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+            });
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            // Block comment, nested. Captured as one entry at its
+            // opening line.
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    out[i] = b'\n';
+                    line += 1;
+                }
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: String::from_utf8_lossy(&b[start..i]).into_owned(),
+            });
+        } else if let Some(next) = raw_string_end(b, i) {
+            // r"..." / r#"..."# / br#"..."# — blank the whole literal.
+            for j in i..next {
+                if b[j] == b'\n' {
+                    out[j] = b'\n';
+                    line += 1;
+                }
+            }
+            i = next;
+        } else if c == b'"' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'"') {
+            // Plain (or byte) string with escapes. `b` of a byte string
+            // stays visible (it is code, not literal content).
+            if c == b'b' {
+                out[i] = b'b';
+                i += 1;
+            }
+            i += 1; // opening quote
+            while i < b.len() {
+                if b[i] == b'\n' {
+                    out[i] = b'\n';
+                    line += 1;
+                }
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'\'' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'') {
+            let q = if c == b'b' { i + 1 } else { i };
+            if let Some(end) = char_literal_end(b, q) {
+                i = end; // blank it
+            } else {
+                // Lifetime / loop label: keep and move on.
+                out[i] = c;
+                i += 1;
+                if c == b'b' {
+                    out[i] = b'\'';
+                    i += 1;
+                }
+            }
+        } else {
+            out[i] = c;
+            i += 1;
+        }
+    }
+    Scrubbed { text: String::from_utf8_lossy(&out).into_owned(), comments }
+}
+
+/// If a raw (byte) string literal starts at `i`, return the index one
+/// past its closing delimiter.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if j < b.len() && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None; // raw identifier (`r#type`) or a bare `r`
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// If a char literal starts at quote index `q`, return the index one past
+/// its closing quote; `None` for lifetimes/labels.
+fn char_literal_end(b: &[u8], q: usize) -> Option<usize> {
+    if q + 1 >= b.len() || b[q] != b'\'' {
+        return None;
+    }
+    if b[q + 1] == b'\\' {
+        let mut j = q + 2;
+        while j < b.len() {
+            if b[j] == b'\\' {
+                j += 2;
+            } else if b[j] == b'\'' {
+                return Some(j + 1);
+            } else {
+                j += 1;
+            }
+        }
+        return Some(b.len());
+    }
+    let mut j = q + 1;
+    j += utf8_len(b[j]);
+    if j < b.len() && b[j] == b'\'' {
+        Some(j + 1)
+    } else {
+        None // `'a` lifetime, `'outer:` label
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        x if x < 0x80 => 1,
+        x if x >= 0xF0 => 4,
+        x if x >= 0xE0 => 3,
+        _ => 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// #[cfg(test)] masking (same semantics as repo-lint's): per-line `true`
+// means the line is inside test-gated code and exempt from the rules.
+// ---------------------------------------------------------------------------
+
+pub fn test_mask(scrubbed: &str) -> Vec<bool> {
+    let n = scrubbed.lines().count();
+    if let Some(inner) = scrubbed.find("#![cfg(") {
+        let tail = &scrubbed[inner..];
+        if let Some(close) = tail.find(')') {
+            if tail[..close].contains("test") {
+                return vec![true; n];
+            }
+        }
+    }
+    let mut mask = vec![false; n];
+    let bytes = scrubbed.as_bytes();
+    let mut line_of = vec![0usize; bytes.len() + 1];
+    {
+        let mut line = 0usize;
+        for (i, &c) in bytes.iter().enumerate() {
+            line_of[i] = line;
+            if c == b'\n' {
+                line += 1;
+            }
+        }
+        line_of[bytes.len()] = line;
+    }
+    let mut search = 0usize;
+    while let Some(off) = scrubbed[search..].find("#[cfg(") {
+        let attr_at = search + off;
+        let args_at = attr_at + "#[cfg(".len();
+        let Some(close) = scrubbed[args_at..].find(')') else { break };
+        let is_test = scrubbed[args_at..args_at + close].contains("test");
+        search = args_at + close;
+        if !is_test {
+            continue;
+        }
+        let mut j = search;
+        let mut depth = 0usize;
+        let mut end = bytes.len();
+        while j < bytes.len() {
+            match bytes[j] {
+                b';' if depth == 0 => {
+                    end = j;
+                    break;
+                }
+                b'{' => depth += 1,
+                b'}' => {
+                    if depth <= 1 {
+                        end = j;
+                        break;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let (a, b) = (line_of[attr_at], line_of[end.min(bytes.len())]);
+        for m in mask.iter_mut().take(b + 1).skip(a) {
+            *m = true;
+        }
+        search = end.min(bytes.len());
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Waivers. The analyzer understands two families:
+//   `// repo-analyze: allow(<rule>) — <reason>`  (suppresses its rules)
+//   `// repo-lint: allow(<rule>) — <reason>`     (harvested only for the
+//                                                 stale-waiver pass)
+// A waiver covers its own line and the next line — identical to
+// repo-lint's window, so the two tools never disagree about placement.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Waiver {
+    /// 0-based line of the waiver comment.
+    pub line: usize,
+    /// `"repo-analyze"` or `"repo-lint"`.
+    pub tool: &'static str,
+    pub rule: String,
+}
+
+/// Harvest waivers from the raw text. Malformed waivers (no closing
+/// paren, reason under 8 chars) are reported as errors, not silently
+/// accepted — a waiver without a reason is itself a violation.
+pub fn waivers(raw: &str) -> (Vec<Waiver>, Vec<String>) {
+    let mut ws = Vec::new();
+    let mut errs = Vec::new();
+    for (ln, line) in raw.lines().enumerate() {
+        for tool in ["repo-analyze", "repo-lint"] {
+            let tag = format!("{tool}: allow(");
+            let Some(at) = line.find(&tag) else { continue };
+            let rest = &line[at + tag.len()..];
+            let Some(close) = rest.find(')') else {
+                errs.push(format!("{}: malformed {tool} waiver (missing `)`)", ln + 1));
+                continue;
+            };
+            let rule = rest[..close].trim().to_string();
+            let reason = rest[close + 1..]
+                .trim_start_matches([' ', '\t', '-', '—', ':', '–'])
+                .trim();
+            if reason.len() < 8 {
+                errs.push(format!("{}: {tool} waiver for `{rule}` has no reason", ln + 1));
+                continue;
+            }
+            ws.push(Waiver { line: ln, tool, rule });
+        }
+    }
+    (ws, errs)
+}
+
+/// Is `line` (0-based) covered by a live `repo-analyze` waiver for
+/// `rule`?
+pub fn waived(ws: &[Waiver], line: usize, rule: &str) -> bool {
+    ws.iter().any(|w| {
+        w.tool == "repo-analyze" && w.rule == rule && (w.line == line || w.line + 1 == line)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_preserves_length_and_blanks_literals() {
+        let src = "let s = \"lock_or_recover(x)\"; // lock_or_recover(y)\nlet c = 'a';";
+        let sc = scrub(src);
+        assert_eq!(sc.text.len(), src.len());
+        assert!(!sc.text.contains("lock_or_recover"));
+        assert_eq!(sc.comments.len(), 1);
+        assert!(sc.comments[0].text.contains("lock_or_recover(y)"));
+        assert_eq!(sc.comments[0].line, 0);
+    }
+
+    #[test]
+    fn scrub_keeps_lifetimes_and_nested_block_comments() {
+        let src = "fn f<'a>(x: &'a u32) { /* outer /* inner */ still */ g(x) }";
+        let sc = scrub(src);
+        assert!(sc.text.contains("'a"));
+        assert!(sc.text.contains("g(x)"));
+        assert!(!sc.text.contains("inner"));
+        assert_eq!(sc.comments.len(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings_blank() {
+        let src = r##"let a = r#"unsafe { no }"#; let b = b"unsafe";"##;
+        let sc = scrub(src);
+        assert!(!sc.text.contains("unsafe"));
+        assert_eq!(sc.text.len(), src.len());
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let mask = test_mask(&scrub(src).text);
+        assert!(!mask[0]);
+        assert!(mask[1] && mask[2] && mask[3] && mask[4]);
+        assert!(!mask[5]);
+    }
+
+    #[test]
+    fn waiver_parse_and_window() {
+        let src = "// repo-analyze: allow(lock-order) — shared receiver is the design\nx.lock();\ny.lock();\n// repo-lint: allow(sleep-poll) — remote backoff only\n// repo-analyze: allow(bad) no\n";
+        let (ws, errs) = waivers(src);
+        assert_eq!(ws.len(), 2);
+        assert!(waived(&ws, 0, "lock-order"));
+        assert!(waived(&ws, 1, "lock-order"));
+        assert!(!waived(&ws, 2, "lock-order"));
+        assert_eq!(ws[1].tool, "repo-lint");
+        assert_eq!(errs.len(), 1, "reasonless waiver must be rejected: {errs:?}");
+    }
+}

@@ -1,0 +1,491 @@
+//! repo-analyze — the repository's cross-module invariant analyzer.
+//!
+//! Where `repo-lint` is purely lexical (single-line patterns), this
+//! tool parses `rust/src` with its own small Rust lexer + item parser
+//! and checks invariants that need a call graph and guard scopes
+//! (docs/INVARIANTS.md §10). Five rule families:
+//!
+//! * **lock-order** — derives the global lock-acquisition graph from
+//!   `crate::sync` guard scopes (nested acquisitions plus one level of
+//!   call inlining) and fails on cycles, same-lock re-acquisition, and
+//!   blocking calls (`send`/`recv`/`join`/`sleep`) under a live guard.
+//! * **hot-path-purity** — functions reachable from `Engine::step` must
+//!   not take locks, block, or do I/O; functions on the obs writer path
+//!   (`Ring::push`, `Histo::record`, `Recorder::event`/`record`,
+//!   `ObsHandle::event`/`hist`) additionally must not allocate — the
+//!   documented "writers never block or allocate" contract (§9).
+//! * **unsafe-audit** — every `unsafe` needs an adjacent `// SAFETY:`
+//!   comment and a matching entry in docs/UNSAFE_INVENTORY.md, which
+//!   this tool generates (`--write-unsafe-inventory`) and diffs.
+//! * **registry-coverage** — every stats key rendered by
+//!   `render_stats` must be merged in `gateway::merge_stats` (or be a
+//!   documented per-worker exemption), documented in docs/PROTOCOL.md,
+//!   and named in a test; every `EventKind` / `HistKind` must be
+//!   emitted somewhere outside its defining module, documented, and
+//!   named in a test. Generalizes repo-lint's op-coverage rule.
+//! * **stale-waiver** — a `repo-lint`/`repo-analyze` waiver that no
+//!   longer suppresses anything fails the build instead of rotting.
+//!
+//! Waivers: `// repo-analyze: allow(<rule>) — <reason>` on the line of
+//! the finding or the line above, reason mandatory — the same shape and
+//! window as repo-lint's.
+//!
+//! Usage: `repo-analyze [repo-root] [--write-unsafe-inventory]`. Exits
+//! 0 when clean, 1 with one line per finding otherwise.
+
+mod lexer;
+mod parser;
+mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use rules::{Finding, Profile, RegistryCtx, Tree, UsedWaivers};
+
+fn main() -> ExitCode {
+    let mut write_inventory = false;
+    let mut root_arg: Option<PathBuf> = None;
+    for a in std::env::args().skip(1) {
+        if a == "--write-unsafe-inventory" {
+            write_inventory = true;
+        } else {
+            root_arg = Some(PathBuf::from(a));
+        }
+    }
+    let root = match root_arg.or_else(find_root) {
+        Some(r) => r,
+        None => {
+            eprintln!("repo-analyze: could not locate the repo root (no rust/src upward of cwd)");
+            return ExitCode::from(2);
+        }
+    };
+    let (tree, loader_findings) = load_tree(&root);
+    let scanned = tree.files.len();
+    let protocol = fs::read_to_string(root.join("docs/PROTOCOL.md")).unwrap_or_default();
+    let tests_blob = tests_blob(&root, &tree);
+    let inventory = fs::read_to_string(root.join("docs/UNSAFE_INVENTORY.md")).ok();
+
+    let mut used = UsedWaivers::new();
+    let mut findings = loader_findings;
+    findings.extend(rules::lock_order(&tree, LOCK_EXCLUDE, &mut used));
+    findings.extend(rules::purity(&tree, &profiles(), &mut used));
+    let (uf, generated) = rules::unsafe_audit(&tree, inventory.as_deref(), &mut used);
+    if write_inventory {
+        if let Err(e) = fs::write(root.join("docs/UNSAFE_INVENTORY.md"), &generated) {
+            eprintln!("repo-analyze: cannot write docs/UNSAFE_INVENTORY.md: {e}");
+            return ExitCode::from(2);
+        }
+        println!("repo-analyze: wrote docs/UNSAFE_INVENTORY.md");
+        return ExitCode::SUCCESS;
+    }
+    findings.extend(uf);
+    let ctx = RegistryCtx {
+        protocol: &protocol,
+        tests_blob: &tests_blob,
+        merge_exempt: MERGE_EXEMPT,
+        require_surfaces: true,
+    };
+    findings.extend(rules::registry(&tree, &ctx, &mut used));
+    findings.extend(rules::stale_waivers(&tree, &used));
+
+    if findings.is_empty() {
+        println!("repo-analyze: clean ({scanned} files, {} fns)", tree.fns.len());
+        ExitCode::SUCCESS
+    } else {
+        let mut lines: Vec<String> = findings.iter().map(Finding::render).collect();
+        lines.sort();
+        for l in &lines {
+            eprintln!("{l}");
+        }
+        eprintln!("repo-analyze: {} finding(s)", lines.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// The loom-swappable sync shim itself (and its loom models) is where
+/// locks are *implemented*; acquisition rules start one layer up.
+const LOCK_EXCLUDE: &[&str] = &["rust/src/sync/"];
+
+/// Stats keys deliberately NOT merged by `gateway::merge_stats`: worker
+/// identity and the per-worker `adaptive` gauge block (averaging ladder
+/// choices across workers would be meaningless). Mirrored in
+/// docs/INVARIANTS.md §10 — change both together.
+const MERGE_EXEMPT: &[&str] =
+    &["worker", "adaptive", "step_token_budget", "ladder", "tree_nodes", "throttled"];
+
+fn profiles() -> Vec<Profile> {
+    vec![
+        Profile {
+            name: "engine-step",
+            roots: vec![("engine", Some("Engine"), "step")],
+            forbid_alloc: false,
+        },
+        Profile {
+            name: "obs-writer",
+            roots: vec![
+                ("obs", Some("Ring"), "push"),
+                ("obs", Some("Histo"), "record"),
+                ("obs", Some("Recorder"), "event"),
+                ("obs", Some("Recorder"), "record"),
+                ("obs", Some("ObsHandle"), "event"),
+                ("obs", Some("ObsHandle"), "hist"),
+            ],
+            forbid_alloc: true,
+        },
+    ]
+}
+
+fn find_root() -> Option<PathBuf> {
+    let mut d = std::env::current_dir().ok()?;
+    loop {
+        if d.join("rust/src").is_dir() {
+            return Some(d);
+        }
+        if !d.pop() {
+            return None;
+        }
+    }
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+fn rs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            out.extend(rs_files(&p));
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+fn load_tree(root: &Path) -> (Tree, Vec<Finding>) {
+    let mut entries = Vec::new();
+    let mut findings = Vec::new();
+    for p in rs_files(&root.join("rust/src")) {
+        let rel = rel_path(root, &p);
+        match fs::read_to_string(&p) {
+            Ok(raw) => entries.push((rel, raw)),
+            Err(e) => findings.push(Finding {
+                file: rel,
+                line: 0,
+                rule: "stale-waiver",
+                msg: format!("unreadable: {e}"),
+            }),
+        }
+    }
+    let tree = Tree::from_entries(entries);
+    // Malformed `repo-analyze:` waivers are findings (repo-lint already
+    // owns reporting its own tag's syntax errors).
+    for f in &tree.files {
+        let (_, errs) = lexer::waivers(&f.raw);
+        for e in errs.iter().filter(|e| e.contains("repo-analyze")) {
+            findings.push(Finding {
+                file: f.rel.clone(),
+                line: 0,
+                rule: "stale-waiver",
+                msg: format!("malformed waiver — {e}"),
+            });
+        }
+    }
+    (tree, findings)
+}
+
+/// Test evidence: `rust/tests/**` plus the `#[cfg(test)]` spans of every
+/// src file (same policy as repo-lint's op-coverage rule).
+fn tests_blob(root: &Path, tree: &Tree) -> String {
+    let mut blob = String::new();
+    for p in rs_files(&root.join("rust/tests")) {
+        blob.push_str(&fs::read_to_string(&p).unwrap_or_default());
+        blob.push('\n');
+    }
+    for f in &tree.files {
+        for (ln, line) in f.raw.lines().enumerate() {
+            if f.mask.get(ln).copied().unwrap_or(false) {
+                blob.push_str(line);
+                blob.push('\n');
+            }
+        }
+    }
+    blob
+}
+
+// ---------------------------------------------------------------------------
+// Fixture corpus self-tests: every rule must fire on its seeded
+// violation and stay quiet on the clean twin.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod fixture_tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        fs::read_to_string(&p).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+    }
+
+    /// Build a tree from fixture files mounted at src-like paths so
+    /// module derivation behaves as it does on the real tree.
+    fn tree(mounts: &[(&str, &str)]) -> Tree {
+        Tree::from_entries(
+            mounts.iter().map(|(rel, fx)| (rel.to_string(), fixture(fx))).collect(),
+        )
+    }
+
+    fn renders(f: &[Finding]) -> Vec<String> {
+        f.iter().map(Finding::render).collect()
+    }
+
+    #[test]
+    fn lock_order_cycle_fires() {
+        let t = tree(&[("rust/src/gateway/mod.rs", "lock_order_cycle.rs")]);
+        let mut used = UsedWaivers::new();
+        let f = rules::lock_order(&t, LOCK_EXCLUDE, &mut used);
+        assert!(
+            f.iter().any(|f| f.rule == "lock-order" && f.msg.contains("cycle")),
+            "expected a cycle finding: {:?}",
+            renders(&f)
+        );
+    }
+
+    #[test]
+    fn lock_order_cycle_via_call_inlining_fires() {
+        let t = tree(&[("rust/src/gateway/mod.rs", "lock_order_inline.rs")]);
+        let mut used = UsedWaivers::new();
+        let f = rules::lock_order(&t, LOCK_EXCLUDE, &mut used);
+        assert!(
+            f.iter().any(|f| f.msg.contains("cycle")),
+            "one level of inlining must contribute edges: {:?}",
+            renders(&f)
+        );
+    }
+
+    #[test]
+    fn lock_order_clean_stays_quiet() {
+        let t = tree(&[("rust/src/gateway/mod.rs", "lock_order_clean.rs")]);
+        let mut used = UsedWaivers::new();
+        let f = rules::lock_order(&t, LOCK_EXCLUDE, &mut used);
+        assert!(f.is_empty(), "consistent order must pass: {:?}", renders(&f));
+    }
+
+    #[test]
+    fn guard_blocking_fires_and_narrowed_twin_passes() {
+        let t = tree(&[("rust/src/gateway/worker.rs", "guard_blocking.rs")]);
+        let mut used = UsedWaivers::new();
+        let f = rules::lock_order(&t, LOCK_EXCLUDE, &mut used);
+        assert_eq!(f.len(), 1, "exactly the un-narrowed send: {:?}", renders(&f));
+        assert!(f[0].msg.contains("send") && f[0].msg.contains("pending"));
+    }
+
+    #[test]
+    fn guard_blocking_waiver_suppresses_and_counts_as_used() {
+        let t = tree(&[("rust/src/util/threadpool.rs", "guard_blocking_waived.rs")]);
+        let mut used = UsedWaivers::new();
+        let f = rules::lock_order(&t, LOCK_EXCLUDE, &mut used);
+        assert!(f.is_empty(), "waived recv-under-lock must pass: {:?}", renders(&f));
+        assert_eq!(used.len(), 1, "the waiver must be recorded as used");
+        assert!(rules::stale_waivers(&t, &used).is_empty());
+    }
+
+    #[test]
+    fn purity_hot_path_fires_all_three_categories() {
+        let t = tree(&[("rust/src/engine/mod.rs", "purity_hot.rs")]);
+        let mut used = UsedWaivers::new();
+        let prof = vec![Profile {
+            name: "engine-step",
+            roots: vec![("engine", Some("Engine"), "step")],
+            forbid_alloc: false,
+        }];
+        let f = rules::purity(&t, &prof, &mut used);
+        let msgs = renders(&f).join("\n");
+        assert!(msgs.contains("takes lock"), "lock: {msgs}");
+        assert!(msgs.contains("blocking call"), "blocking: {msgs}");
+        assert!(msgs.contains("I/O"), "io: {msgs}");
+        assert!(msgs.contains("Engine::step → "), "findings carry the call chain: {msgs}");
+    }
+
+    #[test]
+    fn purity_waivers_suppress_and_are_used() {
+        let t = tree(&[("rust/src/engine/mod.rs", "purity_hot_waived.rs")]);
+        let mut used = UsedWaivers::new();
+        let prof = vec![Profile {
+            name: "engine-step",
+            roots: vec![("engine", Some("Engine"), "step")],
+            forbid_alloc: false,
+        }];
+        let f = rules::purity(&t, &prof, &mut used);
+        assert!(f.is_empty(), "waived purity violations must pass: {:?}", renders(&f));
+        assert_eq!(used.len(), 3);
+        assert!(rules::stale_waivers(&t, &used).is_empty());
+    }
+
+    #[test]
+    fn purity_writer_path_forbids_allocation() {
+        let t = tree(&[("rust/src/obs/mod.rs", "purity_writer.rs")]);
+        let mut used = UsedWaivers::new();
+        let prof = vec![Profile {
+            name: "obs-writer",
+            roots: vec![("obs", Some("Ring"), "push")],
+            forbid_alloc: true,
+        }];
+        let f = rules::purity(&t, &prof, &mut used);
+        assert_eq!(f.len(), 1, "{:?}", renders(&f));
+        assert!(f[0].msg.contains("allocation"));
+    }
+
+    #[test]
+    fn purity_clean_stays_quiet() {
+        let t = tree(&[("rust/src/engine/mod.rs", "purity_clean.rs")]);
+        let mut used = UsedWaivers::new();
+        let prof = vec![Profile {
+            name: "engine-step",
+            roots: vec![("engine", Some("Engine"), "step")],
+            forbid_alloc: false,
+        }];
+        let f = rules::purity(&t, &prof, &mut used);
+        assert!(f.is_empty(), "{:?}", renders(&f));
+    }
+
+    #[test]
+    fn missing_purity_root_is_a_finding() {
+        let t = tree(&[("rust/src/engine/mod.rs", "purity_clean.rs")]);
+        let mut used = UsedWaivers::new();
+        let prof = vec![Profile {
+            name: "engine-step",
+            roots: vec![("engine", Some("Engine"), "step_gone")],
+            forbid_alloc: false,
+        }];
+        let f = rules::purity(&t, &prof, &mut used);
+        assert!(f.iter().any(|f| f.msg.contains("not found")), "{:?}", renders(&f));
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_fires() {
+        let t = tree(&[("rust/src/util/mod.rs", "unsafe_missing.rs")]);
+        let mut used = UsedWaivers::new();
+        let (f, _) = rules::unsafe_audit(&t, None, &mut used);
+        assert!(
+            f.iter().any(|f| f.msg.contains("SAFETY")),
+            "missing SAFETY must fire: {:?}",
+            renders(&f)
+        );
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_and_matching_inventory_passes() {
+        let t = tree(&[("rust/src/util/mod.rs", "unsafe_ok.rs")]);
+        let mut used = UsedWaivers::new();
+        let (_, generated) = rules::unsafe_audit(&t, None, &mut used);
+        assert!(generated.contains("rust/src/util/mod.rs"), "entry generated:\n{generated}");
+        let (f, _) = rules::unsafe_audit(&t, Some(&generated), &mut used);
+        assert!(f.is_empty(), "matching inventory must pass: {:?}", renders(&f));
+    }
+
+    #[test]
+    fn inventory_diff_fires_both_directions() {
+        let t = tree(&[("rust/src/util/mod.rs", "unsafe_ok.rs")]);
+        let mut used = UsedWaivers::new();
+        // Inventory missing the entry → "not in the inventory".
+        let empty = "# Unsafe inventory\n\nNo `unsafe` code\n";
+        let (f, _) = rules::unsafe_audit(&t, Some(empty), &mut used);
+        assert!(f.iter().any(|f| f.msg.contains("not in the inventory")), "{:?}", renders(&f));
+        // Inventory with an extra entry → "stale inventory entry".
+        let stale = "# Unsafe inventory\n\n- `rust/src/gone.rs` · `old` — moved away\n";
+        let (f, _) = rules::unsafe_audit(&t, Some(stale), &mut used);
+        assert!(f.iter().any(|f| f.msg.contains("stale inventory entry")), "{:?}", renders(&f));
+    }
+
+    #[test]
+    fn stale_waivers_fire_for_both_tools() {
+        let t = tree(&[("rust/src/gateway/mod.rs", "stale_waivers.rs")]);
+        let used = UsedWaivers::new();
+        let f = rules::stale_waivers(&t, &used);
+        let msgs = renders(&f).join("\n");
+        assert!(msgs.contains("repo-analyze waiver"), "{msgs}");
+        assert!(msgs.contains("repo-lint waiver"), "{msgs}");
+        assert_eq!(f.len(), 2, "{msgs}");
+    }
+
+    #[test]
+    fn unknown_waiver_rule_is_a_finding() {
+        let src = "// repo-analyze: allow(no-such-rule) — typo in the rule name\nfn f() {}\n";
+        let t = Tree::from_entries(vec![("rust/src/x.rs".into(), src.into())]);
+        let f = rules::stale_waivers(&t, &UsedWaivers::new());
+        assert!(f.iter().any(|f| f.msg.contains("unknown rule")), "{:?}", renders(&f));
+    }
+
+    // --- registry fixtures (mini-trees with docs + tests) ---------------
+
+    fn registry_tree(which: &str) -> (Tree, String, String) {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(which);
+        let mut entries = Vec::new();
+        for p in rs_files(&root.join("rust/src")) {
+            entries.push((rel_path(&root, &p), fs::read_to_string(&p).unwrap()));
+        }
+        let tree = Tree::from_entries(entries);
+        let protocol = fs::read_to_string(root.join("docs/PROTOCOL.md")).unwrap_or_default();
+        let blob = tests_blob(&root, &tree);
+        (tree, protocol, blob)
+    }
+
+    #[test]
+    fn registry_bad_fires_per_surface() {
+        let (t, protocol, blob) = registry_tree("registry_bad");
+        let ctx = RegistryCtx {
+            protocol: &protocol,
+            tests_blob: &blob,
+            merge_exempt: &["worker"],
+            require_surfaces: true,
+        };
+        let f = rules::registry(&t, &ctx, &mut UsedWaivers::new());
+        let msgs = renders(&f).join("\n");
+        assert!(msgs.contains("\"zeta\" is rendered but neither merged"), "{msgs}");
+        assert!(msgs.contains("\"zeta\" is not documented"), "{msgs}");
+        assert!(msgs.contains("\"zeta\" is not named in any test"), "{msgs}");
+        assert!(msgs.contains("EventKind::Ghost is never emitted"), "{msgs}");
+        assert!(msgs.contains("\"ghost\" is not documented"), "{msgs}");
+        assert!(msgs.contains("\"ghost\" (EventKind::Ghost) is not named"), "{msgs}");
+        assert_eq!(f.len(), 6, "{msgs}");
+    }
+
+    #[test]
+    fn registry_good_stays_quiet() {
+        let (t, protocol, blob) = registry_tree("registry_good");
+        let ctx = RegistryCtx {
+            protocol: &protocol,
+            tests_blob: &blob,
+            merge_exempt: &["worker"],
+            require_surfaces: true,
+        };
+        let f = rules::registry(&t, &ctx, &mut UsedWaivers::new());
+        assert!(f.is_empty(), "{:?}", renders(&f));
+    }
+
+    #[test]
+    fn registry_missing_surfaces_fire_when_required() {
+        let t = Tree::from_entries(vec![(
+            "rust/src/lib.rs".into(),
+            "pub fn nothing_here() {}\n".into(),
+        )]);
+        let ctx = RegistryCtx {
+            protocol: "",
+            tests_blob: "",
+            merge_exempt: &[],
+            require_surfaces: true,
+        };
+        let f = rules::registry(&t, &ctx, &mut UsedWaivers::new());
+        assert!(f.iter().any(|f| f.msg.contains("render_stats")), "{:?}", renders(&f));
+        assert!(f.iter().any(|f| f.msg.contains("EventKind")), "{:?}", renders(&f));
+    }
+}

@@ -1,0 +1,759 @@
+//! Item parser and scope models built on the scrubbed text.
+//!
+//! Not a full Rust grammar: the analyzer needs exactly four things —
+//! (1) where functions are (name, impl type, module, body span),
+//! (2) what they call (method / path / plain call sites),
+//! (3) where locks are acquired and how far each guard lives,
+//! (4) where `unsafe` appears.
+//! All four are computable from the scrubbed byte stream with brace
+//! matching; anything fancier (macros that expand to locks, trait
+//! dispatch) is out of scope and documented as such in
+//! docs/INVARIANTS.md §10.
+
+use crate::lexer::{self, Comment, Waiver};
+
+/// One parsed source file plus every derived view the passes need.
+pub struct SrcFile {
+    /// Repo-relative path with forward slashes (`rust/src/obs/mod.rs`).
+    pub rel: String,
+    pub raw: String,
+    pub scrubbed: String,
+    pub comments: Vec<Comment>,
+    /// Per-line `true` = test-gated.
+    pub mask: Vec<bool>,
+    pub waivers: Vec<Waiver>,
+    /// `gateway::worker` for `rust/src/gateway/worker.rs`; `""` for lib.rs.
+    pub module: String,
+}
+
+impl SrcFile {
+    pub fn parse(rel: &str, raw: String) -> SrcFile {
+        let sc = lexer::scrub(&raw);
+        let mask = lexer::test_mask(&sc.text);
+        let (waivers, _) = lexer::waivers(&raw);
+        SrcFile {
+            rel: rel.to_string(),
+            module: module_of(rel),
+            raw,
+            scrubbed: sc.text,
+            comments: sc.comments,
+            mask,
+            waivers,
+        }
+    }
+
+    /// 0-based line of byte offset `pos`.
+    pub fn line_of(&self, pos: usize) -> usize {
+        self.scrubbed.as_bytes()[..pos.min(self.scrubbed.len())]
+            .iter()
+            .filter(|&&c| c == b'\n')
+            .count()
+    }
+
+    pub fn in_test(&self, pos: usize) -> bool {
+        self.mask.get(self.line_of(pos)).copied().unwrap_or(false)
+    }
+}
+
+/// Module path derived from the file path: the analyzer only scans one
+/// crate, so the file system *is* the module tree.
+pub fn module_of(rel: &str) -> String {
+    let p = rel.strip_prefix("rust/src/").unwrap_or(rel);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let p = p.strip_suffix("/mod").unwrap_or(p);
+    if p == "lib" || p == "main" {
+        return String::new();
+    }
+    p.replace('/', "::")
+}
+
+/// One function item.
+#[derive(Debug)]
+pub struct FnItem {
+    /// Index into the tree's file list.
+    pub file: usize,
+    pub name: String,
+    pub impl_ty: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub line: usize,
+    /// Byte span of the body `{ .. }` in the scrubbed text, inclusive
+    /// of both braces.
+    pub body: (usize, usize),
+    pub is_test: bool,
+}
+
+impl FnItem {
+    /// `gateway::worker::render_stats` / `engine::Engine::step`.
+    pub fn display(&self, files: &[SrcFile]) -> String {
+        let m = &files[self.file].module;
+        let mut s = String::new();
+        if !m.is_empty() {
+            s.push_str(m);
+            s.push_str("::");
+        }
+        if let Some(t) = &self.impl_ty {
+            s.push_str(t);
+            s.push_str("::");
+        }
+        s.push_str(&self.name);
+        s
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "fn", "let", "else", "in", "move", "ref",
+    "mut", "as", "use", "pub", "impl", "struct", "enum", "trait", "where", "unsafe", "break",
+    "continue", "crate", "super", "self", "Self", "dyn", "box", "async", "await", "static",
+    "const", "type", "extern", "mod",
+];
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Word token starting at `i`, if any.
+fn word_at(b: &[u8], i: usize) -> Option<&str> {
+    if i >= b.len() || !(b[i].is_ascii_alphabetic() || b[i] == b'_') {
+        return None;
+    }
+    if i > 0 && is_ident_byte(b[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    while j < b.len() && is_ident_byte(b[j]) {
+        j += 1;
+    }
+    std::str::from_utf8(&b[i..j]).ok()
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && (b[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Position of the `}` matching the `{` at `open`.
+pub fn match_brace(b: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len().saturating_sub(1)
+}
+
+/// Parse every `fn` item in `file` (index `fidx`), attributing each to
+/// the innermost enclosing `impl` block's type.
+pub fn parse_fns(file: &SrcFile, fidx: usize) -> Vec<FnItem> {
+    let b = file.scrubbed.as_bytes();
+    // Pass 1: impl regions (start, end, type name).
+    let mut impls: Vec<(usize, usize, String)> = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if let Some(w) = word_at(b, i) {
+            if w == "impl" {
+                if let Some((open, ty)) = impl_header(b, i + 4) {
+                    let close = match_brace(b, open);
+                    impls.push((open, close, ty));
+                    i += 4;
+                    continue;
+                }
+            }
+            i += w.len();
+        } else {
+            i += 1;
+        }
+    }
+    // Pass 2: fn items.
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let Some(w) = word_at(b, i) else {
+            i += 1;
+            continue;
+        };
+        if w != "fn" {
+            i += w.len();
+            continue;
+        }
+        let at = i;
+        i += 2;
+        let j = skip_ws(b, i);
+        let Some(name) = word_at(b, j) else { continue }; // `fn(` pointer type
+        // Find the body `{` (or a `;` — trait method declaration, skip)
+        // at zero paren/bracket depth.
+        let mut k = j + name.len();
+        let mut pd = 0i32;
+        let mut body = None;
+        while k < b.len() {
+            match b[k] {
+                b'(' | b'[' => pd += 1,
+                b')' | b']' => pd -= 1,
+                b';' if pd == 0 => break,
+                b'{' if pd == 0 => {
+                    body = Some((k, match_brace(b, k)));
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(body) = body else { continue };
+        let impl_ty = impls
+            .iter()
+            .filter(|(s, e, _)| *s < at && at < *e)
+            .max_by_key(|(s, _, _)| *s)
+            .map(|(_, _, t)| t.clone());
+        let line = file.line_of(at);
+        out.push(FnItem {
+            file: fidx,
+            name: name.to_string(),
+            impl_ty,
+            line,
+            body,
+            is_test: file.mask.get(line).copied().unwrap_or(false),
+        });
+        i = body.0 + 1; // nested fns inside the body are still found
+    }
+    out
+}
+
+/// Parse an impl header starting just past the `impl` keyword: returns
+/// the opening-brace position and the implemented type's last path
+/// segment (`impl Trait for Type` → `Type`).
+fn impl_header(b: &[u8], mut i: usize) -> Option<(usize, String)> {
+    // Skip generic params `<..>` (balanced).
+    i = skip_ws(b, i);
+    if i < b.len() && b[i] == b'<' {
+        let mut d = 0i32;
+        while i < b.len() {
+            match b[i] {
+                b'<' => d += 1,
+                b'>' => {
+                    d -= 1;
+                    if d == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    let mut last_seg: Option<String> = None;
+    let mut angle = 0i32;
+    while i < b.len() {
+        match b[i] {
+            b'{' if angle == 0 => {
+                return last_seg.map(|t| (i, t));
+            }
+            b';' => return None, // `impl Trait for Type;` — not a block
+            b'<' => {
+                angle += 1;
+                i += 1;
+            }
+            b'>' => {
+                angle -= 1;
+                i += 1;
+            }
+            _ => {
+                if let Some(w) = word_at(b, i) {
+                    let n = w.len();
+                    match w {
+                        // The type after `for` is the implemented type.
+                        "for" => last_seg = None,
+                        // Stop collecting once the where clause starts.
+                        "where" => {
+                            // Scan directly to the `{`.
+                            while i < b.len() && b[i] != b'{' {
+                                i += 1;
+                            }
+                            continue;
+                        }
+                        "dyn" | "mut" | "const" => {}
+                        _ if angle == 0 => last_seg = Some(w.to_string()),
+                        _ => {}
+                    }
+                    i += n;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Call sites.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Callee {
+    /// `recv.method(..)` — `on_self` when the receiver is literally `self`.
+    Method { name: String, on_self: bool },
+    /// `a::b::f(..)` — segments, last one is the function name.
+    Path { segs: Vec<String> },
+    /// `f(..)`.
+    Plain { name: String },
+}
+
+#[derive(Debug)]
+pub struct CallSite {
+    pub pos: usize,
+    pub callee: Callee,
+}
+
+/// Every call site in `span` of the scrubbed text.
+pub fn calls_in(scrubbed: &str, span: (usize, usize)) -> Vec<CallSite> {
+    let b = scrubbed.as_bytes();
+    let mut out = Vec::new();
+    let mut i = span.0;
+    while i < span.1.min(b.len()) {
+        let Some(w) = word_at(b, i) else {
+            i += 1;
+            continue;
+        };
+        let start = i;
+        i += w.len();
+        if KEYWORDS.contains(&w) || w.starts_with(|c: char| c.is_ascii_uppercase()) {
+            continue;
+        }
+        // A call is `ident(` or `ident::<..>(`; `ident!(` is a macro
+        // (covered by the pattern scans, not the call graph).
+        let mut k = i;
+        if b.get(k) == Some(&b':') && b.get(k + 1) == Some(&b':') && b.get(k + 2) == Some(&b'<') {
+            let mut d = 0i32;
+            k += 2;
+            while k < b.len() {
+                match b[k] {
+                    b'<' => d += 1,
+                    b'>' => {
+                        d -= 1;
+                        if d == 0 {
+                            k += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+        if b.get(k) != Some(&b'(') {
+            continue;
+        }
+        // Classify by what precedes the identifier.
+        let callee = if start > 0 && b[start - 1] == b'.' {
+            let mut r = start - 1;
+            while r > 0 && is_ident_byte(b[r - 1]) {
+                r -= 1;
+            }
+            let recv = std::str::from_utf8(&b[r..start - 1]).unwrap_or("");
+            Callee::Method { name: w.to_string(), on_self: recv == "self" }
+        } else if start > 1 && b[start - 1] == b':' && b[start - 2] == b':' {
+            let mut segs = vec![w.to_string()];
+            let mut p = start - 2;
+            loop {
+                let mut r = p;
+                while r > 0 && is_ident_byte(b[r - 1]) {
+                    r -= 1;
+                }
+                if r == p {
+                    break;
+                }
+                segs.insert(0, String::from_utf8_lossy(&b[r..p]).into_owned());
+                if r > 1 && b[r - 1] == b':' && b[r - 2] == b':' {
+                    p = r - 2;
+                } else {
+                    break;
+                }
+            }
+            Callee::Path { segs }
+        } else {
+            Callee::Plain { name: w.to_string() }
+        };
+        out.push(CallSite { pos: start, callee });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lock acquisition sites and guard scopes.
+// ---------------------------------------------------------------------------
+
+/// How the guard produced at a site is held.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GuardKind {
+    /// `let g = lock(..);` — lives to the end of the enclosing block.
+    LetBound,
+    /// Scrutinee of `if let` / `while let` / `match` — lives through the
+    /// arm body (Rust 2021 temporary-scope rules: the classic footgun).
+    CondScrutinee,
+    /// Plain temporary — dropped at the end of its statement.
+    Temp,
+}
+
+#[derive(Debug)]
+pub struct LockSite {
+    pub pos: usize,
+    /// Identity of the lock: the last identifier of the receiver/arg
+    /// (`&self.router` → `router`). Name-based, documented in §10.
+    pub lock: String,
+    pub kind: GuardKind,
+    /// Byte offset one past which the guard is no longer held.
+    pub scope_end: usize,
+}
+
+/// Methods that adapt a `LockResult` without releasing the guard — a
+/// `let` binding chained through these still binds the guard itself.
+const GUARD_ADAPTERS: &[&str] = &["unwrap", "expect", "unwrap_or_else"];
+
+/// Every lock acquisition in `span`. `rwlocks` holds the names of
+/// fields/locals declared as `RwLock` anywhere in the crate, so that
+/// `.read()` / `.write()` — wildly overloaded names — only count on
+/// actual RwLock receivers.
+pub fn locks_in(scrubbed: &str, span: (usize, usize), rwlocks: &[String]) -> Vec<LockSite> {
+    let b = scrubbed.as_bytes();
+    let text = &scrubbed[..span.1.min(scrubbed.len())];
+    let mut out = Vec::new();
+    // `lock_or_recover(<arg>)` — the crate's canonical acquisition.
+    let mut search = span.0;
+    while let Some(off) = text[search..].find("lock_or_recover(") {
+        let at = search + off;
+        search = at + "lock_or_recover(".len();
+        if at > 0 && is_ident_byte(b[at - 1]) {
+            continue; // suffix of a longer identifier
+        }
+        let open = at + "lock_or_recover".len();
+        let close = match_paren(b, open);
+        let arg = &scrubbed[open + 1..close.min(scrubbed.len())];
+        let lock = last_ident(arg).unwrap_or_else(|| "<expr>".into());
+        let (kind, scope_end) = guard_scope(b, span, at, close);
+        out.push(LockSite { pos: at, lock, kind, scope_end });
+    }
+    // `recv.lock()` and RwLock `recv.read()` / `recv.write()`.
+    for (pat, gated) in [(".lock(", false), (".read(", true), (".write(", true)] {
+        let mut search = span.0;
+        while let Some(off) = text[search..].find(pat) {
+            let at = search + off;
+            search = at + pat.len();
+            let mut r = at;
+            while r > 0 && is_ident_byte(b[r - 1]) {
+                r -= 1;
+            }
+            if r == at {
+                continue; // no identifier receiver (e.g. `).lock()`): skip
+            }
+            let recv = scrubbed[r..at].to_string();
+            if gated && !rwlocks.contains(&recv) {
+                continue;
+            }
+            let close = match_paren(b, at + pat.len() - 1);
+            let (kind, scope_end) = guard_scope(b, span, r, close);
+            out.push(LockSite { pos: r, lock: recv, kind, scope_end });
+        }
+    }
+    out.sort_by_key(|s| s.pos);
+    out
+}
+
+fn match_paren(b: &[u8], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    b.len().saturating_sub(1)
+}
+
+fn last_ident(s: &str) -> Option<String> {
+    let b = s.as_bytes();
+    let mut end = b.len();
+    while end > 0 {
+        if is_ident_byte(b[end - 1]) {
+            let mut r = end;
+            while r > 0 && is_ident_byte(b[r - 1]) {
+                r -= 1;
+            }
+            let w = &s[r..end];
+            if w.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                end = r;
+                continue;
+            }
+            return Some(w.to_string());
+        }
+        end -= 1;
+    }
+    None
+}
+
+/// Classify how the guard at `[acq_start, acq_close]` is held and where
+/// its scope ends (byte offset, exclusive), per the three statement
+/// shapes documented in INVARIANTS §10.
+fn guard_scope(b: &[u8], body: (usize, usize), acq_start: usize, acq_close: usize) -> (GuardKind, usize) {
+    let stmt = stmt_start(b, body.0, acq_start);
+    // Head words of the statement.
+    let mut k = skip_ws(b, stmt);
+    let w1 = word_at(b, k).unwrap_or("");
+    k += w1.len();
+    k = skip_ws(b, k);
+    let w2 = word_at(b, k).unwrap_or("");
+    if (w1 == "if" || w1 == "while") && w2 == "let" || w1 == "match" {
+        // Guard lives through the arm body: find the `{` after the
+        // scrutinee (paren depth 0), then its matching `}`.
+        let mut j = acq_close + 1;
+        let mut pd = 0i32;
+        while j < b.len() {
+            match b[j] {
+                b'(' | b'[' => pd += 1,
+                b')' | b']' => pd -= 1,
+                b'{' if pd == 0 => return (GuardKind::CondScrutinee, match_brace(b, j) + 1),
+                b';' if pd == 0 => break, // e.g. `let x = match ..;` fallthrough
+                _ => {}
+            }
+            j += 1;
+        }
+        return (GuardKind::CondScrutinee, j.min(body.1));
+    }
+    if w1 == "let" {
+        // `let g = lock(..);` (possibly chained through unwrap/expect)
+        // binds the guard → scope = rest of the enclosing block. A chain
+        // into any *other* method (`.get(..)`, `.clone()`) binds the
+        // derived value instead; the guard is then a statement temporary.
+        let mut j = skip_ws(b, acq_close + 1);
+        loop {
+            if b.get(j) == Some(&b'?') {
+                j = skip_ws(b, j + 1);
+                continue;
+            }
+            if b.get(j) == Some(&b'.') {
+                let m = skip_ws(b, j + 1);
+                if let Some(w) = word_at(b, m) {
+                    if GUARD_ADAPTERS.contains(&w) {
+                        let p = skip_ws(b, m + w.len());
+                        if b.get(p) == Some(&b'(') {
+                            j = skip_ws(b, match_paren(b, p) + 1);
+                            continue;
+                        }
+                    }
+                }
+                // Chained into something else: temporary.
+                return (GuardKind::Temp, stmt_end(b, body, acq_close));
+            }
+            break;
+        }
+        if b.get(j) == Some(&b';') {
+            return (GuardKind::LetBound, block_end(b, body, acq_start));
+        }
+        return (GuardKind::Temp, stmt_end(b, body, acq_close));
+    }
+    (GuardKind::Temp, stmt_end(b, body, acq_close))
+}
+
+/// Scan backwards from `pos` to the start of the statement: the first
+/// `;`, `{` or `}` at zero reverse bracket depth, within the body.
+fn stmt_start(b: &[u8], body_open: usize, pos: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = pos;
+    while i > body_open {
+        match b[i - 1] {
+            b')' | b']' => depth += 1,
+            b'(' | b'[' => {
+                if depth == 0 {
+                    return i; // opened-paren context (e.g. a call arg)
+                }
+                depth -= 1;
+            }
+            b'}' => depth += 1,
+            b'{' => {
+                if depth == 0 {
+                    return i;
+                }
+                depth -= 1;
+            }
+            b';' if depth == 0 => return i,
+            _ => {}
+        }
+        i -= 1;
+    }
+    body_open + 1
+}
+
+/// Forward to the end of the current statement: the first `;` at (or
+/// below) zero depth, or the `}` that closes the enclosing block. The
+/// scan may start on the acquisition's own `)` (depth dips negative);
+/// `<= 0` keeps that case honest.
+fn stmt_end(b: &[u8], body: (usize, usize), from: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = from;
+    while i < body.1.min(b.len()) {
+        match b[i] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' => depth -= 1,
+            b'}' => {
+                if depth <= 0 {
+                    return i;
+                }
+                depth -= 1;
+            }
+            b';' if depth <= 0 => return i + 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    body.1
+}
+
+/// Forward to the `}` closing the block that contains `from`.
+fn block_end(b: &[u8], body: (usize, usize), from: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = from;
+    while i < body.1.min(b.len()) {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                if depth == 0 {
+                    return i + 1;
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    body.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(src: &str) -> SrcFile {
+        SrcFile::parse("rust/src/gateway/worker.rs", src.to_string())
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_of("rust/src/gateway/worker.rs"), "gateway::worker");
+        assert_eq!(module_of("rust/src/gateway/mod.rs"), "gateway");
+        assert_eq!(module_of("rust/src/lib.rs"), "");
+    }
+
+    #[test]
+    fn fns_and_impls_parse() {
+        let f = file(
+            "impl Engine {\n    pub fn step(&mut self) -> u32 { self.helper() }\n    fn helper(&self) -> u32 { 7 }\n}\nfn free(x: [u8; 4]) -> u8 { x[0] }\nimpl fmt::Display for Row { fn fmt(&self) {} }\n#[cfg(test)]\nmod tests { fn in_test() {} }\n",
+        );
+        let fns = parse_fns(&f, 0);
+        let names: Vec<(String, Option<String>, bool)> =
+            fns.iter().map(|f| (f.name.clone(), f.impl_ty.clone(), f.is_test)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("step".into(), Some("Engine".into()), false),
+                ("helper".into(), Some("Engine".into()), false),
+                ("free".into(), None, false),
+                ("fmt".into(), Some("Row".into()), false),
+                ("in_test".into(), None, true),
+            ]
+        );
+    }
+
+    #[test]
+    fn call_sites_classify() {
+        let f = file("fn a() { b(); self.c(); x.d(); path::to::e(); Vec::new(); f!(); }\n");
+        let fns = parse_fns(&f, 0);
+        let calls = calls_in(&f.scrubbed, fns[0].body);
+        let kinds: Vec<Callee> = calls.into_iter().map(|c| c.callee).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                Callee::Plain { name: "b".into() },
+                Callee::Method { name: "c".into(), on_self: true },
+                Callee::Method { name: "d".into(), on_self: false },
+                Callee::Path { segs: vec!["path".into(), "to".into(), "e".into()] },
+                // Associated fns surface as paths; `resolve` later drops
+                // the ones whose type prefix matches nothing in-crate.
+                Callee::Path { segs: vec!["Vec".into(), "new".into()] },
+            ]
+        );
+    }
+
+    #[test]
+    fn guard_scopes() {
+        // let-bound: to end of block; chained: statement temporary;
+        // if-let scrutinee: through the body.
+        let src = "fn a(&self) {\n    let g = lock_or_recover(&self.m);\n    use_it(&g);\n    let v = lock_or_recover(&self.m).len();\n    after();\n    if let Some(r) = lock_or_recover(&self.p).get(&k) {\n        r.send(1);\n    }\n    tail();\n}\n";
+        let f = file(src);
+        let fns = parse_fns(&f, 0);
+        let locks = locks_in(&f.scrubbed, fns[0].body, &[]);
+        assert_eq!(locks.len(), 3);
+        assert_eq!(locks[0].kind, GuardKind::LetBound);
+        assert!(f.scrubbed[locks[0].pos..locks[0].scope_end].contains("tail()"));
+        assert_eq!(locks[1].kind, GuardKind::Temp);
+        let s1 = &f.scrubbed[locks[1].pos..locks[1].scope_end];
+        assert!(s1.contains(".len()") && !s1.contains("after"));
+        assert_eq!(locks[2].kind, GuardKind::CondScrutinee);
+        let s2 = &f.scrubbed[locks[2].pos..locks[2].scope_end];
+        assert!(s2.contains(".send(") && !s2.contains("tail"));
+        assert_eq!(locks[2].lock, "p");
+        assert_eq!(locks[0].lock, "m");
+    }
+
+    #[test]
+    fn let_bound_through_unwrap_still_binds_guard() {
+        let src = "fn a(&self) {\n    let g = self.m.lock().unwrap();\n    g.push(1);\n    done();\n}\n";
+        let f = file(src);
+        let fns = parse_fns(&f, 0);
+        let locks = locks_in(&f.scrubbed, fns[0].body, &[]);
+        assert_eq!(locks.len(), 1);
+        assert_eq!(locks[0].kind, GuardKind::LetBound);
+        assert_eq!(locks[0].lock, "m");
+        assert!(f.scrubbed[locks[0].pos..locks[0].scope_end].contains("done()"));
+    }
+
+    #[test]
+    fn block_expr_temp_guard_scope_is_the_expression() {
+        let src = "fn a(&self) {\n    let job = { lock_or_recover(&rx).recv() };\n    work(job);\n}\n";
+        let f = file(src);
+        let fns = parse_fns(&f, 0);
+        let locks = locks_in(&f.scrubbed, fns[0].body, &[]);
+        assert_eq!(locks.len(), 1);
+        assert_eq!(locks[0].kind, GuardKind::Temp);
+        let s = &f.scrubbed[locks[0].pos..locks[0].scope_end];
+        assert!(s.contains(".recv()") && !s.contains("work("));
+    }
+
+    #[test]
+    fn rwlock_read_gated_on_declared_names() {
+        let src = "fn a(&self) { let x = table.read(); let y = file.read(); }\n";
+        let f = file(src);
+        let fns = parse_fns(&f, 0);
+        let locks = locks_in(&f.scrubbed, fns[0].body, &["table".into()]);
+        assert_eq!(locks.len(), 1);
+        assert_eq!(locks[0].lock, "table");
+    }
+}

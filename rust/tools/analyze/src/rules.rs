@@ -1,0 +1,1105 @@
+//! The five rule families. Each pass takes the parsed [`Tree`] plus a
+//! shared used-waiver set so the stale-waiver pass can tell which
+//! `// repo-analyze: allow(..)` comments actually earn their keep.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::parser::{calls_in, locks_in, parse_fns, Callee, FnItem, SrcFile};
+
+#[derive(Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line for display (0 = file-level).
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// `(file index, waiver line, rule)` of every waiver that suppressed at
+/// least one finding.
+pub type UsedWaivers = HashSet<(usize, usize, String)>;
+
+pub struct Tree {
+    pub files: Vec<SrcFile>,
+    pub fns: Vec<FnItem>,
+}
+
+impl Tree {
+    pub fn from_entries(entries: Vec<(String, String)>) -> Tree {
+        let files: Vec<SrcFile> =
+            entries.into_iter().map(|(rel, raw)| SrcFile::parse(&rel, raw)).collect();
+        let mut fns = Vec::new();
+        for (i, f) in files.iter().enumerate() {
+            fns.extend(parse_fns(f, i));
+        }
+        Tree { files, fns }
+    }
+
+    /// Try to suppress a finding at `line` (0-based) with a
+    /// `repo-analyze` waiver; record the waiver as used on success.
+    fn suppress(&self, fidx: usize, line: usize, rule: &'static str, used: &mut UsedWaivers) -> bool {
+        for w in &self.files[fidx].waivers {
+            if w.tool == "repo-analyze" && w.rule == rule && (w.line == line || w.line + 1 == line)
+            {
+                used.insert((fidx, w.line, rule.to_string()));
+                return true;
+            }
+        }
+        false
+    }
+
+    fn finding(&self, fidx: usize, line0: usize, rule: &'static str, msg: String) -> Finding {
+        Finding { file: self.files[fidx].rel.clone(), line: line0 + 1, rule, msg }
+    }
+}
+
+/// Names of fields/locals declared `RwLock<..>` anywhere in the tree —
+/// lets the lock passes treat `.read()` / `.write()` as acquisitions
+/// only on receivers that can actually be RwLocks.
+pub fn rwlock_names(tree: &Tree) -> Vec<String> {
+    let mut out = Vec::new();
+    for f in &tree.files {
+        let b = f.scrubbed.as_bytes();
+        let mut search = 0usize;
+        while let Some(off) = f.scrubbed[search..].find("RwLock<") {
+            let at = search + off;
+            search = at + 7;
+            // Walk back over `: ` to the declared name.
+            let mut i = at;
+            while i > 0 && (b[i - 1] == b' ' || b[i - 1] == b':') {
+                i -= 1;
+            }
+            let mut r = i;
+            while r > 0 && (b[r - 1].is_ascii_alphanumeric() || b[r - 1] == b'_') {
+                r -= 1;
+            }
+            if r < i {
+                out.push(f.scrubbed[r..i].to_string());
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: lock-order.
+// ---------------------------------------------------------------------------
+
+/// Blocking operations that must not run while a guard is live: a
+/// parked thread holding a lock is half a deadlock (and with a bounded
+/// channel, frequently the whole one).
+const GUARD_BLOCKING: &[&str] =
+    &[".send(", ".recv(", ".recv_timeout(", ".join(", "thread::sleep", ".wait(", ".wait_timeout("];
+
+/// Derive the lock acquisition graph (nested acquisitions, one level of
+/// call inlining) and fail on cycles, same-lock re-acquisition, and
+/// blocking calls under a live guard. Lock identity is the receiver's
+/// last identifier (`&self.router` → `router`) — see INVARIANTS §10 for
+/// what that approximation buys and costs.
+pub fn lock_order(tree: &Tree, exclude: &[&str], used: &mut UsedWaivers) -> Vec<Finding> {
+    let rwl = rwlock_names(tree);
+    let mut findings = Vec::new();
+    let mut edges: Vec<(String, String, String)> = Vec::new(); // from, to, "file:line"
+    for (fi, item) in tree.fns.iter().enumerate() {
+        if item.is_test {
+            continue;
+        }
+        let file = &tree.files[item.file];
+        if exclude.iter().any(|p| file.rel.starts_with(p)) {
+            continue;
+        }
+        let sites = locks_in(&file.scrubbed, item.body, &rwl);
+        for (i, a) in sites.iter().enumerate() {
+            let scope = (a.pos, a.scope_end);
+            // Nested direct acquisitions.
+            for b in sites.iter().skip(i + 1) {
+                if b.pos >= scope.0 && b.pos < scope.1 {
+                    let line = file.line_of(b.pos);
+                    if tree.suppress(item.file, line, "lock-order", used) {
+                        continue;
+                    }
+                    if b.lock == a.lock {
+                        findings.push(tree.finding(
+                            item.file,
+                            line,
+                            "lock-order",
+                            format!(
+                                "re-acquires `{}` while its guard from line {} is live (self-deadlock)",
+                                a.lock,
+                                file.line_of(a.pos) + 1
+                            ),
+                        ));
+                    } else {
+                        edges.push((
+                            a.lock.clone(),
+                            b.lock.clone(),
+                            format!("{}:{}", file.rel, line + 1),
+                        ));
+                    }
+                }
+            }
+            // One level of call inlining: a callee that locks inside the
+            // guard scope contributes the same edge.
+            for call in calls_in(&file.scrubbed, scope) {
+                let Some(ci) = resolve(tree, item, &call.callee) else { continue };
+                if ci == fi {
+                    continue;
+                }
+                let callee = &tree.fns[ci];
+                let cf = &tree.files[callee.file];
+                for l in locks_in(&cf.scrubbed, callee.body, &rwl) {
+                    let line = file.line_of(call.pos);
+                    if tree.suppress(item.file, line, "lock-order", used) {
+                        continue;
+                    }
+                    if l.lock == a.lock {
+                        findings.push(tree.finding(
+                            item.file,
+                            line,
+                            "lock-order",
+                            format!(
+                                "call into `{}` re-acquires `{}` while its guard is live",
+                                callee.display(&tree.files),
+                                a.lock
+                            ),
+                        ));
+                    } else {
+                        edges.push((
+                            a.lock.clone(),
+                            l.lock.clone(),
+                            format!("{}:{}", file.rel, line + 1),
+                        ));
+                    }
+                }
+            }
+            // Blocking under the guard.
+            let text = &file.scrubbed[scope.0..scope.1.min(file.scrubbed.len())];
+            for pat in GUARD_BLOCKING {
+                let mut s = 0usize;
+                while let Some(off) = text[s..].find(pat) {
+                    let at = scope.0 + s + off;
+                    s += off + pat.len();
+                    let line = file.line_of(at);
+                    if file.mask.get(line).copied().unwrap_or(false)
+                        || tree.suppress(item.file, line, "lock-order", used)
+                    {
+                        continue;
+                    }
+                    findings.push(tree.finding(
+                        item.file,
+                        line,
+                        "lock-order",
+                        format!(
+                            "blocking `{}` while holding `{}` (guard taken line {}; narrow the guard scope)",
+                            pat.trim_matches(['.', '(']),
+                            a.lock,
+                            file.line_of(a.pos) + 1
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    findings.extend(cycles(&edges));
+    findings
+}
+
+/// Cycle detection over the acquisition edges; one finding per distinct
+/// cycle, listing the edges that form it.
+fn cycles(edges: &[(String, String, String)]) -> Vec<Finding> {
+    let mut adj: HashMap<&str, Vec<(&str, &str)>> = HashMap::new();
+    for (a, b, site) in edges {
+        adj.entry(a).or_default().push((b, site));
+    }
+    let mut seen_cycles: HashSet<Vec<String>> = HashSet::new();
+    let mut findings = Vec::new();
+    let mut nodes: Vec<&str> = adj.keys().copied().collect();
+    nodes.sort();
+    for &start in &nodes {
+        let mut path: Vec<&str> = vec![start];
+        let mut stack: Vec<Vec<(&str, &str)>> =
+            vec![adj.get(start).cloned().unwrap_or_default()];
+        while let Some(frame) = stack.last_mut() {
+            let Some((next, site)) = frame.pop() else {
+                stack.pop();
+                path.pop();
+                continue;
+            };
+            let _ = site;
+            if let Some(at) = path.iter().position(|&n| n == next) {
+                // Canonicalize: rotate the cycle to start at its
+                // smallest node so each cycle reports once.
+                let mut cyc: Vec<String> = path[at..].iter().map(|s| s.to_string()).collect();
+                let min = cyc.iter().enumerate().min_by_key(|(_, s)| s.clone()).map(|(i, _)| i);
+                if let Some(m) = min {
+                    cyc.rotate_left(m);
+                }
+                if seen_cycles.insert(cyc.clone()) {
+                    let shown = cyc.join(" → ");
+                    let sites: Vec<String> = edges
+                        .iter()
+                        .filter(|(a, b, _)| {
+                            cyc.iter()
+                                .enumerate()
+                                .any(|(i, n)| n == a && cyc[(i + 1) % cyc.len()] == *b)
+                        })
+                        .map(|(_, _, s)| s.clone())
+                        .collect();
+                    findings.push(Finding {
+                        file: "rust/src".into(),
+                        line: 0,
+                        rule: "lock-order",
+                        msg: format!(
+                            "lock acquisition cycle: {shown} → {} (edges at {})",
+                            cyc[0],
+                            sites.join(", ")
+                        ),
+                    });
+                }
+                continue;
+            }
+            if path.len() > 32 {
+                continue; // defensive bound; the crate has single-digit locks
+            }
+            path.push(next);
+            stack.push(adj.get(next).cloned().unwrap_or_default());
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Shared call resolution (used by lock inlining and the purity BFS).
+// ---------------------------------------------------------------------------
+
+/// Method names so overloaded across std/collections that a bare
+/// `.name(` call is never attributed to a crate function: resolving
+/// these by global uniqueness would wire false edges through the call
+/// graph. Crate functions reachable only through such names must be
+/// reached via another site (or be roots themselves).
+const STD_METHOD_BLOCKLIST: &[&str] = &[
+    "push", "pop", "get", "get_mut", "insert", "remove", "contains", "contains_key", "len",
+    "is_empty", "iter", "iter_mut", "into_iter", "map", "filter", "filter_map", "flat_map",
+    "for_each", "collect", "clone", "cloned", "copied", "to_string", "to_owned", "to_vec",
+    "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "expect", "ok", "err",
+    "ok_or", "ok_or_else", "and_then", "or_else", "take", "replace", "send", "recv",
+    "recv_timeout", "join", "lock", "read", "write", "borrow", "borrow_mut", "load", "store",
+    "fetch_add", "fetch_sub", "compare_exchange", "compare_exchange_weak", "swap", "min", "max",
+    "abs", "floor", "ceil", "sqrt", "extend", "drain", "clear", "entry", "keys", "values",
+    "sort", "sort_by", "sort_by_key", "retain", "split", "splitn", "trim", "parse", "chars",
+    "bytes", "as_str", "as_bytes", "as_ref", "as_mut", "as_slice", "elapsed", "duration_since",
+    "as_secs_f64", "as_millis", "as_nanos", "flush", "next", "peek", "rev", "zip", "enumerate",
+    "sum", "product", "count", "any", "all", "find", "position", "fold", "last", "first",
+    "starts_with", "ends_with", "eq", "ne", "cmp", "partial_cmp", "hash", "fmt", "default",
+    "from", "into", "try_into", "try_from", "new", "with_capacity", "resize", "truncate",
+    "windows", "chunks", "concat", "repeat", "then", "then_some", "is_some", "is_none",
+    "is_ok", "is_err", "unwrap_err", "front", "back", "push_back", "push_front", "pop_front",
+    "pop_back", "saturating_sub", "saturating_add", "checked_sub", "checked_add",
+    "wrapping_add", "wrapping_sub", "leading_zeros", "trailing_zeros", "skip", "step_by",
+];
+
+/// Resolve a call site to a crate function index, or `None` when the
+/// target is ambiguous / std / external. Deterministic and
+/// under-approximating by design: a skipped edge can hide a callee from
+/// the purity closure, never invent one.
+fn resolve(tree: &Tree, ctx: &FnItem, callee: &Callee) -> Option<usize> {
+    let by_name = |name: &str| -> Vec<usize> {
+        tree.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.is_test && f.name == name)
+            .map(|(i, _)| i)
+            .collect()
+    };
+    match callee {
+        Callee::Plain { name } => {
+            let cands = by_name(name);
+            // Prefer a same-module candidate (free helper next door).
+            let local: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&i| tree.files[tree.fns[i].file].module == tree.files[ctx.file].module)
+                .collect();
+            match (local.len(), cands.len()) {
+                (1, _) => Some(local[0]),
+                (_, 1) => Some(cands[0]),
+                _ => None,
+            }
+        }
+        Callee::Path { segs } => {
+            let name = segs.last()?;
+            let prefix = segs[..segs.len() - 1]
+                .iter()
+                .filter(|s| *s != "crate" && *s != "self" && *s != "super")
+                .cloned()
+                .collect::<Vec<_>>()
+                .join("::");
+            let cands: Vec<usize> = by_name(name)
+                .into_iter()
+                .filter(|&i| {
+                    let m = &tree.files[tree.fns[i].file].module;
+                    let t = tree.fns[i].impl_ty.clone().unwrap_or_default();
+                    if prefix.is_empty() {
+                        return true;
+                    }
+                    // `module::f`, `module::Type::f`, or `Type::f` —
+                    // suffix match on whole `::` segments only.
+                    let seg_suffix = |q: &str| q == prefix || q.ends_with(&format!("::{prefix}"));
+                    let qual_mt = if t.is_empty() { m.clone() } else { format!("{m}::{t}") };
+                    seg_suffix(m) || seg_suffix(&qual_mt) || t == prefix
+                })
+                .collect();
+            if cands.len() == 1 {
+                Some(cands[0])
+            } else {
+                None
+            }
+        }
+        Callee::Method { name, on_self } => {
+            if *on_self {
+                // Same impl first.
+                let here: Vec<usize> = tree
+                    .fns
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, f)| {
+                        !f.is_test
+                            && f.name == *name
+                            && f.file == ctx.file
+                            && f.impl_ty == ctx.impl_ty
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                if here.len() == 1 {
+                    return Some(here[0]);
+                }
+            }
+            if STD_METHOD_BLOCKLIST.contains(&name.as_str()) {
+                return None;
+            }
+            let cands = by_name(name);
+            if cands.len() == 1 {
+                Some(cands[0])
+            } else {
+                None
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: hot-path purity.
+// ---------------------------------------------------------------------------
+
+pub struct Profile {
+    pub name: &'static str,
+    /// `(module, impl type, fn)` — exact module match.
+    pub roots: Vec<(&'static str, Option<&'static str>, &'static str)>,
+    /// The obs writer path additionally forbids allocation.
+    pub forbid_alloc: bool,
+}
+
+const PURITY_BLOCKING: &[&str] =
+    &["thread::sleep", ".recv()", ".recv_timeout(", ".join()", ".wait(", ".wait_timeout("];
+
+const PURITY_IO: &[&str] = &[
+    "File::", "fs::", "read_to_string(", "from_text_file(", "read_tensors(", "TcpStream",
+    "TcpListener", "UdpSocket", ".write_all(", ".read_exact(", "stdin(", "stdout(", "stderr(",
+    "eprintln!", "println!", "eprint!", "print!", "dbg!",
+];
+
+const PURITY_ALLOC: &[&str] = &[
+    "vec!", "Vec::new", "Vec::with_capacity", "String::new", "String::with_capacity",
+    "String::from", "format!", ".to_string(", ".to_owned(", ".to_vec(", "Box::new(",
+    ".collect(", ".push_str(",
+];
+
+/// BFS the call graph from each profile's roots; every reachable
+/// function must stay free of locks, blocking calls and I/O (and, on
+/// the obs writer path, allocation) unless waived with a reason.
+pub fn purity(tree: &Tree, profiles: &[Profile], used: &mut UsedWaivers) -> Vec<Finding> {
+    let rwl = rwlock_names(tree);
+    let mut findings = Vec::new();
+    for prof in profiles {
+        // Resolve roots.
+        let mut queue: Vec<usize> = Vec::new();
+        let mut parent: HashMap<usize, usize> = HashMap::new();
+        for (m, t, f) in &prof.roots {
+            let hit = tree.fns.iter().position(|fn_| {
+                !fn_.is_test
+                    && fn_.name == *f
+                    && tree.files[fn_.file].module == *m
+                    && fn_.impl_ty.as_deref() == *t
+            });
+            match hit {
+                Some(i) => queue.push(i),
+                None => findings.push(Finding {
+                    file: "rust/tools/analyze".into(),
+                    line: 0,
+                    rule: "hot-path-purity",
+                    msg: format!(
+                        "purity root {m}::{}{f} not found — update the analyzer's root config",
+                        t.map(|t| format!("{t}::")).unwrap_or_default()
+                    ),
+                }),
+            }
+        }
+        let mut reached: HashSet<usize> = queue.iter().copied().collect();
+        let mut qi = 0usize;
+        while qi < queue.len() {
+            let cur = queue[qi];
+            qi += 1;
+            let item = &tree.fns[cur];
+            let file = &tree.files[item.file];
+            for call in calls_in(&file.scrubbed, item.body) {
+                if let Some(ci) = resolve(tree, item, &call.callee) {
+                    if reached.insert(ci) {
+                        parent.insert(ci, cur);
+                        queue.push(ci);
+                    }
+                }
+            }
+        }
+        // Scan every reachable body.
+        let chain = |i: usize| -> String {
+            let mut names = vec![tree.fns[i].display(&tree.files)];
+            let mut cur = i;
+            while let Some(&p) = parent.get(&cur) {
+                names.push(tree.fns[p].display(&tree.files));
+                cur = p;
+            }
+            names.reverse();
+            names.join(" → ")
+        };
+        let mut ordered: Vec<usize> = reached.iter().copied().collect();
+        ordered.sort();
+        for i in ordered {
+            let item = &tree.fns[i];
+            let file = &tree.files[item.file];
+            // Locks.
+            for l in locks_in(&file.scrubbed, item.body, &rwl) {
+                let line = file.line_of(l.pos);
+                if file.mask.get(line).copied().unwrap_or(false)
+                    || tree.suppress(item.file, line, "hot-path-purity", used)
+                {
+                    continue;
+                }
+                findings.push(tree.finding(
+                    item.file,
+                    line,
+                    "hot-path-purity",
+                    format!("takes lock `{}` on the {} path ({})", l.lock, prof.name, chain(i)),
+                ));
+            }
+            // Pattern categories, one finding per line per category.
+            let body_start_line = file.line_of(item.body.0);
+            let body_text = &file.scrubbed[item.body.0..item.body.1.min(file.scrubbed.len())];
+            let mut cats: Vec<(&str, &[&str])> =
+                vec![("blocking call", PURITY_BLOCKING), ("I/O", PURITY_IO)];
+            if prof.forbid_alloc {
+                cats.push(("allocation", PURITY_ALLOC));
+            }
+            for (what, pats) in cats {
+                for (off, lt) in body_text.lines().enumerate() {
+                    let line = body_start_line + off;
+                    if file.mask.get(line).copied().unwrap_or(false) {
+                        continue;
+                    }
+                    let Some(pat) = pats.iter().find(|p| lt.contains(*p)) else { continue };
+                    if tree.suppress(item.file, line, "hot-path-purity", used) {
+                        continue;
+                    }
+                    findings.push(tree.finding(
+                        item.file,
+                        line,
+                        "hot-path-purity",
+                        format!("{what} `{}` on the {} path ({})", pat.trim(), prof.name, chain(i)),
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: unsafe audit.
+// ---------------------------------------------------------------------------
+
+const INVENTORY_HEADER: &str = "# Unsafe inventory\n\n\
+Generated by `repo-analyze` (rule: `unsafe-audit`); CI fails when this\n\
+file and the tree disagree. Regenerate after any `unsafe` change with:\n\n\
+    cargo run --manifest-path rust/tools/analyze/Cargo.toml -- . --write-unsafe-inventory\n\n\
+Every entry pairs an `unsafe` site with the first line of its mandatory\n\
+adjacent `// SAFETY:` argument.\n\n## Sites\n\n";
+
+const INVENTORY_EMPTY: &str = "No `unsafe` code under `rust/src` — every concurrency structure\n\
+(including the obs seqlock event ring, INVARIANTS §9) is built from\n\
+safe atomics.\n";
+
+/// Every `unsafe` needs an adjacent `// SAFETY:` comment and an entry
+/// in docs/UNSAFE_INVENTORY.md. Returns findings plus the generated
+/// inventory text (written by `--write-unsafe-inventory`).
+pub fn unsafe_audit(
+    tree: &Tree,
+    inventory: Option<&str>,
+    used: &mut UsedWaivers,
+) -> (Vec<Finding>, String) {
+    let mut findings = Vec::new();
+    let mut entries: Vec<String> = Vec::new();
+    for (fidx, file) in tree.files.iter().enumerate() {
+        let b = file.scrubbed.as_bytes();
+        let mut i = 0usize;
+        while let Some(off) = file.scrubbed[i..].find("unsafe") {
+            let at = i + off;
+            i = at + 6;
+            let before_ok = at == 0 || !(b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_');
+            let after_ok =
+                at + 6 >= b.len() || !(b[at + 6].is_ascii_alphanumeric() || b[at + 6] == b'_');
+            if !before_ok || !after_ok {
+                continue;
+            }
+            let line = file.line_of(at);
+            if file.mask.get(line).copied().unwrap_or(false) {
+                continue;
+            }
+            let in_fn = tree
+                .fns
+                .iter()
+                .filter(|f| f.file == fidx && f.body.0 <= at && at <= f.body.1)
+                .max_by_key(|f| f.body.0)
+                .map(|f| f.name.clone())
+                .unwrap_or_else(|| "<module scope>".into());
+            // Adjacent SAFETY comment: same line or up to 3 lines above.
+            let safety = file
+                .comments
+                .iter()
+                .filter(|c| c.text.contains("SAFETY:") && c.line + 3 >= line && c.line <= line)
+                .last()
+                .map(|c| {
+                    let t = &c.text[c.text.find("SAFETY:").unwrap_or(0) + "SAFETY:".len()..];
+                    t.lines().next().unwrap_or("").trim().to_string()
+                });
+            match &safety {
+                Some(s) => entries.push(format!("- `{}` · `{}` — {}", file.rel, in_fn, s)),
+                None => {
+                    if !tree.suppress(fidx, line, "unsafe-audit", used) {
+                        findings.push(tree.finding(
+                            fidx,
+                            line,
+                            "unsafe-audit",
+                            format!(
+                                "`unsafe` in `{in_fn}` without an adjacent `// SAFETY:` comment"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    entries.sort();
+    entries.dedup();
+    let mut generated = String::from(INVENTORY_HEADER);
+    if entries.is_empty() {
+        generated.push_str(INVENTORY_EMPTY);
+    } else {
+        for e in &entries {
+            generated.push_str(e);
+            generated.push('\n');
+        }
+    }
+    match inventory {
+        None => findings.push(Finding {
+            file: "docs/UNSAFE_INVENTORY.md".into(),
+            line: 0,
+            rule: "unsafe-audit",
+            msg: "missing — generate it with --write-unsafe-inventory".into(),
+        }),
+        Some(text) => {
+            let listed: HashSet<&str> =
+                text.lines().filter(|l| l.starts_with("- `")).collect();
+            for e in &entries {
+                if !listed.contains(e.as_str()) {
+                    findings.push(Finding {
+                        file: "docs/UNSAFE_INVENTORY.md".into(),
+                        line: 0,
+                        rule: "unsafe-audit",
+                        msg: format!("tree has an unsafe site not in the inventory: {e}"),
+                    });
+                }
+            }
+            for l in &listed {
+                if !entries.iter().any(|e| e == l) {
+                    findings.push(Finding {
+                        file: "docs/UNSAFE_INVENTORY.md".into(),
+                        line: 0,
+                        rule: "unsafe-audit",
+                        msg: format!("stale inventory entry (no matching unsafe in tree): {l}"),
+                    });
+                }
+            }
+            if entries.is_empty() && !text.contains("No `unsafe` code") {
+                findings.push(Finding {
+                    file: "docs/UNSAFE_INVENTORY.md".into(),
+                    line: 0,
+                    rule: "unsafe-audit",
+                    msg: "tree has no unsafe code but the inventory does not say so".into(),
+                });
+            }
+        }
+    }
+    (findings, generated)
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: registry coverage.
+// ---------------------------------------------------------------------------
+
+pub struct RegistryCtx<'a> {
+    /// docs/PROTOCOL.md text ("" when missing).
+    pub protocol: &'a str,
+    /// Concatenated test sources: rust/tests plus test-gated src spans.
+    pub tests_blob: &'a str,
+    /// Stats keys deliberately absent from `merge_stats` (per-worker
+    /// identity/gauge fields) — kept in sync with INVARIANTS §10.
+    pub merge_exempt: &'a [&'a str],
+    /// Fail when the expected surfaces (render_stats / merge_stats /
+    /// EventKind) are missing from the tree entirely.
+    pub require_surfaces: bool,
+}
+
+/// Every stats counter must be merged (or exempt), documented, and
+/// named in a test; every obs event kind and histogram must be emitted,
+/// documented, and named in a test.
+pub fn registry(tree: &Tree, ctx: &RegistryCtx, used: &mut UsedWaivers) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let find_fn = |name: &str| tree.fns.iter().find(|f| !f.is_test && f.name == name);
+
+    // --- stats keys ------------------------------------------------------
+    let (render, merge) = (find_fn("render_stats"), find_fn("merge_stats"));
+    match (render, merge) {
+        (Some(render), Some(merge)) => {
+            let rf = &tree.files[render.file];
+            let keys = tuple_keys(&rf.raw, render.body);
+            let mf = &tree.files[merge.file];
+            let merge_blob = &mf.raw[merge.body.0..merge.body.1.min(mf.raw.len())];
+            for (key, pos) in keys {
+                let line = rf.line_of(pos);
+                let quoted = format!("\"{key}\"");
+                if !merge_blob.contains(&quoted) && !ctx.merge_exempt.contains(&key.as_str()) {
+                    if !tree.suppress(render.file, line, "registry-coverage", used) {
+                        findings.push(tree.finding(
+                            render.file,
+                            line,
+                            "registry-coverage",
+                            format!(
+                                "stats key \"{key}\" is rendered but neither merged in merge_stats nor exempt"
+                            ),
+                        ));
+                    }
+                }
+                if !ctx.protocol.contains(&quoted) && !ctx.protocol.contains(&format!("`{key}`"))
+                {
+                    findings.push(tree.finding(
+                        render.file,
+                        line,
+                        "registry-coverage",
+                        format!("stats key \"{key}\" is not documented in docs/PROTOCOL.md"),
+                    ));
+                }
+                if !ctx.tests_blob.contains(&quoted) {
+                    findings.push(tree.finding(
+                        render.file,
+                        line,
+                        "registry-coverage",
+                        format!("stats key \"{key}\" is not named in any test"),
+                    ));
+                }
+            }
+        }
+        _ if ctx.require_surfaces => findings.push(Finding {
+            file: "rust/src".into(),
+            line: 0,
+            rule: "registry-coverage",
+            msg: "render_stats / merge_stats not found — stats surface moved? update analyzer"
+                .into(),
+        }),
+        _ => {}
+    }
+
+    // --- obs event kinds -------------------------------------------------
+    let ev = enum_variants(tree, "EventKind");
+    if ev.is_empty() && ctx.require_surfaces {
+        findings.push(Finding {
+            file: "rust/src".into(),
+            line: 0,
+            rule: "registry-coverage",
+            msg: "enum EventKind not found — obs surface moved? update analyzer".into(),
+        });
+    }
+    if let Some((def_file, variants)) = ev.first() {
+        let wires = name_arms(tree, *def_file, "EventKind");
+        for (variant, line) in variants {
+            let probe = format!("EventKind::{variant}");
+            let emitted = tree.files.iter().enumerate().any(|(fi, f)| {
+                fi != *def_file
+                    && f.scrubbed.lines().enumerate().any(|(ln, lt)| {
+                        lt.contains(&probe) && !f.mask.get(ln).copied().unwrap_or(false)
+                    })
+            });
+            if !emitted && !tree.suppress(*def_file, *line, "registry-coverage", used) {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("EventKind::{variant} is never emitted outside its defining module"),
+                ));
+            }
+            let Some(wire) = wires.get(variant) else {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("EventKind::{variant} has no wire name in EventKind::name()"),
+                ));
+                continue;
+            };
+            if !ctx.protocol.contains(&format!("`{wire}`"))
+                && !ctx.protocol.contains(&format!("\"{wire}\""))
+            {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("event kind \"{wire}\" is not documented in docs/PROTOCOL.md"),
+                ));
+            }
+            if !ctx.tests_blob.contains(&format!("\"{wire}\""))
+                && !ctx.tests_blob.contains(&probe)
+            {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("event kind \"{wire}\" ({probe}) is not named in any test"),
+                ));
+            }
+        }
+    }
+
+    // --- obs histograms --------------------------------------------------
+    if let Some((def_file, variants)) = enum_variants(tree, "HistKind").first() {
+        let names = hist_names(tree, *def_file);
+        for (idx, (variant, line)) in variants.iter().enumerate() {
+            let probe = format!("HistKind::{variant}");
+            let emitted = tree.files.iter().enumerate().any(|(fi, f)| {
+                fi != *def_file
+                    && f.scrubbed.lines().enumerate().any(|(ln, lt)| {
+                        lt.contains(&probe) && !f.mask.get(ln).copied().unwrap_or(false)
+                    })
+            });
+            if !emitted && !tree.suppress(*def_file, *line, "registry-coverage", used) {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("HistKind::{variant} is never recorded outside its defining module"),
+                ));
+            }
+            let Some(wire) = names.get(idx) else {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("HistKind::{variant} has no entry in HIST_NAMES"),
+                ));
+                continue;
+            };
+            if !ctx.protocol.contains(&format!("\"{wire}\""))
+                && !ctx.protocol.contains(&format!("`{wire}`"))
+            {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("histogram \"{wire}\" is not documented in docs/PROTOCOL.md"),
+                ));
+            }
+            if !ctx.tests_blob.contains(&format!("\"{wire}\""))
+                && !ctx.tests_blob.contains(&probe)
+            {
+                findings.push(tree.finding(
+                    *def_file,
+                    *line,
+                    "registry-coverage",
+                    format!("histogram \"{wire}\" ({probe}) is not named in any test"),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// `("key", ..)` tuple keys in the RAW text of a body span (the scrub
+/// preserves byte offsets, so the span indexes the raw text too).
+fn tuple_keys(raw: &str, body: (usize, usize)) -> Vec<(String, usize)> {
+    let b = raw.as_bytes();
+    let mut out = Vec::new();
+    let mut i = body.0;
+    while i + 2 < body.1.min(b.len()) {
+        if b[i] == b'(' && b[i + 1] == b'"' {
+            let mut j = i + 2;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            if j > i + 2 && j < b.len() && b[j] == b'"' {
+                let mut k = j + 1;
+                while k < b.len() && (b[k] == b' ' || b[k] == b'\n') {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b',' {
+                    out.push((raw[i + 2..j].to_string(), i));
+                }
+            }
+        }
+        i += 1;
+    }
+    // Duplicate names (e.g. `preemptions` at top level and in kv_pool)
+    // collapse to one check.
+    let mut seen = HashSet::new();
+    out.retain(|(k, _)| seen.insert(k.clone()));
+    out
+}
+
+/// Variants of `enum <name>` — `(file index, [(variant, 0-based line)])`
+/// per definition (first definition wins for the checks).
+fn enum_variants(tree: &Tree, name: &str) -> Vec<(usize, Vec<(String, usize)>)> {
+    let tag = format!("enum {name}");
+    let mut out = Vec::new();
+    for (fi, f) in tree.files.iter().enumerate() {
+        let Some(at) = f.scrubbed.find(&tag) else { continue };
+        let after = at + tag.len();
+        // Word-boundary: `enum EventKindX` must not match.
+        if f.scrubbed.as_bytes().get(after).is_some_and(|c| c.is_ascii_alphanumeric() || *c == b'_')
+        {
+            continue;
+        }
+        let Some(open_rel) = f.scrubbed[after..].find('{') else { continue };
+        let open = after + open_rel;
+        let close = crate::parser::match_brace(f.scrubbed.as_bytes(), open);
+        // Split the body on top-level commas; the variant is the first
+        // uppercase-initial word of each piece (skips `#[attr]` tokens,
+        // tuple payloads, and `= disc` tails automatically).
+        let body = &f.scrubbed[open + 1..close];
+        let cb = body.as_bytes();
+        let mut vars = Vec::new();
+        let (mut piece_start, mut depth) = (0usize, 0i32);
+        let mut flush = |s: usize, e: usize, vars: &mut Vec<(String, usize)>| {
+            let piece = &body[s..e];
+            let mut i = 0usize;
+            let pb = piece.as_bytes();
+            while i < pb.len() {
+                if pb[i] == b'#' {
+                    // Skip an attribute's `[..]`.
+                    while i < pb.len() && pb[i] != b']' {
+                        i += 1;
+                    }
+                } else if pb[i].is_ascii_uppercase()
+                    && (i == 0 || !(pb[i - 1].is_ascii_alphanumeric() || pb[i - 1] == b'_'))
+                {
+                    let mut j = i;
+                    while j < pb.len() && (pb[j].is_ascii_alphanumeric() || pb[j] == b'_') {
+                        j += 1;
+                    }
+                    vars.push((piece[i..j].to_string(), f.line_of(open + 1 + s + i)));
+                    return;
+                }
+                i += 1;
+            }
+        };
+        let mut i = 0usize;
+        while i < cb.len() {
+            match cb[i] {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' | b'}' => depth -= 1,
+                b',' if depth == 0 => {
+                    flush(piece_start, i, &mut vars);
+                    piece_start = i + 1;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        flush(piece_start, cb.len(), &mut vars);
+        out.push((fi, vars));
+    }
+    out
+}
+
+/// `Variant => "wire"` arms of `fn name()` in the impl of `ty`.
+fn name_arms(tree: &Tree, def_file: usize, ty: &str) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let Some(namefn) = tree.fns.iter().find(|f| {
+        f.file == def_file && f.name == "name" && f.impl_ty.as_deref() == Some(ty)
+    }) else {
+        return map;
+    };
+    let f = &tree.files[def_file];
+    let sb = f.scrubbed.as_bytes();
+    let rb = f.raw.as_bytes();
+    let mut i = namefn.body.0;
+    while let Some(off) = f.scrubbed[i..namefn.body.1].find("=>") {
+        let at = i + off;
+        i = at + 2;
+        // LHS: the identifier just before `=>`.
+        let mut r = at;
+        while r > 0 && sb[r - 1] == b' ' {
+            r -= 1;
+        }
+        let mut s = r;
+        while s > 0 && (sb[s - 1].is_ascii_alphanumeric() || sb[s - 1] == b'_') {
+            s -= 1;
+        }
+        if s == r {
+            continue;
+        }
+        let variant = f.scrubbed[s..r].to_string();
+        // RHS: a string literal, read from the raw text.
+        let mut k = at + 2;
+        while k < rb.len() && (rb[k] == b' ' || rb[k] == b'\n') {
+            k += 1;
+        }
+        if k < rb.len() && rb[k] == b'"' {
+            let mut e = k + 1;
+            while e < rb.len() && rb[e] != b'"' {
+                e += 1;
+            }
+            map.insert(variant, f.raw[k + 1..e].to_string());
+        }
+    }
+    map
+}
+
+/// String entries of the `HIST_NAMES` array literal, in order.
+fn hist_names(tree: &Tree, def_file: usize) -> Vec<String> {
+    let f = &tree.files[def_file];
+    let Some(at) = f.scrubbed.find("HIST_NAMES") else { return Vec::new() };
+    let Some(open_rel) = f.scrubbed[at..].find('[') else { return Vec::new() };
+    // Skip the type's `[&str; N]` bracket: take the bracket after `=`.
+    let eq = f.scrubbed[at..].find('=').map(|e| at + e).unwrap_or(at + open_rel);
+    let Some(open_rel) = f.scrubbed[eq..].find('[') else { return Vec::new() };
+    let open = eq + open_rel;
+    let rb = f.raw.as_bytes();
+    let mut out = Vec::new();
+    let mut i = open;
+    while i < rb.len() && rb[i] != b']' {
+        if rb[i] == b'"' {
+            let mut e = i + 1;
+            while e < rb.len() && rb[e] != b'"' {
+                e += 1;
+            }
+            out.push(f.raw[i + 1..e].to_string());
+            i = e + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: stale waivers.
+// ---------------------------------------------------------------------------
+
+const ANALYZE_RULES: &[&str] =
+    &["lock-order", "hot-path-purity", "unsafe-audit", "registry-coverage"];
+
+/// Lexical signature of each repo-lint rule, used to decide whether a
+/// `repo-lint: allow(..)` comment still sits on code that would fire.
+/// The window mirrors repo-lint's exactly: the waiver line and the next.
+fn lint_rule_patterns(rule: &str) -> Option<&'static [&'static str]> {
+    match rule {
+        "no-panic" => Some(&[".unwrap(", ".expect(", "panic!", "todo!", "unimplemented!"]),
+        "sync-shim" => Some(&["std::sync", "std::thread"]),
+        "sleep-poll" => Some(&["sleep("]),
+        "bare-print" => Some(&["eprintln!", "println!", "eprint!", "print!", "dbg!"]),
+        "no-index" => Some(&["["]),
+        "op-coverage" => Some(&["\"op\""]),
+        _ => None,
+    }
+}
+
+pub fn stale_waivers(tree: &Tree, used: &UsedWaivers) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (fidx, file) in tree.files.iter().enumerate() {
+        // Raw lines, deliberately: matching against scrubbed text would
+        // call a waiver stale when its pattern only survives in prose,
+        // but a false "stale" breaks CI — err on the conservative side.
+        let lines: Vec<&str> = file.raw.lines().collect();
+        for w in &file.waivers {
+            if file.mask.get(w.line).copied().unwrap_or(false) {
+                continue; // test-span waivers are inert for both tools
+            }
+            match w.tool {
+                "repo-analyze" => {
+                    if !ANALYZE_RULES.contains(&w.rule.as_str()) {
+                        findings.push(tree.finding(
+                            fidx,
+                            w.line,
+                            "stale-waiver",
+                            format!("repo-analyze waiver names unknown rule `{}`", w.rule),
+                        ));
+                    } else if !used.contains(&(fidx, w.line, w.rule.clone())) {
+                        findings.push(tree.finding(
+                            fidx,
+                            w.line,
+                            "stale-waiver",
+                            format!(
+                                "repo-analyze waiver for `{}` suppresses nothing — remove it",
+                                w.rule
+                            ),
+                        ));
+                    }
+                }
+                "repo-lint" => {
+                    let Some(pats) = lint_rule_patterns(&w.rule) else {
+                        findings.push(tree.finding(
+                            fidx,
+                            w.line,
+                            "stale-waiver",
+                            format!("repo-lint waiver names unknown rule `{}`", w.rule),
+                        ));
+                        continue;
+                    };
+                    let window = [lines.get(w.line), lines.get(w.line + 1)];
+                    let live = window
+                        .iter()
+                        .flatten()
+                        .any(|lt| pats.iter().any(|p| lt.contains(p)));
+                    if !live {
+                        findings.push(tree.finding(
+                            fidx,
+                            w.line,
+                            "stale-waiver",
+                            format!(
+                                "repo-lint waiver for `{}` has no matching code on its line or the \
+                                 next — repo-lint would not honor it there; move or remove it",
+                                w.rule
+                            ),
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    findings
+}

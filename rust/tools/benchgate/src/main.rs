@@ -17,11 +17,15 @@
 //!
 //! Entry shapes: a trajectory entry is either a single summary object
 //! or an array of per-row objects (e.g. one row per batch bucket). Rows
-//! are matched positionally across entries, so a metric's identity is
-//! `field@row`. Entries whose shape changed (a metric present in the
-//! history but absent from the newest entry, or vice versa) are not
-//! comparable and are skipped rather than failed — benches may grow
-//! rows as artifacts grow buckets.
+//! are matched by NAME across entries: a metric's identity is
+//! `field@row-key`, where the row key comes from the row's descriptor
+//! fields (`name`, else `variant`/`size`/`batch`, else the row's
+//! position). Inserting a new bucket mid-trajectory therefore shifts no
+//! neighbour's identity — under positional matching it would compare
+//! every later row against the wrong baseline. Entries whose shape
+//! changed (a metric present in the history but absent from the newest
+//! entry, or vice versa) are not comparable and are skipped rather than
+//! failed — benches may grow rows as artifacts grow buckets.
 //!
 //! Files with fewer than 2 entries pass trivially (no baseline yet:
 //! trajectory files start as `[]` until CI hardware appends the first
@@ -170,8 +174,10 @@ fn check_trajectory(name: &str, text: &str) -> Result<String, Vec<String>> {
             continue; // degenerate history (zero-throughput stub rows)
         }
         compared += 1;
-        // The metric key is `field@row`; the direction lives in the field.
-        let field = metric.rsplit_once('@').map_or(metric.as_str(), |(f, _)| f);
+        // The metric key is `field@row-key`; the direction lives in the
+        // field. Split on the FIRST `@` — row keys (a free-form `name`
+        // field) may contain the character, field names never do.
+        let field = metric.split_once('@').map_or(metric.as_str(), |(f, _)| f);
         match direction_of(field) {
             Some(Direction::LowerIsBetter) => {
                 if *current > baseline * LATENCY_CEIL {
@@ -204,20 +210,57 @@ fn check_trajectory(name: &str, text: &str) -> Result<String, Vec<String>> {
     }
 }
 
+/// Stable identity of a row within an entry, used to pair rows across
+/// trajectory entries. Prefers an explicit `name` field, then the
+/// descriptor fields `save_result` rows actually carry
+/// (`variant`/`size`/`batch`), and falls back to the row's position for
+/// anonymous rows. Two rows in the SAME entry that collide on the
+/// descriptor key are disambiguated positionally — a silent collision
+/// would sum two different buckets into one baseline.
+fn row_key(row: &Value, index: usize) -> String {
+    let Value::Obj(fields) = row else {
+        return format!("{index}");
+    };
+    let field = |name: &str| fields.iter().find(|(k, _)| k == name).map(|(_, v)| v);
+    if let Some(Value::Str(n)) = field("name") {
+        return n.clone();
+    }
+    let mut parts = Vec::new();
+    for id in ["variant", "size", "batch"] {
+        match field(id) {
+            Some(Value::Str(s)) => parts.push(format!("{id}={s}")),
+            Some(Value::Num(n)) => parts.push(format!("{id}={n}")),
+            _ => {}
+        }
+    }
+    if parts.is_empty() {
+        format!("{index}")
+    } else {
+        parts.join(",")
+    }
+}
+
 /// Flatten one trajectory entry (object, or array of row objects) into
-/// positionally-keyed gated metrics: `field@row`. Only fields with a
-/// gating direction (`*_tps`, `*_ms`, `*_p99`) are collected.
+/// name-keyed gated metrics: `field@row-key` (see `row_key`). Only
+/// fields with a gating direction (`*_tps`, `*_ms`, `*_p99`) are
+/// collected.
 fn metrics_of(entry: &Value) -> Vec<(String, f64)> {
     let rows: Vec<&Value> = match entry {
         Value::Arr(a) => a.iter().collect(),
         v => vec![v],
     };
     let mut out = Vec::new();
+    let mut seen_keys: Vec<String> = Vec::new();
     for (i, row) in rows.iter().enumerate() {
+        let mut key = row_key(row, i);
+        if seen_keys.contains(&key) {
+            key = format!("{key}#{i}");
+        }
+        seen_keys.push(key.clone());
         if let Value::Obj(fields) = row {
             for (k, v) in fields {
                 if let (true, Value::Num(n)) = (direction_of(k).is_some(), v) {
-                    out.push((format!("{k}@{i}"), *n));
+                    out.push((format!("{k}@{key}"), *n));
                 }
             }
         }
@@ -421,7 +464,10 @@ mod tests {
         let m = metrics_of(&runs[0]);
         assert_eq!(
             m,
-            vec![("static_tps@0".to_string(), 120.5), ("adaptive_tps@0".to_string(), 131.0)]
+            vec![
+                ("static_tps@variant=hydra,batch=8".to_string(), 120.5),
+                ("adaptive_tps@variant=hydra,batch=8".to_string(), 131.0)
+            ]
         );
     }
 
@@ -475,15 +521,58 @@ mod tests {
     }
 
     #[test]
-    fn rows_match_positionally_across_entries() {
-        // Two rows per run (e.g. batch 1 and batch 8): only row 1 regresses.
+    fn rows_match_by_name_across_entries() {
+        // Two rows per run (batch 1 and batch 8): only the batch-8 row
+        // regresses, and the violation is attributed to it by key.
         let t = r#"[
             [{"batch": 1, "x_tps": 50.0}, {"batch": 8, "x_tps": 200.0}],
             [{"batch": 1, "x_tps": 51.0}, {"batch": 8, "x_tps": 170.0}]
         ]"#;
         let v = check_trajectory("BENCH_x.json", t).unwrap_err();
         assert_eq!(v.len(), 1, "{v:?}");
-        assert!(v[0].contains("x_tps@1"), "{v:?}");
+        assert!(v[0].contains("x_tps@batch=8"), "{v:?}");
+    }
+
+    #[test]
+    fn inserted_row_does_not_shift_neighbour_baselines() {
+        // The newest run grew a batch-4 bucket between batch 1 and
+        // batch 8. Under positional matching the batch-8 row would land
+        // on the batch-4 slot and compare 201 tps against a 50 tps
+        // baseline (pass) while the new batch-4 row compared against the
+        // 200 tps batch-8 history (fail). Name keying pairs each bucket
+        // with its own history: the shifted rows stay clean, and the
+        // fresh bucket has no baseline at all yet.
+        let grown = r#"[
+            [{"batch": 1, "x_tps": 50.0}, {"batch": 8, "x_tps": 200.0}],
+            [{"batch": 1, "x_tps": 52.0}, {"batch": 8, "x_tps": 198.0}],
+            [{"batch": 1, "x_tps": 51.0}, {"batch": 4, "x_tps": 120.0}, {"batch": 8, "x_tps": 201.0}]
+        ]"#;
+        assert!(check_trajectory("BENCH_x.json", grown).is_ok());
+        // A real regression in the batch-8 bucket is still caught after
+        // the insertion, attributed to the right row.
+        let bad = r#"[
+            [{"batch": 1, "x_tps": 50.0}, {"batch": 8, "x_tps": 200.0}],
+            [{"batch": 1, "x_tps": 52.0}, {"batch": 8, "x_tps": 198.0}],
+            [{"batch": 1, "x_tps": 51.0}, {"batch": 4, "x_tps": 120.0}, {"batch": 8, "x_tps": 150.0}]
+        ]"#;
+        let v = check_trajectory("BENCH_x.json", bad).unwrap_err();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("x_tps@batch=8"), "{v:?}");
+    }
+
+    #[test]
+    fn row_keys_prefer_name_then_descriptors_then_position() {
+        let named = parse(r#"{"name": "decode", "x_tps": 1.0}"#).unwrap();
+        assert_eq!(row_key(&named, 3), "decode");
+        let descr = parse(r#"{"variant": "hydra", "batch": 8, "x_tps": 1.0}"#).unwrap();
+        assert_eq!(row_key(&descr, 0), "variant=hydra,batch=8");
+        let anon = parse(r#"{"x_tps": 1.0}"#).unwrap();
+        assert_eq!(row_key(&anon, 2), "2");
+        // Duplicate descriptor keys within one entry stay distinct
+        // instead of silently merging two buckets into one baseline.
+        let dup = parse(r#"[{"batch": 1, "x_tps": 1.0}, {"batch": 1, "x_tps": 2.0}]"#).unwrap();
+        let keys: Vec<String> = metrics_of(&dup).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["x_tps@batch=1", "x_tps@batch=1#1"]);
     }
 
     #[test]

@@ -24,10 +24,12 @@
 //! * **sleep-poll** — no `sleep(` loops on the serving path: waiting is
 //!   done by parking on channels/condvars. The rare legitimate sleep
 //!   (e.g. backoff against a *remote* socket) carries a waiver.
-//! * **bare-print** — no `eprintln!` / `println!` in the serving modules
-//!   (`server`, `gateway`, `scheduler`, `engine`) outside tests: ad-hoc
-//!   prints bypass the structured JSON logger (`crate::obs`), breaking
-//!   machine-parseable stderr and ignoring the `--log-level` gate. Use
+//! * **bare-print** — no `eprintln!` / `println!` / `eprint!` /
+//!   `print!` / `dbg!` in the serving modules (`server`, `gateway`,
+//!   `scheduler`, `engine`) outside tests: ad-hoc prints bypass the
+//!   structured JSON logger (`crate::obs`), breaking machine-parseable
+//!   stderr and ignoring the `--log-level` gate (`dbg!` is also a
+//!   leftover debugging aid by definition). Use
 //!   `log::info!`/`warn!`/`error!` instead.
 //! * **op-coverage** — every `{"op": ...}` the server dispatches must be
 //!   specified in `docs/PROTOCOL.md` and exercised by a test.
@@ -452,9 +454,11 @@ fn analyze(rel: &str, raw: &str) -> Vec<String> {
             }
         }
         if in_serving(rel) && !waived(&ws, ln, "bare-print") {
-            // `eprintln!` first: an eprintln line also contains the
-            // `println!` substring, and one report per line is enough.
-            for pat in ["eprintln!", "println!"] {
+            // Longest pattern first: an eprintln line also contains the
+            // `println!`, `eprint!` and `print!` substrings, and one
+            // report per line — attributed to the macro actually named —
+            // is enough.
+            for pat in ["eprintln!", "println!", "eprint!", "print!", "dbg!"] {
                 if line.contains(pat) {
                     report(
                         &mut out,
@@ -717,6 +721,27 @@ mod tests {
         // log macros never trip the rule.
         let ok = analyze("rust/src/gateway/mod.rs", "fn f() { log::error!(\"gateway {e}\"); }\n");
         assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn bare_print_covers_print_eprint_and_dbg() {
+        // The newline-less variants and `dbg!` are just as much ad-hoc
+        // stderr/stdout as their `ln` cousins.
+        let bad = analyze("rust/src/server/mod.rs", "fn f() { print!(\"> \"); }\n");
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("`print!`"), "attributed to print!: {bad:?}");
+        let bad = analyze("rust/src/engine/mod.rs", "fn f() { eprint!(\"tick\"); }\n");
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("`eprint!`"), "attributed to eprint!, not print!: {bad:?}");
+        let bad = analyze("rust/src/scheduler/mod.rs", "fn f() { let y = dbg!(x); }\n");
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("`dbg!`"), "{bad:?}");
+        // Substring attribution: an `eprintln!` line reports the macro
+        // actually written, exactly once, even though three shorter
+        // patterns also match the text.
+        let bad = analyze("rust/src/server/mod.rs", "fn f() { eprintln!(\"boom\"); }\n");
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("`eprintln!`"), "{bad:?}");
     }
 
     #[test]
